@@ -1,0 +1,41 @@
+//! Format sweep (Tables II & VI): one model, every payload format the
+//! simulator supports, at both ABFP vector lengths.
+//!
+//!   cargo run --release --example format_sweep [-- sim-opt-350m]
+
+use anyhow::Result;
+use intfpqsim::quantsim::{QuantConfig, Simulator};
+
+fn main() -> Result<()> {
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "sim-opt-125m".to_string());
+    let sim = Simulator::new("artifacts", "checkpoints")?;
+
+    let fp32 = sim.evaluate(&model, &QuantConfig::fp32())?;
+    println!("\n{}  (FP32 PPL = {:.2})", model, fp32.value);
+    println!("{:<22} {:>10} {:>12}", "config", "PPL", "vs FP32");
+
+    let configs = [
+        "abfp_w4a4_n64",
+        "abfp_w4a4_n128",
+        "abfp_e2m1_n64",
+        "abfp_e1m2_n64",
+        "abfp_e1m2_n128",
+        "abfp_w4a8_n64",
+        "abfp_w4a8_n128",
+        "abfp_w4ae4m3_n64",
+        "mse_w4a4",
+        "mse_w4a8",
+    ];
+    for c in configs {
+        let m = sim.evaluate(&model, &QuantConfig::abfp(c))?;
+        println!(
+            "{:<22} {:>10.2} {:>11.1}%",
+            c,
+            m.value,
+            100.0 * fp32.value / m.value
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Per-layer mixed precision — the feature the paper's §VI defers
+//! ("INT-FP-QSim currently does not support specification of different
+//! quantizers for different layers"), implemented here as first-class
+//! quant configs with layer overrides.
+//!
+//! Sweeps uniform W4A4 / W4A8 against boundary-block mixed configs and
+//! prints the accuracy-vs-footprint trade-off, including the two-level
+//! (VS-Quant) scale-storage variant.
+//!
+//!   cargo run --release --example mixed_precision [-- sim-opt-1.3b]
+
+use anyhow::Result;
+use intfpqsim::formats::scale_overhead_bits;
+use intfpqsim::quantsim::{QuantConfig, Simulator};
+
+/// Mean payload bits/element across a model's quantized sites for a
+/// (weight_bits, act_bits) config — weights dominate storage, acts
+/// dominate bandwidth; we report the weight side (what "W4" compresses).
+fn weight_bits(uniform: f64, boundary: Option<f64>, layers: usize) -> f64 {
+    match boundary {
+        None => uniform,
+        // first + last block at `b`, interior at `uniform`
+        Some(b) => {
+            let nb = 2.0_f64.min(layers as f64);
+            (b * nb + uniform * (layers as f64 - nb)) / layers as f64
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "sim-opt-125m".to_string());
+    let sim = Simulator::new("artifacts", "checkpoints")?;
+    let cfg = sim.rt.manifest.model(&model)?.clone();
+    let fp32 = sim.evaluate(&model, &QuantConfig::fp32())?;
+
+    println!(
+        "\n{} (L={}, FP32 PPL = {:.2}): accuracy vs weight footprint",
+        model, cfg.layers, fp32.value
+    );
+    println!(
+        "{:<24} {:>8} {:>10} {:>12}",
+        "config", "PPL", "w-bits/elt", "scale-bits"
+    );
+
+    // (label, quant config, uniform weight bits, boundary weight bits,
+    //  two-level scales?)
+    let rows: [(&str, &str, f64, Option<f64>, bool); 6] = [
+        ("uniform W4A4", "abfp_w4a4_n64", 4.0, None, false),
+        ("uniform W4A8", "abfp_w4a8_n64", 4.0, None, false),
+        ("boundary A8", "mixed_a8_boundary_n64", 4.0, None, false),
+        ("boundary W8A8", "mixed_w8a8_boundary_n64", 4.0, Some(8.0), false),
+        ("two-level W4A4", "abfp2_w4a4_n64", 4.0, None, true),
+        ("two-level W4A8", "abfp2_w4a8_n64", 4.0, None, true),
+    ];
+    for (label, quant, wu, wb, two_level) in rows {
+        let m = sim.evaluate(&model, &QuantConfig::abfp(quant))?;
+        let wbits = weight_bits(wu, wb, cfg.layers);
+        let k = 4 * cfg.d as usize; // widest reduction axis (fc2)
+        let sbits =
+            scale_overhead_bits(k, 64, if two_level { Some(8) } else { None });
+        println!(
+            "{:<24} {:>8.2} {:>10.2} {:>12.3}",
+            label, m.value, wbits, sbits
+        );
+    }
+    println!(
+        "\nReading: boundary-8-bit buys back most of the W4A4 gap for a\n\
+         fraction of uniform-W4A8's activation traffic; two-level scales\n\
+         halve ABFP's scale storage at (near) zero PPL cost."
+    );
+    Ok(())
+}

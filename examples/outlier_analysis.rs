@@ -1,0 +1,65 @@
+//! Outlier analysis: why per-tensor static quantization loses to ABFP.
+//!
+//! Captures the input activations of every quantized site (the same
+//! capture artifact the MSE calibrator uses), then prints per-site range
+//! statistics: absmax, the MSE-optimal clip range at 4 and 8 bits, and
+//! the channel-range spread (max/median of per-channel absmax) — the
+//! quantity SmoothQuant migrates and RPTQ clusters.  This is the
+//! diagnostic view behind the paper's §IV-A discussion ("the MSE values
+//! would have to clip most outliers to be effective").
+//!
+//!   cargo run --release --example outlier_analysis [-- sim-opt-350m]
+
+use anyhow::Result;
+use intfpqsim::calib;
+use intfpqsim::quantsim::Simulator;
+
+fn main() -> Result<()> {
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "sim-opt-125m".to_string());
+    let sim = Simulator::new("artifacts", "checkpoints")?;
+    let stats = sim.calibration(&model)?;
+
+    println!("\n{}: activation-range anatomy per quantized site", model);
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "site", "absmax", "mse_a4", "mse_a8", "clip@4bit", "ch-spread"
+    );
+    for (site, t) in &stats.acts {
+        let absmax = t.absmax();
+        let a4 = calib::mse_alpha(&t.data, 4);
+        let a8 = calib::mse_alpha(&t.data, 8);
+
+        // Per-channel absmax over the last axis: spread = max / median.
+        let k = *t.shape.last().unwrap();
+        let mut ch = vec![0.0f32; k];
+        for row in t.data.chunks(k) {
+            for (c, &v) in ch.iter_mut().zip(row) {
+                *c = c.max(v.abs());
+            }
+        }
+        let mut sorted = ch.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[k / 2].max(1e-12);
+        let spread = sorted[k - 1] / median;
+
+        println!(
+            "{:<16} {:>10.3} {:>10.3} {:>10.3} {:>11.1}% {:>9.1}x",
+            site,
+            absmax,
+            a4,
+            a8,
+            100.0 * a4 / absmax, // how much of the range MSE@4bit keeps
+            spread
+        );
+    }
+    println!(
+        "\nReading: clip@4bit far below 100% means the MSE calibrator is\n\
+         sacrificing outliers (the Table I failure mode); ch-spread >> 1\n\
+         is the per-channel range variation SmoothQuant (alpha=0.5)\n\
+         migrates into the weights and RPTQ absorbs with cluster scales.\n\
+         ABFP sidesteps both: every 64-element vector gets its own scale."
+    );
+    Ok(())
+}

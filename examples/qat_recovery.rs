@@ -1,0 +1,32 @@
+//! Accuracy recovery (Tables III & VII): plain ABFP vs ABFP-QAT vs
+//! ABFP-SQ vs GPTQ on one model, at W4A4 and W4A8.
+//!
+//!   cargo run --release --example qat_recovery [-- sim-opt-350m]
+
+use anyhow::Result;
+use intfpqsim::quantsim::{Method, QuantConfig, Simulator};
+
+fn main() -> Result<()> {
+    let model = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "sim-opt-125m".to_string());
+    let sim = Simulator::new("artifacts", "checkpoints")?;
+
+    let fp32 = sim.evaluate(&model, &QuantConfig::fp32())?;
+    println!("\n{}  (FP32 PPL = {:.2})", model, fp32.value);
+    println!("{:<14} {:>12} {:>12} {:>12} {:>12}", "acts", "ABFP", "ABFP-QAT", "ABFP-SQ", "GPTQ W4A16");
+
+    for acts in ["w4a4", "w4a8"] {
+        let base = format!("abfp_{}_n64", acts);
+        let plain = sim.evaluate(&model, &QuantConfig::abfp(&base))?;
+        let qat = sim.evaluate(&model, &QuantConfig::with(&base, Method::Qat))?;
+        let sq = sim.evaluate(&model, &QuantConfig::with(&base, Method::SmoothQuant))?;
+        let gptq = sim.evaluate(&model, &QuantConfig::with("fp32", Method::Gptq))?;
+        println!(
+            "{:<14} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+            acts, plain.value, qat.value, sq.value, gptq.value
+        );
+    }
+    println!("\nLower is better; QAT/SQ should close most of the gap to FP32.");
+    Ok(())
+}

@@ -1,0 +1,397 @@
+"""AOT builder: lower the whole artifact matrix to HLO text + manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path.  Interchange is HLO **text**, not serialized HloModuleProto
+— jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  manifest.json         — models, param layouts, per-artifact I/O specs
+  <model>/<id>.hlo.txt  — one compiled-loadable HLO module per artifact
+  hashes.json           — config hashes for incremental re-lowering
+  goldens/*.json        — quantizer golden tables for the Rust mirrors
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import formats as F
+from . import quantizers as Q
+from . import registry as R
+from . import train as T
+from .kernels import ref
+from .models import bert, common as C, opt, vit
+
+CODE_VERSION = 6  # bump to force re-lowering of every artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs_for(cfg: C.ArchCfg):
+    mod = {"opt": opt, "bert": bert, "vit": vit}[cfg.arch]
+    return mod.param_specs(cfg)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def data_inputs(cfg: C.ArchCfg, purpose: str):
+    """(name, spec) list for the artifact's data tensors."""
+    if cfg.arch == "vit":
+        img = f32((cfg.batch, cfg.image, cfg.image, cfg.channels))
+        if purpose == "train":
+            return [("images", img), ("labels", i32((cfg.batch,)))]
+        return [("images", img)]
+    toks = i32((cfg.batch, cfg.seq))
+    if cfg.arch == "bert" and purpose == "train":
+        return [
+            ("tokens", toks),
+            ("starts", i32((cfg.batch,))),
+            ("ends", i32((cfg.batch,))),
+        ]
+    return [("tokens", toks)]
+
+
+def quant_inputs(cfg: C.ArchCfg, wiring: C.QuantWiring):
+    """(kind, name, spec) for smoothing vectors and static clip ranges."""
+    # Per-layer overrides are dynamic-scale (abfp/abfp2) only: static kinds
+    # would need per-site alpha inputs this enumerator doesn't emit.
+    for _, w in wiring.layer_overrides:
+        for spec in (w.wq, w.aq, w.oq):
+            assert not spec.needs_runtime_scale, (
+                "layer_overrides must use dynamic-scale quantizers"
+            )
+    out = []
+    dims = C.site_dims(cfg)
+    names = C.all_site_names(cfg)
+    if wiring.smooth:
+        for s in names:
+            out.append(("smooth", f"smooth.{s}", f32((dims[s],))))
+    if wiring.aq.kind == "static_int":
+        for s in names:
+            out.append(("ascale", f"alpha.{s}", f32(())))
+    elif wiring.aq.kind == "static_int_pc":
+        for s in names:
+            out.append(("ascale", f"alpha.{s}", f32((dims[s],))))
+    return out
+
+
+def build_sites(cfg, wiring, qin_names, qin_vals):
+    """Reassemble flat quant inputs into per-site SiteInputs."""
+    sites = {}
+    for name, val in zip(qin_names, qin_vals):
+        kind, site = name.split(".", 1)
+        si = sites.setdefault(site, C.SiteInputs())
+        if kind == "smooth":
+            si.smooth = val
+        else:
+            si.alpha = val
+    return sites
+
+
+def loss_fn_for(cfg: C.ArchCfg, wiring: C.QuantWiring):
+    if cfg.arch == "opt":
+        def lm_loss(p, tokens):
+            logits = opt.forward(p, tokens, cfg, wiring, {})
+            denom = float(cfg.batch * (cfg.seq - 1))
+            return opt.nll_sum(logits, tokens) / denom
+        return lm_loss
+    if cfg.arch == "bert":
+        def qa_loss(p, tokens, starts, ends):
+            return bert.span_loss(p, tokens, starts, ends, cfg, wiring, {})
+        return qa_loss
+    def im_loss(p, images, labels):
+        return vit.cls_loss(p, images, labels, cfg, wiring, {})
+    return im_loss
+
+
+def build_artifact(adef: R.ArtifactDef):
+    """Returns (fn, arg_specs, input_descs, output_descs)."""
+    cfg = R.MODELS[adef.model]
+    wiring = R.QUANT_CONFIGS[adef.quant]
+    pspecs = param_specs_for(cfg)
+    pnames = [n for (n, _, _) in pspecs]
+    parg = [("param", n, f32(s)) for (n, s, _) in pspecs]
+    qarg = [(k, n, s) for (k, n, s) in quant_inputs(cfg, wiring)]
+    darg = [("data", n, s) for (n, s) in data_inputs(cfg, adef.purpose)]
+
+    np_, nq, nd = len(parg), len(qarg), len(darg)
+
+    if adef.purpose in ("eval", "eval_logits"):
+        inputs = parg + qarg + darg
+
+        def fn(*args):
+            p = dict(zip(pnames, args[:np_]))
+            qvals = args[np_:np_ + nq]
+            sites = build_sites(cfg, wiring, [n for (_, n, _) in qarg], qvals)
+            data = args[np_ + nq:]
+            if cfg.arch == "opt":
+                if adef.purpose == "eval_logits" or cfg.task == "codegen":
+                    return opt.eval_logits(p, data[0], cfg, wiring, sites)
+                return opt.eval_nll(p, data[0], cfg, wiring, sites)
+            if cfg.arch == "bert":
+                return bert.eval_spans(p, data[0], cfg, wiring, sites)
+            return vit.eval_logits(p, data[0], cfg, wiring, sites)
+
+        if cfg.arch == "opt" and adef.purpose == "eval" and cfg.task != "codegen":
+            outs = [("nll_sum", (), "f32")]
+        elif cfg.arch == "opt":
+            outs = [("logits", (cfg.batch, cfg.seq, cfg.vocab), "f32")]
+        elif cfg.arch == "bert":
+            outs = [
+                ("start_logits", (cfg.batch, cfg.seq), "f32"),
+                ("end_logits", (cfg.batch, cfg.seq), "f32"),
+            ]
+        else:
+            outs = [("logits", (cfg.batch, cfg.classes), "f32")]
+
+    elif adef.purpose == "capture":
+        inputs = parg + darg
+
+        def fn(*args):
+            p = dict(zip(pnames, args[:np_]))
+            data = args[np_:]
+            mod = {"opt": opt, "bert": bert, "vit": vit}[cfg.arch]
+            return mod.capture_acts(p, data[0], cfg)
+
+        ntok = cfg.batch * (cfg.seq if cfg.arch != "vit" else cfg.n_patches + 1)
+        dims = C.site_dims(cfg)
+        outs = [(s, (ntok, dims[s]), "f32") for s in C.all_site_names(cfg)]
+        outs.append(("_anchor", (), "f32"))
+
+    elif adef.purpose == "train":
+        marg = [("adam_m", f"m.{n}", f32(s)) for (n, s, _) in pspecs]
+        varg = [("adam_v", f"v.{n}", f32(s)) for (n, s, _) in pspecs]
+        sarg = [("scalar", "step", f32(())), ("scalar", "lr", f32(()))]
+        inputs = parg + marg + varg + sarg + darg
+        loss_fn = loss_fn_for(cfg, wiring)
+        step_fn = T.make_train_step(loss_fn, pnames)
+
+        def fn(*args):
+            P = np_
+            plist = list(args[:P])
+            mlist = list(args[P:2 * P])
+            vlist = list(args[2 * P:3 * P])
+            step, lr = args[3 * P], args[3 * P + 1]
+            data = args[3 * P + 2:]
+            return step_fn(plist, mlist, vlist, step, lr, *data)
+
+        outs = (
+            [(f"p.{n}", s, "f32") for (n, s, _) in pspecs]
+            + [(f"m.{n}", s, "f32") for (n, s, _) in pspecs]
+            + [(f"v.{n}", s, "f32") for (n, s, _) in pspecs]
+            + [("loss", (), "f32")]
+        )
+    else:
+        raise ValueError(adef.purpose)
+
+    arg_specs = [s for (_, _, s) in inputs]
+    input_descs = [
+        {
+            "name": n,
+            "kind": k,
+            "shape": list(s.shape),
+            "dtype": "i32" if s.dtype == jnp.int32 else "f32",
+        }
+        for (k, n, s) in inputs
+    ]
+    output_descs = [
+        {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in outs
+    ]
+    return fn, arg_specs, input_descs, output_descs
+
+
+def artifact_hash(adef: R.ArtifactDef) -> str:
+    cfg = R.MODELS[adef.model]
+    wiring = R.QUANT_CONFIGS[adef.quant]
+    key = json.dumps(
+        {
+            "v": CODE_VERSION,
+            "def": [adef.model, adef.purpose, adef.quant],
+            "cfg": repr(cfg),
+            "wiring": wiring.describe(),
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+# --- goldens ---------------------------------------------------------------
+
+
+def emit_goldens(outdir: str):
+    """Golden tables proving the Rust format mirrors are bit-exact."""
+    gdir = os.path.join(outdir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    rs = np.random.RandomState(12345)
+    probe = (rs.randn(8, 128) * np.exp(rs.randn(8, 128))).astype(np.float32)
+    probe[0, :4] = [0.0, -0.0, 1e-30, -1e30]
+
+    out = {"probe": probe.flatten().tolist()}
+    for fmt in (F.E2M1, F.E1M2, F.E4M3):
+        out[f"grid_{fmt.name}"] = fmt.grid()
+        out[f"fp_round_{fmt.name}"] = (
+            np.asarray(ref.fp_round(jnp.asarray(probe), fmt))
+            .flatten().tolist()
+        )
+    for fmt in (F.INT4, F.INT8, F.E2M1, F.E1M2, F.E4M3):
+        for n in (64, 128):
+            key = f"abfp_{fmt.name}_n{n}"
+            out[key] = (
+                np.asarray(ref.abfp_qdq(jnp.asarray(probe), fmt, n))
+                .flatten().tolist()
+            )
+    for fmt in (F.INT4, F.INT8, F.E4M3):
+        for n in (64, 128):
+            key = f"abfp2_{fmt.name}_n{n}"
+            out[key] = (
+                np.asarray(ref.abfp2_qdq(jnp.asarray(probe), fmt, n))
+                .flatten().tolist()
+            )
+    for bits in (4, 8):
+        out[f"static_int{bits}_a2.5"] = (
+            np.asarray(ref.static_int_qdq(jnp.asarray(probe), jnp.float32(2.5), bits))
+            .flatten().tolist()
+        )
+        alpha = np.abs(probe).max(axis=0)
+        out[f"static_int{bits}_pc"] = (
+            np.asarray(ref.static_int_qdq(jnp.asarray(probe), jnp.asarray(alpha), bits))
+            .flatten().tolist()
+        )
+        out[f"pcmax_w_int{bits}"] = (
+            np.asarray(ref.per_channel_max_weight_qdq(jnp.asarray(probe), bits))
+            .flatten().tolist()
+        )
+    with open(os.path.join(gdir, "quant_goldens.json"), "w") as f:
+        json.dump(out, f)
+    print(f"[aot] wrote goldens ({len(out)} tables)")
+
+
+# --- main ------------------------------------------------------------------
+
+
+def build_manifest(outdir: str) -> dict:
+    models = {}
+    for name, cfg in R.MODELS.items():
+        pspecs = param_specs_for(cfg)
+        dims = C.site_dims(cfg)
+        models[name] = {
+            "arch": cfg.arch,
+            "task": cfg.task,
+            "stands_for": cfg.stands_for,
+            "vocab": cfg.vocab,
+            "d": cfg.d,
+            "L": cfg.L,
+            "heads": cfg.heads,
+            "d_ff": cfg.d_ff,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "image": cfg.image,
+            "patch": cfg.patch,
+            "channels": cfg.channels,
+            "classes": cfg.classes,
+            "params": [
+                {"name": n, "shape": list(s), "init": init}
+                for (n, s, init) in pspecs
+            ],
+            "sites": [
+                {"name": s, "dim": dims[s]} for s in C.all_site_names(cfg)
+            ],
+        }
+    return {"version": 1, "models": models, "artifacts": {}}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="regex filter on artifact ids")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--goldens-only", action="store_true")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    emit_goldens(outdir)
+    if args.goldens_only:
+        return
+
+    hpath = os.path.join(outdir, "hashes.json")
+    hashes = {}
+    if os.path.exists(hpath) and not args.force:
+        with open(hpath) as f:
+            hashes = json.load(f)
+
+    manifest = build_manifest(outdir)
+    defs = R.artifact_defs()
+    if args.only:
+        pat = re.compile(args.only)
+        keep = [d for d in defs if pat.search(d.id)]
+    else:
+        keep = defs
+
+    t0 = time.time()
+    n_lowered = 0
+    for i, adef in enumerate(keep):
+        fn, arg_specs, input_descs, output_descs = build_artifact(adef)
+        rel = f"{adef.model}/{adef.purpose}_{adef.quant}.hlo.txt"
+        path = os.path.join(outdir, rel)
+        h = artifact_hash(adef)
+        manifest["artifacts"][adef.id] = {
+            "file": rel,
+            "model": adef.model,
+            "purpose": adef.purpose,
+            "quant": adef.quant,
+            "wiring": R.QUANT_CONFIGS[adef.quant].describe(),
+            "inputs": input_descs,
+            "outputs": output_descs,
+        }
+        if hashes.get(adef.id) == h and os.path.exists(path):
+            continue
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        t1 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        hashes[adef.id] = h
+        n_lowered += 1
+        print(
+            f"[aot] ({i + 1}/{len(keep)}) {adef.id}: "
+            f"{len(text) / 1024:.0f} KiB in {time.time() - t1:.1f}s"
+        )
+        # Persist hashes incrementally so an interrupted run resumes.
+        with open(hpath, "w") as f:
+            json.dump(hashes, f)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"[aot] done: {n_lowered} lowered, {len(keep) - n_lowered} cached, "
+        f"{time.time() - t0:.1f}s total"
+    )
+
+
+if __name__ == "__main__":
+    main()

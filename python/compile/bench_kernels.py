@@ -1,0 +1,122 @@
+"""L1/L2 performance profiling (§Perf):
+
+* kernel vs oracle wallclock under interpret=True (target: kernel within
+  2x of the pure-jnp reference — interpret-mode wallclock is NOT a TPU
+  proxy, so the structural VMEM/MXU analysis below is the primary
+  deliverable);
+* analytic VMEM footprint + MXU utilization estimate for the ABFP
+  BlockSpec on a real TPU (v4 numbers), recorded in EXPERIMENTS.md §Perf;
+* lowered-HLO cost analysis of representative L2 artifacts.
+
+Run: cd python && python -m compile.bench_kernels
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import formats as F
+from .kernels import abfp, ref
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4 per-core VMEM
+VPU_LANES = 128
+
+
+def timeit(fn, *args, iters=10):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def kernel_vs_ref():
+    print("== ABFP kernel vs pure-jnp oracle (interpret=True, CPU) ==")
+    rs = np.random.RandomState(0)
+    for (rows, k) in [(512, 512), (512, 2048), (2048, 512)]:
+        x = jnp.asarray(rs.randn(rows, k).astype("float32"))
+        for fmt in (F.INT4, F.E4M3):
+            for n in (64, 128):
+                t_k = timeit(
+                    jax.jit(lambda v: abfp.abfp_qdq_2d(v, fmt, n),
+                            static_argnums=()), x)
+                t_r = timeit(
+                    jax.jit(lambda v: ref.abfp_qdq(v, fmt, n)), x)
+                print(
+                    f"  {rows}x{k} {fmt.name} n={n}: kernel {t_k*1e3:7.2f} ms"
+                    f"  ref {t_r*1e3:7.2f} ms  ratio {t_r/t_k:5.2f}x"
+                )
+
+
+def abfp2_vs_abfp():
+    print("\n== two-level (abfp2) kernel vs plain abfp, and vs its oracle ==")
+    rs = np.random.RandomState(1)
+    for (rows, k) in [(512, 2048), (2048, 512)]:
+        x = jnp.asarray(rs.randn(rows, k).astype("float32"))
+        t1 = timeit(jax.jit(lambda v: abfp.abfp_qdq_2d(v, F.INT4, 64)), x)
+        t2 = timeit(jax.jit(lambda v: abfp.abfp2_qdq_2d(v, F.INT4, 64)), x)
+        t2r = timeit(jax.jit(lambda v: ref.abfp2_qdq(v, F.INT4, 64)), x)
+        print(
+            f"  {rows}x{k}: abfp {t1*1e3:7.2f} ms  abfp2 {t2*1e3:7.2f} ms"
+            f"  (x{t2/t1:4.2f})  abfp2-ref {t2r*1e3:7.2f} ms"
+            f"  ratio {t2r/t2:4.2f}x"
+        )
+
+
+def vmem_mxu_estimate():
+    print("\n== TPU structural estimate for the ABFP BlockSpec ==")
+    print("(tile = (R, n) f32 in VMEM; per-tile work = absmax reduce +")
+    print(" elementwise QDQ, both on the 128-lane VPU)")
+    for (rows, k, n) in [(512, 512, 64), (512, 2048, 64), (512, 2048, 128),
+                         (2048, 2048, 128)]:
+        tile_bytes = rows * n * 4 * 2  # in + out tile double-buffered
+        grid = k // n
+        fits = tile_bytes <= VMEM_BYTES
+        # VPU utilization: lanes used per vector op on the last axis
+        lanes = min(n, VPU_LANES) / VPU_LANES
+        print(
+            f"  ({rows},{k}) n={n}: grid={grid:3d} tiles, "
+            f"tile {tile_bytes/1024:7.0f} KiB (double-buffered) "
+            f"{'fits' if fits else 'EXCEEDS'} VMEM, lane util {lanes:.0%}"
+        )
+    print("  -> n in {64,128} keeps every tile VMEM-resident with 50-100%")
+    print("     lane utilization; Q and DQ fuse in-tile (no HBM round trip),")
+    print("     so the kernel is HBM-bandwidth-bound at ~2 bytes/elem moved")
+    print("     per 2 flops: the same roofline class as the paper's fused")
+    print("     fake-quant CUDA kernels (DESIGN.md §Hardware-Adaptation).")
+
+
+def hlo_cost():
+    print("\n== L2 lowered-HLO cost analysis ==")
+    from . import aot, registry as R
+
+    for aid in [
+        ("sim-opt-125m", "eval", "fp32"),
+        ("sim-opt-125m", "eval", "abfp_w4a4_n64"),
+        ("sim-opt-2.7b", "eval", "abfp_w4a4_n64"),
+        ("sim-opt-125m", "train", "qat_w4a4_n64"),
+    ]:
+        adef = R.ArtifactDef(*aid)
+        fn, specs, _, _ = aot.build_artifact(adef)
+        compiled = jax.jit(fn).lower(*specs).compile()
+        try:
+            cost = compiled.cost_analysis()
+            flops = cost.get("flops", float("nan"))
+            bytes_ = cost.get("bytes accessed", float("nan"))
+            print(
+                f"  {adef.id}: {flops/1e9:8.3f} GFLOP, "
+                f"{bytes_/1e6:8.1f} MB accessed, "
+                f"arith intensity {flops/max(bytes_,1):5.1f} flop/B"
+            )
+        except Exception as e:  # cost analysis availability varies
+            print(f"  {adef.id}: cost analysis unavailable ({e})")
+
+
+if __name__ == "__main__":
+    kernel_vs_ref()
+    abfp2_vs_abfp()
+    vmem_mxu_estimate()
+    hlo_cost()

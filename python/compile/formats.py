@@ -1,0 +1,133 @@
+"""Numeric format descriptors for INT-FP-QSim.
+
+The paper (§II-A) fixes weights at 4 bits and sweeps activations over
+INT4 / INT8 / FP4 (E2M1, E1M2) / FP8 (E4M3).  This module is the single
+source of truth for those formats on the Python side; the Rust mirror
+(`rust/src/formats/`) is validated bit-exactly against golden tables
+emitted from here (see aot.py --goldens).
+
+Conventions (documented divergences from the paper's notation):
+
+* Integer quantization is *symmetric signed* with
+  ``qmax = 2**(bits-1) - 1`` and clip range ``[-qmax, qmax]``.  Eqn (1)-(2)
+  of the paper write ``(2^b - 1)/alpha`` with clip bounds ``±2^b - 1``,
+  which would overflow a signed b-bit payload; every implementation the
+  paper builds on (TensorRT pytorch-quantization [7]) uses the symmetric
+  convention, so we follow that.
+* Low-precision float formats carry **no inf** and saturate to ``fmax``
+  (the FP8-paper convention [13] that the paper adopts).  NaN never
+  arises because quantizer inputs are finite by construction.
+* E1M2 has exponent bias ``2**(e-1) - 1 = 0``; its value grid
+  ``±{0, .5, 1, 1.5, 2, 2.5, 3, 3.5}`` is near-uniform, which is why the
+  paper finds E1M2 ≈ INT4 (Table II).
+"""
+
+from dataclasses import dataclass
+from typing import List, Union
+
+
+@dataclass(frozen=True)
+class IntFormat:
+    """Symmetric signed integer format with ``bits`` total bits."""
+
+    bits: int
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def name(self) -> str:
+        return f"int{self.bits}"
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    """Miniature float: 1 sign bit, ``e`` exponent bits, ``m`` mantissa bits.
+
+    No inf encoding; the top of the grid is used for normal values and
+    quantization saturates there.  Subnormals are representable.
+    ``nan_reserved`` models the FP8-paper E4M3 convention [13] where the
+    all-ones code point (top exponent, full mantissa) encodes NaN, so the
+    largest finite value drops one mantissa step (448 instead of 480).
+    """
+
+    e: int
+    m: int
+    nan_reserved: bool = False
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.e - 1) - 1
+
+    @property
+    def emin(self) -> int:
+        """Exponent of the smallest *normal* binade."""
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        return (2 ** self.e - 1) - self.bias
+
+    @property
+    def fmax(self) -> float:
+        """Largest finite magnitude: top binade, full mantissa (minus one
+        mantissa step if the all-ones code point is reserved for NaN)."""
+        top = 2.0 - 2.0 ** (-self.m)
+        if self.nan_reserved:
+            top -= 2.0 ** (-self.m)
+        return float(2.0 ** self.emax * top)
+
+    @property
+    def smallest_subnormal(self) -> float:
+        return float(2.0 ** self.emin * 2.0 ** (-self.m))
+
+    @property
+    def name(self) -> str:
+        return f"e{self.e}m{self.m}"
+
+    def grid(self) -> List[float]:
+        """Every non-negative representable value, ascending.
+
+        Used by tests (RNE onto the grid must equal the kernel) and by the
+        golden tables consumed by the Rust mirror.
+        """
+        vals = {0.0}
+        # subnormals: 2^emin * k/2^m, k in [1, 2^m - 1]
+        for k in range(1, 2 ** self.m):
+            vals.add(2.0 ** self.emin * k / 2.0 ** self.m)
+        # normals: 2^E * (1 + k/2^m)
+        for efield in range(1, 2 ** self.e):
+            E = efield - self.bias
+            for k in range(2 ** self.m):
+                if (
+                    self.nan_reserved
+                    and efield == 2 ** self.e - 1
+                    and k == 2 ** self.m - 1
+                ):
+                    continue  # all-ones code point is NaN, not a value
+                vals.add(2.0 ** E * (1.0 + k / 2.0 ** self.m))
+        return sorted(vals)
+
+
+Format = Union[IntFormat, FpFormat]
+
+INT4 = IntFormat(4)
+INT8 = IntFormat(8)
+E2M1 = FpFormat(2, 1)
+E1M2 = FpFormat(1, 2)
+E4M3 = FpFormat(4, 3, nan_reserved=True)  # OCP/[13] convention, fmax = 448
+
+BY_NAME = {f.name: f for f in (INT4, INT8, E2M1, E1M2, E4M3)}
+
+
+def parse(name: str) -> Format:
+    """Parse a format name (``int4``, ``e4m3``, ...) to a descriptor."""
+    if name in BY_NAME:
+        return BY_NAME[name]
+    if name.startswith("int"):
+        return IntFormat(int(name[3:]))
+    if name.startswith("e") and "m" in name:
+        e, m = name[1:].split("m")
+        return FpFormat(int(e), int(m))
+    raise ValueError(f"unknown format {name!r}")

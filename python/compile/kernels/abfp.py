@@ -1,0 +1,171 @@
+"""Pallas kernel for Adaptive Block Floating Point fake-quantization.
+
+This is the hot-spot of the simulator: ABFP QDQ runs on the input
+activations *and* the weights of every matmul-bearing layer (Eqns 6-8).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ABFP's length-``n`` vector
+scaling is itself a blocking scheme, so the BlockSpec tiles the scaled
+(reduction) axis in steps of exactly ``n``: one grid step owns a
+``(R, n)`` VMEM tile, computes the per-row absmax (a lane reduction on
+the VPU), quantizes the payload and de-quantizes — all without an HBM
+round-trip between Q and DQ.  ``n`` ∈ {64, 128} lines up with the
+128-lane vector unit / MXU tile edge, which is why those vector lengths
+are "free" on this hardware.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the Pallas
+interpreter.  Numerics are identical; real-TPU performance is estimated
+analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats as F
+from . import ref
+
+
+def _abfp_block_kernel(x_ref, o_ref, *, fmt, n):
+    """One grid step = one (R, c*n) tile holding c vectors per row.
+
+    §Perf iteration 1: the original kernel used one n-chunk per grid step
+    (tile (R, n), grid K/n); per-step dispatch overhead dominated for wide
+    tensors (interpret-mode ratio 0.2x vs the jnp oracle at K=2048).
+    Grouping c chunks per step amortizes the dispatch — and on real TPU
+    amortizes the HBM→VMEM DMA — while the per-vector scale math is
+    unchanged (bit-identical outputs; the in-tile reshape is free).
+    """
+    xt = x_ref[...]
+    R, cn = xt.shape
+    x = xt.reshape(R, cn // n, n)
+    alpha = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # ABFP keeps scales in BF16 (paper §II-B-2).
+    alpha = alpha.astype(jnp.bfloat16).astype(jnp.float32)
+    alpha = jnp.where(alpha > 0, alpha, 1.0)
+    if isinstance(fmt, F.IntFormat):
+        qmax = float(fmt.qmax)
+        s = qmax / alpha
+        q = jnp.clip(jnp.round(x * s), -qmax, qmax)
+        o_ref[...] = (q / s).astype(jnp.float32).reshape(R, cn)
+    else:
+        s = float(fmt.fmax) / alpha
+        o_ref[...] = (
+            (ref.fp_round(x * s, fmt) / s).astype(jnp.float32).reshape(R, cn)
+        )
+
+
+# Max n-chunks fused into one grid step / VMEM tile. 8 keeps the largest
+# tile in the artifact matrix (2048 rows x 8*128 lanes) at 8 MiB  — within
+# a double-buffered 16 MiB VMEM budget.
+MAX_CHUNKS_PER_STEP = 8
+
+
+def _chunk_group(k_chunks: int) -> int:
+    """Largest power-of-two divisor of k_chunks, capped at MAX_CHUNKS_PER_STEP."""
+    c = 1
+    while c * 2 <= MAX_CHUNKS_PER_STEP and k_chunks % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n"))
+def abfp_qdq_2d(x, fmt, n: int):
+    """ABFP QDQ of a 2-D ``(R, K)`` array along the last axis, K % n == 0."""
+    R, K = x.shape
+    assert K % n == 0, f"ABFP kernel needs K % n == 0, got K={K} n={n}"
+    c = _chunk_group(K // n)
+    return pl.pallas_call(
+        functools.partial(_abfp_block_kernel, fmt=fmt, n=n),
+        out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
+        grid=(K // (c * n),),
+        in_specs=[pl.BlockSpec((R, c * n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((R, c * n), lambda i: (0, i)),
+        interpret=True,
+    )(x)
+
+
+def abfp_qdq(x, fmt, n: int):
+    """ABFP QDQ along the last axis of an arbitrary-rank array."""
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    return abfp_qdq_2d(x2, fmt, n).reshape(shape)
+
+
+# --- two-level scales (VS-Quant; paper §II-B-2 second-level quantization) --
+
+
+def _abfp2_row_kernel(x_ref, o_ref, *, fmt, n, scale_bits):
+    """One grid step = a full-row tile (RB, K): the second-level scale is a
+    per-row reduction, so the whole row must live in one VMEM tile.  K is
+    at most 4·d = 2048 in the artifact matrix, so a (128, 2048) f32 tile is
+    1 MiB — well inside a double-buffered VMEM budget.
+    """
+    xt = x_ref[...]
+    RB, K = xt.shape
+    x = xt.reshape(RB, K // n, n)
+    alpha = jnp.max(jnp.abs(x), axis=-1)  # (RB, K//n) raw
+    gamma = jnp.max(alpha, axis=-1, keepdims=True)
+    gamma = gamma.astype(jnp.bfloat16).astype(jnp.float32)
+    gamma = jnp.where(gamma > 0, gamma, 1.0)
+    smax = float(2 ** scale_bits - 1)
+    code = jnp.clip(jnp.ceil(alpha / gamma * smax), 1.0, smax)
+    # Reconstructed scales are BF16 like every ABFP scale (see ref.py).
+    ah = (code / smax * gamma).astype(jnp.bfloat16).astype(jnp.float32)
+    a = jnp.where(alpha > 0, ah, 1.0)[..., None]
+    if isinstance(fmt, F.IntFormat):
+        qmax = float(fmt.qmax)
+        s = qmax / a
+        q = jnp.clip(jnp.round(x * s), -qmax, qmax)
+        o_ref[...] = (q / s).astype(jnp.float32).reshape(RB, K)
+    else:
+        s = float(fmt.fmax) / a
+        o_ref[...] = (
+            (ref.fp_round(x * s, fmt) / s).astype(jnp.float32).reshape(RB, K)
+        )
+
+
+def _row_block(rows: int, k: int) -> int:
+    """Tile row count: largest power-of-two divisor of ``rows`` whose
+    (rb, K) f32 tile stays within a 4 MiB budget (8 MiB double-buffered
+    with the output tile — same envelope as the abfp kernel).
+
+    §Perf L1 iteration 2: the original fixed 128-row cap left wide-R
+    arrays split across many grid steps, and per-step dispatch dominated
+    under interpret (4.4x slower than plain abfp at 2048x512).  Sizing
+    the block from the VMEM budget collapses those to one or two steps;
+    per-row numerics are independent of blocking, so outputs are
+    bit-identical.
+    """
+    cap = max(1, (4 << 20) // (4 * k))
+    rb = 1
+    while rb * 2 <= cap and rows % (rb * 2) == 0:
+        rb *= 2
+    return rb
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n", "scale_bits"))
+def abfp2_qdq_2d(x, fmt, n: int, scale_bits: int = 8):
+    """Two-level ABFP QDQ of a 2-D ``(R, K)`` array along the last axis."""
+    R, K = x.shape
+    assert K % n == 0, f"ABFP kernel needs K % n == 0, got K={K} n={n}"
+    rb = _row_block(R, K)
+    return pl.pallas_call(
+        functools.partial(
+            _abfp2_row_kernel, fmt=fmt, n=n, scale_bits=scale_bits
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
+        grid=(R // rb,),
+        in_specs=[pl.BlockSpec((rb, K), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, K), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def abfp2_qdq(x, fmt, n: int, scale_bits: int = 8):
+    """Two-level ABFP QDQ along the last axis of an arbitrary-rank array."""
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    return abfp2_qdq_2d(x2, fmt, n, scale_bits).reshape(shape)

@@ -1,0 +1,50 @@
+"""Pallas kernel for miniature-float (EeMm) grid rounding.
+
+Standalone building block: rounds f32 values to the nearest representable
+EeMm value (RNE, saturating, subnormals, no inf — see formats.py).  The
+ABFP kernel fuses this same math with its per-vector scaling; this kernel
+exists for (a) unscaled float QDQ experiments (e.g. raw-E4M3 output
+quantization, §III "photonics hardware can involve output quantization"),
+and (b) golden-table generation for the Rust mirror.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats as F
+
+
+def _fp_round_kernel(x_ref, o_ref, *, m, emin, fmax):
+    x = x_ref[...]
+    ax = jnp.abs(x)
+    safe = jnp.where(ax > 0, ax, 1.0)
+    E = jnp.maximum(jnp.floor(jnp.log2(safe)), float(emin))
+    ulp = jnp.exp2(E - m)
+    q = jnp.minimum(jnp.round(ax / ulp) * ulp, fmax)
+    o_ref[...] = (jnp.sign(x) * q).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def fp_round_2d(x, fmt: F.FpFormat):
+    R, K = x.shape
+    return pl.pallas_call(
+        functools.partial(
+            _fp_round_kernel, m=fmt.m, emin=fmt.emin, fmax=fmt.fmax
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((R, K), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((R, K), lambda i: (0, 0)),
+        interpret=True,
+    )(x)
+
+
+def fp_round(x, fmt: F.FpFormat):
+    """EeMm grid rounding of an arbitrary-rank array."""
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1])) if x.ndim != 2 else x
+    out = fp_round_2d(x2, fmt)
+    return out.reshape(shape)

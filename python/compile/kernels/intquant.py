@@ -1,0 +1,82 @@
+"""Pallas kernels for static-scale integer fake-quantization (Eqns 1-3).
+
+Two variants:
+
+* per-tensor — one calibrated clip range ``alpha`` for the whole tensor
+  (the paper's static MSE-calibrated activations);
+* per-channel — one ``alpha`` per channel of the last axis (the paper's
+  per-channel max weight calibration, and RPTQ's cluster-wise activation
+  scales, which are expressed as a per-channel scale vector).
+
+The tile layout mirrors the ABFP kernel: the last axis is the lane axis;
+per-channel scales ride along as a second (row-broadcast) operand so the
+QDQ stays a single VMEM-resident elementwise pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int_qdq_kernel(x_ref, a_ref, o_ref, *, qmax):
+    x = x_ref[...]
+    alpha = a_ref[...]
+    alpha = jnp.where(alpha > 0, alpha, 1.0)
+    s = qmax / alpha
+    q = jnp.clip(jnp.round(x * s), -qmax, qmax)
+    o_ref[...] = (q / s).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def static_int_qdq_2d(x, alpha, bits: int):
+    """Static integer QDQ of ``(R, K)`` x.
+
+    ``alpha`` is ``(1, 1)`` (per-tensor) or ``(1, K)`` (per-channel on the
+    last axis); it is broadcast over rows inside the kernel tile.
+    """
+    R, K = x.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    ar, ak = alpha.shape
+    return pl.pallas_call(
+        functools.partial(_int_qdq_kernel, qmax=qmax),
+        out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((R, K), lambda i: (0, 0)),
+            pl.BlockSpec((ar, ak), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, K), lambda i: (0, 0)),
+        interpret=True,
+    )(x, alpha)
+
+
+def static_int_qdq(x, alpha, bits: int):
+    """Static integer QDQ along the last axis of an arbitrary-rank array.
+
+    alpha: scalar array () / (1,) for per-tensor, or (K,) per-channel.
+    """
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    a = jnp.asarray(alpha, jnp.float32)
+    if a.ndim == 0:
+        a2 = a.reshape((1, 1))
+    elif a.shape == (1,):
+        a2 = a.reshape((1, 1))
+    else:
+        assert a.shape == (shape[-1],), (a.shape, shape)
+        a2 = a.reshape((1, shape[-1]))
+    return static_int_qdq_2d(x2, a2, bits).reshape(shape)
+
+
+def per_channel_max_weight_qdq(w, bits: int):
+    """Per-output-channel max weight QDQ: alpha = absmax over input dim.
+
+    w: (dout, din).  The absmax is computed in-graph (it depends only on
+    the weights, so "static vs dynamic" is immaterial) and fed to the
+    per-channel kernel with the channel axis transposed to the lane axis.
+    """
+    alpha = jnp.max(jnp.abs(w), axis=-1)  # (dout,)
+    wt = w.T  # (din, dout): channel (dout) on the last axis
+    return static_int_qdq(wt, alpha, bits).T

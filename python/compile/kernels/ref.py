@@ -1,0 +1,169 @@
+"""Pure-jnp reference oracles for the Pallas quantization kernels.
+
+These are the *semantic definition* of every quantizer in the simulator
+(Eqns 1-4 of the paper).  The Pallas kernels in this package must match
+these bit-for-bit (pytest + hypothesis enforce it), and the Rust mirrors
+in ``rust/src/formats/`` are validated against golden tables generated
+from these functions.
+"""
+
+import jax.numpy as jnp
+
+from .. import formats as F
+
+
+def round_half_even(x):
+    """Round to nearest integer, ties to even (IEEE RNE). jnp.round is RNE."""
+    return jnp.round(x)
+
+
+def int_qdq(x, scale, bits: int):
+    """Symmetric integer fake-quant, Eqns (1)-(3).
+
+    ``scale`` maps real values to integer steps (s = qmax / alpha) and is
+    broadcast against ``x`` (scalar for per-tensor, vector for
+    per-channel).  Returns DQ(Q(x)) in f32.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(round_half_even(x * scale), -qmax, qmax)
+    return (q / scale).astype(jnp.float32)
+
+
+def fp_round(x, fmt: F.FpFormat):
+    """Round-to-nearest-even onto the EeMm grid, saturating at fmax.
+
+    Subnormals of the target format are representable; there is no inf
+    encoding (values beyond fmax clamp to fmax) — the convention of the
+    FP8 paper [13] that INT-FP-QSim adopts.  For NaN-reserved formats
+    (E4M3) fmax already excludes the NaN code point (448).
+    """
+    ax = jnp.abs(x)
+    # Exponent of the containing binade, clamped to the subnormal floor.
+    # Where ax == 0 the log2 is -inf; any finite placeholder works because
+    # round(0/ulp)*ulp == 0 for every ulp.
+    safe = jnp.where(ax > 0, ax, 1.0)
+    E = jnp.floor(jnp.log2(safe))
+    E = jnp.maximum(E, float(fmt.emin))
+    ulp = jnp.exp2(E - fmt.m)
+    q = round_half_even(ax / ulp) * ulp
+    q = jnp.minimum(q, fmt.fmax)
+    return (jnp.sign(x) * q).astype(jnp.float32)
+
+
+def fp_qdq(x, scale, fmt: F.FpFormat):
+    """Scaled float fake-quant: map alpha -> fmax, round on the grid, undo.
+
+    ``scale`` is ``fmax / alpha`` (same convention as int_qdq: multiply
+    into the grid, divide out).
+    """
+    return (fp_round(x * scale, fmt) / scale).astype(jnp.float32)
+
+
+def _bf16(x):
+    """Scale rounding: ABFP keeps per-vector scales in BF16 (paper §II-B-2)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def abfp_scales(x, n: int):
+    """Per-vector absmax scales over length-``n`` chunks of the last axis.
+
+    x: (..., K) with K % n == 0.  Returns (..., K//n) BF16-rounded scales
+    (alpha, i.e. the absmax itself), with zeros replaced by 1 so empty
+    vectors dequantize to zero instead of NaN.
+    """
+    K = x.shape[-1]
+    assert K % n == 0, f"ABFP needs K % n == 0, got K={K} n={n}"
+    xb = x.reshape(x.shape[:-1] + (K // n, n))
+    alpha = jnp.max(jnp.abs(xb), axis=-1)
+    alpha = _bf16(alpha)
+    return jnp.where(alpha > 0, alpha, 1.0)
+
+
+def abfp_qdq(x, fmt, n: int):
+    """Adaptive Block Floating Point fake-quant (Eqn 4) along the last axis.
+
+    Every length-``n`` vector is scaled by its own absmax (BF16), its
+    payload quantized to ``fmt`` (integer or miniature float), and
+    de-quantized.  Because the scale is the absmax, ABFP never clips.
+    """
+    K = x.shape[-1]
+    alpha = abfp_scales(x, n)  # (..., K//n)
+    xb = x.reshape(x.shape[:-1] + (K // n, n))
+    a = alpha[..., None]
+    if isinstance(fmt, F.IntFormat):
+        s = float(fmt.qmax) / a
+        y = int_qdq(xb, s, fmt.bits)
+    else:
+        s = float(fmt.fmax) / a
+        y = fp_qdq(xb, s, fmt)
+    return y.reshape(x.shape).astype(jnp.float32)
+
+
+def abfp2_scales(x, n: int, scale_bits: int = 8):
+    """Two-level ABFP scales (VS-Quant [5]; paper §II-B-2 "second-level
+    quantization for the scale factors").
+
+    Level 1: per-vector absmax alpha over length-``n`` chunks, as in ABFP.
+    Level 2: per-row second-level scale gamma = max_j alpha_j (BF16), with
+    each alpha re-expressed as an *unsigned ``scale_bits``-bit code* against
+    gamma.  Codes round **up** (ceil) so the reconstructed scale never
+    undershoots the vector's absmax — preserving ABFP's never-clips
+    property at the cost of ≤1 code of extra step size.  The reconstructed
+    scale is BF16, like every ABFP scale (§II-B-2) — which also keeps the
+    eager oracle and the jitted kernel bit-identical (full-mantissa scales
+    are vulnerable to XLA div/mul reassociation).
+
+    Returns (alpha_hat, gamma) with shapes (..., K//n) and (..., 1).
+    Storage: scale_bits/n + 16/K bits per element (vs 16/n for ABFP).
+    """
+    K = x.shape[-1]
+    assert K % n == 0, f"ABFP needs K % n == 0, got K={K} n={n}"
+    xb = x.reshape(x.shape[:-1] + (K // n, n))
+    alpha = jnp.max(jnp.abs(xb), axis=-1)  # raw, per-vector
+    gamma = _bf16(jnp.max(alpha, axis=-1, keepdims=True))
+    gamma = jnp.where(gamma > 0, gamma, 1.0)
+    smax = float(2 ** scale_bits - 1)
+    code = jnp.clip(jnp.ceil(alpha / gamma * smax), 1.0, smax)
+    alpha_hat = _bf16(code / smax * gamma)
+    alpha_hat = jnp.where(alpha > 0, alpha_hat, 1.0)
+    return alpha_hat, gamma
+
+
+def abfp2_qdq(x, fmt, n: int, scale_bits: int = 8):
+    """Two-level ABFP fake-quant: ABFP payload with 8-bit quantized scales.
+
+    Identical to :func:`abfp_qdq` except the per-vector scale itself is
+    stored as an unsigned ``scale_bits`` code against a per-row BF16
+    second-level scale — the compression the paper defers to future work.
+    """
+    K = x.shape[-1]
+    alpha, _ = abfp2_scales(x, n, scale_bits)
+    xb = x.reshape(x.shape[:-1] + (K // n, n))
+    a = alpha[..., None]
+    if isinstance(fmt, F.IntFormat):
+        y = int_qdq(xb, float(fmt.qmax) / a, fmt.bits)
+    else:
+        y = fp_qdq(xb, float(fmt.fmax) / a, fmt)
+    return y.reshape(x.shape).astype(jnp.float32)
+
+
+def static_int_qdq(x, alpha, bits: int):
+    """Static-scale integer fake-quant from a calibrated clip range alpha.
+
+    alpha is per-tensor (scalar) or per-channel over the last axis
+    (shape (K,)).  s = qmax / alpha, Eqn (1).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    alpha = jnp.where(alpha > 0, alpha, 1.0)
+    return int_qdq(x, qmax / alpha, bits)
+
+
+def per_channel_max_weight_qdq(w, bits: int):
+    """Per-output-channel max calibration for weights (paper §II-B-1).
+
+    w: (dout, din); alpha = absmax over din per output row.
+    """
+    alpha = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    alpha = jnp.where(alpha > 0, alpha, 1.0)
+    qmax = float(2 ** (bits - 1) - 1)
+    return int_qdq(w, qmax / alpha, bits)

@@ -1,0 +1,73 @@
+"""BERT-style encoder with a span-extraction QA head (SQuAD stand-in).
+
+Bidirectional pre-LN encoder over [CLS] question [SEP] passage token
+streams; a 2-output linear head produces start/end logits.  The head and
+embeddings stay unquantized (common.py scope notes).
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def param_specs(cfg: C.ArchCfg) -> List[Tuple[str, Tuple[int, ...], str]]:
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d), "normal"),
+        ("pos_emb", (cfg.seq, cfg.d), "normal"),
+        ("emb_gain", (cfg.d,), "lognormal"),
+    ]
+    for li in range(cfg.L):
+        specs += C.block_param_specs(li, cfg.d)
+    specs += [
+        ("lnf_g", (cfg.d,), "ones"),
+        ("lnf_b", (cfg.d,), "zeros"),
+        ("span_w", (2, cfg.d), "normal"),
+        ("span_b", (2,), "zeros"),
+    ]
+    return specs
+
+
+def forward(
+    p: Dict[str, jnp.ndarray],
+    tokens,  # (B, S) int32
+    cfg: C.ArchCfg,
+    wiring: C.QuantWiring,
+    sites: Dict[str, C.SiteInputs],
+    capture: Optional[list] = None,
+):
+    """Returns (start_logits, end_logits), each (B, S)."""
+    B, S = tokens.shape
+    x = p["tok_emb"][tokens] * p["emb_gain"] + p["pos_emb"][None, :S]
+    for li in range(cfg.L):
+        x = C.block(x, p, li, cfg, wiring, sites, causal=False, capture=capture)
+    x = C.layer_norm(x, p["lnf_g"], p["lnf_b"])
+    span = x @ p["span_w"].T + p["span_b"]  # (B, S, 2), unquantized head
+    return span[..., 0], span[..., 1]
+
+
+def eval_spans(p, tokens, cfg, wiring, sites):
+    """Eval artifact body: (start_logits, end_logits)."""
+    return forward(p, tokens, cfg, wiring, sites)
+
+
+def span_loss(p, tokens, starts, ends, cfg, wiring, sites):
+    """Mean CE over gold start/end positions; starts/ends (B,) int32."""
+    sl, el = forward(p, tokens, cfg, wiring, sites)
+
+    def ce(logits, tgt):
+        z = logits - jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+        gold = jnp.take_along_axis(z, tgt[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return 0.5 * (ce(sl, starts) + ce(el, ends))
+
+
+def capture_acts(p, tokens, cfg):
+    cap: list = []
+    sl, el = forward(p, tokens, cfg, C.FP32, {}, capture=cap)
+    assert [n for (n, _) in cap] == C.all_site_names(cfg)
+    # _anchor: keeps the head/lnf params alive (see opt.capture_acts).
+    return tuple(t for (_, t) in cap) + (jnp.mean(sl) + jnp.mean(el),)

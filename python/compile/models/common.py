@@ -1,0 +1,247 @@
+"""Shared transformer building blocks with quantizer-wrapped linears.
+
+This is the L2 analog of the paper's layer replacement (§III): every
+weight-bearing matmul in an encoder/decoder block goes through
+``qlinear``, which applies the weight quantizer f_q^w, the
+input-activation quantizer f_q^x and (optionally) the output quantizer
+f_q^y around a high-precision matmul — Eqns (6)-(9) exactly.
+
+Scope notes (mirroring the paper's setup and the SQ/GPTQ/RPTQ reference
+implementations):
+  * embeddings, the patch-embed conv, LM/classifier heads, and the
+    parameter-free attention BMMs (QK^T, PV) stay in high precision;
+  * output activations are left unquantized in all experiments (§IV:
+    "we do not explore the impact of low-precision output quantization");
+    f_q^y support exists for the photonics-hardware use case.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .. import quantizers as Q
+
+
+@dataclass(frozen=True)
+class ArchCfg:
+    """Static architecture + workload shape of one simulated model."""
+
+    name: str
+    arch: str  # opt | bert | vit
+    vocab: int
+    d: int
+    L: int
+    heads: int
+    seq: int
+    batch: int
+    # role metadata: which paper checkpoint this model stands in for
+    stands_for: str = ""
+    task: str = "lm"  # lm | span_qa | image_cls
+    # vit-specific
+    image: int = 0
+    patch: int = 0
+    channels: int = 3
+    classes: int = 0
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+    @property
+    def n_patches(self) -> int:
+        assert self.arch == "vit"
+        return (self.image // self.patch) ** 2
+
+
+@dataclass(frozen=True)
+class QuantWiring:
+    """How every quantized site in the model is wired for one artifact.
+
+    ``layer_overrides`` implements per-layer mixed precision — the feature
+    the paper's §VI lists as unsupported future work ("INT-FP-QSim
+    currently does not support specification of different quantizers for
+    different layers").  Each entry is ``(layer_index, QuantWiring)``;
+    negative indices count from the back (``-1`` = last block), so one
+    config serves models of different depth.  Overrides replace the
+    wq/aq/oq specs for that block while inheriting the parent's
+    ``smooth``/``ste`` flags (those are model-global wiring decisions).
+    """
+
+    wq: Q.QuantSpec = Q.NONE
+    aq: Q.QuantSpec = Q.NONE
+    oq: Q.QuantSpec = Q.NONE  # f_q^y; identity in all paper experiments
+    smooth: bool = False  # SmoothQuant per-channel input vectors
+    ste: bool = False  # QAT: PWL estimator around every QDQ
+    layer_overrides: Tuple["Tuple[int, QuantWiring]", ...] = ()
+
+    def for_layer(self, li: int, L: int) -> "QuantWiring":
+        """Effective wiring for block ``li`` of an ``L``-block model."""
+        for idx, w in self.layer_overrides:
+            if idx % L == li % L:
+                return QuantWiring(
+                    wq=w.wq, aq=w.aq, oq=w.oq,
+                    smooth=self.smooth, ste=self.ste,
+                )
+        return self
+
+    def describe(self) -> dict:
+        d = {
+            "wq": self.wq.describe(),
+            "aq": self.aq.describe(),
+            "oq": self.oq.describe(),
+            "smooth": self.smooth,
+            "ste": self.ste,
+        }
+        if self.layer_overrides:
+            d["layer_overrides"] = [
+                [idx, w.describe()] for idx, w in self.layer_overrides
+            ]
+        return d
+
+
+FP32 = QuantWiring()
+
+# Quantized sites per transformer block, with their input dims (×d).
+SITE_NAMES = ("qkv", "attn_out", "fc1", "fc2")
+
+
+def site_in_dim(site: str, d: int) -> int:
+    return 4 * d if site == "fc2" else d
+
+
+@dataclass
+class SiteInputs:
+    """Runtime inputs feeding one site's quantizers (may be None)."""
+
+    smooth: Optional[jnp.ndarray] = None  # (din,) SmoothQuant 1/s vector
+    alpha: Optional[jnp.ndarray] = None  # scalar or (din,) activation clip
+
+
+def qlinear(
+    x,
+    w,
+    b,
+    wiring: QuantWiring,
+    site: Optional[SiteInputs] = None,
+    capture: Optional[list] = None,
+    capture_name: str = "",
+):
+    """Quantizer-wrapped linear: y = f_q^x(x·smooth) @ f_q^w(w)^T + b.
+
+    x: (..., din), w: (dout, din).  ``capture`` collects the raw (pre-
+    quantizer, post-smoothing-site placement but *before* smoothing is
+    applied — the calibrator wants the raw tensor) activations for the
+    Rust calibration engine.
+    """
+    si = site or SiteInputs()
+    if capture is not None:
+        capture.append((capture_name, x.reshape((-1, x.shape[-1]))))
+    if si.smooth is not None:
+        x = x * si.smooth
+    xq = Q.apply(x, wiring.aq, alpha=si.alpha, ste=wiring.ste)
+    wq = Q.apply(w, wiring.wq, ste=wiring.ste)
+    y = xq @ wq.T + b
+    return Q.apply(y, wiring.oq) if wiring.oq.kind != "none" else y
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(q, k, v, heads: int, causal: bool):
+    """Multi-head attention over (B, S, d) projections, fp32 internals."""
+    B, S, d = q.shape
+    hd = d // heads
+
+    def split(t):
+        return t.reshape(B, S, heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, d)
+
+
+def block(
+    x,
+    p: Dict[str, jnp.ndarray],
+    li: int,
+    cfg: ArchCfg,
+    wiring: QuantWiring,
+    sites: Dict[str, SiteInputs],
+    causal: bool,
+    capture: Optional[list] = None,
+):
+    """Pre-LN transformer block with quantized qkv/out/fc1/fc2 linears."""
+    wiring = wiring.for_layer(li, cfg.L)
+
+    def P(n):
+        return p[f"l{li}.{n}"]
+
+    def S(site):
+        return sites.get(f"l{li}.{site}")
+
+    h = layer_norm(x, P("ln1_g"), P("ln1_b"))
+    qkv = qlinear(
+        h, P("wqkv"), P("bqkv"), wiring, S("qkv"), capture, f"l{li}.qkv"
+    )
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    a = attention(q, k, v, cfg.heads, causal)
+    a = qlinear(
+        a, P("wo"), P("bo"), wiring, S("attn_out"), capture, f"l{li}.attn_out"
+    )
+    x = x + a
+    h = layer_norm(x, P("ln2_g"), P("ln2_b"))
+    h = qlinear(
+        h, P("wfc1"), P("bfc1"), wiring, S("fc1"), capture, f"l{li}.fc1"
+    )
+    h = jnp.maximum(h, 0.0)  # OPT uses ReLU
+    h = qlinear(
+        h, P("wfc2"), P("bfc2"), wiring, S("fc2"), capture, f"l{li}.fc2"
+    )
+    return x + h
+
+
+def block_param_specs(li: int, d: int) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, init) triples for one block; init ∈ {normal, zeros, ones}."""
+    dff = 4 * d
+    return [
+        (f"l{li}.ln1_g", (d,), "lngain"),
+        (f"l{li}.ln1_b", (d,), "zeros"),
+        (f"l{li}.wqkv", (3 * d, d), "normal"),
+        (f"l{li}.bqkv", (3 * d,), "zeros"),
+        (f"l{li}.wo", (d, d), "residual"),
+        (f"l{li}.bo", (d,), "zeros"),
+        (f"l{li}.ln2_g", (d,), "lngain"),
+        (f"l{li}.ln2_b", (d,), "zeros"),
+        (f"l{li}.wfc1", (dff, d), "normal"),
+        (f"l{li}.bfc1", (dff,), "zeros"),
+        (f"l{li}.wfc2", (d, dff), "residual"),
+        (f"l{li}.bfc2", (d,), "zeros"),
+    ]
+
+
+def all_site_names(cfg: ArchCfg) -> List[str]:
+    """Every quantized site in model order, as ``l{i}.{site}`` ids."""
+    return [f"l{i}.{s}" for i in range(cfg.L) for s in SITE_NAMES]
+
+
+def site_dims(cfg: ArchCfg) -> Dict[str, int]:
+    return {
+        f"l{i}.{s}": site_in_dim(s, cfg.d)
+        for i in range(cfg.L)
+        for s in SITE_NAMES
+    }

@@ -1,0 +1,90 @@
+"""OPT-style decoder language model (stand-in for OPT 125M…2.7B).
+
+Architecture follows OPT: learned positional embeddings, pre-LN blocks,
+ReLU FFN, tied LM head.  One deliberate addition, ``emb_gain``: a
+per-channel log-normal gain on the embedding output.  Billion-parameter
+LLMs develop a handful of high-magnitude activation channels that make
+per-tensor activation quantization collapse (the motivation for
+SmoothQuant/RPTQ); models at our simulation scale trained for a few
+hundred steps do not develop them organically, so the gain injects the
+same per-channel magnitude spread into the residual stream.  It is a
+trained parameter initialized log-normally (DESIGN.md §1 substitution
+table).  The Codegen stand-ins reuse this module with a different vocab
+and corpus.
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def param_specs(cfg: C.ArchCfg) -> List[Tuple[str, Tuple[int, ...], str]]:
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d), "normal"),
+        ("pos_emb", (cfg.seq, cfg.d), "normal"),
+        ("emb_gain", (cfg.d,), "lognormal"),
+    ]
+    for li in range(cfg.L):
+        specs += C.block_param_specs(li, cfg.d)
+    specs += [("lnf_g", (cfg.d,), "ones"), ("lnf_b", (cfg.d,), "zeros")]
+    return specs
+
+
+def forward(
+    p: Dict[str, jnp.ndarray],
+    tokens,  # (B, S) int32
+    cfg: C.ArchCfg,
+    wiring: C.QuantWiring,
+    sites: Dict[str, C.SiteInputs],
+    capture: Optional[list] = None,
+):
+    """Returns logits (B, S, vocab)."""
+    B, S = tokens.shape
+    x = p["tok_emb"][tokens] * p["emb_gain"] + p["pos_emb"][None, :S]
+    for li in range(cfg.L):
+        x = C.block(x, p, li, cfg, wiring, sites, causal=True, capture=capture)
+    x = C.layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T  # tied head, unquantized
+
+
+def nll_sum(logits, tokens):
+    """Sum of next-token negative log-likelihoods over the batch.
+
+    Positions 0..S-2 predict tokens 1..S-1; returns a scalar so the Rust
+    evaluator can aggregate exact corpus PPL across batches.
+    """
+    z = logits[:, :-1]
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    logp = z - lse
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll)
+
+
+def eval_nll(p, tokens, cfg, wiring, sites):
+    """Eval artifact body: (sum_nll,)."""
+    return (nll_sum(forward(p, tokens, cfg, wiring, sites), tokens),)
+
+
+def eval_logits(p, tokens, cfg, wiring, sites):
+    """Logits artifact body for greedy decoding (Codegen Pass@1)."""
+    return (forward(p, tokens, cfg, wiring, sites),)
+
+
+def capture_acts(p, tokens, cfg):
+    """Capture artifact body: every site's raw input activations, in
+    ``common.all_site_names`` order, each flattened to (B*S, din).
+
+    The trailing ``_anchor`` scalar touches the full forward pass so XLA
+    cannot prune "unused" tail parameters (lnf, last-layer fc2) — the
+    artifact's parameter list must match the manifest exactly.
+    """
+    cap: list = []
+    logits = forward(p, tokens, cfg, C.FP32, {}, capture=cap)
+    names = C.all_site_names(cfg)
+    got = [t for (_, t) in cap]
+    assert [n for (n, _) in cap] == names, "site order mismatch"
+    return tuple(got) + (jnp.mean(logits),)

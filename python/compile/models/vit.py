@@ -1,0 +1,84 @@
+"""ViT-style image classifier (ImageNet ViT-L/16 & /32 stand-ins).
+
+Patchify → linear patch embed (unquantized, mirroring the common
+first-layer-in-high-precision practice) → [CLS] + learned positions →
+bidirectional encoder with quantized block linears → CLS head.
+
+sim-vit-16 uses patch 4 on 32×32 images, sim-vit-32 patch 8 — the same
+4× patch-area ratio as ViT-L/16 vs ViT-L/32.
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def param_specs(cfg: C.ArchCfg) -> List[Tuple[str, Tuple[int, ...], str]]:
+    pdim = cfg.patch * cfg.patch * cfg.channels
+    specs = [
+        ("patch_w", (cfg.d, pdim), "normal"),
+        ("patch_b", (cfg.d,), "zeros"),
+        ("cls_tok", (cfg.d,), "normal"),
+        ("pos_emb", (cfg.n_patches + 1, cfg.d), "normal"),
+        ("emb_gain", (cfg.d,), "lognormal"),
+    ]
+    for li in range(cfg.L):
+        specs += C.block_param_specs(li, cfg.d)
+    specs += [
+        ("lnf_g", (cfg.d,), "ones"),
+        ("lnf_b", (cfg.d,), "zeros"),
+        ("head_w", (cfg.classes, cfg.d), "normal"),
+        ("head_b", (cfg.classes,), "zeros"),
+    ]
+    return specs
+
+
+def patchify(images, patch: int):
+    """(B, H, W, C) → (B, n_patches, patch*patch*C)."""
+    B, H, W, Ch = images.shape
+    ph, pw = H // patch, W // patch
+    x = images.reshape(B, ph, patch, pw, patch, Ch)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, ph * pw, patch * patch * Ch)
+
+
+def forward(
+    p: Dict[str, jnp.ndarray],
+    images,  # (B, H, W, C) f32
+    cfg: C.ArchCfg,
+    wiring: C.QuantWiring,
+    sites: Dict[str, C.SiteInputs],
+    capture: Optional[list] = None,
+):
+    """Returns class logits (B, classes)."""
+    B = images.shape[0]
+    x = patchify(images, cfg.patch) @ p["patch_w"].T + p["patch_b"]
+    cls = jnp.broadcast_to(p["cls_tok"][None, None], (B, 1, cfg.d))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = (x + p["pos_emb"][None]) * p["emb_gain"]
+    for li in range(cfg.L):
+        x = C.block(x, p, li, cfg, wiring, sites, causal=False, capture=capture)
+    x = C.layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x[:, 0] @ p["head_w"].T + p["head_b"]  # CLS head, unquantized
+
+
+def eval_logits(p, images, cfg, wiring, sites):
+    return (forward(p, images, cfg, wiring, sites),)
+
+
+def cls_loss(p, images, labels, cfg, wiring, sites):
+    logits = forward(p, images, cfg, wiring, sites)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    gold = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def capture_acts(p, images, cfg):
+    cap: list = []
+    logits = forward(p, images, cfg, C.FP32, {}, capture=cap)
+    assert [n for (n, _) in cap] == C.all_site_names(cfg)
+    # _anchor: keeps the head/lnf params alive (see opt.capture_acts).
+    return tuple(t for (_, t) in cap) + (jnp.mean(logits),)

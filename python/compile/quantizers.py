@@ -1,0 +1,183 @@
+"""Quantizer-function combinators — the JAX analog of the paper's §III.
+
+A *quantizer spec* describes one of Eqns (6)/(7)/(9): a coupled
+quantize–de-quantize (QDQ) applied to a weight, input-activation or
+output tensor while the data stays f32 ("simulated quantization").  The
+specs are pure data so the AOT builder can enumerate the artifact matrix
+and the manifest can record exactly what each artifact simulates.
+
+Supported kinds:
+
+* ``none``          — identity (FP32/FP16 tensor sites);
+* ``abfp``          — dynamic per-vector absmax scaling (Eqn 4), payload
+                      in any Format, vectors of length n over the
+                      reduction axis — via the Pallas kernel;
+* ``abfp2``         — ABFP with *two-level* scales (VS-Quant, §II-B-2):
+                      per-vector scales stored as unsigned 8-bit codes
+                      against a per-row BF16 second-level scale;
+* ``static_int``    — integer QDQ with a *runtime-input* clip range
+                      (MSE-calibrated activations; scalar per site);
+* ``static_int_pc`` — integer QDQ with a runtime per-channel clip-range
+                      vector (RPTQ cluster scales, expressed per-channel);
+* ``w_pcmax_int``   — per-output-channel max weight calibration computed
+                      in-graph (paper §II-B-1).
+
+For QAT the whole QDQ is wrapped in the Piecewise-Linear estimator
+(Eqn 5): d/dx QDQ(x) := 1_{|x| <= alpha}.  With ABFP, alpha is the
+per-vector absmax so the mask is all-ones (ABFP never clips) — the
+estimator still matters for static quantizers and matches the paper's
+training setup.
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from .kernels import abfp as abfp_k
+from .kernels import intquant as int_k
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    kind: str = "none"  # none | abfp | abfp2 | static_int | static_int_pc | w_pcmax_int
+    fmt: Optional[F.Format] = None
+    n: int = 64  # ABFP vector length
+
+    @property
+    def needs_runtime_scale(self) -> bool:
+        return self.kind in ("static_int", "static_int_pc")
+
+    def describe(self) -> dict:
+        d = {"kind": self.kind, "n": self.n}
+        if self.fmt is not None:
+            d["fmt"] = self.fmt.name
+        return d
+
+
+NONE = QuantSpec("none")
+
+
+def abfp(fmt: F.Format, n: int) -> QuantSpec:
+    return QuantSpec("abfp", fmt, n)
+
+
+def abfp2(fmt: F.Format, n: int) -> QuantSpec:
+    return QuantSpec("abfp2", fmt, n)
+
+
+def static_int(bits: int) -> QuantSpec:
+    return QuantSpec("static_int", F.IntFormat(bits))
+
+
+def static_int_pc(bits: int) -> QuantSpec:
+    return QuantSpec("static_int_pc", F.IntFormat(bits))
+
+
+def w_pcmax_int(bits: int) -> QuantSpec:
+    return QuantSpec("w_pcmax_int", F.IntFormat(bits))
+
+
+def _apply_raw(x, spec: QuantSpec, alpha=None, use_pallas: bool = True):
+    """Dispatch a QDQ spec. ``alpha`` is the runtime clip range if needed."""
+    if spec.kind == "none":
+        return x
+    if spec.kind == "abfp":
+        fn = abfp_k.abfp_qdq if use_pallas else (
+            lambda v, fmt, n: ref.abfp_qdq(v, fmt, n)
+        )
+        return fn(x, spec.fmt, spec.n)
+    if spec.kind == "abfp2":
+        fn = abfp_k.abfp2_qdq if use_pallas else (
+            lambda v, fmt, n: ref.abfp2_qdq(v, fmt, n)
+        )
+        return fn(x, spec.fmt, spec.n)
+    if spec.kind in ("static_int", "static_int_pc"):
+        assert alpha is not None, f"{spec.kind} needs a runtime scale input"
+        bits = spec.fmt.bits
+        if use_pallas:
+            return int_k.static_int_qdq(x, alpha, bits)
+        a = jnp.where(alpha > 0, alpha, 1.0)
+        qmax = float(2 ** (bits - 1) - 1)
+        return ref.int_qdq(x, qmax / a, bits)
+    if spec.kind == "w_pcmax_int":
+        fn = (
+            int_k.per_channel_max_weight_qdq
+            if use_pallas
+            else ref.per_channel_max_weight_qdq
+        )
+        return fn(x, spec.fmt.bits)
+    raise ValueError(f"unknown quant kind {spec.kind!r}")
+
+
+# --- PWL straight-through estimator (Eqn 5) -------------------------------
+#
+# forward:  y = QDQ(x)
+# backward: dy/dx = 1_{|x| <= alpha}   (alpha = clip range at each element)
+
+
+def _clip_range(x, spec: QuantSpec, alpha):
+    """Elementwise clip threshold alpha for the PWL mask."""
+    if spec.kind in ("abfp", "abfp2"):
+        # Per-vector absmax broadcast back over the vector.  Use the RAW
+        # absmax (not the BF16-rounded scale): the PWL mask must include
+        # the vector's own max element, and BF16 rounding of the scale can
+        # land just below it.  (abfp2's ceil-coded scale is >= the raw
+        # absmax by construction, so the same mask is exact there too.)
+        K = x.shape[-1]
+        xb = x.reshape(x.shape[:-1] + (K // spec.n, spec.n))
+        a = jnp.max(jnp.abs(xb), axis=-1)
+        return jnp.repeat(a, spec.n, axis=-1)
+    if spec.kind in ("static_int", "static_int_pc"):
+        return jnp.broadcast_to(jnp.where(alpha > 0, alpha, 1.0), x.shape)
+    if spec.kind == "w_pcmax_int":
+        a = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        return jnp.broadcast_to(jnp.where(a > 0, a, 1.0), x.shape)
+    return jnp.full_like(x, jnp.inf)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _qdq_ste(x, alpha_in, static):
+    spec, use_pallas = static
+    return _apply_raw(x, spec, alpha_in, use_pallas)
+
+
+def _qdq_ste_fwd(x, alpha_in, static):
+    spec, use_pallas = static
+    y = _apply_raw(x, spec, alpha_in, use_pallas)
+    mask = (jnp.abs(x) <= _clip_range(x, spec, alpha_in)).astype(x.dtype)
+    return y, (mask, jnp.zeros_like(alpha_in))
+
+
+def _qdq_ste_bwd(static, res, g):
+    mask, alpha_zero = res
+    return (g * mask, alpha_zero)
+
+
+_qdq_ste.defvjp(_qdq_ste_fwd, _qdq_ste_bwd)
+
+
+def apply(
+    x,
+    spec: QuantSpec,
+    alpha=None,
+    ste: bool = False,
+    use_pallas: bool = True,
+):
+    """Apply a quantizer spec to ``x``.
+
+    ste=True wraps the QDQ in the PWL estimator for QAT; alpha feeds
+    runtime-calibrated clip ranges for the static kinds.
+    """
+    if spec.kind == "none":
+        return x
+    if ste:
+        a = alpha if alpha is not None else jnp.zeros((), jnp.float32)
+        return _qdq_ste(x, a, (spec, use_pallas))
+    return _apply_raw(x, spec, alpha, use_pallas)

@@ -1,0 +1,176 @@
+"""The artifact matrix: every simulated model and quantizer configuration.
+
+This is the single source of truth consumed by aot.py (to lower HLO
+artifacts), by the manifest (read by the Rust coordinator), and by the
+tests.  Model sizes are scaled-down stand-ins for the paper's
+checkpoints (DESIGN.md §1); every width is a multiple of 128 so both
+ABFP vector lengths (n=64, n=128) tile the reduction axes exactly.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from . import formats as F
+from . import quantizers as Q
+from .models import common as C
+
+VOCAB = 512
+CODE_VOCAB = 64
+SEQ = 64
+BATCH = 8
+
+MODELS: Dict[str, C.ArchCfg] = {}
+
+
+def _add(cfg: C.ArchCfg):
+    MODELS[cfg.name] = cfg
+
+
+# OPT family — Wikitext2 PPL stand-ins (paper Tables I-VIII, X).
+_add(C.ArchCfg("sim-opt-125m", "opt", VOCAB, 128, 2, 2, SEQ, BATCH,
+               stands_for="OPT 125M", task="lm"))
+_add(C.ArchCfg("sim-opt-350m", "opt", VOCAB, 256, 2, 4, SEQ, BATCH,
+               stands_for="OPT 350M", task="lm"))
+_add(C.ArchCfg("sim-opt-1.3b", "opt", VOCAB, 384, 3, 6, SEQ, BATCH,
+               stands_for="OPT 1.3B", task="lm"))
+_add(C.ArchCfg("sim-opt-2.7b", "opt", VOCAB, 512, 3, 8, SEQ, BATCH,
+               stands_for="OPT 2.7B", task="lm"))
+# Codegen family — HumanEval Pass@1 stand-ins (expression corpus).
+_add(C.ArchCfg("sim-codegen-2b", "opt", CODE_VOCAB, 256, 2, 4, SEQ, BATCH,
+               stands_for="Codegen 2B", task="codegen"))
+_add(C.ArchCfg("sim-codegen-6b", "opt", CODE_VOCAB, 384, 3, 6, SEQ, BATCH,
+               stands_for="Codegen 6B", task="codegen"))
+# BERT family — SQuAD span-F1 stand-ins.
+_add(C.ArchCfg("sim-bert-base", "bert", VOCAB, 128, 2, 2, SEQ, BATCH,
+               stands_for="BERT-base", task="span_qa"))
+_add(C.ArchCfg("sim-bert-large", "bert", VOCAB, 256, 3, 4, SEQ, BATCH,
+               stands_for="BERT-large", task="span_qa"))
+# ViT family — ImageNet accuracy stand-ins.
+_add(C.ArchCfg("sim-vit-16", "vit", 0, 128, 2, 2, 0, 16,
+               stands_for="ViT-large-16", task="image_cls",
+               image=32, patch=4, channels=3, classes=16))
+_add(C.ArchCfg("sim-vit-32", "vit", 0, 128, 2, 2, 0, 16,
+               stands_for="ViT-large-32", task="image_cls",
+               image=32, patch=8, channels=3, classes=16))
+
+
+# --- quantizer configurations ---------------------------------------------
+
+def _w(wiring: C.QuantWiring) -> C.QuantWiring:
+    return wiring
+
+
+QUANT_CONFIGS: Dict[str, C.QuantWiring] = {
+    "fp32": C.FP32,
+    # ABFP, dynamic per-vector scales; smooth inputs allow ABFP-SQ reuse.
+    "abfp_w4a4_n64": C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), smooth=True),
+    "abfp_w4a4_n128": C.QuantWiring(Q.abfp(F.INT4, 128), Q.abfp(F.INT4, 128), smooth=True),
+    "abfp_w4a8_n64": C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64), smooth=True),
+    "abfp_w4a8_n128": C.QuantWiring(Q.abfp(F.INT4, 128), Q.abfp(F.INT8, 128), smooth=True),
+    "abfp_e2m1_n64": C.QuantWiring(Q.abfp(F.E2M1, 64), Q.abfp(F.E2M1, 64), smooth=True),
+    "abfp_e1m2_n64": C.QuantWiring(Q.abfp(F.E1M2, 64), Q.abfp(F.E1M2, 64), smooth=True),
+    "abfp_e1m2_n128": C.QuantWiring(Q.abfp(F.E1M2, 128), Q.abfp(F.E1M2, 128), smooth=True),
+    "abfp_w4ae4m3_n64": C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.E4M3, 64), smooth=True),
+    # Static MSE calibration: per-channel max weights (in-graph), runtime
+    # per-tensor activation clip ranges found by the Rust MSE calibrator.
+    "mse_w4a4": C.QuantWiring(Q.w_pcmax_int(4), Q.static_int(4)),
+    "mse_w4a8": C.QuantWiring(Q.w_pcmax_int(4), Q.static_int(8)),
+    # RPTQ: cluster-wise activation scales expressed per-channel.
+    "rptq_w4a4": C.QuantWiring(Q.w_pcmax_int(4), Q.static_int_pc(4)),
+    "rptq_w4a8": C.QuantWiring(Q.w_pcmax_int(4), Q.static_int_pc(8)),
+    # QAT (train-step artifacts only): ABFP forward, PWL backward.
+    "qat_w4a4_n64": C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), ste=True),
+    "qat_w4a4_n128": C.QuantWiring(Q.abfp(F.INT4, 128), Q.abfp(F.INT4, 128), ste=True),
+    "qat_w4a8_n64": C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64), ste=True),
+    "qat_w4a8_n128": C.QuantWiring(Q.abfp(F.INT4, 128), Q.abfp(F.INT8, 128), ste=True),
+    # --- extensions beyond the paper's experiments (DESIGN.md §Extensions) --
+    # Two-level scales (VS-Quant; §II-B-2 "second-level quantization for
+    # the scale factors could be utilized to achieve further compression").
+    "abfp2_w4a4_n64": C.QuantWiring(Q.abfp2(F.INT4, 64), Q.abfp2(F.INT4, 64), smooth=True),
+    "abfp2_w4a8_n64": C.QuantWiring(Q.abfp2(F.INT4, 64), Q.abfp2(F.INT8, 64), smooth=True),
+    # Output quantization f_q^y (Eqn 9; the photonics-hardware case §III —
+    # every paper experiment leaves outputs in FP16).
+    "abfp_w4a4_o8_n64": C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64), smooth=True),
+    "abfp_w4a4_oe4m3_n64": C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), Q.abfp(F.E4M3, 64), smooth=True),
+    "abfp_w4a8_o8_n64": C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64), Q.abfp(F.INT8, 64), smooth=True),
+    # Per-layer mixed precision (§VI lists this as unsupported future work):
+    # boundary blocks (first + last) run at higher activation / weight
+    # precision, interior blocks at W4A4 — the standard mixed recipe.
+    "mixed_a8_boundary_n64": C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), smooth=True,
+        layer_overrides=(
+            (0, C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64))),
+            (-1, C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64))),
+        )),
+    "mixed_w8a8_boundary_n64": C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), smooth=True,
+        layer_overrides=(
+            (0, C.QuantWiring(Q.abfp(F.INT8, 64), Q.abfp(F.INT8, 64))),
+            (-1, C.QuantWiring(Q.abfp(F.INT8, 64), Q.abfp(F.INT8, 64))),
+        )),
+}
+
+
+@dataclass(frozen=True)
+class ArtifactDef:
+    model: str
+    purpose: str  # eval | eval_logits | capture | train
+    quant: str  # key into QUANT_CONFIGS
+
+    @property
+    def id(self) -> str:
+        return f"{self.model}/{self.purpose}_{self.quant}"
+
+
+OPT_EVAL_CONFIGS = [
+    "fp32",
+    "abfp_w4a4_n64", "abfp_w4a4_n128",
+    "abfp_w4a8_n64", "abfp_w4a8_n128",
+    "abfp_e2m1_n64", "abfp_e1m2_n64", "abfp_e1m2_n128",
+    "abfp_w4ae4m3_n64",
+    "mse_w4a4", "mse_w4a8",
+    "rptq_w4a4", "rptq_w4a8",
+]
+SMALL_EVAL_CONFIGS = ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64"]
+OPT_TRAIN_CONFIGS = [
+    "fp32", "qat_w4a4_n64", "qat_w4a4_n128", "qat_w4a8_n64", "qat_w4a8_n128",
+]
+# Extension ablations run on a small/large model pair (not the full OPT
+# family) to bound artifact count; the paper-table experiments above keep
+# all four sizes.
+ABLATION_MODELS = ["sim-opt-125m", "sim-opt-1.3b"]
+ABLATION_EVAL_CONFIGS = [
+    "abfp2_w4a4_n64", "abfp2_w4a8_n64",
+    "abfp_w4a4_o8_n64", "abfp_w4a4_oe4m3_n64", "abfp_w4a8_o8_n64",
+    "mixed_a8_boundary_n64", "mixed_w8a8_boundary_n64",
+]
+
+
+def artifact_defs() -> List[ArtifactDef]:
+    defs: List[ArtifactDef] = []
+    for name, cfg in MODELS.items():
+        if cfg.task == "lm":
+            for q in OPT_EVAL_CONFIGS:
+                defs.append(ArtifactDef(name, "eval", q))
+            if name in ABLATION_MODELS:
+                for q in ABLATION_EVAL_CONFIGS:
+                    defs.append(ArtifactDef(name, "eval", q))
+            defs.append(ArtifactDef(name, "capture", "fp32"))
+            for q in OPT_TRAIN_CONFIGS:
+                defs.append(ArtifactDef(name, "train", q))
+        elif cfg.task == "codegen":
+            for q in SMALL_EVAL_CONFIGS:
+                defs.append(ArtifactDef(name, "eval_logits", q))
+            defs.append(ArtifactDef(name, "train", "fp32"))
+        elif cfg.task == "span_qa":
+            for q in SMALL_EVAL_CONFIGS:
+                defs.append(ArtifactDef(name, "eval", q))
+            defs.append(ArtifactDef(name, "train", "fp32"))
+        elif cfg.task == "image_cls":
+            for q in SMALL_EVAL_CONFIGS:
+                defs.append(ArtifactDef(name, "eval", q))
+            defs.append(ArtifactDef(name, "train", "fp32"))
+    return defs

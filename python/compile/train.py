@@ -1,0 +1,78 @@
+"""Adam train-steps for FP32 pretraining and ABFP quantization-aware
+training (paper §II-C).
+
+QAT runs the *forward pass through the ABFP quantizers* with the PWL
+estimator in the backward pass (Eqn 5) — wired by ``QuantWiring.ste``.
+The optimizer state (m, v) is threaded through the artifact as explicit
+inputs/outputs so the Rust training driver owns it; the step counter and
+learning rate are runtime scalars, letting the driver implement any
+schedule without recompilation.
+"""
+
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(params, m, v, grads, step, lr):
+    """One Adam step over a dict of tensors; returns (params', m', v')."""
+    t = step  # f32 scalar, 1-based
+    out_p, out_m, out_v = {}, {}, {}
+    bc1 = 1.0 - jnp.power(B1, t)
+    bc2 = 1.0 - jnp.power(B2, t)
+    for k in params:
+        g = grads[k]
+        m2 = B1 * m[k] + (1.0 - B1) * g
+        v2 = B2 * v[k] + (1.0 - B2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        out_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + EPS)
+        out_m[k] = m2
+        out_v[k] = v2
+    return out_p, out_m, out_v
+
+
+#: Parameters excluded from optimization.  The log-normal outlier gains
+#: (`emb_gain`, LN gains) simulate the per-channel magnitude spread that
+#: billion-parameter LLMs develop over full pretraining; at our scale a
+#: few hundred Adam steps would regress them toward uniform, so they are
+#: frozen — they model an *end state*, not something to learn away
+#: (DESIGN.md §1 substitution table).
+FROZEN_SUFFIXES = ("emb_gain", "ln1_g", "ln2_g")
+
+
+def is_frozen(name: str) -> bool:
+    return name.endswith(FROZEN_SUFFIXES)
+
+
+def make_train_step(loss_fn: Callable, param_names: List[str]):
+    """Build a train-step over flat param lists (manifest order).
+
+    loss_fn(params_dict, *data) -> scalar loss.
+    Returns fn(params_list, m_list, v_list, step, lr, *data)
+             -> (new_params..., new_m..., new_v..., loss) as a flat tuple.
+    """
+
+    def step_fn(plist, mlist, vlist, step, lr, *data):
+        params = dict(zip(param_names, plist))
+        m = dict(zip(param_names, mlist))
+        v = dict(zip(param_names, vlist))
+        loss, grads = jax.value_and_grad(
+            lambda pp: loss_fn(pp, *data)
+        )(params)
+        for k in param_names:
+            if is_frozen(k):
+                grads[k] = jnp.zeros_like(grads[k])
+        p2, m2, v2 = adam_update(params, m, v, grads, step, lr)
+        flat = (
+            [p2[k] for k in param_names]
+            + [m2[k] for k in param_names]
+            + [v2[k] for k in param_names]
+            + [loss]
+        )
+        return tuple(flat)
+
+    return step_fn

@@ -1,0 +1,59 @@
+"""Format-descriptor invariants: grids, fmax, parsing."""
+
+import numpy as np
+import pytest
+
+from compile import formats as F
+
+
+def test_named_formats():
+    assert F.INT4.qmax == 7
+    assert F.INT8.qmax == 127
+    assert F.E2M1.fmax == 6.0
+    assert F.E1M2.fmax == 3.5
+    assert F.E4M3.fmax == 448.0  # NaN-reserved OCP convention
+
+
+def test_parse_roundtrip():
+    for name in ("int4", "int8", "e2m1", "e1m2", "e4m3"):
+        assert F.parse(name).name == name
+    assert F.parse("int6").qmax == 31
+    # no-inf convention: top binade is all values (57344 would be the
+    # IEEE-style fmax with the top exponent reserved for inf/nan)
+    assert F.parse("e5m2").fmax == 114688.0
+    with pytest.raises(ValueError):
+        F.parse("bogus")
+
+
+def test_e2m1_grid():
+    assert F.E2M1.grid() == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_e1m2_grid_near_uniform():
+    # E1M2's grid is the reason the paper finds E1M2 ≈ INT4 (Table II).
+    g = F.E1M2.grid()
+    assert g == [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5]
+    steps = np.diff(g)
+    assert np.allclose(steps, 0.5)
+
+
+def test_grid_sizes():
+    # 1 sign bit: total non-negative code points = 2^(e+m); minus NaN if reserved.
+    for fmt in (F.E2M1, F.E1M2):
+        assert len(fmt.grid()) == 2 ** (fmt.e + fmt.m)
+    assert len(F.E4M3.grid()) == 2 ** 7 - 1
+
+
+def test_grid_contains_fmax_and_subnormals():
+    for fmt in (F.E2M1, F.E1M2, F.E4M3):
+        g = fmt.grid()
+        assert g[-1] == fmt.fmax
+        assert fmt.smallest_subnormal in g
+        assert g[0] == 0.0
+
+
+def test_e4m3_nan_reservation():
+    g448 = F.E4M3.grid()
+    g480 = F.FpFormat(4, 3).grid()
+    assert 480.0 in g480 and 480.0 not in g448
+    assert len(g480) == len(g448) + 1

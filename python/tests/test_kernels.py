@@ -1,0 +1,259 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, formats and vector lengths; every comparison is
+exact equality (the kernel and the oracle must implement the *same*
+rounding, not merely be close).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import abfp, fpquant, intquant, ref
+
+FORMATS = [F.INT4, F.INT8, F.E2M1, F.E1M2, F.E4M3]
+
+
+def rand(shape, seed, scale=4.0, heavy_tail=False):
+    rs = np.random.RandomState(seed)
+    x = rs.randn(*shape).astype(np.float32) * scale
+    if heavy_tail:
+        x *= np.exp(rs.randn(*shape)).astype(np.float32)
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@pytest.mark.parametrize("n", [64, 128])
+def test_abfp_kernel_matches_ref(fmt, n):
+    x = rand((16, 256), seed=0, heavy_tail=True)
+    a = np.asarray(ref.abfp_qdq(x, fmt, n))
+    b = np.asarray(abfp.abfp_qdq(x, fmt, n))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 8, 17]),
+    kmul=st.sampled_from([1, 2, 3, 5]),
+    n=st.sampled_from([64, 128]),
+    fmt=st.sampled_from(FORMATS),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_abfp_kernel_hypothesis(rows, kmul, n, fmt, seed, scale):
+    x = rand((rows, kmul * n), seed=seed, scale=scale)
+    a = np.asarray(ref.abfp_qdq(x, fmt, n))
+    b = np.asarray(abfp.abfp_qdq(x, fmt, n))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_abfp_3d_input():
+    x = rand((4, 7, 128), seed=3)
+    a = np.asarray(ref.abfp_qdq(x, F.INT4, 64))
+    b = np.asarray(abfp.abfp_qdq(x, F.INT4, 64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_abfp_rejects_bad_n():
+    with pytest.raises(AssertionError):
+        abfp.abfp_qdq(rand((4, 100), 0), F.INT4, 64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+    per_channel=st.booleans(),
+)
+def test_static_int_kernel_hypothesis(bits, seed, per_channel):
+    x = rand((32, 192), seed=seed, heavy_tail=True)
+    if per_channel:
+        alpha = jnp.max(jnp.abs(x), axis=0)
+    else:
+        alpha = jnp.float32(2.5)
+    a = np.asarray(ref.static_int_qdq(x, alpha, bits))
+    b = np.asarray(intquant.static_int_qdq(x, alpha, bits))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pcmax_weight_kernel():
+    w = rand((48, 256), seed=9, heavy_tail=True)
+    a = np.asarray(ref.per_channel_max_weight_qdq(w, 4))
+    b = np.asarray(intquant.per_channel_max_weight_qdq(w, 4))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("fmt", [F.E2M1, F.E1M2, F.E4M3], ids=lambda f: f.name)
+def test_fp_round_kernel_matches_ref(fmt):
+    x = rand((8, 128), seed=1, heavy_tail=True)
+    a = np.asarray(ref.fp_round(x, fmt))
+    b = np.asarray(fpquant.fp_round(x, fmt))
+    np.testing.assert_array_equal(a, b)
+
+
+# --- two-level (abfp2) kernel vs oracle ------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@pytest.mark.parametrize("n", [64, 128])
+def test_abfp2_kernel_matches_ref(fmt, n):
+    x = rand((16, 256), seed=0, heavy_tail=True)
+    a = np.asarray(ref.abfp2_qdq(x, fmt, n))
+    b = np.asarray(abfp.abfp2_qdq(x, fmt, n))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 3, 8, 17]),
+    kmul=st.sampled_from([1, 2, 3, 5]),
+    n=st.sampled_from([64, 128]),
+    fmt=st.sampled_from(FORMATS),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_abfp2_kernel_hypothesis(rows, kmul, n, fmt, seed, scale):
+    x = rand((rows, kmul * n), seed=seed, scale=scale)
+    a = np.asarray(ref.abfp2_qdq(x, fmt, n))
+    b = np.asarray(abfp.abfp2_qdq(x, fmt, n))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_abfp2_3d_input():
+    x = rand((4, 7, 128), seed=3)
+    a = np.asarray(ref.abfp2_qdq(x, F.INT4, 64))
+    b = np.asarray(abfp.abfp2_qdq(x, F.INT4, 64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_abfp2_scale_codes_never_undershoot():
+    """Ceil-coded scales reconstruct >= the raw per-vector absmax, so the
+    payload never hard-clips (the property ABFP is built on)."""
+    x = rand((32, 256), seed=21, heavy_tail=True)
+    alpha_hat, gamma = ref.abfp2_scales(x, 64)
+    xb = np.asarray(x).reshape(32, 4, 64)
+    raw = np.abs(xb).max(axis=-1)
+    ah = np.asarray(alpha_hat)
+    nz = raw > 0
+    # BF16 rounding of gamma can shave ~2^-9 relative; ceil wins it back
+    # except exactly at the row max, where alpha_hat == bf16(gamma).
+    assert (ah[nz] >= raw[nz] * (1 - 2.0**-8)).all()
+    assert np.asarray(gamma).shape == (32, 1)
+
+
+def test_abfp2_zero_vector_is_zero():
+    x = jnp.zeros((4, 128), jnp.float32)
+    for fmt in FORMATS:
+        y = np.asarray(ref.abfp2_qdq(x, fmt, 64))
+        np.testing.assert_array_equal(y, np.zeros((4, 128), np.float32))
+
+
+def test_abfp2_error_close_to_abfp():
+    """Two-level scale coding costs at most a small extra quantization
+    error vs plain ABFP (that is the point of 8-bit scale codes)."""
+    x = rand((64, 512), seed=5, heavy_tail=True)
+    for fmt in (F.INT4, F.INT8):
+        e1 = float(jnp.mean((ref.abfp_qdq(x, fmt, 64) - x) ** 2))
+        e2 = float(jnp.mean((ref.abfp2_qdq(x, fmt, 64) - x) ** 2))
+        assert e2 <= 2.5 * e1 + 1e-12, (fmt.name, e1, e2)
+
+
+def test_abfp2_scale_bits_sweep():
+    """More scale bits -> scales closer to raw absmax -> error approaches
+    plain-ABFP error monotonically (within noise)."""
+    x = rand((16, 256), seed=8, heavy_tail=True)
+    errs = []
+    for sb in (2, 4, 8, 12):
+        y = ref.abfp2_qdq(x, F.INT4, 64, scale_bits=sb)
+        errs.append(float(jnp.mean((y - x) ** 2)))
+    assert errs[0] >= errs[1] >= errs[2] * 0.999
+    e_abfp = float(jnp.mean((ref.abfp_qdq(x, F.INT4, 64) - x) ** 2))
+    assert abs(errs[3] - e_abfp) / e_abfp < 0.05
+
+
+# --- oracle semantics ------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", [F.E2M1, F.E1M2, F.E4M3], ids=lambda f: f.name)
+def test_fp_round_lands_on_grid(fmt):
+    x = rand((4, 128), seed=2, heavy_tail=True)
+    y = np.asarray(ref.fp_round(x, fmt)).flatten()
+    grid = np.array(fmt.grid(), np.float32)
+    full = np.concatenate([-grid[::-1], grid])
+    for v in y:
+        assert np.isclose(full, v, rtol=0, atol=0).any(), v
+
+
+@pytest.mark.parametrize("fmt", [F.E2M1, F.E1M2, F.E4M3], ids=lambda f: f.name)
+def test_fp_round_is_nearest(fmt):
+    """Grid rounding must pick (one of) the nearest grid values."""
+    rs = np.random.RandomState(7)
+    x = (rs.randn(512) * fmt.fmax / 2).astype(np.float32)
+    y = np.asarray(ref.fp_round(jnp.asarray(x), fmt))
+    grid = np.array(fmt.grid(), np.float64)
+    full = np.concatenate([-grid[::-1], grid])
+    for xi, yi in zip(x, y):
+        best = np.min(np.abs(full - np.float64(xi)))
+        if abs(xi) <= fmt.fmax:
+            assert abs(yi - np.float64(xi)) <= best + 1e-12, (xi, yi)
+
+
+def test_fp_round_fixed_points():
+    """Every grid value is a fixed point of the rounding."""
+    for fmt in (F.E2M1, F.E1M2, F.E4M3):
+        g = np.array(fmt.grid(), np.float32)
+        y = np.asarray(ref.fp_round(jnp.asarray(g[None, :]), fmt))[0]
+        np.testing.assert_array_equal(g, y)
+
+
+def test_fp_round_saturates():
+    y = np.asarray(ref.fp_round(jnp.asarray([[1e30, -1e30]]), F.E4M3))
+    np.testing.assert_array_equal(y, [[448.0, -448.0]])
+
+
+def test_fp_round_rne_tie():
+    # 2.5 is exactly between E2M1 grid points 2 and 3 -> ties to even
+    # mantissa (2.0 has mantissa bit 0, 3.0 has mantissa bit 1).
+    y = np.asarray(ref.fp_round(jnp.asarray([[2.5, -2.5, 5.0]]), F.E2M1))
+    np.testing.assert_array_equal(y, [[2.0, -2.0, 4.0]])
+
+
+def test_int_qdq_clips():
+    x = jnp.asarray([[100.0, -100.0, 0.4, -0.4]])
+    y = np.asarray(ref.int_qdq(x, jnp.float32(1.0), 4))
+    np.testing.assert_array_equal(y, [[7.0, -7.0, 0.0, -0.0]])
+
+
+def test_abfp_never_clips():
+    """ABFP scales by the absmax, so the largest element survives QDQ
+    with at most grid-rounding error (never hard clipping)."""
+    x = rand((8, 128), seed=11, heavy_tail=True)
+    for fmt in FORMATS:
+        y = np.asarray(ref.abfp_qdq(x, fmt, 64))
+        xm = np.asarray(x)
+        # absmax positions: relative error bounded by half a grid step
+        idx = np.argmax(np.abs(xm), axis=1)
+        for r, c in enumerate(idx):
+            rel = abs(y[r, c] - xm[r, c]) / abs(xm[r, c])
+            assert rel < 0.01, (fmt.name, rel)
+
+
+def test_abfp_qdq_idempotent():
+    x = rand((8, 128), seed=13)
+    for fmt in FORMATS:
+        y1 = ref.abfp_qdq(x, fmt, 64)
+        y2 = ref.abfp_qdq(y1, fmt, 64)
+        # Not exactly idempotent in general (scale re-rounding), but y2
+        # must stay within one grid step of y1.
+        err = np.max(np.abs(np.asarray(y1) - np.asarray(y2)))
+        scale = float(np.max(np.abs(np.asarray(y1)))) + 1e-9
+        assert err / scale < 0.2, fmt.name
+
+
+def test_abfp_zero_vector_is_zero():
+    x = jnp.zeros((4, 128), jnp.float32)
+    for fmt in FORMATS:
+        y = np.asarray(ref.abfp_qdq(x, fmt, 64))
+        np.testing.assert_array_equal(y, np.zeros((4, 128), np.float32))

@@ -1,0 +1,104 @@
+"""Manifest/aot schema tests: what the Rust coordinator depends on."""
+
+import json
+import os
+
+import pytest
+
+from compile import registry as R
+from compile import aot
+from compile.models import common as C
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_defs_cover_experiments():
+    ids = {d.id for d in R.artifact_defs()}
+    # every experiment's artifact must exist in the matrix
+    for m in ("sim-opt-125m", "sim-opt-350m", "sim-opt-1.3b", "sim-opt-2.7b"):
+        for q in R.OPT_EVAL_CONFIGS:
+            assert f"{m}/eval_{q}" in ids
+        assert f"{m}/capture_fp32" in ids
+        for q in R.OPT_TRAIN_CONFIGS:
+            assert f"{m}/train_{q}" in ids
+    for m in ("sim-codegen-2b", "sim-codegen-6b"):
+        assert f"{m}/eval_logits_abfp_w4a4_n64" in ids
+    for m in ("sim-bert-base", "sim-bert-large", "sim-vit-16", "sim-vit-32"):
+        assert f"{m}/eval_abfp_w4a8_n64" in ids
+
+
+def test_widths_tile_abfp_vector_lengths():
+    for cfg in R.MODELS.values():
+        assert cfg.d % 128 == 0, cfg.name
+        assert cfg.d_ff % 128 == 0, cfg.name
+
+
+def test_build_artifact_io_specs():
+    adef = R.ArtifactDef("sim-opt-125m", "eval", "mse_w4a4")
+    _, arg_specs, inputs, outputs = aot.build_artifact(adef)
+    assert len(arg_specs) == len(inputs)
+    kinds = [i["kind"] for i in inputs]
+    cfg = R.MODELS["sim-opt-125m"]
+    nsites = 4 * cfg.L
+    assert kinds.count("ascale") == nsites
+    assert kinds.count("data") == 1
+    assert outputs == [{"name": "nll_sum", "shape": [], "dtype": "f32"}]
+
+
+def test_build_artifact_train_io():
+    adef = R.ArtifactDef("sim-opt-125m", "train", "qat_w4a4_n64")
+    _, _, inputs, outputs = aot.build_artifact(adef)
+    nparams = len(R.MODELS["sim-opt-125m"].__class__ and
+                  aot.param_specs_for(R.MODELS["sim-opt-125m"]))
+    kinds = [i["kind"] for i in inputs]
+    assert kinds.count("param") == nparams
+    assert kinds.count("adam_m") == nparams
+    assert kinds.count("adam_v") == nparams
+    assert kinds.count("scalar") == 2
+    assert len(outputs) == 3 * nparams + 1
+    assert outputs[-1]["name"] == "loss"
+
+
+def test_smooth_inputs_present_for_abfp():
+    adef = R.ArtifactDef("sim-opt-125m", "eval", "abfp_w4a4_n64")
+    _, _, inputs, _ = aot.build_artifact(adef)
+    cfg = R.MODELS["sim-opt-125m"]
+    smooth = [i for i in inputs if i["kind"] == "smooth"]
+    assert len(smooth) == 4 * cfg.L
+    dims = C.site_dims(cfg)
+    for s in smooth:
+        site = s["name"].split(".", 1)[1]
+        assert s["shape"] == [dims[site]]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_on_disk_consistent():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert set(man["models"]) == set(R.MODELS)
+    for aid, a in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, a["file"])), aid
+        assert a["model"] in man["models"]
+        # input ordering contract: params first, then quant, then state/data
+        kinds = [i["kind"] for i in a["inputs"]]
+        order = {"param": 0, "smooth": 1, "ascale": 1,
+                 "adam_m": 2, "adam_v": 3, "scalar": 4, "data": 5}
+        ranks = [order[k] for k in kinds]
+        assert ranks == sorted(ranks), aid
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "goldens", "quant_goldens.json")),
+    reason="goldens not built",
+)
+def test_goldens_schema():
+    with open(os.path.join(ART, "goldens", "quant_goldens.json")) as f:
+        g = json.load(f)
+    assert len(g["probe"]) == 8 * 128
+    for key in ("grid_e2m1", "abfp_int4_n64", "static_int8_a2.5",
+                "pcmax_w_int4", "fp_round_e4m3"):
+        assert key in g

@@ -1,0 +1,223 @@
+"""Model-family shape/semantics tests (L2)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import formats as F
+from compile import quantizers as Q
+from compile import registry as R
+from compile import train as T
+from compile.models import bert, common as C, opt, vit
+
+
+def init_params(cfg, seed=0):
+    mod = {"opt": opt, "bert": bert, "vit": vit}[cfg.arch]
+    rs = np.random.RandomState(seed)
+    p = {}
+    for name, shape, kind in mod.param_specs(cfg):
+        if kind == "zeros":
+            v = np.zeros(shape, np.float32)
+        elif kind == "ones":
+            v = np.ones(shape, np.float32)
+        elif kind in ("lognormal", "lngain"):
+            v = np.exp(rs.randn(*shape) * 0.5).astype(np.float32)
+        elif kind == "residual":
+            v = (rs.randn(*shape) * 0.02 / np.sqrt(2 * cfg.L)).astype(np.float32)
+        else:
+            v = (rs.randn(*shape) * 0.02).astype(np.float32)
+        p[name] = jnp.asarray(v)
+    return p
+
+
+CFG = R.MODELS["sim-opt-125m"]
+
+
+def test_opt_forward_shapes():
+    p = init_params(CFG)
+    toks = jnp.zeros((2, CFG.seq), jnp.int32)
+    logits = opt.forward(p, toks, CFG, C.FP32, {})
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+
+
+def test_opt_causality():
+    """Changing a future token must not affect earlier logits."""
+    p = init_params(CFG)
+    rs = np.random.RandomState(0)
+    t1 = rs.randint(0, CFG.vocab, (1, CFG.seq)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % CFG.vocab
+    l1 = np.asarray(opt.forward(p, jnp.asarray(t1), CFG, C.FP32, {}))
+    l2 = np.asarray(opt.forward(p, jnp.asarray(t2), CFG, C.FP32, {}))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], atol=1e-5)
+    assert np.abs(l1[0, -1] - l2[0, -1]).max() > 0
+
+
+def test_opt_nll_matches_uniform_at_init_scale():
+    """With tiny random weights, NLL/token ≈ ln(vocab)."""
+    p = init_params(CFG)
+    rs = np.random.RandomState(1)
+    toks = jnp.asarray(rs.randint(0, CFG.vocab, (4, CFG.seq)).astype(np.int32))
+    nll = float(opt.nll_sum(opt.forward(p, toks, CFG, C.FP32, {}), toks))
+    per_tok = nll / (4 * (CFG.seq - 1))
+    assert abs(per_tok - np.log(CFG.vocab)) < 0.5
+
+
+def test_opt_quantized_forward_close_to_fp32():
+    p = init_params(CFG)
+    rs = np.random.RandomState(2)
+    toks = jnp.asarray(rs.randint(0, CFG.vocab, (2, CFG.seq)).astype(np.int32))
+    w = C.QuantWiring(Q.abfp(F.INT8, 64), Q.abfp(F.INT8, 64))
+    lf = np.asarray(opt.forward(p, toks, CFG, C.FP32, {}))
+    lq = np.asarray(opt.forward(p, toks, CFG, w, {}))
+    rel = np.abs(lf - lq).max() / (np.abs(lf).max() + 1e-9)
+    assert 0 < rel < 0.2
+
+
+def test_smoothing_identity_when_ones():
+    p = init_params(CFG)
+    rs = np.random.RandomState(3)
+    toks = jnp.asarray(rs.randint(0, CFG.vocab, (2, CFG.seq)).astype(np.int32))
+    wiring = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), smooth=True)
+    dims = C.site_dims(CFG)
+    sites = {
+        s: C.SiteInputs(smooth=jnp.ones((dims[s],), jnp.float32))
+        for s in C.all_site_names(CFG)
+    }
+    l1 = np.asarray(opt.forward(p, toks, CFG, wiring, sites))
+    l2 = np.asarray(opt.forward(p, toks, CFG, wiring, {}))
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_output_quant_changes_logits():
+    """f_q^y (Eqn 9) must actually apply: an output-quantized wiring gives
+    different logits from the same wiring without oq."""
+    p = init_params(CFG)
+    rs = np.random.RandomState(4)
+    toks = jnp.asarray(rs.randint(0, CFG.vocab, (2, CFG.seq)).astype(np.int32))
+    base = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64))
+    oq = C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64)
+    )
+    lb = np.asarray(opt.forward(p, toks, CFG, base, {}))
+    lo = np.asarray(opt.forward(p, toks, CFG, oq, {}))
+    assert np.abs(lb - lo).max() > 0
+    # int8 output QDQ is mild: logits stay close
+    rel = np.abs(lb - lo).max() / (np.abs(lb).max() + 1e-9)
+    assert rel < 0.2
+
+
+def test_layer_override_resolution():
+    w8 = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64))
+    mixed = C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64), smooth=True, ste=True,
+        layer_overrides=((0, w8), (-1, w8)),
+    )
+    L = 3
+    assert mixed.for_layer(0, L).aq.fmt.bits == 8
+    assert mixed.for_layer(L - 1, L).aq.fmt.bits == 8
+    assert mixed.for_layer(1, L).aq.fmt.bits == 4
+    # overrides inherit the parent's model-global flags
+    assert mixed.for_layer(0, L).smooth and mixed.for_layer(0, L).ste
+    # no overrides -> identity
+    base = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64))
+    assert base.for_layer(1, L) is base
+
+
+def test_mixed_precision_between_uniform_bounds():
+    """Boundary-8-bit mixed wiring must land between all-4-bit and
+    all-8-bit activations in logit error vs FP32."""
+    p = init_params(CFG)
+    rs = np.random.RandomState(5)
+    toks = jnp.asarray(rs.randint(0, CFG.vocab, (2, CFG.seq)).astype(np.int32))
+    lf = np.asarray(opt.forward(p, toks, CFG, C.FP32, {}))
+
+    def err(wiring):
+        lq = np.asarray(opt.forward(p, toks, CFG, wiring, {}))
+        return float(np.abs(lf - lq).mean())
+
+    w4 = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64))
+    w8 = C.QuantWiring(Q.abfp(F.INT4, 64), Q.abfp(F.INT8, 64))
+    mixed = C.QuantWiring(
+        Q.abfp(F.INT4, 64), Q.abfp(F.INT4, 64),
+        layer_overrides=((0, w8), (-1, w8)),
+    )
+    e4, e8, em = err(w4), err(w8), err(mixed)
+    # CFG has L=2 so every block is a boundary block: mixed == all-8-bit
+    assert e8 <= em <= e4
+    np.testing.assert_allclose(em, e8, rtol=1e-6)
+
+
+def test_capture_sites_order_and_shapes():
+    p = init_params(CFG)
+    toks = jnp.zeros((2, CFG.seq), jnp.int32)
+    acts = opt.capture_acts(p, toks, CFG)
+    names = C.all_site_names(CFG)
+    dims = C.site_dims(CFG)
+    # 4L sites + the _anchor scalar that pins tail params in the graph
+    assert len(acts) == len(names) + 1 == 4 * CFG.L + 1
+    for name, a in zip(names, acts[:-1]):
+        assert a.shape == (2 * CFG.seq, dims[name])
+    assert acts[-1].shape == ()
+
+
+def test_bert_shapes():
+    cfg = R.MODELS["sim-bert-base"]
+    p = init_params(cfg)
+    toks = jnp.zeros((2, cfg.seq), jnp.int32)
+    sl, el = bert.forward(p, toks, cfg, C.FP32, {})
+    assert sl.shape == (2, cfg.seq) and el.shape == (2, cfg.seq)
+
+
+def test_bert_not_causal():
+    cfg = R.MODELS["sim-bert-base"]
+    p = init_params(cfg)
+    rs = np.random.RandomState(0)
+    t1 = rs.randint(0, cfg.vocab, (1, cfg.seq)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % cfg.vocab
+    s1, _ = bert.forward(p, jnp.asarray(t1), cfg, C.FP32, {})
+    s2, _ = bert.forward(p, jnp.asarray(t2), cfg, C.FP32, {})
+    assert np.abs(np.asarray(s1)[0, 0] - np.asarray(s2)[0, 0]) > 0
+
+
+def test_vit_shapes_and_patchify():
+    cfg = R.MODELS["sim-vit-16"]
+    p = init_params(cfg)
+    imgs = jnp.asarray(np.random.RandomState(0).rand(2, 32, 32, 3).astype(np.float32))
+    logits = vit.forward(p, imgs, cfg, C.FP32, {})
+    assert logits.shape == (2, cfg.classes)
+    patches = vit.patchify(imgs, 4)
+    assert patches.shape == (2, 64, 48)
+    # patch content: first patch equals the top-left 4x4 block
+    np.testing.assert_array_equal(
+        np.asarray(patches)[0, 0], np.asarray(imgs)[0, :4, :4, :].flatten()
+    )
+
+
+def test_train_step_reduces_loss():
+    """A few Adam steps on one batch must reduce the LM loss."""
+    cfg = R.MODELS["sim-opt-125m"]
+    p = init_params(cfg)
+    names = list(p.keys())
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in p.items()}
+
+    def loss_fn(pp, toks):
+        logits = opt.forward(pp, toks, cfg, C.FP32, {})
+        return opt.nll_sum(logits, toks) / float(toks.shape[0] * (cfg.seq - 1))
+
+    step = jax.jit(T.make_train_step(loss_fn, names))
+    rs = np.random.RandomState(0)
+    toks = jnp.asarray(rs.randint(0, 16, (4, cfg.seq)).astype(np.int32))
+    plist = [p[k] for k in names]
+    mlist = [m[k] for k in names]
+    vlist = [v[k] for k in names]
+    losses = []
+    for it in range(5):
+        out = step(plist, mlist, vlist, jnp.float32(it + 1), jnp.float32(1e-3), toks)
+        P = len(names)
+        plist, mlist, vlist = out[:P], out[P:2 * P], out[2 * P:3 * P]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,131 @@
+"""Quantizer combinators: spec dispatch, STE gradients (Eqn 5)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import formats as F
+from compile import quantizers as Q
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=3.0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale
+    )
+
+
+def test_none_is_identity():
+    x = rand((4, 128))
+    y = Q.apply(x, Q.NONE)
+    assert y is x
+
+
+def test_abfp_spec_dispatch():
+    x = rand((4, 128))
+    spec = Q.abfp(F.INT4, 64)
+    np.testing.assert_array_equal(
+        np.asarray(Q.apply(x, spec)), np.asarray(ref.abfp_qdq(x, F.INT4, 64))
+    )
+
+
+def test_abfp2_spec_dispatch():
+    x = rand((4, 128))
+    spec = Q.abfp2(F.INT4, 64)
+    np.testing.assert_array_equal(
+        np.asarray(Q.apply(x, spec)), np.asarray(ref.abfp2_qdq(x, F.INT4, 64))
+    )
+
+
+def test_abfp2_pallas_and_ref_paths_agree():
+    x = rand((4, 128), seed=7)
+    spec = Q.abfp2(F.INT8, 64)
+    a = np.asarray(Q.apply(x, spec, use_pallas=True))
+    b = np.asarray(Q.apply(x, spec, use_pallas=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ste_abfp2_gradient_is_identity():
+    """abfp2's ceil-coded scale >= raw absmax, so the PWL mask stays
+    all-ones exactly like plain ABFP."""
+    x = rand((4, 128), seed=9)
+    spec = Q.abfp2(F.INT4, 64)
+
+    def f(v):
+        return jnp.sum(Q.apply(v, spec, ste=True) * 2.0)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones((4, 128)), rtol=0)
+
+
+def test_static_requires_alpha():
+    with pytest.raises(AssertionError):
+        Q.apply(rand((4, 128)), Q.static_int(4))
+
+
+def test_static_int_dispatch():
+    x = rand((4, 128))
+    a = jnp.float32(2.0)
+    got = Q.apply(x, Q.static_int(8), alpha=a)
+    want = ref.static_int_qdq(x, a, 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_and_ref_paths_agree():
+    x = rand((4, 128), seed=5)
+    for spec in (Q.abfp(F.E4M3, 64), Q.w_pcmax_int(4)):
+        a = np.asarray(Q.apply(x, spec, use_pallas=True))
+        b = np.asarray(Q.apply(x, spec, use_pallas=False))
+        np.testing.assert_array_equal(a, b)
+
+
+# --- PWL straight-through estimator (Eqn 5) --------------------------------
+
+
+def test_ste_forward_unchanged():
+    x = rand((4, 128))
+    spec = Q.abfp(F.INT4, 64)
+    np.testing.assert_array_equal(
+        np.asarray(Q.apply(x, spec, ste=True)),
+        np.asarray(Q.apply(x, spec, ste=False)),
+    )
+
+
+def test_ste_abfp_gradient_is_identity():
+    """ABFP never clips (scale = absmax), so the PWL mask is all-ones."""
+    x = rand((4, 128), seed=1)
+    spec = Q.abfp(F.INT4, 64)
+
+    def f(v):
+        return jnp.sum(Q.apply(v, spec, ste=True) * 3.0)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones((4, 128)), rtol=0)
+
+
+def test_ste_static_gradient_masks_clipped():
+    """Static quant with alpha=1: |x|>1 gets zero gradient, |x|<=1 passes."""
+    x = jnp.asarray([[0.5, -0.5, 2.0, -2.0]], jnp.float32)
+    spec = Q.static_int(4)
+
+    def f(v):
+        return jnp.sum(Q.apply(v, spec, alpha=jnp.float32(1.0), ste=True))
+
+    g = np.asarray(jax.grad(f)(x))
+    np.testing.assert_array_equal(g, [[1.0, 1.0, 0.0, 0.0]])
+
+
+def test_ste_grad_through_loss():
+    """End-to-end: gradient flows through a quantized linear layer."""
+    x = rand((8, 128), seed=2)
+    w = rand((16, 128), seed=3, scale=0.1)
+    spec = Q.abfp(F.INT4, 64)
+
+    def loss(w_):
+        y = Q.apply(x, spec, ste=True) @ Q.apply(w_, spec, ste=True).T
+        return jnp.mean(y * y)
+
+    g = np.asarray(jax.grad(loss)(w))
+    assert np.isfinite(g).all()
+    assert np.abs(g).max() > 0

@@ -1,0 +1,98 @@
+//! Ablation micro-benchmarks for the extension features (DESIGN.md
+//! §Extensions): two-level scale quantization cost vs plain ABFP, the
+//! scale-storage accounting, and the output-quantizer (f_q^y) overhead
+//! on a full fake-quantized matmul layer mirror.
+//!
+//!   cargo bench --bench bench_ablation
+
+use intfpqsim::formats::{self, scale_overhead_bits, Format};
+use intfpqsim::util::rng::Pcg64;
+use intfpqsim::util::timer::bench;
+
+fn heavy(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() * rng.lognormal(1.0)).collect()
+}
+
+fn main() {
+    let mut rng = Pcg64::new(7);
+    let (rows, k) = (512usize, 2048usize);
+    let x = heavy(&mut rng, rows * k);
+    let elems = (rows * k) as f64;
+
+    println!("== one-level vs two-level ABFP ({}x{} f32) ==", rows, k);
+    for (name, two) in [("abfp  int4 n64", false), ("abfp2 int4 n64", true)] {
+        let mut buf = x.clone();
+        let s = bench(3, 20, || {
+            buf.copy_from_slice(&x);
+            if two {
+                formats::abfp2_qdq(&mut buf, k, Format::Int(formats::INT4), 64, 8);
+            } else {
+                formats::abfp_qdq(&mut buf, k, Format::Int(formats::INT4), 64);
+            }
+            std::hint::black_box(&buf);
+        });
+        println!("{}", s.report(name, Some((elems / 1e6, "Melem"))));
+    }
+
+    println!("\n== scale-code bit-width sweep (abfp2 int4 n64) ==");
+    for sb in [2u32, 4, 8, 12] {
+        let mut buf = x.clone();
+        let s = bench(2, 10, || {
+            buf.copy_from_slice(&x);
+            formats::abfp2_qdq(&mut buf, k, Format::Int(formats::INT4), 64, sb);
+            std::hint::black_box(&buf);
+        });
+        // Also report the reconstruction error the bit-width buys.
+        let mut probe = x.clone();
+        formats::abfp2_qdq(&mut probe, k, Format::Int(formats::INT4), 64, sb);
+        let mse: f64 = probe
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / elems;
+        println!(
+            "{}  mse={:.3e} scale-bits/elt={:.4}",
+            s.report(&format!("scale_bits={:>2}", sb), Some((elems / 1e6, "Melem"))),
+            mse,
+            scale_overhead_bits(k, 64, Some(sb)),
+        );
+    }
+
+    println!("\n== output-quantizer overhead on a layer mirror ==");
+    // y = QDQ_w(W) @ QDQ_a(X)^T is the runtime's fake-quant layer; f_q^y
+    // adds one more ABFP pass over the (rows, dout) output.
+    let dout = 512usize;
+    let w = heavy(&mut rng, dout * k);
+    let mut y = vec![0.0f32; rows * dout];
+    let matmul = |xq: &[f32], wq: &[f32], y: &mut [f32]| {
+        // blocked ikj matmul, enough to dominate like the real HLO does
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..rows {
+            for l in 0..k {
+                let xv = xq[i * k + l];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &wq[l..]; // column l of W^T view
+                for j in 0..dout {
+                    y[i * dout + j] += xv * wrow[j * k];
+                }
+            }
+        }
+    };
+    for (name, with_oq) in [("W4A4, y fp32", false), ("W4A4, y int8", true)] {
+        let mut xq = x.clone();
+        let mut wq = w.clone();
+        formats::abfp_qdq(&mut xq, k, Format::Int(formats::INT4), 64);
+        formats::abfp_qdq(&mut wq, k, Format::Int(formats::INT4), 64);
+        let s = bench(0, 2, || {
+            matmul(&xq, &wq, &mut y);
+            if with_oq {
+                formats::abfp_qdq(&mut y, dout, Format::Int(formats::INT8), 64);
+            }
+            std::hint::black_box(&y);
+        });
+        println!("{}", s.report(name, None));
+    }
+}

@@ -1,0 +1,85 @@
+//! L1-mirror micro-benchmarks: the host-side quantizer arithmetic that
+//! the PTQ methods and the calibrator run in their inner loops, plus the
+//! GPTQ per-site transform. Part of the §Perf pass (EXPERIMENTS.md).
+//!
+//!   cargo bench --bench bench_quant
+
+use intfpqsim::formats::{self, Format};
+use intfpqsim::methods::gptq;
+use intfpqsim::tensor::Tensor;
+use intfpqsim::util::rng::Pcg64;
+use intfpqsim::util::timer::bench;
+
+fn heavy(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() * rng.lognormal(1.0)).collect()
+}
+
+fn main() {
+    let mut rng = Pcg64::new(42);
+    let (rows, k) = (512, 2048);
+    let x = heavy(&mut rng, rows * k);
+    let elems = (rows * k) as f64;
+
+    println!("== quantizer mirrors ({}x{} f32) ==", rows, k);
+    for (name, fmt) in [
+        ("abfp int4 n64", Format::Int(formats::INT4)),
+        ("abfp int8 n64", Format::Int(formats::INT8)),
+        ("abfp e2m1 n64", Format::Fp(formats::E2M1)),
+        ("abfp e4m3 n64", Format::Fp(formats::E4M3)),
+    ] {
+        let mut buf = x.clone();
+        let s = bench(3, 20, || {
+            buf.copy_from_slice(&x);
+            formats::abfp_qdq(&mut buf, k, fmt, 64);
+            std::hint::black_box(&buf);
+        });
+        println!("{}", s.report(name, Some((elems / 1e6, "Melem"))));
+    }
+    for n in [64usize, 128] {
+        let mut buf = x.clone();
+        let s = bench(3, 20, || {
+            buf.copy_from_slice(&x);
+            formats::abfp_qdq(&mut buf, k, Format::Int(formats::INT4), n);
+            std::hint::black_box(&buf);
+        });
+        println!("{}", s.report(&format!("abfp int4 n={}", n), Some((elems / 1e6, "Melem"))));
+    }
+    {
+        let mut buf = x.clone();
+        let s = bench(3, 20, || {
+            buf.copy_from_slice(&x);
+            formats::static_int_qdq(&mut buf, &[2.5], 4);
+            std::hint::black_box(&buf);
+        });
+        println!("{}", s.report("static int4 per-tensor", Some((elems / 1e6, "Melem"))));
+    }
+    {
+        let probe = heavy(&mut rng, rows * k);
+        let s = bench(3, 20, || {
+            let acc: f64 = intfpqsim::formats::quant_mse(&probe[..32768], 2.5, 4);
+            std::hint::black_box(acc);
+        });
+        println!("{}", s.report("quant_mse (32k sample)", Some((32768.0 / 1e6, "Melem"))));
+    }
+
+    println!("\n== MSE calibration search ==");
+    {
+        let probe = heavy(&mut rng, 131072);
+        let s = bench(1, 5, || {
+            std::hint::black_box(intfpqsim::calib::mse_alpha(&probe, 4));
+        });
+        println!("{}", s.report("mse_alpha (131k elems, 48 pts)", None));
+    }
+
+    println!("\n== GPTQ site transform ==");
+    for (dout, din, rows2) in [(256usize, 256usize, 1024usize), (512, 2048, 2048)] {
+        let xx = Tensor::new(vec![rows2, din], heavy(&mut rng, rows2 * din));
+        let w0 = Tensor::new(vec![dout, din], heavy(&mut rng, dout * din));
+        let s = bench(0, 3, || {
+            let mut w = w0.clone();
+            gptq::gptq_site(&mut w, &xx).unwrap();
+            std::hint::black_box(&w);
+        });
+        println!("{}", s.report(&format!("gptq {}x{} ({} rows)", dout, din, rows2), None));
+    }
+}

@@ -1,0 +1,61 @@
+//! L3 runtime benchmarks: artifact execution throughput (the simulator's
+//! request hot path) and the coordinator overhead budget. §Perf target:
+//! PJRT execute should dominate; session/upload overhead < 10%.
+//!
+//!   cargo bench --bench bench_runtime
+
+use intfpqsim::corpus::TextCorpus;
+use intfpqsim::model;
+use intfpqsim::runtime::{Runtime, Val};
+use intfpqsim::util::timer::bench;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let corpus = TextCorpus::new(intfpqsim::corpus::TEXT_SEED);
+
+    for model_name in ["sim-opt-125m", "sim-opt-2.7b"] {
+        let cfg = rt.manifest.model(model_name).unwrap().clone();
+        let params = model::init_params(&cfg, 1);
+        let sticky = model::param_vals(&cfg, &params).unwrap();
+        let toks_per_batch = (cfg.batch * cfg.seq) as f64;
+
+        println!("\n== {} (batch {} x seq {}) ==", model_name, cfg.batch, cfg.seq);
+        for quant in ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64", "abfp_w4a4_n128"] {
+            let id = format!("{}/eval_{}", model_name, quant);
+            let mut st = sticky.clone();
+            if quant != "fp32" {
+                for s in &cfg.sites {
+                    st.insert(
+                        format!("smooth.{}", s.name),
+                        Val::F32(vec![1.0; s.dim], vec![s.dim]),
+                    );
+                }
+            }
+            let sess = rt.session(&id, &st).unwrap();
+            let tb = corpus.eval_batch(0, cfg.batch, cfg.seq);
+            let tv = Val::I32(tb.tokens.clone(), vec![cfg.batch, cfg.seq]);
+            let s = bench(3, 15, || {
+                std::hint::black_box(sess.run(std::slice::from_ref(&tv)).unwrap());
+            });
+            println!("{}", s.report(quant, Some((toks_per_batch, "tok"))));
+        }
+
+        // coordinator overhead: data-generation + upload only (no execute)
+        let s = bench(3, 50, || {
+            let tb = corpus.eval_batch(1, cfg.batch, cfg.seq);
+            std::hint::black_box(Val::I32(tb.tokens, vec![cfg.batch, cfg.seq]));
+        });
+        println!("{}", s.report("coordinator-side batch prep", Some((toks_per_batch, "tok"))));
+
+        // session-open cost (weight upload) — amortized once per config
+        let s = bench(1, 5, || {
+            let id = format!("{}/eval_fp32", model_name);
+            std::hint::black_box(rt.session(&id, &sticky).unwrap());
+        });
+        println!("{}", s.report("session open (weight upload)", None));
+    }
+}

@@ -1,0 +1,44 @@
+//! Table/figure regeneration benches: one timed reduced-fidelity run per
+//! paper table & figure (the full-fidelity versions live behind
+//! `repro experiment --all`). Prints the same rows the paper reports and
+//! the wall time each regeneration takes.
+//!
+//!   cargo bench --bench bench_tables            # all
+//!   cargo bench --bench bench_tables -- table2  # one
+
+use intfpqsim::coordinator;
+use intfpqsim::quantsim::Simulator;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let mut sim = Simulator::new("artifacts", "checkpoints").unwrap();
+    // reduced fidelity: enough to show each table's shape quickly
+    sim.opts.eval_batches = 4;
+    sim.opts.pass1_programs = 16;
+    sim.opts.qat_opts.steps = 8;
+
+    for exp in coordinator::registry() {
+        if !filter.is_empty() && !filter.iter().any(|f| exp.id.contains(f.as_str())) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        match (exp.run)(&sim) {
+            Ok(mut rep) => {
+                rep.meta.insert("id".into(), exp.id.into());
+                rep.meta.insert("title".into(), exp.title.into());
+                rep.meta.insert("paper_ref".into(), exp.paper_ref.into());
+                println!("{}", rep.render());
+                println!(
+                    "[bench_tables] {} regenerated in {:.1}s (reduced fidelity)\n",
+                    exp.id,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => println!("[bench_tables] {} FAILED: {:#}", exp.id, e),
+        }
+    }
+}

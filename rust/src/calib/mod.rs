@@ -1,0 +1,181 @@
+//! Calibration engine (paper §II-B-1 and §III).
+//!
+//! Drives the `capture_fp32` artifact to collect every quantized site's
+//! raw input activations over a calibration stream, then derives:
+//!   * static **MSE** clip ranges — the scale α minimizing the MSE
+//!     between QDQ(x) and x (grid search over clip fractions, the
+//!     TensorRT/[7] approach);
+//!   * static **max** ranges (the simulator's static-max mode);
+//!   * per-channel absmax ranges (SmoothQuant's difficulty migration and
+//!     RPTQ's channel clustering both start from these).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::formats::quant_mse;
+use crate::model;
+use crate::runtime::{Runtime, Val};
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+use crate::train;
+
+/// Calibration batches (train-split indices far from the training prefix
+/// so QAT and calibration never share exact batches).
+pub const CALIB_BATCHES: u64 = 4;
+const CALIB_OFFSET: u64 = 1 << 20;
+
+/// Per-site activation statistics from a capture run.
+#[derive(Debug)]
+pub struct CalibStats {
+    /// site name -> concatenated raw activations (rows, din)
+    pub acts: BTreeMap<String, Tensor>,
+}
+
+impl CalibStats {
+    /// Per-channel absmax of a site's activations.
+    pub fn channel_absmax(&self, site: &str) -> Result<Vec<f32>> {
+        Ok(self.acts.get(site).context("site missing")?.col_absmax())
+    }
+
+    /// Whole-tensor absmax of a site's activations.
+    pub fn absmax(&self, site: &str) -> Result<f32> {
+        Ok(self.acts.get(site).context("site missing")?.absmax())
+    }
+}
+
+/// Run the capture artifact over the calibration stream.
+pub fn capture(rt: &Runtime, model_name: &str, params: &TensorStore) -> Result<CalibStats> {
+    let cfg = rt.manifest.model(model_name)?.clone();
+    let artifact = format!("{}/capture_fp32", model_name);
+    let sticky = model::param_vals(&cfg, params)?;
+    let sess = rt.session(&artifact, &sticky)?;
+    let supplier = train::data_fn(&cfg, 0x0CA1_1B);
+
+    let mut acts: BTreeMap<String, Vec<Tensor>> = BTreeMap::new();
+    for i in 0..CALIB_BATCHES {
+        let data = supplier(CALIB_OFFSET + i);
+        let outs = sess.run(&data)?;
+        for (out, ospec) in outs.into_iter().zip(sess.spec.outputs.iter()) {
+            if ospec.name.starts_with('_') {
+                continue; // _anchor: graph-liveness scalar, not a site
+            }
+            acts.entry(ospec.name.clone()).or_default().push(out);
+        }
+    }
+    let mut merged = BTreeMap::new();
+    for (site, parts) in acts {
+        let cols = parts[0].shape[1];
+        let rows: usize = parts.iter().map(|t| t.shape[0]).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in &parts {
+            data.extend_from_slice(&p.data);
+        }
+        merged.insert(site, Tensor::new(vec![rows, cols], data));
+    }
+    Ok(CalibStats { acts: merged })
+}
+
+/// MSE-optimal clip range for integer quantization of `x` at `bits`.
+///
+/// Searches clip fractions α = f·absmax over a log-spaced grid (the MSE
+/// objective is smooth and unimodal in practice; 48 candidates matches
+/// the resolution TensorRT uses). Subsamples large tensors for speed.
+pub fn mse_alpha(x: &[f32], bits: u32) -> f32 {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if absmax == 0.0 {
+        return 1.0;
+    }
+    // deterministic stride subsample to <= 32768 elements
+    let stride = (x.len() / 32768).max(1);
+    let sample: Vec<f32> = x.iter().step_by(stride).cloned().collect();
+    let mut best = (f64::INFINITY, absmax);
+    for i in 0..48 {
+        // fractions from ~1.5% to 100% of absmax, log-spaced
+        let f = (-4.2f32 + 4.2 * (i as f32 + 1.0) / 48.0).exp();
+        let alpha = f * absmax;
+        let mse = quant_mse(&sample, alpha, bits);
+        if mse < best.0 {
+            best = (mse, alpha);
+        }
+    }
+    best.1
+}
+
+/// Static per-site MSE clip ranges for every quantized site.
+pub fn mse_site_alphas(stats: &CalibStats, bits: u32) -> BTreeMap<String, f32> {
+    stats
+        .acts
+        .iter()
+        .map(|(site, t)| (site.clone(), mse_alpha(&t.data, bits)))
+        .collect()
+}
+
+/// Static per-site max clip ranges (the simulator's static-max mode).
+pub fn max_site_alphas(stats: &CalibStats) -> BTreeMap<String, f32> {
+    stats
+        .acts
+        .iter()
+        .map(|(site, t)| {
+            let a = t.absmax();
+            (site.clone(), if a > 0.0 { a } else { 1.0 })
+        })
+        .collect()
+}
+
+/// Build the `alpha.<site>` sticky inputs for a static (MSE) artifact.
+pub fn alpha_vals(alphas: &BTreeMap<String, f32>) -> BTreeMap<String, Val> {
+    alphas
+        .iter()
+        .map(|(site, &a)| (format!("alpha.{}", site), Val::scalar(a)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mse_alpha_clips_heavy_tails() {
+        // Heavy-tailed activations: at 4 bits the MSE-optimal clip lands
+        // strictly below the absmax (trading tail error for resolution on
+        // the bulk — exactly why MSE calibration clips outliers, §IV-A-1);
+        // at 8 bits the extra resolution lets the clip relax upward.
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f32> = (0..8192)
+            .map(|_| rng.gaussian() * rng.lognormal(1.5))
+            .collect();
+        let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let a4 = mse_alpha(&x, 4);
+        assert!(a4 < 0.8 * absmax, "a4 {} should clip below absmax {}", a4, absmax);
+        let a8 = mse_alpha(&x, 8);
+        assert!(a8 > a4, "a8 {} should exceed a4 {}", a8, a4);
+    }
+
+    #[test]
+    fn mse_alpha_beats_max_on_mse() {
+        prop::check("mse_beats_max", 10, |rng| {
+            let x = prop::heavy_vec(rng, 2048, 1.0);
+            let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let a = mse_alpha(&x, 4);
+            let mse_opt = quant_mse(&x, a, 4);
+            let mse_max = quant_mse(&x, absmax, 4);
+            crate::prop_assert!(
+                mse_opt <= mse_max * 1.0001,
+                "mse at alpha* {} > mse at absmax {}",
+                mse_opt,
+                mse_max
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mse_alpha_handles_degenerate() {
+        assert_eq!(mse_alpha(&[0.0; 16], 4), 1.0);
+        let a = mse_alpha(&[2.0; 16], 4);
+        assert!(a > 0.5 && a <= 2.01);
+    }
+}

@@ -1,0 +1,507 @@
+//! One registered experiment per table/figure of the paper (§IV).
+//!
+//! Absolute numbers cannot match the paper (scaled-down stand-in models,
+//! synthetic corpora — DESIGN.md §1); each experiment's `expected_shape`
+//! states the qualitative claim being reproduced, and EXPERIMENTS.md
+//! records paper-vs-measured side by side.
+
+use anyhow::Result;
+
+use crate::quantsim::{Method, QuantConfig, Simulator};
+
+use super::report::Report;
+use super::Experiment;
+
+const OPTS: [&str; 4] =
+    ["sim-opt-125m", "sim-opt-350m", "sim-opt-1.3b", "sim-opt-2.7b"];
+
+const ALL_MODELS: [&str; 10] = [
+    "sim-opt-125m",
+    "sim-opt-350m",
+    "sim-opt-1.3b",
+    "sim-opt-2.7b",
+    "sim-codegen-2b",
+    "sim-codegen-6b",
+    "sim-bert-base",
+    "sim-bert-large",
+    "sim-vit-16",
+    "sim-vit-32",
+];
+
+fn ev(sim: &Simulator, model: &str, qc: &QuantConfig) -> Result<f64> {
+    Ok(sim.evaluate(model, qc)?.value)
+}
+
+/// Grid helper: one row per model, one metric column per config.
+fn grid(
+    sim: &Simulator,
+    models: &[&str],
+    configs: &[(&str, QuantConfig)],
+) -> Result<Report> {
+    let mut header = vec!["Model".to_string()];
+    header.extend(configs.iter().map(|(n, _)| n.to_string()));
+    let mut rep = Report::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for m in models {
+        let mut row = vec![m.to_string()];
+        for (_, qc) in configs {
+            row.push(Report::cell(Some(ev(sim, m, qc)?)));
+        }
+        rep.row(row);
+    }
+    Ok(rep)
+}
+
+fn q(name: &str) -> QuantConfig {
+    QuantConfig::abfp(name)
+}
+
+fn qm(name: &str, m: Method) -> QuantConfig {
+    QuantConfig::with(name, m)
+}
+
+// --- experiments -----------------------------------------------------------
+
+fn fig1(sim: &Simulator) -> Result<Report> {
+    // Relative performance vs FP32 at W4A4 ABFP n=64 across all models.
+    let mut rep = Report::new(&["Model", "Task metric", "FP32", "W4A4 (ABFP)", "Relative"]);
+    for m in ALL_MODELS {
+        let fp = sim.evaluate(m, &QuantConfig::fp32())?;
+        let qq = sim.evaluate(m, &q("abfp_w4a4_n64"))?;
+        let rel = crate::quantsim::relative_to_fp32(qq, fp);
+        rep.row(vec![
+            m.into(),
+            fp.kind.name().into(),
+            Report::cell(Some(fp.value)),
+            Report::cell(Some(qq.value)),
+            format!("{:.3}", rel),
+        ]);
+    }
+    Ok(rep)
+}
+
+fn table1(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS[..2],
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("MSE (W4A4)", q("mse_w4a4")),
+            ("ABFP (W4A4 n=64)", q("abfp_w4a4_n64")),
+        ],
+    )
+}
+
+fn table2(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("W4A4 (INT)", q("abfp_w4a4_n64")),
+            ("E2M1", q("abfp_e2m1_n64")),
+            ("E1M2", q("abfp_e1m2_n64")),
+        ],
+    )
+}
+
+fn fig3(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("E1M2 n=64", q("abfp_e1m2_n64")),
+            ("E1M2 n=128", q("abfp_e1m2_n128")),
+        ],
+    )
+}
+
+fn table3(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("ABFP", q("abfp_w4a4_n64")),
+            ("ABFP-QAT", qm("abfp_w4a4_n64", Method::Qat)),
+            ("ABFP-SQ", qm("abfp_w4a4_n64", Method::SmoothQuant)),
+        ],
+    )
+}
+
+fn fig4(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("ABFP n=64", q("abfp_w4a4_n64")),
+            ("ABFP n=128", q("abfp_w4a4_n128")),
+            ("QAT n=64", qm("abfp_w4a4_n64", Method::Qat)),
+            ("QAT n=128", qm("abfp_w4a4_n128", Method::Qat)),
+        ],
+    )
+}
+
+fn table4(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("MSE (W4A8)", q("mse_w4a8")),
+            ("ABFP (W4A8 n=64)", q("abfp_w4a8_n64")),
+        ],
+    )
+}
+
+fn table5(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("W4-AE4M3 ABFP", q("abfp_w4ae4m3_n64")),
+            ("W4-AE4M3 ABFP-SQ", qm("abfp_w4ae4m3_n64", Method::SmoothQuant)),
+            ("GPTQ (W4A16)", qm("fp32", Method::Gptq)),
+        ],
+    )
+}
+
+fn table6(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("AE4M3 ABFP", q("abfp_w4ae4m3_n64")),
+            ("AE4M3 ABFP-SQ", qm("abfp_w4ae4m3_n64", Method::SmoothQuant)),
+            ("A8 ABFP", q("abfp_w4a8_n64")),
+            ("A8 ABFP-SQ", qm("abfp_w4a8_n64", Method::SmoothQuant)),
+        ],
+    )
+}
+
+fn table7(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("ABFP (W4A8)", q("abfp_w4a8_n64")),
+            ("ABFP-QAT", qm("abfp_w4a8_n64", Method::Qat)),
+            ("ABFP-SQ", qm("abfp_w4a8_n64", Method::SmoothQuant)),
+            ("GPTQ (W4A16)", qm("fp32", Method::Gptq)),
+        ],
+    )
+}
+
+fn fig5(sim: &Simulator) -> Result<Report> {
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("ABFP n=64", q("abfp_w4a8_n64")),
+            ("ABFP n=128", q("abfp_w4a8_n128")),
+            ("QAT n=64", qm("abfp_w4a8_n64", Method::Qat)),
+            ("QAT n=128", qm("abfp_w4a8_n128", Method::Qat)),
+        ],
+    )
+}
+
+fn table8(sim: &Simulator) -> Result<Report> {
+    // The paper's RPTQ repo lacks OPT 350M/2.7B support; our RPTQ covers
+    // all sizes, so the table is complete rather than dashed.
+    grid(
+        sim,
+        &OPTS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("RPTQ W4A4", qm("rptq_w4a4", Method::Rptq)),
+            ("ABFP W4A4", q("abfp_w4a4_n64")),
+            ("RPTQ W4A8", qm("rptq_w4a8", Method::Rptq)),
+            ("ABFP W4A8", q("abfp_w4a8_n64")),
+        ],
+    )
+}
+
+fn table10(sim: &Simulator) -> Result<Report> {
+    let mut rep = Report::new(&["Model", "Metric", "FP32", "ABFP W4A4", "ABFP W4A8"]);
+    for m in ALL_MODELS {
+        let fp = sim.evaluate(m, &QuantConfig::fp32())?;
+        let a4 = sim.evaluate(m, &q("abfp_w4a4_n64"))?;
+        let a8 = sim.evaluate(m, &q("abfp_w4a8_n64"))?;
+        rep.row(vec![
+            m.into(),
+            fp.kind.name().into(),
+            Report::cell(Some(fp.value)),
+            Report::cell(Some(a4.value)),
+            Report::cell(Some(a8.value)),
+        ]);
+    }
+    Ok(rep)
+}
+
+fn table9(sim: &Simulator) -> Result<Report> {
+    // The model/task/dataset catalog (informational).
+    let mut rep =
+        Report::new(&["Model", "Stands for", "Task", "Dataset (stand-in)", "Metric"]);
+    for m in ALL_MODELS {
+        let cfg = sim.rt.manifest.model(m)?;
+        let (dataset, metric) = match cfg.task.as_str() {
+            "lm" => ("Zipf-Markov text (Wikitext2)", "PPL"),
+            "codegen" => ("expr grammar (HumanEval)", "Pass@1"),
+            "span_qa" => ("marker-span QA (SQuAD v1.1)", "F1"),
+            _ => ("Gaussian blobs (ImageNet)", "Accuracy"),
+        };
+        rep.row(vec![
+            m.into(),
+            cfg.stands_for.clone(),
+            cfg.task.clone(),
+            dataset.into(),
+            metric.into(),
+        ]);
+    }
+    Ok(rep)
+}
+
+// --- extension ablations (DESIGN.md §Extensions; not paper tables) ---------
+
+/// Models the extension artifacts are lowered for (registry
+/// ABLATION_MODELS): one small + one large OPT stand-in.
+const ABL_MODELS: [&str; 2] = ["sim-opt-125m", "sim-opt-1.3b"];
+
+fn abl_scales(sim: &Simulator) -> Result<Report> {
+    // Two-level scale quantization (VS-Quant): same payload formats as
+    // ABFP, scales stored as 8-bit codes + per-row BF16. The paper defers
+    // this (§II-B-2, §IV-C "storage overhead of the scales ... mitigated
+    // through a second-order quantization"); we measure the PPL cost.
+    let mut rep = grid(
+        sim,
+        &ABL_MODELS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("ABFP W4A4", q("abfp_w4a4_n64")),
+            ("ABFP2 W4A4", q("abfp2_w4a4_n64")),
+            ("ABFP W4A8", q("abfp_w4a8_n64")),
+            ("ABFP2 W4A8", q("abfp2_w4a8_n64")),
+        ],
+    )?;
+    // Scale storage per payload element (d_ff rows are the widest case).
+    for m in ABL_MODELS {
+        let k = 4 * sim.rt.manifest.model(m)?.d as usize;
+        rep.meta.insert(
+            format!("scale_bits_per_elt.{}", m),
+            format!(
+                "abfp={:.4} abfp2={:.4}",
+                crate::formats::scale_overhead_bits(k, 64, None),
+                crate::formats::scale_overhead_bits(k, 64, Some(8)),
+            ),
+        );
+    }
+    Ok(rep)
+}
+
+fn abl_outq(sim: &Simulator) -> Result<Report> {
+    // Output quantization f_q^y (Eqn 9) — the photonics-hardware case the
+    // simulator supports but every paper experiment disables.
+    grid(
+        sim,
+        &ABL_MODELS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("W4A4 (y fp32)", q("abfp_w4a4_n64")),
+            ("W4A4 yINT8", q("abfp_w4a4_o8_n64")),
+            ("W4A4 yE4M3", q("abfp_w4a4_oe4m3_n64")),
+            ("W4A8 (y fp32)", q("abfp_w4a8_n64")),
+            ("W4A8 yINT8", q("abfp_w4a8_o8_n64")),
+        ],
+    )
+}
+
+fn abl_mixed(sim: &Simulator) -> Result<Report> {
+    // Per-layer mixed precision (§VI future work): boundary blocks at
+    // higher precision, interior at W4A4.
+    grid(
+        sim,
+        &ABL_MODELS,
+        &[
+            ("FP32", QuantConfig::fp32()),
+            ("uniform W4A4", q("abfp_w4a4_n64")),
+            ("boundary A8", q("mixed_a8_boundary_n64")),
+            ("boundary W8A8", q("mixed_w8a8_boundary_n64")),
+            ("uniform W4A8", q("abfp_w4a8_n64")),
+        ],
+    )
+}
+
+pub fn all() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "fig1",
+            paper_ref: "Figure 1",
+            title: "Relative performance vs FP32, W4A4 ABFP, all models",
+            expected_shape: "W4A4 stays within ~0.7-1.0 of FP32; vision models degrade less than LMs",
+            run: fig1,
+        },
+        Experiment {
+            id: "table1",
+            paper_ref: "Table I",
+            title: "Static MSE calibration vs ABFP, W4A4",
+            expected_shape: "MSE calibration collapses (PPL orders of magnitude worse); ABFP stays usable",
+            run: table1,
+        },
+        Experiment {
+            id: "table2",
+            paper_ref: "Table II",
+            title: "4-bit integer vs floating point formats (ABFP n=64)",
+            expected_shape: "E1M2 ≈ INT4 on most models; E2M1 inconsistent/worse",
+            run: table2,
+        },
+        Experiment {
+            id: "fig3",
+            paper_ref: "Figure 3",
+            title: "E1M2 vector lengths n=64 vs n=128",
+            expected_shape: "n=128 worse than n=64; the gap shrinks with model size",
+            run: fig3,
+        },
+        Experiment {
+            id: "table3",
+            paper_ref: "Table III",
+            title: "Accuracy recovery on W4A4: ABFP vs ABFP-QAT vs ABFP-SQ",
+            expected_shape: "QAT recovers most (closest to FP32); SQ helps, more for larger models",
+            run: table3,
+        },
+        Experiment {
+            id: "fig4",
+            paper_ref: "Figure 4",
+            title: "ABFP+QAT vector lengths (W4A4)",
+            expected_shape: "QAT improves both n; QAT n=128 closes most of the gap to n=64",
+            run: fig4,
+        },
+        Experiment {
+            id: "table4",
+            paper_ref: "Table IV",
+            title: "Static MSE calibration vs ABFP, W4A8",
+            expected_shape: "MSE becomes usable at 8-bit acts but still loses to ABFP everywhere",
+            run: table4,
+        },
+        Experiment {
+            id: "table5",
+            paper_ref: "Table V",
+            title: "E4M3 activations + INT4 weights vs GPTQ (W4A16)",
+            expected_shape: "ABFP(-SQ) with E4M3 acts beats GPTQ on the larger models",
+            run: table5,
+        },
+        Experiment {
+            id: "table6",
+            paper_ref: "Table VI",
+            title: "E4M3 vs INT8 activations (±SQ)",
+            expected_shape: "E4M3 ≈ INT8 — no significant advantage either way",
+            run: table6,
+        },
+        Experiment {
+            id: "table7",
+            paper_ref: "Table VII",
+            title: "Accuracy recovery on W4A8 vs GPTQ",
+            expected_shape: "QAT best; SQ close behind; both beat GPTQ on larger models",
+            run: table7,
+        },
+        Experiment {
+            id: "fig5",
+            paper_ref: "Figure 5",
+            title: "ABFP+QAT vector lengths (W4A8)",
+            expected_shape: "QAT n=128 ≈ QAT n=64, both near FP32 for the larger models",
+            run: fig5,
+        },
+        Experiment {
+            id: "table8",
+            paper_ref: "Table VIII",
+            title: "RPTQ vs ABFP (W4A4, W4A8)",
+            expected_shape: "ABFP better at W4A4; mixed at W4A8",
+            run: table8,
+        },
+        Experiment {
+            id: "table9",
+            paper_ref: "Table IX",
+            title: "Model/task/dataset catalog",
+            expected_shape: "(informational)",
+            run: table9,
+        },
+        Experiment {
+            id: "table10",
+            paper_ref: "Table X",
+            title: "ABFP W4A4/W4A8 across all model families",
+            expected_shape: "W4A8 ≈ FP32 everywhere; W4A4 degrades LMs more than vision models",
+            run: table10,
+        },
+        Experiment {
+            id: "abl_scales",
+            paper_ref: "Ext §II-B-2",
+            title: "Two-level scale quantization (VS-Quant) vs plain ABFP",
+            expected_shape: "ABFP2 within noise of ABFP at ~0.5x the scale storage",
+            run: abl_scales,
+        },
+        Experiment {
+            id: "abl_outq",
+            paper_ref: "Ext Eqn 9",
+            title: "Output quantization f_q^y (photonics case)",
+            expected_shape: "yINT8/yE4M3 cost little on top of W4A4/W4A8 (outputs are post-accumulation)",
+            run: abl_outq,
+        },
+        Experiment {
+            id: "abl_mixed",
+            paper_ref: "Ext §VI",
+            title: "Per-layer mixed precision: boundary blocks at 8-bit",
+            expected_shape: "boundary-8-bit lands between uniform W4A4 and uniform W4A8",
+            run: abl_mixed,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_well_formed() {
+        let exps = all();
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &exps {
+            assert!(seen.insert(e.id), "duplicate id {}", e.id);
+            assert!(
+                e.id.starts_with("table")
+                    || e.id.starts_with("fig")
+                    || e.id.starts_with("abl_"),
+                "{}",
+                e.id
+            );
+            assert!(!e.title.is_empty() && !e.expected_shape.is_empty(), "{}", e.id);
+            assert!(!e.paper_ref.is_empty(), "{}", e.id);
+        }
+    }
+
+    #[test]
+    fn registry_covers_every_paper_table_and_figure() {
+        let ids: Vec<&str> = all().iter().map(|e| e.id).collect();
+        // Tables I-X of the paper (XI is checkpoint provenance, see
+        // EXPERIMENTS.md) and Figures 1, 3, 4, 5 (2 is the block diagram).
+        for want in [
+            "table1", "table2", "table3", "table4", "table5", "table6",
+            "table7", "table8", "table9", "table10", "fig1", "fig3", "fig4",
+            "fig5",
+        ] {
+            assert!(ids.contains(&want), "missing {}", want);
+        }
+        // the three extension ablations
+        for want in ["abl_scales", "abl_outq", "abl_mixed"] {
+            assert!(ids.contains(&want), "missing {}", want);
+        }
+    }
+
+    #[test]
+    fn find_resolves_ids() {
+        assert!(super::super::find("table1").is_some());
+        assert!(super::super::find("abl_outq").is_some());
+        assert!(super::super::find("table99").is_none());
+    }
+}

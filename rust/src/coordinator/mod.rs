@@ -1,0 +1,45 @@
+//! Experiment coordinator: one registered experiment per table/figure of
+//! the paper, with dependency-aware caching (pretrain → calibrate →
+//! transform → evaluate) and markdown/JSON report rendering.
+
+pub mod experiments;
+pub mod report;
+
+use anyhow::Result;
+
+use crate::quantsim::Simulator;
+use report::Report;
+
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub title: &'static str,
+    /// The paper's qualitative claim this experiment checks (DESIGN.md §3).
+    pub expected_shape: &'static str,
+    pub run: fn(&Simulator) -> Result<Report>,
+}
+
+pub fn registry() -> Vec<Experiment> {
+    experiments::all()
+}
+
+pub fn find(id: &str) -> Option<Experiment> {
+    registry().into_iter().find(|e| e.id == id)
+}
+
+/// Run one experiment, save its report under `results/`, return it.
+pub fn run_experiment(sim: &Simulator, id: &str) -> Result<Report> {
+    let exp = find(id).ok_or_else(|| anyhow::anyhow!("unknown experiment {}", id))?;
+    crate::info!("=== {} ({}) — {} ===", exp.id, exp.paper_ref, exp.title);
+    let t0 = std::time::Instant::now();
+    let mut rep = (exp.run)(sim)?;
+    rep.meta.insert("id".into(), exp.id.into());
+    rep.meta.insert("paper_ref".into(), exp.paper_ref.into());
+    rep.meta.insert("title".into(), exp.title.into());
+    rep.meta.insert("expected_shape".into(), exp.expected_shape.into());
+    rep.meta
+        .insert("wall_seconds".into(), format!("{:.1}", t0.elapsed().as_secs_f64()));
+    rep.save("results")?;
+    println!("{}", rep.render());
+    Ok(rep)
+}

@@ -1,0 +1,155 @@
+//! Table-shaped experiment reports: markdown rendering + JSON persistence.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Report {
+    pub fn new(header: &[&str]) -> Report {
+        Report {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format a metric cell; None renders as "-" (paper's missing cells).
+    pub fn cell(v: Option<f64>) -> String {
+        match v {
+            Some(x) if x.abs() >= 100.0 => format!("{:.1}", x),
+            Some(x) => format!("{:.2}", x),
+            None => "-".to_string(),
+        }
+    }
+
+    /// GitHub-flavored markdown table with the title line.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = String::new();
+        if let (Some(id), Some(title)) = (self.meta.get("id"), self.meta.get("title")) {
+            let pref = self.meta.get("paper_ref").cloned().unwrap_or_default();
+            out.push_str(&format!("\n## {} — {} ({})\n\n", id, title, pref));
+        }
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|\n",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        if let Some(shape) = self.meta.get("expected_shape") {
+            out.push_str(&format!("\nPaper shape to reproduce: {}\n", shape));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, dir: &str) -> Result<()> {
+        let id = self.meta.get("id").cloned().unwrap_or_else(|| "report".into());
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(Path::new(dir).join(format!("{}.md", id)), self.render())?;
+        std::fs::write(
+            Path::new(dir).join(format!("{}.json", id)),
+            self.to_json().pretty(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut r = Report::new(&["Model", "FP32", "W4A4"]);
+        r.row(vec!["sim-opt-125m".into(), "25.94".into(), "33.14".into()]);
+        r.row(vec!["x".into(), Report::cell(None), Report::cell(Some(3.14159))]);
+        let md = r.render();
+        assert!(md.contains("| Model"));
+        assert!(md.contains("| 3.14"));
+        assert!(md.contains("| -"));
+        let lines: Vec<&str> = md.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Report::new(&["a"]);
+        r.row(vec!["1".into()]);
+        r.meta.insert("id".into(), "t".into());
+        let j = r.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0]
+                .as_str(),
+            Some("1")
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut r = Report::new(&["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Gaussian-blob image classes (ImageNet stand-in for the ViT models).
+//!
+//! Each of the 16 classes is a fixed prototype: a mixture of 3 colored
+//! Gaussian blobs at class-specific positions/colors on a 32×32 canvas.
+//! Samples add per-image jitter (blob positions wobble, global noise),
+//! so the task needs real spatial feature extraction but is learnable by
+//! a small ViT in a few hundred steps.
+
+use crate::util::rng::Pcg64;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const CLASSES: usize = 16;
+const BLOBS: usize = 3;
+
+#[derive(Clone, Copy)]
+struct Blob {
+    cx: f32,
+    cy: f32,
+    sigma: f32,
+    color: [f32; CHANNELS],
+}
+
+pub struct ImageCorpus {
+    prototypes: Vec<[Blob; BLOBS]>,
+    seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ImageBatch {
+    pub batch: usize,
+    /// (B, 32, 32, 3) row-major f32
+    pub pixels: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl ImageCorpus {
+    pub fn new(seed: u64) -> ImageCorpus {
+        let mut rng = Pcg64::new(seed ^ 0x1CACE);
+        let mut prototypes = Vec::with_capacity(CLASSES);
+        for _ in 0..CLASSES {
+            let mut blobs = [Blob { cx: 0.0, cy: 0.0, sigma: 1.0, color: [0.0; 3] }; BLOBS];
+            for b in blobs.iter_mut() {
+                *b = Blob {
+                    cx: 4.0 + rng.f32() * (IMG as f32 - 8.0),
+                    cy: 4.0 + rng.f32() * (IMG as f32 - 8.0),
+                    sigma: 2.0 + rng.f32() * 3.0,
+                    color: [rng.f32(), rng.f32(), rng.f32()],
+                };
+            }
+            prototypes.push(blobs);
+        }
+        ImageCorpus { prototypes, seed }
+    }
+
+    fn render(&self, class: usize, rng: &mut Pcg64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), IMG * IMG * CHANNELS);
+        out.fill(0.0);
+        for proto in &self.prototypes[class] {
+            // per-sample jitter
+            let cx = proto.cx + rng.gaussian() * 1.0;
+            let cy = proto.cy + rng.gaussian() * 1.0;
+            let inv2s = 1.0 / (2.0 * proto.sigma * proto.sigma);
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                    let w = (-d2 * inv2s).exp();
+                    if w < 1e-3 {
+                        continue;
+                    }
+                    let base = (y * IMG + x) * CHANNELS;
+                    for c in 0..CHANNELS {
+                        out[base + c] += w * proto.color[c];
+                    }
+                }
+            }
+        }
+        // global pixel noise
+        for v in out.iter_mut() {
+            *v += rng.gaussian() * 0.05;
+        }
+    }
+
+    pub fn batch(&self, split: u64, index: u64, batch: usize) -> ImageBatch {
+        let mut pixels = vec![0.0f32; batch * IMG * IMG * CHANNELS];
+        let mut labels = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let mut rng = Pcg64::new(
+                self.seed
+                    ^ split.wrapping_mul(0xFF51_AFD7_ED55_8CCD)
+                    ^ (index * 4096 + b as u64).wrapping_mul(0xC4CE_B9FE_1A85_EC53),
+            );
+            let class = rng.below(CLASSES);
+            labels.push(class as i32);
+            let sl = &mut pixels
+                [b * IMG * IMG * CHANNELS..(b + 1) * IMG * IMG * CHANNELS];
+            self.render(class, &mut rng, sl);
+        }
+        ImageBatch { batch, pixels, labels }
+    }
+
+    pub fn train_batch(&self, index: u64, batch: usize) -> ImageBatch {
+        self.batch(0x17A1, index, batch)
+    }
+
+    pub fn eval_batch(&self, index: u64, batch: usize) -> ImageBatch {
+        self.batch(0xE0A1, index, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_labels() {
+        let c = ImageCorpus::new(11);
+        let b = c.train_batch(0, 4);
+        assert_eq!(b.pixels.len(), 4 * IMG * IMG * CHANNELS);
+        assert!(b.labels.iter().all(|&l| (0..CLASSES as i32).contains(&l)));
+    }
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let c = ImageCorpus::new(11);
+        assert_eq!(c.train_batch(2, 2).pixels, c.train_batch(2, 2).pixels);
+        assert_ne!(c.train_batch(2, 2).pixels, c.eval_batch(2, 2).pixels);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // mean image of class k must be closer to another sample of class
+        // k than to samples of other classes (prototype structure).
+        let c = ImageCorpus::new(11);
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(); CLASSES];
+        for i in 0..40 {
+            let b = c.train_batch(i, 4);
+            for j in 0..4 {
+                let px = b.pixels[j * IMG * IMG * 3..(j + 1) * IMG * IMG * 3].to_vec();
+                by_class[b.labels[j] as usize].push(px);
+            }
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        let mut checked = 0;
+        for k in 0..CLASSES {
+            if by_class[k].len() < 2 {
+                continue;
+            }
+            let intra = dist(&by_class[k][0], &by_class[k][1]);
+            for other in 0..CLASSES {
+                if other != k && !by_class[other].is_empty() {
+                    let inter = dist(&by_class[k][0], &by_class[other][0]);
+                    assert!(intra < inter, "class {} vs {}", k, other);
+                    checked += 1;
+                    break;
+                }
+            }
+        }
+        assert!(checked >= 8);
+    }
+}

@@ -1,0 +1,203 @@
+//! Metric evaluators: perplexity (OPT/Wikitext2 stand-in), Pass@1
+//! (Codegen/HumanEval stand-in), span F1 (BERT/SQuAD stand-in) and
+//! classification accuracy (ViT/ImageNet stand-in) — the four metrics of
+//! the paper's Table IX.
+
+use anyhow::{bail, Result};
+
+use crate::corpus::{
+    span_f1 as span_f1_tokens, CodeCorpus, ImageCorpus, Program, QaCorpus, TextCorpus,
+};
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::{Session, Val};
+
+/// Number of eval batches per metric point (fixed so every cell of every
+/// table sees the same eval stream).
+pub const EVAL_BATCHES: u64 = 24;
+
+/// Corpus-level perplexity through an `eval_*` artifact (output: nll_sum).
+pub fn perplexity(
+    sess: &Session,
+    cfg: &ModelCfg,
+    corpus: &TextCorpus,
+    batches: u64,
+) -> Result<f64> {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for i in 0..batches {
+        let tb = corpus.eval_batch(i, b, s);
+        let out = sess.run(&[Val::I32(tb.tokens, vec![b, s])])?;
+        total_nll += out[0].data[0] as f64;
+        total_tok += b * (s - 1);
+    }
+    let ppl = (total_nll / total_tok as f64).exp();
+    if !ppl.is_finite() {
+        bail!("non-finite perplexity");
+    }
+    Ok(ppl)
+}
+
+/// Greedy-decoding Pass@1 over held-out programs (logits artifact).
+///
+/// Rows are padded with token 0 beyond the cursor; causal masking makes
+/// the padding irrelevant to the decoded position.
+pub fn pass_at_1(
+    sess: &Session,
+    cfg: &ModelCfg,
+    corpus: &CodeCorpus,
+    n_programs: usize,
+) -> Result<f64> {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let programs = corpus.eval_programs(n_programs);
+    let mut passed = 0usize;
+    for chunk in programs.chunks(b) {
+        // rows: prompt + decoded-so-far; cursor per row
+        let mut rows = vec![vec![0i32; s]; b];
+        let mut cursors = vec![0usize; b];
+        for (r, prog) in chunk.iter().enumerate() {
+            let p = prog.prompt();
+            rows[r][..p.len()].copy_from_slice(&p);
+            cursors[r] = p.len();
+        }
+        let max_new = 5; // up to 3 digits + ';' + slack
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for _ in 0..max_new {
+            let mut flat = Vec::with_capacity(b * s);
+            for row in &rows {
+                flat.extend_from_slice(row);
+            }
+            let out = sess.run(&[Val::I32(flat, vec![b, s])])?;
+            let logits = &out[0]; // (b, s, vocab)
+            let vocab = cfg.vocab;
+            for r in 0..chunk.len() {
+                let cur = cursors[r];
+                if cur >= s || generated[r].last() == Some(&crate::corpus::code_semi()) {
+                    continue;
+                }
+                let base = (r * s + (cur - 1)) * vocab;
+                let row_logits = &logits.data[base..base + vocab];
+                let mut best = 0usize;
+                for (j, &v) in row_logits.iter().enumerate() {
+                    if v > row_logits[best] {
+                        best = j;
+                    }
+                }
+                rows[r][cur] = best as i32;
+                generated[r].push(best as i32);
+                cursors[r] = cur + 1;
+            }
+        }
+        for (r, prog) in chunk.iter().enumerate() {
+            if check_completion(prog, &generated[r]) {
+                passed += 1;
+            }
+        }
+    }
+    Ok(passed as f64 / programs.len() as f64)
+}
+
+/// "Run the program": the generated digits (up to `;`) must evaluate to
+/// the interpreter's exact value.
+pub fn check_completion(prog: &Program, generated: &[i32]) -> bool {
+    let want = prog.completion();
+    let upto_semi: Vec<i32> = generated
+        .iter()
+        .cloned()
+        .take_while(|&t| t != crate::corpus::code_semi())
+        .collect();
+    let want_digits = &want[..want.len() - 1];
+    upto_semi == want_digits
+        && generated.len() > upto_semi.len() // the ';' was emitted
+}
+
+/// Span-F1 for the QA encoder (start/end logits outputs).
+pub fn qa_f1(
+    sess: &Session,
+    cfg: &ModelCfg,
+    corpus: &QaCorpus,
+    batches: u64,
+) -> Result<f64> {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut f1_sum = 0.0f64;
+    let mut n = 0usize;
+    for i in 0..batches {
+        let qb = corpus.eval_batch(i, b, s);
+        let out = sess.run(&[Val::I32(qb.tokens.tokens, vec![b, s])])?;
+        let (sl, el) = (&out[0], &out[1]); // each (b, s)
+        for r in 0..b {
+            let argmax = |t: &crate::tensor::Tensor| -> i32 {
+                let row = &t.data[r * s..(r + 1) * s];
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best as i32
+            };
+            let pred = (argmax(sl), argmax(el));
+            f1_sum += span_f1_tokens(pred, (qb.starts[r], qb.ends[r]));
+            n += 1;
+        }
+    }
+    Ok(100.0 * f1_sum / n as f64)
+}
+
+/// Top-1 classification accuracy for the ViT models (logits output).
+pub fn image_accuracy(
+    sess: &Session,
+    cfg: &ModelCfg,
+    corpus: &ImageCorpus,
+    batches: u64,
+) -> Result<f64> {
+    let b = cfg.batch;
+    let (img, ch, classes) = (cfg.image, cfg.channels, cfg.classes);
+    let mut correct = 0usize;
+    let mut n = 0usize;
+    for i in 0..batches {
+        let ib = corpus.eval_batch(i, b);
+        let out = sess.run(&[Val::F32(ib.pixels, vec![b, img, img, ch])])?;
+        let logits = &out[0]; // (b, classes)
+        for r in 0..b {
+            let row = &logits.data[r * classes..(r + 1) * classes];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == ib.labels[r] {
+                correct += 1;
+            }
+            n += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CodeCorpus, Program};
+
+    #[test]
+    fn completion_checker() {
+        let corpus = CodeCorpus::new(1);
+        for prog in corpus.eval_programs(20) {
+            let mut good = prog.completion();
+            assert!(check_completion(&prog, &good), "{:?}", prog);
+            // wrong digit fails
+            good[0] = (good[0] + 1) % 10;
+            assert!(!check_completion(&prog, &good));
+            // missing ';' fails
+            let trunc: Vec<i32> = prog
+                .completion()
+                .into_iter()
+                .filter(|&t| t != crate::corpus::code_semi())
+                .collect();
+            assert!(!check_completion(&prog, &trunc));
+        }
+        let _ = Program::sample(&mut crate::util::rng::Pcg64::new(0));
+    }
+}

@@ -1,0 +1,154 @@
+//! Cross-layer golden tests: the Rust quantizer mirrors must be
+//! bit-exact against tables emitted by the Pallas/jnp reference
+//! (`python -m compile.aot` → artifacts/goldens/quant_goldens.json).
+//!
+//! Skipped (with a note) when artifacts have not been built yet.
+
+#![cfg(test)]
+
+use std::path::PathBuf;
+
+use super::*;
+use crate::util::json::Json;
+
+fn goldens() -> Option<Json> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/goldens/quant_goldens.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("parse goldens"))
+}
+
+fn probe(g: &Json) -> Vec<f32> {
+    g.get("probe").unwrap().as_f32_vec().unwrap()
+}
+
+macro_rules! need_goldens {
+    () => {
+        match goldens() {
+            Some(g) => g,
+            None => {
+                eprintln!("goldens not built; skipping (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{} length", what);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        // compare as bits, treating ±0 as equal only when bit-identical;
+        // the goldens round-trip through JSON decimal so compare exactly
+        // on value with NaN-safety.
+        assert!(
+            g == w || (g.is_nan() && w.is_nan()),
+            "{}: idx {}: got {} want {}",
+            what,
+            i,
+            g,
+            w
+        );
+    }
+}
+
+#[test]
+fn grids_match_python() {
+    let g = need_goldens!();
+    for (fmt, key) in [
+        (E2M1, "grid_e2m1"),
+        (E1M2, "grid_e1m2"),
+        (E4M3, "grid_e4m3"),
+    ] {
+        let want = g.get(key).unwrap().as_f32_vec().unwrap();
+        assert_bits_eq(&fmt.grid(), &want, key);
+    }
+}
+
+#[test]
+fn fp_round_matches_python() {
+    let g = need_goldens!();
+    let p = probe(&g);
+    for (fmt, key) in [
+        (E2M1, "fp_round_e2m1"),
+        (E1M2, "fp_round_e1m2"),
+        (E4M3, "fp_round_e4m3"),
+    ] {
+        let want = g.get(key).unwrap().as_f32_vec().unwrap();
+        let got: Vec<f32> = p.iter().map(|&v| fp_round(v, fmt)).collect();
+        assert_bits_eq(&got, &want, key);
+    }
+}
+
+#[test]
+fn abfp_matches_python() {
+    let g = need_goldens!();
+    let p = probe(&g);
+    let formats: [(Format, &str); 5] = [
+        (Format::Int(INT4), "int4"),
+        (Format::Int(INT8), "int8"),
+        (Format::Fp(E2M1), "e2m1"),
+        (Format::Fp(E1M2), "e1m2"),
+        (Format::Fp(E4M3), "e4m3"),
+    ];
+    for (fmt, name) in formats {
+        for n in [64usize, 128] {
+            let key = format!("abfp_{}_n{}", name, n);
+            let want = g.get(&key).unwrap().as_f32_vec().unwrap();
+            let mut got = p.clone();
+            abfp_qdq(&mut got, 128, fmt, n);
+            assert_bits_eq(&got, &want, &key);
+        }
+    }
+}
+
+#[test]
+fn abfp2_matches_python() {
+    let g = need_goldens!();
+    let p = probe(&g);
+    let formats: [(Format, &str); 3] = [
+        (Format::Int(INT4), "int4"),
+        (Format::Int(INT8), "int8"),
+        (Format::Fp(E4M3), "e4m3"),
+    ];
+    for (fmt, name) in formats {
+        for n in [64usize, 128] {
+            let key = format!("abfp2_{}_n{}", name, n);
+            let want = g.get(&key).unwrap().as_f32_vec().unwrap();
+            let mut got = p.clone();
+            abfp2_qdq(&mut got, 128, fmt, n, 8);
+            assert_bits_eq(&got, &want, &key);
+        }
+    }
+}
+
+#[test]
+fn static_int_matches_python() {
+    let g = need_goldens!();
+    let p = probe(&g);
+    for bits in [4u32, 8] {
+        let key = format!("static_int{}_a2.5", bits);
+        let want = g.get(&key).unwrap().as_f32_vec().unwrap();
+        let mut got = p.clone();
+        static_int_qdq(&mut got, &[2.5], bits);
+        assert_bits_eq(&got, &want, &key);
+
+        // per-channel variant: alpha = per-column absmax of the 8x128 probe
+        let mut alpha = vec![0.0f32; 128];
+        for row in p.chunks(128) {
+            for (a, &v) in alpha.iter_mut().zip(row) {
+                *a = a.max(v.abs());
+            }
+        }
+        let key = format!("static_int{}_pc", bits);
+        let want = g.get(&key).unwrap().as_f32_vec().unwrap();
+        let mut got = p.clone();
+        static_int_qdq(&mut got, &alpha, bits);
+        assert_bits_eq(&got, &want, &key);
+
+        let key = format!("pcmax_w_int{}", bits);
+        let want = g.get(&key).unwrap().as_f32_vec().unwrap();
+        let mut got = p.clone();
+        pcmax_weight_qdq(&mut got, 128, bits);
+        assert_bits_eq(&got, &want, &key);
+    }
+}

@@ -1,0 +1,24 @@
+//! INT-FP-QSim — a mixed-precision & mixed-format quantization simulator
+//! for transformer models, reproduced as a three-layer Rust + JAX +
+//! Pallas system (AOT via HLO text → PJRT).
+//!
+//! Layers:
+//! * L1 (build-time Python): Pallas fake-quant kernels (`python/compile/kernels/`);
+//! * L2 (build-time Python): JAX model families with quantizer-wrapped
+//!   layers, lowered to `artifacts/*.hlo.txt`;
+//! * L3 (this crate): the simulator product — runtime, calibration, PTQ
+//!   methods (SmoothQuant/GPTQ/RPTQ), training drivers, experiment
+//!   coordinator reproducing every table/figure of the paper.
+
+pub mod util;
+pub mod tensor;
+pub mod formats;
+pub mod corpus;
+pub mod runtime;
+pub mod model;
+pub mod train;
+pub mod eval;
+pub mod calib;
+pub mod methods;
+pub mod quantsim;
+pub mod coordinator;

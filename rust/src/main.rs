@@ -1,0 +1,190 @@
+//! `repro` — the INT-FP-QSim coordinator CLI.
+//!
+//! Commands:
+//!   repro list [--models]             list experiments / simulated models
+//!   repro pretrain --model <m>        pretrain (and cache) FP32 weights
+//!   repro qat --model <m> --quant <q> QAT fine-tune from the FP32 ckpt
+//!   repro eval --model <m> --quant <q> [--method sq|gptq|rptq|qat]
+//!   repro calibrate --model <m>       capture + print calibration summary
+//!   repro experiment --id <tableN|figN> | --all [--fast]
+//!   repro report                      concatenate saved reports
+//!
+//! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
+//! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose.
+
+use anyhow::{bail, Context, Result};
+
+use intfpqsim::coordinator::{self, registry};
+use intfpqsim::info;
+use intfpqsim::quantsim::{Method, QuantConfig, Simulator};
+use intfpqsim::train::{self, TrainOpts};
+use intfpqsim::util::cli::Args;
+use intfpqsim::util::logging;
+
+const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|report> [options]
+  repro list [--models]
+  repro pretrain --model sim-opt-125m [--steps 300] [--lr 3e-3]
+  repro qat --model sim-opt-125m --quant qat_w4a4_n64 [--steps 60]
+  repro eval --model sim-opt-125m --quant abfp_w4a4_n64 [--method none|sq|gptq|rptq|qat]
+  repro calibrate --model sim-opt-125m
+  repro experiment --id table1 | --all  [--fast] [--force]
+  repro report";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {:#}", e);
+            eprintln!("{}", USAGE);
+            std::process::exit(1);
+        }
+    }
+}
+
+fn make_sim(a: &Args) -> Result<Simulator> {
+    let mut sim = Simulator::new(
+        a.get("artifacts", "artifacts"),
+        a.get("checkpoints", "checkpoints"),
+    )?;
+    sim.opts.eval_batches = a.get_u64("eval-batches", sim.opts.eval_batches);
+    sim.opts.qat_opts.steps = a.get_usize("qat-steps", sim.opts.qat_opts.steps);
+    if a.flag("fast") {
+        // reduced-fidelity mode for smoke runs and benches
+        sim.opts.eval_batches = 4;
+        sim.opts.pass1_programs = 16;
+        sim.opts.qat_opts.steps = 8;
+    }
+    Ok(sim)
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "none" => Method::None,
+        "sq" | "smoothquant" => Method::SmoothQuant,
+        "gptq" => Method::Gptq,
+        "rptq" => Method::Rptq,
+        "qat" => Method::Qat,
+        other => bail!("unknown method {:?}", other),
+    })
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &["models", "all", "force", "fast", "verbose"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if a.flag("verbose") {
+        logging::set_level(2);
+    }
+    match a.command.as_str() {
+        "list" => {
+            if a.flag("models") {
+                let sim = make_sim(&a)?;
+                println!("{:<16} {:<12} {:<10} {:>9} {:>4} {:>5}", "model", "stands for", "task", "params", "L", "d");
+                for (name, cfg) in &sim.rt.manifest.models {
+                    println!(
+                        "{:<16} {:<12} {:<10} {:>9} {:>4} {:>5}",
+                        name, cfg.stands_for, cfg.task, cfg.param_count(), cfg.layers, cfg.d
+                    );
+                }
+            } else {
+                println!("{:<8} {:<10} {}", "id", "paper", "title");
+                for e in registry() {
+                    println!("{:<8} {:<10} {}", e.id, e.paper_ref, e.title);
+                }
+            }
+            Ok(())
+        }
+        "pretrain" => {
+            let sim = make_sim(&a)?;
+            let model = a.get("model", "");
+            anyhow::ensure!(!model.is_empty(), "--model required");
+            let opts = TrainOpts {
+                steps: a.get_usize("steps", 300),
+                peak_lr: a.get_f32("lr", 3e-3),
+                ..Default::default()
+            };
+            if sim.ck.exists(model, "fp32") && !a.flag("force") {
+                info!("{} fp32 checkpoint already exists (use --force)", model);
+                return Ok(());
+            }
+            if a.flag("force") {
+                std::fs::remove_file(sim.ck.path(model, "fp32")).ok();
+            }
+            train::pretrain_cached(&sim.rt, model, &sim.ck, &opts)?;
+            Ok(())
+        }
+        "qat" => {
+            let sim = make_sim(&a)?;
+            let model = a.get("model", "");
+            let quant = a.get("quant", "qat_w4a4_n64");
+            anyhow::ensure!(!model.is_empty(), "--model required");
+            let opts = TrainOpts {
+                steps: a.get_usize("steps", 60),
+                peak_lr: a.get_f32("lr", 3e-4),
+                warmup: 6,
+                ..Default::default()
+            };
+            train::qat_cached(&sim.rt, model, quant, &sim.ck, &opts)?;
+            Ok(())
+        }
+        "eval" => {
+            let sim = make_sim(&a)?;
+            let model = a.get("model", "");
+            anyhow::ensure!(!model.is_empty(), "--model required");
+            let qc = QuantConfig::with(
+                a.get("quant", "fp32"),
+                parse_method(a.get("method", "none"))?,
+            );
+            let m = sim.evaluate(model, &qc)?;
+            println!("{} [{}] {} = {:.3}", model, qc.label(), m.kind.name(), m.value);
+            Ok(())
+        }
+        "calibrate" => {
+            let sim = make_sim(&a)?;
+            let model = a.get("model", "");
+            anyhow::ensure!(!model.is_empty(), "--model required");
+            let stats = sim.calibration(model)?;
+            println!("{:<16} {:>10} {:>12} {:>12} {:>12}", "site", "rows", "absmax", "mse_a4", "mse_a8");
+            for (site, t) in &stats.acts {
+                let a4 = intfpqsim::calib::mse_alpha(&t.data, 4);
+                let a8 = intfpqsim::calib::mse_alpha(&t.data, 8);
+                println!(
+                    "{:<16} {:>10} {:>12.4} {:>12.4} {:>12.4}",
+                    site, t.shape[0], t.absmax(), a4, a8
+                );
+            }
+            Ok(())
+        }
+        "experiment" => {
+            let sim = make_sim(&a)?;
+            if a.flag("all") {
+                for e in registry() {
+                    coordinator::run_experiment(&sim, e.id)?;
+                }
+            } else {
+                let id = a.get("id", "");
+                anyhow::ensure!(!id.is_empty(), "--id or --all required");
+                coordinator::run_experiment(&sim, id)?;
+            }
+            Ok(())
+        }
+        "report" => {
+            let mut out = String::new();
+            for e in registry() {
+                let p = format!("results/{}.md", e.id);
+                if let Ok(text) = std::fs::read_to_string(&p) {
+                    out.push_str(&text);
+                    out.push('\n');
+                }
+            }
+            if out.is_empty() {
+                bail!("no saved reports under results/ (run `repro experiment --all`)");
+            }
+            println!("{}", out);
+            std::fs::write("results/ALL.md", &out).context("write results/ALL.md")?;
+            Ok(())
+        }
+        "" => bail!("missing command"),
+        other => bail!("unknown command {:?}", other),
+    }
+}

@@ -1,0 +1,40 @@
+//! Post-training-quantization accuracy-recovery methods (paper §II-B):
+//! SmoothQuant (difficulty migration), GPTQ (second-order weight
+//! compression) and RPTQ (channel-cluster activation scales).
+//!
+//! All three are *host-side transforms*: they rewrite the weights and/or
+//! the per-site runtime inputs (smoothing vectors, clip-range vectors)
+//! that the eval artifacts consume — no re-lowering required.
+
+pub mod gptq;
+pub mod rptq;
+pub mod smoothquant;
+
+use anyhow::{bail, Result};
+
+/// The weight parameter feeding each quantized site `l{i}.{site}`.
+pub fn site_weight_param(site: &str) -> Result<String> {
+    let (layer, kind) = site
+        .split_once('.')
+        .ok_or_else(|| anyhow::anyhow!("bad site name {}", site))?;
+    let w = match kind {
+        "qkv" => "wqkv",
+        "attn_out" => "wo",
+        "fc1" => "wfc1",
+        "fc2" => "wfc2",
+        other => bail!("unknown site kind {}", other),
+    };
+    Ok(format!("{}.{}", layer, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_weight_mapping() {
+        assert_eq!(site_weight_param("l0.qkv").unwrap(), "l0.wqkv");
+        assert_eq!(site_weight_param("l3.fc2").unwrap(), "l3.wfc2");
+        assert!(site_weight_param("nonsense").is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! RPTQ (paper §II-B-5, [4]): reorder-based post-training quantization.
+//!
+//! Observation: activation channels have wildly different ranges, so one
+//! per-tensor scale wastes most of the integer grid on most channels.
+//! RPTQ clusters channels by range and quantizes each cluster with its
+//! own scale (the *reordering* groups cluster members contiguously in
+//! memory — a locality optimization that is numerically equivalent to
+//! per-channel scales shared within each cluster, which is how we express
+//! it: the `rptq_*` artifacts take a per-channel `alpha.<site>` vector).
+//!
+//! Clustering: 1-D k-means on log-range, K = 8 (RPTQ's R3 setting scale).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::calib::CalibStats;
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::Val;
+
+pub const K_CLUSTERS: usize = 8;
+const KMEANS_ITERS: usize = 25;
+
+/// 1-D k-means over values; returns cluster assignment per element.
+pub fn kmeans_1d(values: &[f64], k: usize) -> Vec<usize> {
+    let n = values.len();
+    let k = k.min(n.max(1));
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // init centroids at quantiles
+    let mut centroids: Vec<f64> = (0..k)
+        .map(|i| sorted[(i * (n - 1)) / k.max(1)])
+        .collect();
+    let mut assign = vec![0usize; n];
+    for _ in 0..KMEANS_ITERS {
+        // assign
+        for (i, &v) in values.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, &ct) in centroids.iter().enumerate() {
+                let d = (v - ct).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assign[i] = best;
+        }
+        // update
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, &v) in values.iter().enumerate() {
+            sums[assign[i]] += v;
+            counts[assign[i]] += 1;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                centroids[c] = sums[c] / counts[c] as f64;
+            }
+        }
+    }
+    assign
+}
+
+/// Per-channel clip-range vector for one site: channels share their
+/// cluster's max range.
+pub fn cluster_alphas(channel_absmax: &[f32], k: usize) -> Vec<f32> {
+    let logs: Vec<f64> = channel_absmax
+        .iter()
+        .map(|&a| (a.max(1e-8) as f64).ln())
+        .collect();
+    let assign = kmeans_1d(&logs, k);
+    let nclusters = assign.iter().copied().max().unwrap_or(0) + 1;
+    let mut cluster_max = vec![0.0f32; nclusters];
+    for (j, &c) in assign.iter().enumerate() {
+        cluster_max[c] = cluster_max[c].max(channel_absmax[j]);
+    }
+    assign
+        .iter()
+        .map(|&c| if cluster_max[c] > 0.0 { cluster_max[c] } else { 1.0 })
+        .collect()
+}
+
+/// Build per-site `alpha.<site>` vectors for an `rptq_*` artifact.
+pub fn site_alpha_vals(
+    cfg: &ModelCfg,
+    stats: &CalibStats,
+) -> Result<BTreeMap<String, Val>> {
+    let mut out = BTreeMap::new();
+    for site in &cfg.sites {
+        let ranges = stats.channel_absmax(&site.name)?;
+        let alphas = cluster_alphas(&ranges, K_CLUSTERS);
+        out.insert(
+            format!("alpha.{}", site.name),
+            Val::F32(alphas, vec![site.dim]),
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::quant_mse;
+    use crate::util::prop;
+
+    #[test]
+    fn kmeans_separates_obvious_clusters() {
+        let vals: Vec<f64> =
+            vec![0.1, 0.11, 0.12, 5.0, 5.1, 5.2, 100.0, 101.0, 99.5];
+        let a = kmeans_1d(&vals, 3);
+        assert_eq!(a[0], a[1]);
+        assert_eq!(a[1], a[2]);
+        assert_eq!(a[3], a[4]);
+        assert_ne!(a[0], a[3]);
+        assert_ne!(a[3], a[6]);
+    }
+
+    #[test]
+    fn cluster_alphas_cover_every_channel() {
+        prop::check("rptq_alphas_cover", 10, |rng| {
+            let ranges: Vec<f32> =
+                (0..64).map(|_| rng.lognormal(2.0) + 1e-3).collect();
+            let alphas = cluster_alphas(&ranges, 8);
+            for (j, (&a, &r)) in alphas.iter().zip(ranges.iter()).enumerate() {
+                crate::prop_assert!(
+                    a >= r * 0.999,
+                    "channel {} alpha {} below its range {}",
+                    j,
+                    a,
+                    r
+                );
+            }
+            // at most 8 distinct scale values
+            let mut distinct: Vec<f32> = alphas.clone();
+            distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            distinct.dedup();
+            crate::prop_assert!(distinct.len() <= 8, "too many scales");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clustered_scales_beat_per_tensor_on_spread_channels() {
+        // RPTQ's motivating case: channels with very different ranges.
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        let (rows, cols) = (64, 32);
+        let mut x = vec![0.0f32; rows * cols];
+        let chan_scale: Vec<f32> =
+            (0..cols).map(|j| 10.0f32.powi((j % 4) as i32 - 2)).collect();
+        for r in 0..rows {
+            for (c, cs) in chan_scale.iter().enumerate() {
+                x[r * cols + c] = rng.gaussian() * cs;
+            }
+        }
+        // per-tensor MSE with alpha = absmax
+        let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let mse_pt = quant_mse(&x, absmax, 4);
+        // clustered per-channel: quantize each channel with its alpha
+        let mut ranges = vec![0.0f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                ranges[c] = ranges[c].max(x[r * cols + c].abs());
+            }
+        }
+        let alphas = cluster_alphas(&ranges, 8);
+        // Compare *channel-normalized* error (error relative to each
+        // channel's signal power): absolute MSE is dominated by the
+        // largest channels either way, but RPTQ's win is that small
+        // channels stop being flattened to zero.
+        let mut rel_cl = 0.0f64;
+        let mut rel_pt = 0.0f64;
+        for c in 0..cols {
+            let col: Vec<f32> = (0..rows).map(|r| x[r * cols + c]).collect();
+            let power: f64 =
+                col.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                    / rows as f64;
+            rel_cl += quant_mse(&col, alphas[c], 4) / power;
+            rel_pt += quant_mse(&col, absmax, 4) / power;
+        }
+        let _ = mse_pt;
+        assert!(
+            rel_cl < rel_pt * 0.1,
+            "clustered rel-err {} not ≪ per-tensor {}",
+            rel_cl,
+            rel_pt
+        );
+    }
+}

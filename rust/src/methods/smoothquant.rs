@@ -1,0 +1,168 @@
+//! SmoothQuant (paper §II-B-3, [1]): migrate quantization difficulty
+//! from activations to weights.
+//!
+//! Per input channel j of each quantized linear:
+//!     s_j = max|X_j|^α / max|W_j|^(1-α),      α = 0.5 (paper setting)
+//! then X' = X / s  and  W' = W · diag(s), which leaves X·W^T exactly
+//! unchanged in full precision but evens out channel magnitudes so both
+//! tensors quantize better.
+//!
+//! The runtime wiring: eval artifacts multiply activations by a per-site
+//! `smooth.<site>` vector before the quantizer, so we hand them 1/s and
+//! upload the scaled weights.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::calib::CalibStats;
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::Val;
+use crate::tensor::io::TensorStore;
+
+use super::site_weight_param;
+
+pub const ALPHA: f64 = 0.5;
+
+/// Result: transformed weights + the per-site activation multipliers.
+pub struct Smoothed {
+    pub params: TensorStore,
+    /// site -> the 1/s vector the artifact multiplies activations by
+    pub smooth: BTreeMap<String, Vec<f32>>,
+}
+
+pub fn apply(
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    stats: &CalibStats,
+) -> Result<Smoothed> {
+    let mut out = params.clone();
+    let mut smooth = BTreeMap::new();
+    for site in &cfg.sites {
+        let wname = site_weight_param(&site.name)?;
+        let w = out
+            .get_mut(&wname)
+            .with_context(|| format!("weight {} missing", wname))?;
+        let (_, din) = w.dims2();
+        let act_max = stats.channel_absmax(&site.name)?;
+        anyhow::ensure!(act_max.len() == din, "channel count mismatch at {}", site.name);
+        // per input channel absmax of W: column absmax of (dout, din)
+        let w_max = w.col_absmax();
+        let mut s = vec![1.0f32; din];
+        let mut inv = vec![1.0f32; din];
+        for j in 0..din {
+            let a = act_max[j].max(1e-8) as f64;
+            let ww = w_max[j].max(1e-8) as f64;
+            let sj = (a.powf(ALPHA) / ww.powf(1.0 - ALPHA)).max(1e-4) as f32;
+            s[j] = sj;
+            inv[j] = 1.0 / sj;
+        }
+        w.scale_cols(&s);
+        smooth.insert(site.name.clone(), inv);
+    }
+    Ok(Smoothed { params: out, smooth })
+}
+
+/// Identity smoothing vectors (for plain-ABFP artifacts).
+pub fn identity_smooth(cfg: &ModelCfg) -> BTreeMap<String, Vec<f32>> {
+    cfg.sites
+        .iter()
+        .map(|s| (s.name.clone(), vec![1.0f32; s.dim]))
+        .collect()
+}
+
+/// Build `smooth.<site>` sticky inputs from smoothing vectors.
+pub fn smooth_vals(smooth: &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Val> {
+    smooth
+        .iter()
+        .map(|(site, v)| {
+            (format!("smooth.{}", site), Val::F32(v.clone(), vec![v.len()]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ParamSpec, SiteSpec};
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+
+    fn cfg_1site(din: usize, dout: usize) -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            arch: "opt".into(),
+            task: "lm".into(),
+            stands_for: String::new(),
+            vocab: 8,
+            d: din,
+            layers: 1,
+            heads: 1,
+            d_ff: 4 * din,
+            seq: 4,
+            batch: 1,
+            image: 0,
+            patch: 0,
+            channels: 0,
+            classes: 0,
+            params: vec![ParamSpec {
+                name: "l0.wqkv".into(),
+                shape: vec![dout, din],
+                init: "normal".into(),
+            }],
+            sites: vec![SiteSpec { name: "l0.qkv".into(), dim: din }],
+        }
+    }
+
+    #[test]
+    fn smoothing_preserves_product_exactly_in_f64() {
+        prop::check("sq_preserves_product", 10, |rng| {
+            let (din, dout, rows) = (8, 6, 5);
+            let cfg = cfg_1site(din, dout);
+            let mut params = TensorStore::default();
+            let w = Tensor::new(vec![dout, din], prop::heavy_vec(rng, dout * din, 1.0));
+            params.insert("l0.wqkv", w.clone());
+            let x = Tensor::new(vec![rows, din], prop::heavy_vec(rng, rows * din, 4.0));
+            let stats = CalibStats {
+                acts: [("l0.qkv".to_string(), x.clone())].into_iter().collect(),
+            };
+            let sm = apply(&cfg, &params, &stats).unwrap();
+            // (x * inv_s) @ (W diag(s))^T == x @ W^T up to f32 rounding
+            let mut xs = x.clone();
+            xs.scale_cols(&sm.smooth["l0.qkv"]);
+            let w2 = sm.params.get("l0.wqkv").unwrap();
+            let y1 = x.matmul(&w.transpose());
+            let y2 = xs.matmul(&w2.transpose());
+            for (a, b) in y1.data.iter().zip(y2.data.iter()) {
+                crate::prop_assert!(
+                    (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                    "product changed: {} vs {}",
+                    a,
+                    b
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smoothing_evens_channel_ranges() {
+        // a channel with huge activations gets its weight scaled up and
+        // its activation multiplier scaled down.
+        let cfg = cfg_1site(4, 3);
+        let mut params = TensorStore::default();
+        params.insert("l0.wqkv", Tensor::full(vec![3, 4], 1.0));
+        let mut acts = Tensor::full(vec![10, 4], 1.0);
+        for r in 0..10 {
+            acts.set2(r, 2, 100.0); // outlier channel 2
+        }
+        let stats = CalibStats {
+            acts: [("l0.qkv".to_string(), acts)].into_iter().collect(),
+        };
+        let sm = apply(&cfg, &params, &stats).unwrap();
+        let inv = &sm.smooth["l0.qkv"];
+        assert!(inv[2] < inv[0], "outlier channel must shrink: {:?}", inv);
+        let w2 = sm.params.get("l0.wqkv").unwrap();
+        assert!(w2.at2(0, 2) > w2.at2(0, 0));
+    }
+}

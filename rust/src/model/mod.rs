@@ -1,0 +1,217 @@
+//! Parameter initialization and checkpoint management.
+//!
+//! The manifest's per-model param list (name, shape, init kind) is the
+//! layout contract with L2; initialization reproduces the same scheme the
+//! Python tests use (normal 0.02, residual-scaled projections, ones/zeros
+//! for norms, log-normal embedding gain — the outlier-channel injector,
+//! DESIGN.md §1).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::Val;
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Standard deviation of the log-normal embedding gain: controls how
+/// spread per-channel activation magnitudes are (the LLM-outlier
+/// simulation knob).
+pub const EMB_GAIN_SIGMA: f32 = 2.0;
+
+/// Log-normal spread of the LayerNorm gain init: puts LLM-style outlier
+/// channels directly at the quantized sites (qkv/fc1 inputs are LN
+/// outputs scaled by these gains).
+pub const LN_GAIN_SIGMA: f32 = 1.2;
+
+pub fn init_params(cfg: &ModelCfg, seed: u64) -> TensorStore {
+    let mut base = Pcg64::new(seed ^ 0x1217_BEEF);
+    let mut store = TensorStore::default();
+    let depth_scale = 0.02 / (2.0 * cfg.layers as f32).sqrt();
+    // Outlier channels are an *LLM* phenomenon (the paper's own finding:
+    // vision & smaller-task models are "inherently easier to quantize").
+    // Inject them only for the OPT/Wikitext2 stand-ins; the other
+    // families get unit gains — for span-QA the log-normal token gains
+    // would also drown the positional signal the task depends on.
+    let outliers = cfg.task == "lm";
+    for p in &cfg.params {
+        let mut rng = base.fork(fnv(&p.name));
+        let n: usize = p.shape.iter().product();
+        let data: Vec<f32> = match p.init.as_str() {
+            "zeros" => vec![0.0; n],
+            "ones" => vec![1.0; n],
+            "lognormal" if outliers => {
+                (0..n).map(|_| rng.lognormal(EMB_GAIN_SIGMA)).collect()
+            }
+            "lngain" if outliers => {
+                (0..n).map(|_| rng.lognormal(LN_GAIN_SIGMA)).collect()
+            }
+            "lognormal" | "lngain" => vec![1.0; n],
+            "residual" => (0..n).map(|_| rng.gaussian() * depth_scale).collect(),
+            _ => (0..n).map(|_| rng.gaussian() * 0.02).collect(),
+        };
+        store.insert(&p.name, Tensor::new(p.shape.clone(), data));
+    }
+    store
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Validate a checkpoint against the manifest layout.
+pub fn check_params(cfg: &ModelCfg, store: &TensorStore) -> Result<()> {
+    for p in &cfg.params {
+        let t = store
+            .get(&p.name)
+            .with_context(|| format!("checkpoint missing param {}", p.name))?;
+        if t.shape != p.shape {
+            bail!(
+                "param {}: checkpoint shape {:?} != manifest {:?}",
+                p.name,
+                t.shape,
+                p.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Sticky-input map (`name -> Val`) for the param inputs of an artifact.
+pub fn param_vals(cfg: &ModelCfg, store: &TensorStore) -> Result<BTreeMap<String, Val>> {
+    check_params(cfg, store)?;
+    let mut m = BTreeMap::new();
+    for p in &cfg.params {
+        m.insert(p.name.clone(), Val::from_tensor(store.get(&p.name).unwrap()));
+    }
+    Ok(m)
+}
+
+pub struct CkptDir {
+    pub dir: PathBuf,
+}
+
+impl CkptDir {
+    pub fn new(dir: &str) -> CkptDir {
+        CkptDir { dir: PathBuf::from(dir) }
+    }
+
+    pub fn path(&self, model: &str, tag: &str) -> PathBuf {
+        self.dir.join(format!("{}.{}.tns", model, tag))
+    }
+
+    pub fn exists(&self, model: &str, tag: &str) -> bool {
+        self.path(model, tag).exists()
+    }
+
+    pub fn save(&self, model: &str, tag: &str, store: &TensorStore) -> Result<()> {
+        store.save(&self.path(model, tag))
+    }
+
+    pub fn load(&self, model: &str, tag: &str) -> Result<TensorStore> {
+        TensorStore::load(&self.path(model, tag))
+    }
+
+    pub fn load_or_init(
+        &self,
+        cfg: &ModelCfg,
+        tag: &str,
+        seed: u64,
+    ) -> Result<(TensorStore, bool)> {
+        if self.exists(&cfg.name, tag) {
+            let s = self.load(&cfg.name, tag)?;
+            check_params(cfg, &s)?;
+            Ok((s, true))
+        } else {
+            Ok((init_params(cfg, seed), false))
+        }
+    }
+}
+
+/// Flat adam state (m or v) initialised to zeros, matching param layout.
+pub fn zero_like_params(cfg: &ModelCfg) -> TensorStore {
+    let mut store = TensorStore::default();
+    for p in &cfg.params {
+        store.insert(&p.name, Tensor::zeros(p.shape.clone()));
+    }
+    store
+}
+
+pub fn ckpt_default_dir() -> &'static Path {
+    Path::new("checkpoints")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            arch: "opt".into(),
+            task: "lm".into(),
+            stands_for: String::new(),
+            vocab: 8,
+            d: 4,
+            layers: 1,
+            heads: 1,
+            d_ff: 16,
+            seq: 4,
+            batch: 1,
+            image: 0,
+            patch: 0,
+            channels: 0,
+            classes: 0,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 3], init: "normal".into() },
+                ParamSpec { name: "g".into(), shape: vec![3], init: "ones".into() },
+                ParamSpec { name: "e".into(), shape: vec![3], init: "lognormal".into() },
+            ],
+            sites: vec![],
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds_and_is_deterministic() {
+        let cfg = tiny_cfg();
+        let a = init_params(&cfg, 42);
+        let b = init_params(&cfg, 42);
+        let c = init_params(&cfg, 43);
+        assert_eq!(a.get("w").unwrap().data, b.get("w").unwrap().data);
+        assert_ne!(a.get("w").unwrap().data, c.get("w").unwrap().data);
+        assert_eq!(a.get("g").unwrap().data, vec![1.0, 1.0, 1.0]);
+        assert!(a.get("e").unwrap().data.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn check_params_catches_mismatch() {
+        let cfg = tiny_cfg();
+        let mut s = init_params(&cfg, 1);
+        assert!(check_params(&cfg, &s).is_ok());
+        s.insert("w", Tensor::zeros(vec![3, 3]));
+        assert!(check_params(&cfg, &s).is_err());
+    }
+
+    #[test]
+    fn ckpt_roundtrip() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join("intfpqsim_ckpt_test");
+        let ck = CkptDir::new(dir.to_str().unwrap());
+        let (s, existed) = ck.load_or_init(&cfg, "fp32", 7).unwrap();
+        assert!(!existed);
+        ck.save("t", "fp32", &s).unwrap();
+        let (s2, existed2) = ck.load_or_init(&cfg, "fp32", 8).unwrap();
+        assert!(existed2);
+        assert_eq!(s.get("w").unwrap().data, s2.get("w").unwrap().data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,342 @@
+//! The simulator facade — INT-FP-QSim's public API (paper §III).
+//!
+//! A [`QuantConfig`] picks the numeric configuration (which lowered
+//! artifact simulates it) plus an optional accuracy-recovery method; the
+//! [`Simulator`] assembles weights, smoothing vectors and calibrated clip
+//! ranges, opens a runtime session (the Rust analog of "replace the
+//! layers with quantizer-wrapped versions") and evaluates the model's
+//! task metric.
+//!
+//! ```text
+//! Simulator::new("artifacts", "checkpoints")?
+//!     .evaluate("sim-opt-125m", &QuantConfig::abfp("abfp_w4a4_n64"))?
+//! ```
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::calib::{self, CalibStats};
+use crate::corpus::{CodeCorpus, ImageCorpus, QaCorpus, TextCorpus};
+use crate::eval;
+use crate::info;
+use crate::methods::{gptq, rptq, smoothquant};
+use crate::model::{self, CkptDir};
+use crate::runtime::Runtime;
+use crate::tensor::io::TensorStore;
+use crate::train::{self, TrainOpts};
+
+/// Accuracy-recovery method applied on top of the numeric config.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    /// Plain PTQ: dynamic ABFP or static calibration, no transform.
+    None,
+    /// SmoothQuant α=0.5 difficulty migration (weights + smooth inputs).
+    SmoothQuant,
+    /// GPTQ second-order weight compression (W4, high-precision acts).
+    Gptq,
+    /// RPTQ channel-cluster activation scales.
+    Rptq,
+    /// QAT: evaluate the checkpoint fine-tuned with this quant config.
+    Qat,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Quantizer configuration name from the artifact matrix
+    /// (`fp32`, `abfp_w4a4_n64`, `mse_w4a8`, `rptq_w4a4`, ...).
+    pub quant: String,
+    pub method: Method,
+}
+
+impl QuantConfig {
+    pub fn fp32() -> QuantConfig {
+        QuantConfig { quant: "fp32".into(), method: Method::None }
+    }
+
+    pub fn abfp(quant: &str) -> QuantConfig {
+        QuantConfig { quant: quant.into(), method: Method::None }
+    }
+
+    pub fn with(quant: &str, method: Method) -> QuantConfig {
+        QuantConfig { quant: quant.into(), method }
+    }
+
+    /// Label used in reports, mirroring the paper's column names.
+    pub fn label(&self) -> String {
+        match self.method {
+            Method::None => self.quant.clone(),
+            Method::SmoothQuant => format!("{}+SQ", self.quant),
+            Method::Gptq => "gptq_w4a16".to_string(),
+            Method::Rptq => self.quant.clone(),
+            Method::Qat => format!("{}+QAT", self.quant),
+        }
+    }
+}
+
+/// A metric value tagged with its kind (lower-is-better PPL vs
+/// higher-is-better percentages).
+#[derive(Debug, Clone, Copy)]
+pub struct Metric {
+    pub value: f64,
+    pub kind: MetricKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Ppl,
+    PassAt1,
+    F1,
+    Accuracy,
+}
+
+impl MetricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Ppl => "PPL",
+            MetricKind::PassAt1 => "Pass@1",
+            MetricKind::F1 => "F1",
+            MetricKind::Accuracy => "Acc",
+        }
+    }
+
+    pub fn lower_is_better(&self) -> bool {
+        matches!(self, MetricKind::Ppl)
+    }
+}
+
+/// Relative performance vs an FP32 baseline (Fig. 1's y-axis): 1.0 means
+/// "matches FP32"; for PPL the ratio inverts so higher is always better.
+pub fn relative_to_fp32(q: Metric, fp32: Metric) -> f64 {
+    match q.kind {
+        MetricKind::Ppl => fp32.value / q.value,
+        _ => q.value / fp32.value.max(1e-9),
+    }
+}
+
+pub struct EvalOpts {
+    pub eval_batches: u64,
+    pub pass1_programs: usize,
+    pub qat_opts: TrainOpts,
+    pub seed: u64,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts {
+            eval_batches: eval::EVAL_BATCHES,
+            pass1_programs: 64,
+            qat_opts: TrainOpts { steps: 60, peak_lr: 3e-4, warmup: 6, ..Default::default() },
+            seed: 1234,
+        }
+    }
+}
+
+pub struct Simulator {
+    pub rt: Runtime,
+    pub ck: CkptDir,
+    pub opts: EvalOpts,
+    calib_cache: RefCell<HashMap<String, Rc<CalibStats>>>,
+    gptq_cache: RefCell<HashMap<String, Rc<TensorStore>>>,
+}
+
+impl Simulator {
+    pub fn new(artifacts: &str, checkpoints: &str) -> Result<Simulator> {
+        Ok(Simulator {
+            rt: Runtime::new(artifacts)?,
+            ck: CkptDir::new(checkpoints),
+            opts: EvalOpts::default(),
+            calib_cache: RefCell::new(HashMap::new()),
+            gptq_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// FP32 weights for a model, pretraining (and caching) if needed.
+    pub fn weights(&self, model_name: &str) -> Result<TensorStore> {
+        train::pretrain_cached(&self.rt, model_name, &self.ck, &TrainOpts::default())
+    }
+
+    /// Calibration stats for (model, fp32 weights), cached in-process.
+    pub fn calibration(&self, model_name: &str) -> Result<Rc<CalibStats>> {
+        if let Some(c) = self.calib_cache.borrow().get(model_name) {
+            return Ok(c.clone());
+        }
+        let params = self.weights(model_name)?;
+        info!("calibrating {} ({} batches)", model_name, calib::CALIB_BATCHES);
+        let stats = Rc::new(calib::capture(&self.rt, model_name, &params)?);
+        self.calib_cache
+            .borrow_mut()
+            .insert(model_name.to_string(), stats.clone());
+        Ok(stats)
+    }
+
+    fn gptq_weights(&self, model_name: &str) -> Result<Rc<TensorStore>> {
+        if let Some(w) = self.gptq_cache.borrow().get(model_name) {
+            return Ok(w.clone());
+        }
+        let tag = "gptq_w4";
+        let cfg = self.rt.manifest.model(model_name)?.clone();
+        let store = if self.ck.exists(model_name, tag) {
+            self.ck.load(model_name, tag)?
+        } else {
+            let params = self.weights(model_name)?;
+            let stats = self.calibration(model_name)?;
+            info!("running GPTQ on {}", model_name);
+            let t0 = std::time::Instant::now();
+            let transformed = gptq::apply(&cfg, &params, &stats)?;
+            info!("GPTQ {} done in {:.1}s", model_name, t0.elapsed().as_secs_f64());
+            self.ck.save(model_name, tag, &transformed)?;
+            transformed
+        };
+        let rc = Rc::new(store);
+        self.gptq_cache
+            .borrow_mut()
+            .insert(model_name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    fn artifact_id(&self, model_name: &str, quant: &str) -> Result<String> {
+        let cfg = self.rt.manifest.model(model_name)?;
+        let purpose = if cfg.task == "codegen" { "eval_logits" } else { "eval" };
+        let id = format!("{}/{}_{}", model_name, purpose, quant);
+        self.rt.manifest.artifact(&id)?; // validate
+        Ok(id)
+    }
+
+    /// Evaluate a model under a quantization configuration; returns the
+    /// task metric (PPL / Pass@1 / F1 / Accuracy).
+    pub fn evaluate(&self, model_name: &str, qc: &QuantConfig) -> Result<Metric> {
+        let cfg = self.rt.manifest.model(model_name)?.clone();
+
+        // 1. weights (possibly method-transformed or QAT-fine-tuned)
+        let (params, smooth): (TensorStore, BTreeMap<String, Vec<f32>>) =
+            match qc.method {
+                Method::None | Method::Rptq => {
+                    (self.weights(model_name)?, smoothquant::identity_smooth(&cfg))
+                }
+                Method::SmoothQuant => {
+                    let stats = self.calibration(model_name)?;
+                    let base = self.weights(model_name)?;
+                    let sm = smoothquant::apply(&cfg, &base, &stats)?;
+                    (sm.params, sm.smooth)
+                }
+                Method::Gptq => (
+                    (*self.gptq_weights(model_name)?).clone(),
+                    smoothquant::identity_smooth(&cfg),
+                ),
+                Method::Qat => {
+                    let tag = format!("qat_{}", qc.quant.trim_start_matches("abfp_"));
+                    let w = train::qat_cached(
+                        &self.rt,
+                        model_name,
+                        &tag,
+                        &self.ck,
+                        &self.opts.qat_opts,
+                    )?;
+                    (w, smoothquant::identity_smooth(&cfg))
+                }
+            };
+
+        // 2. pick the artifact: GPTQ runs W4A16 == transformed weights
+        //    through the fp32 graph (activations stay high-precision).
+        let quant_for_artifact = match qc.method {
+            Method::Gptq => "fp32",
+            _ => qc.quant.as_str(),
+        };
+        let id = self.artifact_id(model_name, quant_for_artifact)?;
+        let spec = self.rt.manifest.artifact(&id)?.clone();
+
+        // 3. sticky inputs: params + smooth + calibrated alphas
+        let mut sticky = model::param_vals(&cfg, &params)?;
+        let needs_smooth = spec.inputs.iter().any(|i| i.name.starts_with("smooth."));
+        if needs_smooth {
+            sticky.extend(smoothquant::smooth_vals(&smooth));
+        }
+        let needs_alpha = spec.inputs.iter().any(|i| i.name.starts_with("alpha."));
+        if needs_alpha {
+            let stats = self.calibration(model_name)?;
+            if qc.quant.starts_with("rptq") {
+                sticky.extend(rptq::site_alpha_vals(&cfg, &stats)?);
+            } else if qc.quant.starts_with("mse") {
+                let bits = if qc.quant.ends_with("a8") { 8 } else { 4 };
+                let alphas = calib::mse_site_alphas(&stats, bits);
+                sticky.extend(calib::alpha_vals(&alphas));
+            } else {
+                bail!("artifact {} needs alphas but quant {} unknown", id, qc.quant);
+            }
+        }
+
+        // 4. run the task metric
+        let sess = self.rt.session(&id, &sticky)?;
+        let m = match cfg.task.as_str() {
+            "lm" => Metric {
+                value: eval::perplexity(
+                    &sess,
+                    &cfg,
+                    &TextCorpus::new(crate::corpus::TEXT_SEED),
+                    self.opts.eval_batches,
+                )?,
+                kind: MetricKind::Ppl,
+            },
+            "codegen" => Metric {
+                value: 100.0
+                    * eval::pass_at_1(
+                        &sess,
+                        &cfg,
+                        &CodeCorpus::new(crate::corpus::CODE_SEED),
+                        self.opts.pass1_programs,
+                    )?,
+                kind: MetricKind::PassAt1,
+            },
+            "span_qa" => Metric {
+                value: eval::qa_f1(
+                    &sess,
+                    &cfg,
+                    &QaCorpus::new(crate::corpus::QA_SEED),
+                    self.opts.eval_batches,
+                )?,
+                kind: MetricKind::F1,
+            },
+            "image_cls" => Metric {
+                value: eval::image_accuracy(
+                    &sess,
+                    &cfg,
+                    &ImageCorpus::new(crate::corpus::IMG_SEED),
+                    self.opts.eval_batches,
+                )?,
+                kind: MetricKind::Accuracy,
+            },
+            other => bail!("unknown task {}", other),
+        };
+        info!(
+            "{} [{}] -> {} {:.2}",
+            model_name,
+            qc.label(),
+            m.kind.name(),
+            m.value
+        );
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_relative_metric() {
+        assert_eq!(QuantConfig::fp32().label(), "fp32");
+        assert_eq!(
+            QuantConfig::with("abfp_w4a4_n64", Method::SmoothQuant).label(),
+            "abfp_w4a4_n64+SQ"
+        );
+        let fp = Metric { value: 20.0, kind: MetricKind::Ppl };
+        let q = Metric { value: 25.0, kind: MetricKind::Ppl };
+        assert!((relative_to_fp32(q, fp) - 0.8).abs() < 1e-9);
+        let fa = Metric { value: 80.0, kind: MetricKind::Accuracy };
+        let qa = Metric { value: 60.0, kind: MetricKind::Accuracy };
+        assert!((relative_to_fp32(qa, fa) - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,365 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! Python AOT builder (L1/L2) and the Rust coordinator (L3).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // normal | residual | zeros | ones | lognormal
+}
+
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    pub dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub arch: String,
+    pub task: String,
+    pub stands_for: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub image: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub sites: Vec<SiteSpec>,
+}
+
+impl ModelCfg {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    Param,
+    Smooth,
+    AScale,
+    AdamM,
+    AdamV,
+    Scalar,
+    Data,
+}
+
+impl InputKind {
+    fn parse(s: &str) -> Result<InputKind> {
+        Ok(match s {
+            "param" => InputKind::Param,
+            "smooth" => InputKind::Smooth,
+            "ascale" => InputKind::AScale,
+            "adam_m" => InputKind::AdamM,
+            "adam_v" => InputKind::AdamV,
+            "scalar" => InputKind::Scalar,
+            "data" => InputKind::Data,
+            other => bail!("unknown input kind {:?}", other),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub kind: InputKind,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub id: String,
+    pub file: String,
+    pub model: String,
+    pub purpose: String,
+    pub quant: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn shape_of(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+fn io_spec(j: &Json, with_kind: bool) -> Result<IoSpec> {
+    let name = j.get("name").and_then(Json::as_str).context("io name")?;
+    let dtype = match j.get("dtype").and_then(Json::as_str).unwrap_or("f32") {
+        "i32" => DType::I32,
+        _ => DType::F32,
+    };
+    let kind = if with_kind {
+        InputKind::parse(j.get("kind").and_then(Json::as_str).context("io kind")?)?
+    } else {
+        InputKind::Data
+    };
+    Ok(IoSpec {
+        name: name.to_string(),
+        kind,
+        shape: shape_of(j.get("shape").context("io shape")?),
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {:?} (run `make artifacts`)", path))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        if j.get("version").and_then(Json::as_usize) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models").and_then(Json::as_obj).context("models")? {
+            let g = |k: &str| mj.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let gs = |k: &str| {
+                mj.get(k).and_then(Json::as_str).unwrap_or_default().to_string()
+            };
+            let params = mj
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name").and_then(Json::as_str).context("pname")?.into(),
+                        shape: shape_of(p.get("shape").context("pshape")?),
+                        init: p
+                            .get("init")
+                            .and_then(Json::as_str)
+                            .unwrap_or("normal")
+                            .into(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let sites = mj
+                .get("sites")
+                .and_then(Json::as_arr)
+                .context("sites")?
+                .iter()
+                .map(|s| {
+                    Ok(SiteSpec {
+                        name: s.get("name").and_then(Json::as_str).context("sname")?.into(),
+                        dim: s.get("dim").and_then(Json::as_usize).context("sdim")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelCfg {
+                    name: name.clone(),
+                    arch: gs("arch"),
+                    task: gs("task"),
+                    stands_for: gs("stands_for"),
+                    vocab: g("vocab"),
+                    d: g("d"),
+                    layers: g("L"),
+                    heads: g("heads"),
+                    d_ff: g("d_ff"),
+                    seq: g("seq"),
+                    batch: g("batch"),
+                    image: g("image"),
+                    patch: g("patch"),
+                    channels: g("channels"),
+                    classes: g("classes"),
+                    params,
+                    sites,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (id, aj) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
+            let gs = |k: &str| -> Result<String> {
+                Ok(aj.get(k).and_then(Json::as_str).context("artifact str")?.to_string())
+            };
+            let inputs = aj
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(|i| io_spec(i, true))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = aj
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(|o| io_spec(o, false))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                id.clone(),
+                ArtifactSpec {
+                    id: id.clone(),
+                    file: gs("file")?,
+                    model: gs("model")?,
+                    purpose: gs("purpose")?,
+                    quant: gs("quant")?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        Ok(Manifest { models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelCfg> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {:?} not in manifest", name))
+    }
+
+    pub fn artifact(&self, id: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(id)
+            .with_context(|| format!("artifact {:?} not in manifest", id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn real_manifest() -> Option<Manifest> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn input_kind_parse_all_and_reject_unknown() {
+        for (s, k) in [
+            ("param", InputKind::Param),
+            ("smooth", InputKind::Smooth),
+            ("ascale", InputKind::AScale),
+            ("adam_m", InputKind::AdamM),
+            ("adam_v", InputKind::AdamV),
+            ("scalar", InputKind::Scalar),
+            ("data", InputKind::Data),
+        ] {
+            assert_eq!(InputKind::parse(s).unwrap(), k);
+        }
+        assert!(InputKind::parse("weights").is_err());
+        assert!(InputKind::parse("").is_err());
+    }
+
+    #[test]
+    fn load_rejects_wrong_version_and_garbage() {
+        let dir = std::env::temp_dir().join(format!("ifq_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // wrong version
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 2, "models": {}, "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        // syntactically broken
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        // missing file
+        std::fs::remove_file(dir.join("manifest.json")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{:#}", err).contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_minimal_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("ifq_mani_ok_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1,
+                "models": {"m": {"arch": "opt", "task": "lm", "vocab": 16,
+                    "d": 8, "L": 1, "heads": 2, "d_ff": 32, "seq": 4, "batch": 2,
+                    "params": [{"name": "w", "shape": [3, 4], "init": "normal"}],
+                    "sites": [{"name": "l0.qkv", "dim": 8}]}},
+                "artifacts": {"m/eval_fp32": {"file": "m/eval_fp32.hlo.txt",
+                    "model": "m", "purpose": "eval", "quant": "fp32",
+                    "inputs": [{"name": "w", "kind": "param", "shape": [3, 4],
+                                "dtype": "f32"}],
+                    "outputs": [{"name": "nll_sum", "shape": [], "dtype": "f32"}]}}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.param_count(), 12);
+        assert_eq!(m.layers, 1);
+        assert_eq!(m.sites[0].dim, 8);
+        let a = man.artifact("m/eval_fp32").unwrap();
+        assert_eq!(a.inputs[0].kind, InputKind::Param);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert!(man.model("nope").is_err());
+        assert!(man.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_invariants() {
+        let Some(man) = real_manifest() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        assert_eq!(man.models.len(), 10);
+        for (id, a) in &man.artifacts {
+            // id encodes model/purpose_quant
+            assert_eq!(*id, format!("{}/{}_{}", a.model, a.purpose, a.quant));
+            assert!(man.models.contains_key(&a.model), "{}", id);
+            // every artifact's param inputs match the model's param table
+            let m = &man.models[&a.model];
+            let pnames: Vec<&str> = a
+                .inputs
+                .iter()
+                .filter(|i| i.kind == InputKind::Param)
+                .map(|i| i.name.as_str())
+                .collect();
+            if !pnames.is_empty() {
+                assert_eq!(pnames.len(), m.params.len(), "{}", id);
+                for (pi, ps) in pnames.iter().zip(&m.params) {
+                    assert_eq!(*pi, ps.name, "{}", id);
+                }
+            }
+            assert!(!a.outputs.is_empty(), "{}", id);
+        }
+        // the extension configs made it into the matrix
+        for q in ["abfp2_w4a4_n64", "mixed_a8_boundary_n64", "abfp_w4a4_o8_n64"] {
+            assert!(
+                man.artifacts.contains_key(&format!("sim-opt-125m/eval_{}", q)),
+                "{}",
+                q
+            );
+        }
+    }
+}

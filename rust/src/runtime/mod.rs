@@ -1,0 +1,238 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute
+//! from the Rust hot path with device-resident sticky inputs.
+//!
+//! Pattern (per /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Compiled executables are cached per artifact id; a [`Session`] binds
+//! the inputs that stay fixed across calls (weights, smoothing vectors,
+//! calibrated scales) as device buffers so the per-batch work is just
+//! "upload tokens, execute, fetch outputs".
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::info;
+use crate::tensor::Tensor;
+use manifest::{ArtifactSpec, DType, Manifest};
+
+/// A host-side input value.
+#[derive(Debug, Clone)]
+pub enum Val {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Val {
+    pub fn scalar(v: f32) -> Val {
+        Val::F32(vec![v], vec![])
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Val {
+        Val::F32(t.data.clone(), t.shape.clone())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Val::F32(_, s) | Val::I32(_, s) => s,
+        }
+    }
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub compile_count: RefCell<usize>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact id.
+    pub fn executable(&self, id: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(id) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(id)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {}", id))?,
+        );
+        *self.compile_count.borrow_mut() += 1;
+        info!("compiled {} in {:.2}s", id, t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(id.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn upload(&self, val: &Val) -> Result<xla::PjRtBuffer> {
+        match val {
+            Val::F32(data, shape) => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .context("upload f32 buffer"),
+            Val::I32(data, shape) => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .context("upload i32 buffer"),
+        }
+    }
+
+    /// Open a session binding `sticky` inputs (by manifest input name).
+    /// Inputs not in `sticky` must be provided per call.
+    pub fn session(&self, id: &str, sticky: &BTreeMap<String, Val>) -> Result<Session<'_>> {
+        let exe = self.executable(id)?;
+        let spec = self.manifest.artifact(id)?.clone();
+        let mut bound: Vec<Option<xla::PjRtBuffer>> = Vec::new();
+        let mut free_idx = Vec::new();
+        for (i, input) in spec.inputs.iter().enumerate() {
+            if let Some(v) = sticky.get(&input.name) {
+                check_shape(&spec, i, v)?;
+                bound.push(Some(self.upload(v)?));
+            } else {
+                bound.push(None);
+                free_idx.push(i);
+            }
+        }
+        Ok(Session { rt: self, exe, spec, bound, free_idx })
+    }
+}
+
+fn check_shape(spec: &ArtifactSpec, i: usize, v: &Val) -> Result<()> {
+    let want = &spec.inputs[i].shape;
+    if v.shape() != want.as_slice() {
+        bail!(
+            "artifact {} input {} ({}): shape {:?} != manifest {:?}",
+            spec.id,
+            i,
+            spec.inputs[i].name,
+            v.shape(),
+            want
+        );
+    }
+    let want_dtype = spec.inputs[i].dtype;
+    let got_dtype = match v {
+        Val::F32(..) => DType::F32,
+        Val::I32(..) => DType::I32,
+    };
+    if want_dtype != got_dtype {
+        bail!(
+            "artifact {} input {} ({}): dtype mismatch",
+            spec.id,
+            i,
+            spec.inputs[i].name
+        );
+    }
+    Ok(())
+}
+
+/// A compiled artifact with its sticky inputs resident on device.
+pub struct Session<'r> {
+    rt: &'r Runtime,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub spec: ArtifactSpec,
+    bound: Vec<Option<xla::PjRtBuffer>>,
+    free_idx: Vec<usize>,
+}
+
+impl<'r> Session<'r> {
+    /// Re-bind one sticky input (e.g. swap transformed weights in place).
+    pub fn rebind(&mut self, name: &str, v: &Val) -> Result<()> {
+        let i = self
+            .spec
+            .inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("no input named {}", name))?;
+        check_shape(&self.spec, i, v)?;
+        self.bound[i] = Some(self.rt.upload(v)?);
+        Ok(())
+    }
+
+    /// Names of the inputs that must be supplied per call, in order.
+    pub fn free_inputs(&self) -> Vec<&str> {
+        self.free_idx.iter().map(|&i| self.spec.inputs[i].name.as_str()).collect()
+    }
+
+    /// Execute with per-call values for the free inputs (in free-input
+    /// order). Returns one host tensor per manifest output.
+    pub fn run(&self, free: &[Val]) -> Result<Vec<Tensor>> {
+        if free.len() != self.free_idx.len() {
+            bail!(
+                "artifact {}: expected {} free inputs ({:?}), got {}",
+                self.spec.id,
+                self.free_idx.len(),
+                self.free_inputs(),
+                free.len()
+            );
+        }
+        // Upload ephemerals, then assemble the full positional arg list.
+        let mut ephemeral: Vec<xla::PjRtBuffer> = Vec::with_capacity(free.len());
+        for (&i, v) in self.free_idx.iter().zip(free.iter()) {
+            check_shape(&self.spec, i, v)?;
+            ephemeral.push(self.rt.upload(v)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
+        let mut e = 0;
+        for (i, b) in self.bound.iter().enumerate() {
+            match b {
+                Some(buf) => args.push(buf),
+                None => {
+                    let _ = i;
+                    args.push(&ephemeral[e]);
+                    e += 1;
+                }
+            }
+        }
+        let result = self
+            .exe
+            .execute_b(&args)
+            .with_context(|| format!("execute {}", self.spec.id))?;
+        // return_tuple=True => single tuple output; decompose to parts.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest says {}",
+                self.spec.id,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, ospec) in parts.iter().zip(self.spec.outputs.iter()) {
+            let data = part
+                .to_vec::<f32>()
+                .with_context(|| format!("output {} to f32", ospec.name))?;
+            out.push(Tensor::new(ospec.shape.clone(), data));
+        }
+        Ok(out)
+    }
+}

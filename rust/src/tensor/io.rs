@@ -1,0 +1,163 @@
+//! Checkpoint container: named tensors in a simple binary format.
+//!
+//! Layout (little-endian):
+//!   magic  b"TNS1"
+//!   u32    tensor count
+//!   per tensor:
+//!     u32          name length, then name bytes (utf-8)
+//!     u32          ndim, then ndim × u32 dims
+//!     f32 × numel  row-major data
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    pub tensors: BTreeMap<String, Tensor>,
+    /// Insertion/manifest order (BTreeMap alone would lose it).
+    pub order: Vec<String>,
+}
+
+impl TensorStore {
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.tensors.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.tensors.get_mut(name)
+    }
+
+    pub fn expect(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor {:?} missing from store", name))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(b"TNS1")?;
+            f.write_all(&(self.order.len() as u32).to_le_bytes())?;
+            for name in &self.order {
+                let t = &self.tensors[name];
+                f.write_all(&(name.len() as u32).to_le_bytes())?;
+                f.write_all(name.as_bytes())?;
+                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    f.write_all(&(d as u32).to_le_bytes())?;
+                }
+                // bulk write of the payload
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data.as_ptr() as *const u8,
+                        t.data.len() * 4,
+                    )
+                };
+                f.write_all(bytes)?;
+            }
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TensorStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open checkpoint {:?}", path))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"TNS1" {
+            bail!("bad magic in {:?}", path);
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut store = TensorStore::default();
+        for _ in 0..count {
+            let nlen = read_u32(&mut f)? as usize;
+            if nlen > 4096 {
+                bail!("unreasonable name length {}", nlen);
+            }
+            let mut nbuf = vec![0u8; nlen];
+            f.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf).context("tensor name utf8")?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 8 {
+                bail!("unreasonable ndim {}", ndim);
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+            };
+            f.read_exact(bytes)?;
+            store.insert(&name, Tensor::new(shape, data));
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("intfpqsim_test_io");
+        let path = dir.join("ckpt.tns");
+        let mut s = TensorStore::default();
+        s.insert("b.weight", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        s.insert("a.scalar", Tensor::scalar(7.5));
+        s.insert("empty", Tensor::zeros(vec![0]));
+        s.save(&path).unwrap();
+        let l = TensorStore::load(&path).unwrap();
+        assert_eq!(l.order, vec!["b.weight", "a.scalar", "empty"]);
+        assert_eq!(l.get("b.weight").unwrap().shape, vec![2, 3]);
+        assert_eq!(l.get("a.scalar").unwrap().data, vec![7.5]);
+        assert_eq!(l.get("empty").unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("intfpqsim_test_io2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tns");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,402 @@
+//! Host-side tensor math: the pieces GPTQ/SmoothQuant/RPTQ and the
+//! calibrator need. Cache-blocked matmul is enough for our Hessian sizes
+//! (≤ 2048²); correctness is cross-checked against naive loops in tests.
+
+use super::Tensor;
+
+impl Tensor {
+    /// C = A @ B for 2-D tensors (M,K) x (K,N).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order: streams B rows, accumulates into C rows.
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *c += a * bv;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// A^T @ A, the Gram/Hessian accumulator used by GPTQ (K,K from M,K).
+    pub fn gram(&self) -> Tensor {
+        // §Perf L3 iteration 4 (EXPERIMENTS.md): accumulate RB=8 input
+        // rows per sweep of the (k, k) output so each output row is
+        // loaded once per 8 rank-1 updates instead of once per row.
+        // Per (i, j) element the accumulation stays in ascending-r order,
+        // so the result is bit-identical to the row-at-a-time loop.
+        const RB: usize = 8;
+        let (m, k) = self.dims2();
+        let mut out = vec![0.0f32; k * k];
+        let mut r0 = 0;
+        while r0 < m {
+            let rend = (r0 + RB).min(m);
+            for i in 0..k {
+                let orow = &mut out[i * k..(i + 1) * k];
+                for r in r0..rend {
+                    let row = self.row(r);
+                    let xi = row[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for (o, &xj) in orow.iter_mut().zip(row.iter()) {
+                        *o += xi * xj;
+                    }
+                }
+            }
+            r0 = rend;
+        }
+        Tensor::new(vec![k, k], out)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Per-column absolute max of a 2-D tensor -> (cols,).
+    pub fn col_absmax(&self) -> Vec<f32> {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; n];
+        for i in 0..m {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                let a = v.abs();
+                if a > *o {
+                    *o = a;
+                }
+            }
+        }
+        let _ = m;
+        out
+    }
+
+    /// Per-row absolute max -> (rows,).
+    pub fn row_absmax(&self) -> Vec<f32> {
+        let (m, _) = self.dims2();
+        (0..m)
+            .map(|i| self.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+            .collect()
+    }
+
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+    }
+
+    /// Elementwise multiply of each column j by s[j] (in place).
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        let (m, n) = self.dims2();
+        assert_eq!(s.len(), n);
+        for i in 0..m {
+            for (v, &sj) in self.row_mut(i).iter_mut().zip(s.iter()) {
+                *v *= sj;
+            }
+        }
+    }
+
+    /// Elementwise multiply of each row i by s[i] (in place).
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        let (m, _) = self.dims2();
+        assert_eq!(s.len(), m);
+        for i in 0..m {
+            let si = s[i];
+            for v in self.row_mut(i) {
+                *v *= si;
+            }
+        }
+    }
+
+    /// Permute the columns: out[:, j] = self[:, perm[j]].
+    pub fn permute_cols(&self, perm: &[usize]) -> Tensor {
+        let (m, n) = self.dims2();
+        assert_eq!(perm.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let src = self.row(i);
+            let dst = &mut out[i * n..(i + 1) * n];
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Mean of squared elements.
+    pub fn mean_sq(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Mean squared error against another tensor of the same shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+/// Cholesky decomposition (lower) of a symmetric positive-definite matrix,
+/// with diagonal damping; used to invert the GPTQ Hessian.
+pub fn cholesky(a: &Tensor) -> Option<Tensor> {
+    let (n, n2) = a.dims2();
+    assert_eq!(n, n2);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.data[i * n + j] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(Tensor::new(
+        vec![n, n],
+        l.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+/// Inverse of an SPD matrix via Cholesky (L L^T = A, then forward/back
+/// substitution per unit column).
+pub fn spd_inverse(a: &Tensor) -> Option<Tensor> {
+    let (n, _) = a.dims2();
+    let l = cholesky(a)?;
+    // §Perf L3 iteration 1 (EXPERIMENTS.md): two structural fixes, both
+    // bit-exact vs the naive solver —
+    //  (a) forward solve L y = e_col: y[0..col] is exactly 0 (unit RHS,
+    //      lower-triangular L), so start at i = col — halves the flops;
+    //  (b) the back solve walked ld[k*n + i] at stride n; solve against a
+    //      row-major transpose instead (same values, same op order).
+    let ld: Vec<f64> = l.data.iter().map(|&v| v as f64).collect();
+    let mut lt = vec![0.0f64; n * n]; // lt[i*n + k] = L[k, i]  (k >= i)
+    for i in 0..n {
+        for k in i..n {
+            lt[i * n + k] = ld[k * n + i];
+        }
+    }
+    // §Perf L3 iteration 3 (EXPERIMENTS.md): multi-RHS blocking.  The
+    // solves are memory-bound (L is re-read per column), so process C=8
+    // unit columns per sweep — each L row is loaded once and reused for
+    // all 8 right-hand sides.  Per column the f64 operation sequence is
+    // unchanged (the widened forward loop only adds exact-zero terms for
+    // k < col_c), so the result is bit-identical to the one-column solver.
+    const C: usize = 8;
+    let mut inv = vec![0.0f64; n * n];
+    let mut yb = vec![0.0f64; n * C];
+    let mut xb = vec![0.0f64; n * C];
+    let mut col0 = 0;
+    while col0 < n {
+        let cw = C.min(n - col0);
+        // forward: L y_c = e_{col0+c}; y_c[i] = 0 for i < col0
+        for v in yb[col0 * C..].iter_mut() {
+            *v = 0.0;
+        }
+        let mut s = [0.0f64; C];
+        for i in col0..n {
+            for (c, sv) in s[..cw].iter_mut().enumerate() {
+                *sv = if i == col0 + c { 1.0 } else { 0.0 };
+            }
+            let lrow = &ld[i * n + col0..i * n + i];
+            for (k, lv) in lrow.iter().enumerate() {
+                let yrow = &yb[(col0 + k) * C..(col0 + k) * C + cw];
+                for (sv, yv) in s[..cw].iter_mut().zip(yrow) {
+                    *sv -= lv * yv;
+                }
+            }
+            let d = ld[i * n + i];
+            for (c, sv) in s[..cw].iter().enumerate() {
+                yb[i * C + c] = sv / d;
+            }
+        }
+        // back: L^T x_c = y_c, row access through the transpose
+        for i in (0..n).rev() {
+            s[..cw].copy_from_slice(&yb[i * C..i * C + cw]);
+            let trow = &lt[i * n + i + 1..(i + 1) * n];
+            for (k, tv) in trow.iter().enumerate() {
+                let xrow = &xb[(i + 1 + k) * C..(i + 1 + k) * C + cw];
+                for (sv, xv) in s[..cw].iter_mut().zip(xrow) {
+                    *sv -= tv * xv;
+                }
+            }
+            let d = ld[i * n + i];
+            for c in 0..cw {
+                let v = s[c] / d;
+                xb[i * C + c] = v;
+                inv[i * n + col0 + c] = v;
+            }
+        }
+        col0 += cw;
+    }
+    Some(Tensor::new(
+        vec![n, n],
+        inv.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (_, n) = b.dims2();
+        let mut out = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.at2(i, p) * b.at2(p, j);
+                }
+                out.set2(i, j, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        prop::check("matmul_vs_naive", 20, |rng| {
+            let (m, k, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let a = Tensor::new(vec![m, k], prop::heavy_vec(rng, m * k, 1.0));
+            let b = Tensor::new(vec![k, n], prop::heavy_vec(rng, k * n, 1.0));
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                prop_assert!(
+                    (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                    "matmul mismatch {} vs {}",
+                    g,
+                    w
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_equals_at_a() {
+        prop::check("gram", 10, |rng| {
+            let (m, k) = (1 + rng.below(10), 1 + rng.below(10));
+            let a = Tensor::new(vec![m, k], prop::heavy_vec(rng, m * k, 1.0));
+            let got = a.gram();
+            let want = a.transpose().matmul(&a);
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                prop_assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "gram mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn absmax_helpers() {
+        let t = Tensor::new(vec![2, 3], vec![1., -5., 3., -4., 2., 0.]);
+        assert_eq!(t.col_absmax(), vec![4., 5., 3.]);
+        assert_eq!(t.row_absmax(), vec![5., 4.]);
+        assert_eq!(t.absmax(), 5.0);
+    }
+
+    #[test]
+    fn permute_cols_roundtrip() {
+        prop::check("permute_roundtrip", 10, |rng| {
+            let (m, n) = (1 + rng.below(6), 2 + rng.below(8));
+            let t = Tensor::new(vec![m, n], prop::heavy_vec(rng, m * n, 1.0));
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let mut inv = vec![0usize; n];
+            for (j, &p) in perm.iter().enumerate() {
+                inv[p] = j;
+            }
+            let back = t.permute_cols(&perm).permute_cols(&inv);
+            prop_assert!(back == t, "permute roundtrip failed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        t.scale_cols(&[2.0, 0.5]);
+        assert_eq!(t.data, vec![2., 1., 6., 2.]);
+        t.scale_rows(&[1.0, 10.0]);
+        assert_eq!(t.data, vec![2., 1., 60., 20.]);
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        prop::check("spd_inverse", 10, |rng| {
+            let n = 2 + rng.below(8);
+            // A = B^T B + eps I is SPD
+            let b = Tensor::new(vec![n + 2, n], prop::heavy_vec(rng, (n + 2) * n, 1.0));
+            let mut a = b.gram();
+            for i in 0..n {
+                a.data[i * n + i] += 0.5;
+            }
+            let inv = spd_inverse(&a).expect("spd");
+            let prod = a.matmul(&inv);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    prop_assert!(
+                        (prod.at2(i, j) - want).abs() < 1e-2,
+                        "A·A^-1 [{},{}] = {}",
+                        i,
+                        j,
+                        prod.at2(i, j)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mse_and_mean_sq() {
+        let a = Tensor::new(vec![1, 3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![1, 3], vec![1., 0., 3.]);
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-9);
+        assert!((a.mean_sq() - 14.0 / 3.0).abs() < 1e-9);
+    }
+}

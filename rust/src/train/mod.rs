@@ -1,0 +1,285 @@
+//! Training drivers: FP32 pretraining and ABFP quantization-aware
+//! fine-tuning (paper §II-C), both executing `train_*` artifacts (Adam
+//! step compiled into the graph, PWL estimator for QAT).
+//!
+//! The driver owns the optimizer state host-side and threads it through
+//! the artifact each step; the learning-rate schedule is computed here
+//! (runtime scalar input), so schedules never require re-lowering.
+
+use anyhow::{bail, Context, Result};
+
+use crate::corpus::{CodeCorpus, ImageCorpus, QaCorpus, TextCorpus};
+use crate::info;
+use crate::model;
+use crate::runtime::manifest::{InputKind, ModelCfg};
+use crate::runtime::{Runtime, Val};
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub peak_lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts { steps: 300, peak_lr: 3e-3, warmup: 30, seed: 7, log_every: 20 }
+    }
+}
+
+/// Warmup + cosine decay to 10% of peak.
+pub fn lr_at(opts: &TrainOpts, step: usize) -> f32 {
+    let s = step as f32;
+    if step < opts.warmup {
+        return opts.peak_lr * (s + 1.0) / opts.warmup as f32;
+    }
+    let progress = (s - opts.warmup as f32)
+        / (opts.steps.max(opts.warmup + 1) - opts.warmup) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress.min(1.0)).cos());
+    opts.peak_lr * (0.1 + 0.9 * cos)
+}
+
+/// Per-step data supplier: step index -> data `Val`s in manifest order.
+pub type DataFn<'a> = Box<dyn Fn(u64) -> Vec<Val> + 'a>;
+
+/// Build the training data supplier for a model family. The corpus seed
+/// is the *family constant* (corpus::TEXT_SEED etc.) so training,
+/// calibration and evaluation share one generative process.
+pub fn data_fn<'a>(cfg: &'a ModelCfg, _seed: u64) -> DataFn<'a> {
+    let (b, s) = (cfg.batch, cfg.seq);
+    match cfg.task.as_str() {
+        "lm" => {
+            let corpus = TextCorpus::new(crate::corpus::TEXT_SEED);
+            Box::new(move |i| {
+                let tb = corpus.train_batch(i, b, s);
+                vec![Val::I32(tb.tokens, vec![b, s])]
+            })
+        }
+        "codegen" => {
+            let corpus = CodeCorpus::new(crate::corpus::CODE_SEED);
+            Box::new(move |i| {
+                let tb = corpus.train_batch(i, b, s);
+                vec![Val::I32(tb.tokens, vec![b, s])]
+            })
+        }
+        "span_qa" => {
+            let corpus = QaCorpus::new(crate::corpus::QA_SEED);
+            Box::new(move |i| {
+                let qb = corpus.train_batch(i, b, s);
+                vec![
+                    Val::I32(qb.tokens.tokens, vec![b, s]),
+                    Val::I32(qb.starts, vec![b]),
+                    Val::I32(qb.ends, vec![b]),
+                ]
+            })
+        }
+        "image_cls" => {
+            let corpus = ImageCorpus::new(crate::corpus::IMG_SEED);
+            let (img, ch) = (cfg.image, cfg.channels);
+            Box::new(move |i| {
+                let ib = corpus.train_batch(i, b);
+                vec![
+                    Val::F32(ib.pixels, vec![b, img, img, ch]),
+                    Val::I32(ib.labels, vec![b]),
+                ]
+            })
+        }
+        other => panic!("unknown task {}", other),
+    }
+}
+
+/// Result of a training run: final params + the loss curve.
+pub struct TrainResult {
+    pub params: TensorStore,
+    pub losses: Vec<f32>,
+}
+
+/// Run `steps` of the given train artifact starting from `params`.
+pub fn run_training(
+    rt: &Runtime,
+    artifact_id: &str,
+    params: TensorStore,
+    opts: &TrainOpts,
+) -> Result<TrainResult> {
+    let spec = rt.manifest.artifact(artifact_id)?.clone();
+    if spec.purpose != "train" {
+        bail!("{} is not a train artifact", artifact_id);
+    }
+    let cfg = rt.manifest.model(&spec.model)?.clone();
+    model::check_params(&cfg, &params)?;
+    // Sanity-check the manifest input layout we rely on below.
+    let p = cfg.params.len();
+    for (i, inp) in spec.inputs.iter().enumerate() {
+        let want = match i {
+            i if i < p => InputKind::Param,
+            i if i < 2 * p => InputKind::AdamM,
+            i if i < 3 * p => InputKind::AdamV,
+            i if i < 3 * p + 2 => InputKind::Scalar,
+            _ => InputKind::Data,
+        };
+        if inp.kind != want {
+            bail!("unexpected input layout at {} of {}", i, artifact_id);
+        }
+    }
+
+    let sess = rt.session(artifact_id, &Default::default())?;
+    let supplier = data_fn(&cfg, opts.seed ^ 0xDA7A);
+
+    let mut pvals: Vec<Tensor> =
+        cfg.params.iter().map(|ps| params.get(&ps.name).unwrap().clone()).collect();
+    let mut mvals: Vec<Tensor> =
+        cfg.params.iter().map(|ps| Tensor::zeros(ps.shape.clone())).collect();
+    let mut vvals: Vec<Tensor> =
+        cfg.params.iter().map(|ps| Tensor::zeros(ps.shape.clone())).collect();
+
+    let mut losses = Vec::with_capacity(opts.steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..opts.steps {
+        let mut args: Vec<Val> = Vec::with_capacity(3 * p + 2 + 2);
+        for t in pvals.iter().chain(mvals.iter()).chain(vvals.iter()) {
+            args.push(Val::from_tensor(t));
+        }
+        args.push(Val::scalar((step + 1) as f32)); // 1-based for bias correction
+        args.push(Val::scalar(lr_at(opts, step)));
+        args.extend(supplier(step as u64));
+
+        let out = sess.run(&args).with_context(|| format!("train step {}", step))?;
+        debug_assert_eq!(out.len(), 3 * p + 1);
+        let loss = out[3 * p].data[0];
+        if !loss.is_finite() {
+            bail!("non-finite loss {} at step {} of {}", loss, step, artifact_id);
+        }
+        losses.push(loss);
+        let mut it = out.into_iter();
+        for t in pvals.iter_mut() {
+            *t = it.next().unwrap();
+        }
+        for t in mvals.iter_mut() {
+            *t = it.next().unwrap();
+        }
+        for t in vvals.iter_mut() {
+            *t = it.next().unwrap();
+        }
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            info!(
+                "{}: step {:>4}/{} loss {:.4} lr {:.2e} ({:.2}s)",
+                artifact_id,
+                step,
+                opts.steps,
+                loss,
+                lr_at(opts, step),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    let mut out_store = TensorStore::default();
+    for (ps, t) in cfg.params.iter().zip(pvals.into_iter()) {
+        out_store.insert(&ps.name, t);
+    }
+    Ok(TrainResult { params: out_store, losses })
+}
+
+/// Pretrain (or fetch cached) FP32 weights for a model.
+pub fn pretrain_cached(
+    rt: &Runtime,
+    model_name: &str,
+    ck: &model::CkptDir,
+    opts: &TrainOpts,
+) -> Result<TensorStore> {
+    let cfg = rt.manifest.model(model_name)?.clone();
+    if ck.exists(model_name, "fp32") {
+        let s = ck.load(model_name, "fp32")?;
+        model::check_params(&cfg, &s)?;
+        return Ok(s);
+    }
+    info!("pretraining {} ({} params)", model_name, cfg.param_count());
+    let init = model::init_params(&cfg, opts.seed);
+    let result = run_training(rt, &format!("{}/train_fp32", model_name), init, opts)?;
+    ck.save(model_name, "fp32", &result.params)?;
+    save_losses(ck, model_name, "fp32", &result.losses)?;
+    Ok(result.params)
+}
+
+/// QAT fine-tune from the FP32 checkpoint (or fetch cached).
+pub fn qat_cached(
+    rt: &Runtime,
+    model_name: &str,
+    qat_config: &str, // e.g. "qat_w4a4_n64"
+    ck: &model::CkptDir,
+    opts: &TrainOpts,
+) -> Result<TensorStore> {
+    if ck.exists(model_name, qat_config) {
+        return ck.load(model_name, qat_config);
+    }
+    let base = pretrain_cached(rt, model_name, ck, &TrainOpts::default())?;
+    info!("QAT fine-tuning {} with {}", model_name, qat_config);
+    let result =
+        run_training(rt, &format!("{}/train_{}", model_name, qat_config), base, opts)?;
+    ck.save(model_name, qat_config, &result.params)?;
+    save_losses(ck, model_name, qat_config, &result.losses)?;
+    Ok(result.params)
+}
+
+fn save_losses(
+    ck: &model::CkptDir,
+    model_name: &str,
+    tag: &str,
+    losses: &[f32],
+) -> Result<()> {
+    use crate::util::json::Json;
+    let arr = Json::Arr(losses.iter().map(|&l| Json::Num(l as f64)).collect());
+    let path = ck.dir.join(format!("{}.{}.losses.json", model_name, tag));
+    std::fs::write(path, arr.dump())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let opts = TrainOpts { steps: 100, peak_lr: 1.0, warmup: 10, ..Default::default() };
+        assert!(lr_at(&opts, 0) < 0.2);
+        assert!((lr_at(&opts, 9) - 1.0).abs() < 0.01);
+        assert!(lr_at(&opts, 50) < 1.0);
+        assert!(lr_at(&opts, 99) >= 0.1 * 1.0 - 1e-3);
+        // monotone decay after warmup
+        assert!(lr_at(&opts, 30) > lr_at(&opts, 60));
+    }
+
+    #[test]
+    fn data_fn_shapes() {
+        use crate::runtime::manifest::{ModelCfg, ParamSpec};
+        let mk = |task: &str, image: usize| ModelCfg {
+            seq: if task == "span_qa" { 64 } else { 16 },
+            name: "t".into(),
+            arch: "opt".into(),
+            task: task.into(),
+            stands_for: String::new(),
+            vocab: 64,
+            d: 8,
+            layers: 1,
+            heads: 1,
+            d_ff: 32,
+            batch: 2,
+            image,
+            patch: 4,
+            channels: 3,
+            classes: 16,
+            params: Vec::<ParamSpec>::new(),
+            sites: vec![],
+        };
+        assert_eq!(data_fn(&mk("lm", 0), 1)(0).len(), 1);
+        assert_eq!(data_fn(&mk("codegen", 0), 1)(0).len(), 1);
+        assert_eq!(data_fn(&mk("span_qa", 0), 1)(0).len(), 3);
+        let v = data_fn(&mk("image_cls", 32), 1)(0);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].shape(), &[2, 32, 32, 3]);
+    }
+}

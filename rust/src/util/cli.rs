@@ -1,0 +1,109 @@
+//! Tiny argv parser (no clap in the vendored set).
+//!
+//! Grammar: `repro <command> [--flag] [--key value]... [positional]...`
+//! Flags and options may appear in any order after the command.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv[1..]. `flag_names` lists options that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            a.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{} needs a value", name));
+                    }
+                    a.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    return Err(format!("option --{} needs a value", name));
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.options.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = Args::parse(
+            &sv(&["eval", "--model", "sim-opt-125m", "--force", "--steps=30", "extra"]),
+            &["force"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.get("model", ""), "sim-opt-125m");
+        assert_eq!(a.get_usize("steps", 0), 30);
+        assert!(a.flag("force"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["x", "--model"]), &[]).is_err());
+        assert!(Args::parse(&sv(&["x", "--model", "--other", "v"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["run"]), &[]).unwrap();
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+        assert_eq!(a.get_f32("lr", 0.5), 0.5);
+    }
+}

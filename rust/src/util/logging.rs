@@ -1,0 +1,32 @@
+//! Leveled stderr logging with wall-clock offsets.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: u8, msg: &str) {
+    if LEVEL.load(Ordering::Relaxed) >= level {
+        eprintln!("[{:8.2}s] {}", elapsed(), msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log(1, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log(2, &format!($($arg)*)) };
+}

@@ -1,0 +1,12 @@
+//! Dependency-free substrates.
+//!
+//! The offline build restricts crates to the vendored set (`xla`,
+//! `anyhow`), so the roles usually filled by serde/clap/rand/criterion
+//! are implemented here from scratch and tested in-tree.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod timer;

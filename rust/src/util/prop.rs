@@ -1,0 +1,69 @@
+//! Mini property-testing harness (proptest is not in the vendored set).
+//!
+//! `check(name, cases, |rng| { ... })` runs a closure over many seeded
+//! RNG streams; on failure it reports the failing seed so the case can
+//! be replayed exactly (`PROP_SEED=<seed> cargo test <name>`).
+
+use super::rng::Pcg64;
+
+pub fn check<F: Fn(&mut Pcg64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    // Replay a single seed if requested.
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Pcg64::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property {} failed on replay seed {}: {}", name, seed, msg);
+            }
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {} failed (seed {}, case {}/{}): {}\n  replay: PROP_SEED={} cargo test",
+                name, seed, case, cases, msg, seed
+            );
+        }
+    }
+}
+
+/// Random f32 vector with heavy tails (exercises outliers/quant edges).
+pub fn heavy_vec(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.gaussian() * scale * rng.lognormal(1.0))
+        .collect()
+}
+
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 20, |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {}", x))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always_fails failed")]
+    fn check_reports_failures() {
+        check("always_fails", 3, |_| Err("nope".into()));
+    }
+}

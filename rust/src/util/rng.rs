@@ -1,0 +1,210 @@
+//! Deterministic PRNG + distributions (no `rand` in the vendored set).
+//!
+//! PCG64 (xsl-rr-128/64) core with Gaussian (Ziggurat-free polar method),
+//! log-normal, Zipf, and Fisher-Yates shuffling. Everything in the
+//! simulator that touches randomness (init, corpora, eval sampling) goes
+//! through this, keyed by explicit seeds, so runs are exactly
+//! reproducible.
+
+#[derive(Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        // splitmix-style seeding of the 128-bit state
+        let mut s = Pcg64 {
+            state: 0,
+            inc: ((seed as u128).wrapping_mul(0x9E3779B97F4A7C15) << 1) | 1,
+        };
+        s.state = (seed as u128).wrapping_mul(0x2545F4914F6CDD1D) ^ 0x853c49e6748fea9b;
+        s.next_u64();
+        s.state = s.state.wrapping_add(seed as u128);
+        s.next_u64();
+        s
+    }
+
+    /// Derive an independent stream (e.g. per-tensor init).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our (non-crypto) purposes
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn gaussian(&mut self) -> f32 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return (u * (-2.0 * s.ln() / s).sqrt()) as f32;
+            }
+        }
+    }
+
+    pub fn lognormal(&mut self, sigma: f32) -> f32 {
+        (self.gaussian() * sigma).exp()
+    }
+
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample from explicit (unnormalized) weights.
+    pub fn weighted(&mut self, w: &[f32]) -> usize {
+        let total: f32 = w.iter().sum();
+        let mut t = self.f32() * total;
+        for (i, &wi) in w.iter().enumerate() {
+            t -= wi;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+}
+
+/// Zipf distribution over {0..n-1} with exponent `s` (token frequencies
+/// in the synthetic corpus follow this, mirroring natural language).
+pub struct Zipf {
+    cdf: Vec<f32>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc as f32);
+        }
+        let total = *cdf.last().unwrap();
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.f32();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_streams() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        let mut c = Pcg64::new(8);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg64::new(1);
+        let n = 20000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg64::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 50000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let g = r.gaussian() as f64;
+            s1 += g;
+            s2 += g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.05, "var {}", var);
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let z = Zipf::new(100, 1.1);
+        let mut r = Pcg64::new(4);
+        let mut counts = [0usize; 100];
+        for _ in 0..50000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[60]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Pcg64::new(9);
+        let mut f1 = base.fork(1);
+        let mut f2 = base.fork(1);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+}

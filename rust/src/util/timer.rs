@@ -1,0 +1,102 @@
+//! Micro-benchmark timing substrate (criterion is not in the vendored
+//! set). Warmup + fixed-iteration sampling with mean/p50/p99 stats; used
+//! by `rust/benches/*` and the §Perf profiling pass.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self, name: &str, work_per_iter: Option<(f64, &str)>) -> String {
+        let base = format!(
+            "{:<44} {:>10.3} ms/iter  p50 {:>9.3}  p99 {:>9.3}  ({} iters)",
+            name,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p99_ns / 1e6,
+            self.iters
+        );
+        match work_per_iter {
+            Some((units, label)) => {
+                let rate = units / (self.mean_ns / 1e9);
+                format!("{}  {:>12.1} {}/s", base, rate, label)
+            }
+            None => base,
+        }
+    }
+}
+
+/// Run `f` with warmup, then time `iters` iterations individually.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() as f64 - 1.0) * p) as usize];
+    BenchStats {
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.5),
+        p99_ns: pct(0.99),
+        min_ns: samples[0],
+    }
+}
+
+/// Scoped wall-clock timer for coarse phase profiling.
+pub struct Scope {
+    name: String,
+    start: Instant,
+}
+
+impl Scope {
+    pub fn new(name: &str) -> Self {
+        Scope { name: name.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        crate::util::logging::log(
+            2,
+            &format!("{}: {:.1} ms", self.name, self.elapsed_ms()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench(2, 50, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.mean_ns > 0.0);
+        assert_eq!(s.iters, 50);
+    }
+}

@@ -1,0 +1,155 @@
+//! Full-pipeline integration tests: pretrain (briefly) -> calibrate ->
+//! transform (SQ/GPTQ/RPTQ) -> evaluate, on the smallest model, against
+//! a throwaway checkpoint directory so the real cache is untouched.
+
+use intfpqsim::calib;
+use intfpqsim::methods::{gptq, rptq, smoothquant};
+use intfpqsim::model;
+use intfpqsim::quantsim::{Method, MetricKind, QuantConfig, Simulator};
+use intfpqsim::train::{self, TrainOpts};
+
+fn ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("artifacts not built; skipping");
+    }
+    ok
+}
+
+fn tmp_sim(tag: &str) -> Simulator {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_pipe_{}", tag));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut sim = Simulator::new("artifacts", dir.to_str().unwrap()).unwrap();
+    sim.opts.eval_batches = 2;
+    sim.opts.pass1_programs = 8;
+    sim.opts.qat_opts = TrainOpts { steps: 3, peak_lr: 1e-4, warmup: 1, ..Default::default() };
+    sim
+}
+
+#[test]
+fn training_reduces_loss_and_eval_runs() {
+    if !ready() {
+        return;
+    }
+    let sim = tmp_sim("train");
+    let cfg = sim.rt.manifest.model("sim-opt-125m").unwrap().clone();
+    let init = model::init_params(&cfg, 5);
+    let opts = TrainOpts { steps: 40, peak_lr: 3e-3, warmup: 5, log_every: 1000, ..Default::default() };
+    let res = train::run_training(&sim.rt, "sim-opt-125m/train_fp32", init, &opts).unwrap();
+    // smoothed loss must drop substantially from the uniform start
+    let head: f32 = res.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = res.losses[35..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head - 0.5,
+        "loss did not improve: head {} tail {}",
+        head,
+        tail
+    );
+    sim.ck.save("sim-opt-125m", "fp32", &res.params).unwrap();
+    let m = sim.evaluate("sim-opt-125m", &QuantConfig::fp32()).unwrap();
+    assert_eq!(m.kind, MetricKind::Ppl);
+    assert!(m.value > 1.0 && m.value < 520.0, "ppl {}", m.value);
+}
+
+#[test]
+fn calibrate_transform_evaluate_all_methods() {
+    if !ready() {
+        return;
+    }
+    let sim = tmp_sim("methods");
+    let cfg = sim.rt.manifest.model("sim-opt-125m").unwrap().clone();
+    // brief pretrain so the activations have structure
+    let init = model::init_params(&cfg, 6);
+    let opts = TrainOpts { steps: 15, log_every: 1000, ..Default::default() };
+    let res = train::run_training(&sim.rt, "sim-opt-125m/train_fp32", init, &opts).unwrap();
+    sim.ck.save("sim-opt-125m", "fp32", &res.params).unwrap();
+
+    // capture -> stats cover every site with the right dims
+    let stats = sim.calibration("sim-opt-125m").unwrap();
+    assert_eq!(stats.acts.len(), cfg.sites.len());
+    for site in &cfg.sites {
+        let t = &stats.acts[&site.name];
+        assert_eq!(t.shape[1], site.dim);
+        assert!(t.shape[0] >= 2048);
+        assert!(t.absmax() > 0.0);
+    }
+
+    // MSE alphas are positive and below absmax
+    let alphas = calib::mse_site_alphas(&stats, 4);
+    for (site, a) in &alphas {
+        assert!(*a > 0.0 && *a <= stats.absmax(site).unwrap() * 1.001, "{}", site);
+    }
+
+    // SmoothQuant transform keeps shapes and produces finite weights
+    let base = sim.weights("sim-opt-125m").unwrap();
+    let sm = smoothquant::apply(&cfg, &base, &stats).unwrap();
+    for p in &cfg.params {
+        let t = sm.params.get(&p.name).unwrap();
+        assert_eq!(t.shape, p.shape);
+        assert!(t.data.iter().all(|v| v.is_finite()), "{}", p.name);
+    }
+
+    // RPTQ per-site alpha vectors cover channel ranges
+    let rv = rptq::site_alpha_vals(&cfg, &stats).unwrap();
+    assert_eq!(rv.len(), cfg.sites.len());
+
+    // GPTQ on one site reduces layer MSE vs nearest rounding
+    let wname = "l0.wqkv";
+    let w = base.get(wname).unwrap().clone();
+    let x = stats.acts["l0.qkv"].clone();
+    let mut w_rtn = w.clone();
+    gptq::nearest_site(&mut w_rtn);
+    let mut w_g = w.clone();
+    gptq::gptq_site(&mut w_g, &x).unwrap();
+    let mse_rtn = gptq::layer_mse(&x, &w, &w_rtn);
+    let mse_g = gptq::layer_mse(&x, &w, &w_g);
+    assert!(mse_g <= mse_rtn * 1.01, "gptq {} vs rtn {}", mse_g, mse_rtn);
+
+    // every method end-to-end produces a finite PPL
+    for qc in [
+        QuantConfig::abfp("abfp_w4a4_n64"),
+        QuantConfig::abfp("mse_w4a4"),
+        QuantConfig::with("abfp_w4a4_n64", Method::SmoothQuant),
+        QuantConfig::with("fp32", Method::Gptq),
+        QuantConfig::with("rptq_w4a4", Method::Rptq),
+        QuantConfig::with("abfp_w4a4_n64", Method::Qat),
+    ] {
+        let m = sim.evaluate("sim-opt-125m", &qc).unwrap();
+        assert!(m.value.is_finite() && m.value > 1.0, "{:?} -> {}", qc, m.value);
+    }
+}
+
+#[test]
+fn non_lm_tasks_produce_metrics() {
+    if !ready() {
+        return;
+    }
+    let sim = tmp_sim("tasks");
+    for (model_name, lo, hi) in [
+        ("sim-vit-16", 0.0, 100.0),
+        ("sim-bert-base", 0.0, 100.0),
+        ("sim-codegen-2b", 0.0, 100.0),
+    ] {
+        let cfg = sim.rt.manifest.model(model_name).unwrap().clone();
+        let init = model::init_params(&cfg, 7);
+        let opts = TrainOpts { steps: 8, log_every: 1000, ..Default::default() };
+        let res = train::run_training(
+            &sim.rt,
+            &format!("{}/train_fp32", model_name),
+            init,
+            &opts,
+        )
+        .unwrap();
+        sim.ck.save(model_name, "fp32", &res.params).unwrap();
+        for q in ["fp32", "abfp_w4a8_n64"] {
+            let m = sim.evaluate(model_name, &QuantConfig::abfp(q)).unwrap();
+            assert!(
+                (lo..=hi).contains(&m.value),
+                "{} {} metric {}",
+                model_name,
+                q,
+                m.value
+            );
+        }
+    }
+}

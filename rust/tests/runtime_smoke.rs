@@ -1,0 +1,97 @@
+//! Integration: load a real AOT artifact, bind weights, execute, check
+//! the numbers make sense (random-init LM => NLL/token ~ ln(vocab)).
+
+use std::collections::BTreeMap;
+
+use intfpqsim::corpus::TextCorpus;
+use intfpqsim::model;
+use intfpqsim::runtime::{Runtime, Val};
+
+fn artifacts_dir() -> Option<String> {
+    let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(p).join("manifest.json").exists() {
+        Some(p.to_string())
+    } else {
+        eprintln!("artifacts not built; skipping");
+        None
+    }
+}
+
+#[test]
+fn eval_fp32_runs_and_matches_uniform_nll() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.model("sim-opt-125m").unwrap().clone();
+    let params = model::init_params(&cfg, 1);
+    let sticky = model::param_vals(&cfg, &params).unwrap();
+    let sess = rt.session("sim-opt-125m/eval_fp32", &sticky).unwrap();
+    assert_eq!(sess.free_inputs(), vec!["tokens"]);
+
+    let corpus = TextCorpus::new(99);
+    let batch = corpus.eval_batch(0, cfg.batch, cfg.seq);
+    let out = sess
+        .run(&[Val::I32(batch.tokens.clone(), vec![cfg.batch, cfg.seq])])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let nll = out[0].data[0] as f64;
+    let per_tok = nll / (cfg.batch * (cfg.seq - 1)) as f64;
+    let uniform = (cfg.vocab as f64).ln();
+    assert!(
+        (per_tok - uniform).abs() < 0.7,
+        "per-token NLL {} vs uniform {}",
+        per_tok,
+        uniform
+    );
+}
+
+#[test]
+fn quantized_artifact_close_to_fp32_with_int8() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.model("sim-opt-125m").unwrap().clone();
+    let params = model::init_params(&cfg, 2);
+    let mut sticky = model::param_vals(&cfg, &params).unwrap();
+    // smoothing = identity
+    for s in &cfg.sites {
+        sticky.insert(
+            format!("smooth.{}", s.name),
+            Val::F32(vec![1.0; s.dim], vec![s.dim]),
+        );
+    }
+    let corpus = TextCorpus::new(99);
+    let batch = corpus.eval_batch(1, cfg.batch, cfg.seq);
+    let toks = Val::I32(batch.tokens.clone(), vec![cfg.batch, cfg.seq]);
+
+    let base_sticky: BTreeMap<String, Val> = model::param_vals(&cfg, &params).unwrap();
+    let fp = rt
+        .session("sim-opt-125m/eval_fp32", &base_sticky)
+        .unwrap()
+        .run(&[toks.clone()])
+        .unwrap()[0]
+        .data[0];
+    let q = rt
+        .session("sim-opt-125m/eval_abfp_w4a8_n64", &sticky)
+        .unwrap()
+        .run(&[toks])
+        .unwrap()[0]
+        .data[0];
+    let rel = ((q - fp) / fp).abs();
+    assert!(rel < 0.3, "w4a8 nll {} vs fp32 {} (rel {})", q, fp, rel);
+    assert!(q != fp, "quantized artifact must differ from fp32");
+}
+
+#[test]
+fn session_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.model("sim-opt-125m").unwrap().clone();
+    let params = model::init_params(&cfg, 3);
+    let sticky = model::param_vals(&cfg, &params).unwrap();
+    let sess = rt.session("sim-opt-125m/eval_fp32", &sticky).unwrap();
+    // wrong token shape
+    assert!(sess.run(&[Val::I32(vec![0; 8], vec![2, 4])]).is_err());
+    // wrong dtype
+    assert!(sess
+        .run(&[Val::F32(vec![0.0; cfg.batch * cfg.seq], vec![cfg.batch, cfg.seq])])
+        .is_err());
+}
