@@ -99,6 +99,8 @@ fn main() -> Result<()> {
         let m = sim.evaluate(&model_name, &qc)?;
         println!("{:<26} {:>10.2}", label, m.value);
     }
-    println!("\nAll layers composed: Pallas kernels -> HLO artifacts -> PJRT runtime -> Rust coordinator.");
+    println!(
+        "\nAll layers composed: Pallas kernels -> HLO artifacts -> PJRT runtime -> Rust coordinator."
+    );
     Ok(())
 }

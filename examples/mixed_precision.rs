@@ -57,7 +57,7 @@ fn main() -> Result<()> {
     for (label, quant, wu, wb, two_level) in rows {
         let m = sim.evaluate(&model, &QuantConfig::abfp(quant))?;
         let wbits = weight_bits(wu, wb, cfg.layers);
-        let k = 4 * cfg.d as usize; // widest reduction axis (fc2)
+        let k = 4 * cfg.d; // widest reduction axis (fc2)
         let sbits =
             scale_overhead_bits(k, 64, if two_level { Some(8) } else { None });
         println!(

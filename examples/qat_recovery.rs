@@ -14,7 +14,10 @@ fn main() -> Result<()> {
 
     let fp32 = sim.evaluate(&model, &QuantConfig::fp32())?;
     println!("\n{}  (FP32 PPL = {:.2})", model, fp32.value);
-    println!("{:<14} {:>12} {:>12} {:>12} {:>12}", "acts", "ABFP", "ABFP-QAT", "ABFP-SQ", "GPTQ W4A16");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "acts", "ABFP", "ABFP-QAT", "ABFP-SQ", "GPTQ W4A16"
+    );
 
     for acts in ["w4a4", "w4a8"] {
         let base = format!("abfp_{}_n64", acts);

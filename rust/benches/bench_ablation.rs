@@ -14,15 +14,16 @@ fn heavy(rng: &mut Pcg64, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
     let mut rng = Pcg64::new(7);
-    let (rows, k) = (512usize, 2048usize);
+    let (rows, k) = if fast { (128usize, 1024usize) } else { (512usize, 2048usize) };
     let x = heavy(&mut rng, rows * k);
     let elems = (rows * k) as f64;
 
     println!("== one-level vs two-level ABFP ({}x{} f32) ==", rows, k);
     for (name, two) in [("abfp  int4 n64", false), ("abfp2 int4 n64", true)] {
         let mut buf = x.clone();
-        let s = bench(3, 20, || {
+        let s = bench(if fast { 0 } else { 3 }, if fast { 2 } else { 20 }, || {
             buf.copy_from_slice(&x);
             if two {
                 formats::abfp2_qdq(&mut buf, k, Format::Int(formats::INT4), 64, 8);
@@ -37,7 +38,7 @@ fn main() {
     println!("\n== scale-code bit-width sweep (abfp2 int4 n64) ==");
     for sb in [2u32, 4, 8, 12] {
         let mut buf = x.clone();
-        let s = bench(2, 10, || {
+        let s = bench(if fast { 0 } else { 2 }, if fast { 1 } else { 10 }, || {
             buf.copy_from_slice(&x);
             formats::abfp2_qdq(&mut buf, k, Format::Int(formats::INT4), 64, sb);
             std::hint::black_box(&buf);
@@ -62,7 +63,7 @@ fn main() {
     println!("\n== output-quantizer overhead on a layer mirror ==");
     // y = QDQ_w(W) @ QDQ_a(X)^T is the runtime's fake-quant layer; f_q^y
     // adds one more ABFP pass over the (rows, dout) output.
-    let dout = 512usize;
+    let dout = if fast { 128usize } else { 512usize };
     let w = heavy(&mut rng, dout * k);
     let mut y = vec![0.0f32; rows * dout];
     let matmul = |xq: &[f32], wq: &[f32], y: &mut [f32]| {

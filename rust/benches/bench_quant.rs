@@ -1,12 +1,23 @@
 //! L1-mirror micro-benchmarks: the host-side quantizer arithmetic that
-//! the PTQ methods and the calibrator run in their inner loops, plus the
-//! GPTQ per-site transform. Part of the §Perf pass (EXPERIMENTS.md).
+//! the PTQ methods and the calibrator run in their inner loops, the GPTQ
+//! per-site transform, and the tensor execution backends (scalar vs
+//! blocked vs threaded) on the matmul/gram hot paths. Part of the §Perf
+//! pass (EXPERIMENTS.md).
 //!
-//!   cargo bench --bench bench_quant
+//!   cargo bench --bench bench_quant             # full
+//!   cargo bench --bench bench_quant -- --fast   # CI smoke (one pass)
+//!
+//! Always writes a `BENCH_tensor.json` artifact with the backend
+//! comparison (per-op mean ms + speedup vs scalar) to the working
+//! directory.
+
+use std::sync::Arc;
 
 use intfpqsim::formats::{self, Format};
 use intfpqsim::methods::gptq;
+use intfpqsim::tensor::backend::{self, Backend, Blocked, Scalar, Threaded};
 use intfpqsim::tensor::Tensor;
+use intfpqsim::util::json::Json;
 use intfpqsim::util::rng::Pcg64;
 use intfpqsim::util::timer::bench;
 
@@ -15,10 +26,12 @@ fn heavy(rng: &mut Pcg64, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
     let mut rng = Pcg64::new(42);
     let (rows, k) = (512, 2048);
     let x = heavy(&mut rng, rows * k);
     let elems = (rows * k) as f64;
+    let (qwarm, qiters) = if fast { (1, 3) } else { (3, 20) };
 
     println!("== quantizer mirrors ({}x{} f32) ==", rows, k);
     for (name, fmt) in [
@@ -28,7 +41,7 @@ fn main() {
         ("abfp e4m3 n64", Format::Fp(formats::E4M3)),
     ] {
         let mut buf = x.clone();
-        let s = bench(3, 20, || {
+        let s = bench(qwarm, qiters, || {
             buf.copy_from_slice(&x);
             formats::abfp_qdq(&mut buf, k, fmt, 64);
             std::hint::black_box(&buf);
@@ -37,7 +50,7 @@ fn main() {
     }
     for n in [64usize, 128] {
         let mut buf = x.clone();
-        let s = bench(3, 20, || {
+        let s = bench(qwarm, qiters, || {
             buf.copy_from_slice(&x);
             formats::abfp_qdq(&mut buf, k, Format::Int(formats::INT4), n);
             std::hint::black_box(&buf);
@@ -46,7 +59,7 @@ fn main() {
     }
     {
         let mut buf = x.clone();
-        let s = bench(3, 20, || {
+        let s = bench(qwarm, qiters, || {
             buf.copy_from_slice(&x);
             formats::static_int_qdq(&mut buf, &[2.5], 4);
             std::hint::black_box(&buf);
@@ -55,7 +68,7 @@ fn main() {
     }
     {
         let probe = heavy(&mut rng, rows * k);
-        let s = bench(3, 20, || {
+        let s = bench(qwarm, qiters, || {
             let acc: f64 = intfpqsim::formats::quant_mse(&probe[..32768], 2.5, 4);
             std::hint::black_box(acc);
         });
@@ -65,21 +78,109 @@ fn main() {
     println!("\n== MSE calibration search ==");
     {
         let probe = heavy(&mut rng, 131072);
-        let s = bench(1, 5, || {
+        let s = bench(if fast { 0 } else { 1 }, if fast { 2 } else { 5 }, || {
             std::hint::black_box(intfpqsim::calib::mse_alpha(&probe, 4));
         });
         println!("{}", s.report("mse_alpha (131k elems, 48 pts)", None));
     }
 
     println!("\n== GPTQ site transform ==");
-    for (dout, din, rows2) in [(256usize, 256usize, 1024usize), (512, 2048, 2048)] {
+    let gptq_shapes: &[(usize, usize, usize)] = if fast {
+        &[(256, 256, 1024)]
+    } else {
+        &[(256, 256, 1024), (512, 2048, 2048)]
+    };
+    for &(dout, din, rows2) in gptq_shapes {
         let xx = Tensor::new(vec![rows2, din], heavy(&mut rng, rows2 * din));
         let w0 = Tensor::new(vec![dout, din], heavy(&mut rng, dout * din));
-        let s = bench(0, 3, || {
+        let s = bench(0, if fast { 1 } else { 3 }, || {
             let mut w = w0.clone();
             gptq::gptq_site(&mut w, &xx).unwrap();
             std::hint::black_box(&w);
         });
         println!("{}", s.report(&format!("gptq {}x{} ({} rows)", dout, din, rows2), None));
+    }
+
+    // ---- tensor backend comparison (the subsystem this file gates) ----
+    let size = if fast { 256 } else { 1024 };
+    let threads = backend::env_threads();
+    println!(
+        "\n== tensor backends ({s}x{s} matmul / {s}x{s} gram, {t} threads) ==",
+        s = size,
+        t = threads
+    );
+    let a = Tensor::new(vec![size, size], heavy(&mut rng, size * size));
+    let b = Tensor::new(vec![size, size], heavy(&mut rng, size * size));
+    let backends: Vec<Arc<dyn Backend>> = vec![
+        Arc::new(Scalar),
+        Arc::new(Blocked),
+        Arc::new(Threaded::new(threads)),
+    ];
+    let (bwarm, biters) = if fast { (0, 1) } else { (1, 3) };
+    // (op, backend, mean_ms)
+    let mut results: Vec<(&str, String, f64)> = Vec::new();
+    for be in &backends {
+        let s = bench(bwarm, biters, || {
+            std::hint::black_box(be.matmul(&a, &b));
+        });
+        println!("{}", s.report(&format!("matmul {}", be.describe()), None));
+        results.push(("matmul", be.describe(), s.mean_ms()));
+    }
+    for be in &backends {
+        let s = bench(bwarm, biters, || {
+            std::hint::black_box(be.gram(&a));
+        });
+        println!("{}", s.report(&format!("gram {}", be.describe()), None));
+        results.push(("gram", be.describe(), s.mean_ms()));
+    }
+    let mut speedups = Vec::new();
+    for op in ["matmul", "gram"] {
+        let base = results.iter().find(|r| r.0 == op && r.1 == "scalar").unwrap().2;
+        for r in results.iter().filter(|r| r.0 == op && r.1 != "scalar") {
+            let sp = base / r.2.max(1e-9);
+            println!("  {} {:<14} {:>6.2}x vs scalar", op, r.1, sp);
+            speedups.push((op, r.1.clone(), sp));
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("tensor_backends".to_string())),
+        ("size", Json::Num(size as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("fast", Json::Bool(fast)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|(op, be, ms)| {
+                        Json::obj(vec![
+                            ("op", Json::Str((*op).to_string())),
+                            ("backend", Json::Str(be.clone())),
+                            ("mean_ms", Json::Num(*ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup_vs_scalar",
+            Json::Arr(
+                speedups
+                    .iter()
+                    .map(|(op, be, sp)| {
+                        Json::obj(vec![
+                            ("op", Json::Str((*op).to_string())),
+                            ("backend", Json::Str(be.clone())),
+                            ("speedup", Json::Num(*sp)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_tensor.json", json.pretty()) {
+        Ok(()) => println!("\nwrote BENCH_tensor.json"),
+        Err(e) => eprintln!("could not write BENCH_tensor.json: {}", e),
     }
 }

@@ -103,11 +103,19 @@ pub fn mse_alpha(x: &[f32], bits: u32) -> f32 {
 }
 
 /// Static per-site MSE clip ranges for every quantized site.
+///
+/// Sites are independent, so the per-site grid searches fan out across
+/// the active tensor backend's workers; results are keyed by site name
+/// and each search is single-threaded internally, so the output is
+/// identical for every backend.
 pub fn mse_site_alphas(stats: &CalibStats, bits: u32) -> BTreeMap<String, f32> {
-    stats
-        .acts
+    let sites: Vec<(&String, &Tensor)> = stats.acts.iter().collect();
+    let alphas = crate::tensor::backend::active()
+        .par_map_f64(sites.len(), &|i| mse_alpha(&sites[i].1.data, bits) as f64);
+    sites
         .iter()
-        .map(|(site, t)| (site.clone(), mse_alpha(&t.data, bits)))
+        .zip(alphas)
+        .map(|((site, _), a)| ((*site).clone(), a as f32))
         .collect()
 }
 

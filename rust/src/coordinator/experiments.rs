@@ -288,7 +288,7 @@ fn abl_scales(sim: &Simulator) -> Result<Report> {
     )?;
     // Scale storage per payload element (d_ff rows are the widest case).
     for m in ABL_MODELS {
-        let k = 4 * sim.rt.manifest.model(m)?.d as usize;
+        let k = 4 * sim.rt.manifest.model(m)?.d;
         rep.meta.insert(
             format!("scale_bits_per_elt.{}", m),
             format!(

@@ -9,6 +9,16 @@
 //! * L3 (this crate): the simulator product — runtime, calibration, PTQ
 //!   methods (SmoothQuant/GPTQ/RPTQ), training drivers, experiment
 //!   coordinator reproducing every table/figure of the paper.
+//!
+//! Host-side tensor math (Hessian builds, weight transforms, metrics)
+//! executes on a pluggable backend — scalar / cache-blocked /
+//! multi-threaded, see [`tensor::backend`] — selected at runtime via
+//! `--backend`/`--threads` or `INTFPQSIM_BACKEND`/`INTFPQSIM_THREADS`;
+//! the same seam is where future SIMD/PJRT-offload backends plug in.
+
+// The codebase predates clippy's impl-header lifetime elision lint;
+// keeping explicit `impl<'a> T<'a>` headers is a deliberate style.
+#![allow(clippy::needless_lifetimes)]
 
 pub mod util;
 pub mod tensor;

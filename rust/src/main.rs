@@ -10,7 +10,8 @@
 //!   repro report                      concatenate saved reports
 //!
 //! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
-//! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose.
+//! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose,
+//! --backend scalar|blocked|threaded|auto, --threads N (0 = all cores).
 
 use anyhow::{bail, Context, Result};
 
@@ -28,7 +29,8 @@ const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|r
   repro eval --model sim-opt-125m --quant abfp_w4a4_n64 [--method none|sq|gptq|rptq|qat]
   repro calibrate --model sim-opt-125m
   repro experiment --id table1 | --all  [--fast] [--force]
-  repro report";
+  repro report
+global: [--backend scalar|blocked|threaded|auto] [--threads N]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -75,11 +77,25 @@ fn run(argv: &[String]) -> Result<()> {
     if a.flag("verbose") {
         logging::set_level(2);
     }
+    // Tensor execution backend for every host-side transform this
+    // invocation runs (GPTQ Hessians, SmoothQuant, calibration). Only
+    // explicit flags override; otherwise the INTFPQSIM_BACKEND /
+    // INTFPQSIM_THREADS environment selection stays in effect.
+    if a.options.contains_key("backend") || a.options.contains_key("threads") {
+        intfpqsim::tensor::backend::configure(
+            a.get("backend", "auto"),
+            a.get_usize("threads", 0),
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+    }
     match a.command.as_str() {
         "list" => {
             if a.flag("models") {
                 let sim = make_sim(&a)?;
-                println!("{:<16} {:<12} {:<10} {:>9} {:>4} {:>5}", "model", "stands for", "task", "params", "L", "d");
+                println!(
+                    "{:<16} {:<12} {:<10} {:>9} {:>4} {:>5}",
+                    "model", "stands for", "task", "params", "L", "d"
+                );
                 for (name, cfg) in &sim.rt.manifest.models {
                     println!(
                         "{:<16} {:<12} {:<10} {:>9} {:>4} {:>5}",
@@ -144,7 +160,10 @@ fn run(argv: &[String]) -> Result<()> {
             let model = a.get("model", "");
             anyhow::ensure!(!model.is_empty(), "--model required");
             let stats = sim.calibration(model)?;
-            println!("{:<16} {:>10} {:>12} {:>12} {:>12}", "site", "rows", "absmax", "mse_a4", "mse_a8");
+            println!(
+                "{:<16} {:>10} {:>12} {:>12} {:>12}",
+                "site", "rows", "absmax", "mse_a4", "mse_a8"
+            );
             for (site, t) in &stats.acts {
                 let a4 = intfpqsim::calib::mse_alpha(&t.data, 4);
                 let a8 = intfpqsim::calib::mse_alpha(&t.data, 8);

@@ -81,7 +81,10 @@ fn chol_inv_upper(h: &Tensor) -> Result<Tensor> {
 pub fn gptq_site(w: &mut Tensor, x: &Tensor) -> Result<()> {
     let (dout, din) = w.dims2();
     anyhow::ensure!(x.shape[1] == din, "X cols {} != W din {}", x.shape[1], din);
-    let mut h = x.gram(); // X^T X
+    // One backend handle for the whole site: the Gram/Hessian build and
+    // the rank-B tail updates below are the transform's hot paths.
+    let be = crate::tensor::backend::active();
+    let mut h = be.gram(x); // X^T X
     for v in h.data.iter_mut() {
         *v *= 2.0;
     }
@@ -145,12 +148,10 @@ pub fn gptq_site(w: &mut Tensor, x: &Tensor) -> Result<()> {
                     if e == 0.0 {
                         continue;
                     }
+                    // w[r, k0..kend] -= e * U[j, k0..kend]: IEEE-identical
+                    // to the fused loop (x - e*u == x + (-e)*u exactly).
                     let urow = u.row(j0 + bj);
-                    for (wv, uv) in
-                        wrow[k0..kend].iter_mut().zip(&urow[k0..kend])
-                    {
-                        *wv -= e * uv;
-                    }
+                    be.axpy(-e, &urow[k0..kend], &mut wrow[k0..kend]);
                 }
             }
             k0 = kend;

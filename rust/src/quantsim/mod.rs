@@ -144,6 +144,13 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(artifacts: &str, checkpoints: &str) -> Result<Simulator> {
+        // Every host-side transform below (Hessian builds, SmoothQuant
+        // products, calibration searches) runs on this backend; selection
+        // comes from `--backend`/`--threads` or INTFPQSIM_BACKEND.
+        crate::debug!(
+            "tensor backend: {}",
+            crate::tensor::backend::active().describe()
+        );
         Ok(Simulator {
             rt: Runtime::new(artifacts)?,
             ck: CkptDir::new(checkpoints),

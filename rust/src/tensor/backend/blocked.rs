@@ -1,0 +1,102 @@
+//! Cache-tiled backend: identical arithmetic to `scalar`, reordered for
+//! locality.
+//!
+//! Tiling only regroups *which output elements* are visited when; for any
+//! single output element the sequence of fused `+= a*b` updates still
+//! runs in ascending reduction order, so results are bit-identical to the
+//! scalar reference (asserted by the parity property tests).
+
+use super::scalar::{self, GRAM_RB};
+use super::Backend;
+use crate::tensor::Tensor;
+
+/// Column-tile width of the C/B panels (f32 elements).
+const JB: usize = 256;
+/// Depth-tile height: a PB x JB panel of B is 128 KiB, L2-resident.
+const PB: usize = 128;
+
+pub struct Blocked;
+
+impl Backend for Blocked {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        // jt outer, pt middle, i inner: the (PB, JB) panel of B stays hot
+        // across all M rows; per (i, j) the p-reduction stays ascending.
+        let mut j0 = 0;
+        while j0 < n {
+            let jend = (j0 + JB).min(n);
+            let mut p0 = 0;
+            while p0 < k {
+                let pend = (p0 + PB).min(k);
+                for i in 0..m {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut out[i * n + j0..i * n + jend];
+                    for (p, &av) in arow[p0..pend].iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[(p0 + p) * n + j0..(p0 + p) * n + jend];
+                        for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *c += av * bv;
+                        }
+                    }
+                }
+                p0 = pend;
+            }
+            j0 = jend;
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn gram(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let mut out = vec![0.0f32; k * k];
+        // Column tiles over the (k, k) output; within a tile the same
+        // GRAM_RB row-blocked sweep as the scalar kernel, so per (i, j)
+        // the r-order is unchanged.
+        let mut j0 = 0;
+        while j0 < k {
+            let jend = (j0 + JB).min(k);
+            let mut r0 = 0;
+            while r0 < m {
+                let rend = (r0 + GRAM_RB).min(m);
+                for i in 0..k {
+                    let orow = &mut out[i * k + j0..i * k + jend];
+                    for r in r0..rend {
+                        let row = &x.data[r * k..(r + 1) * k];
+                        let xi = row[i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        for (o, &xj) in orow.iter_mut().zip(row[j0..jend].iter()) {
+                            *o += xi * xj;
+                        }
+                    }
+                }
+                r0 = rend;
+            }
+            j0 = jend;
+        }
+        Tensor::new(vec![k, k], out)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        scalar::axpy_range(alpha, x, y);
+    }
+
+    fn sum_sq(&self, x: &[f32]) -> f64 {
+        scalar::sum_sq_range(x)
+    }
+
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64> {
+        (0..n).map(f).collect()
+    }
+}

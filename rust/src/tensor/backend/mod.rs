@@ -1,0 +1,296 @@
+//! Pluggable execution backends for the tensor hot paths.
+//!
+//! Every Hessian build (GPTQ), calibration pass and eval sweep funnels
+//! through `matmul`/`gram`; this module makes those paths swappable and
+//! parallel. Three implementations ship today:
+//!
+//! * [`Scalar`] — the original single-threaded loops, the bit-exact
+//!   reference;
+//! * [`Blocked`] — cache-tiled, bit-identical to scalar (tiling only
+//!   reorders which *elements* are visited, never the per-element
+//!   reduction order);
+//! * [`Threaded`] — output-row-partitioned scoped threads. `matmul` and
+//!   `gram` are bit-identical to scalar (each element is produced by one
+//!   thread running the scalar kernel); `sum_sq` combines fixed-chunk
+//!   partials in ascending order — deterministic, documented tolerance
+//!   <= 1e-5 relative.
+//!
+//! Selection is a process-wide handle, configurable at runtime:
+//!
+//! * env: `INTFPQSIM_BACKEND=scalar|blocked|threaded|auto`,
+//!   `INTFPQSIM_THREADS=N` (0 = all cores);
+//! * CLI: `repro ... --backend threaded --threads 8`;
+//! * API: [`configure`] / [`set_active`] (benches compare backends by
+//!   installing each in turn).
+//!
+//! The trait is the seam for future SIMD/PJRT-offload backends named in
+//! `lib.rs`.
+
+mod blocked;
+mod scalar;
+mod threaded;
+
+pub use blocked::Blocked;
+pub use scalar::Scalar;
+pub use threaded::Threaded;
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::tensor::Tensor;
+
+/// A tensor-math execution strategy. All implementations must be
+/// deterministic for a fixed configuration; `matmul`/`gram`/`axpy` must
+/// match the scalar reference bit-for-bit, reductions within 1e-5
+/// relative.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Worker count this backend uses (1 for serial backends).
+    fn threads(&self) -> usize {
+        1
+    }
+
+    /// C = A @ B for 2-D tensors (M, K) x (K, N).
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    /// A^T @ A — the Gram/Hessian accumulator used by GPTQ.
+    fn gram(&self, x: &Tensor) -> Tensor;
+
+    /// y += alpha * x (equal lengths).
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]);
+
+    /// Sum of squared elements, accumulated in f64.
+    fn sum_sq(&self, x: &[f32]) -> f64;
+
+    /// Evaluate `f(0..n)` across the backend's workers, results in index
+    /// order (used to fan independent per-site calibration jobs out).
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64>;
+
+    /// `"name"` or `"name(x T)"` for display.
+    fn describe(&self) -> String {
+        if self.threads() > 1 {
+            format!("{}(x{})", self.name(), self.threads())
+        } else {
+            self.name().to_string()
+        }
+    }
+}
+
+/// Number of workers `--threads 0` / `threads=0` resolves to.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Thread count resolved from `INTFPQSIM_THREADS` (absent, unparsable
+/// or 0 mean "all cores"). Single source for the env parsing, shared by
+/// the process-wide initialization and the benches.
+pub fn env_threads() -> usize {
+    let raw: usize = std::env::var("INTFPQSIM_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    if raw == 0 {
+        default_threads()
+    } else {
+        raw
+    }
+}
+
+/// Build a backend from a name + thread count (0 = all cores).
+pub fn select(name: &str, threads: usize) -> Result<Arc<dyn Backend>, String> {
+    let t = if threads == 0 { default_threads() } else { threads };
+    match name {
+        "scalar" => Ok(Arc::new(Scalar)),
+        "blocked" => Ok(Arc::new(Blocked)),
+        "threaded" => Ok(Arc::new(Threaded::new(t))),
+        "auto" | "" => Ok(if t > 1 {
+            Arc::new(Threaded::new(t)) as Arc<dyn Backend>
+        } else {
+            Arc::new(Blocked)
+        }),
+        other => Err(format!(
+            "unknown backend {:?} (expected scalar|blocked|threaded|auto)",
+            other
+        )),
+    }
+}
+
+fn registry() -> &'static RwLock<Arc<dyn Backend>> {
+    static ACTIVE: OnceLock<RwLock<Arc<dyn Backend>>> = OnceLock::new();
+    ACTIVE.get_or_init(|| RwLock::new(from_env()))
+}
+
+fn from_env() -> Arc<dyn Backend> {
+    let name = std::env::var("INTFPQSIM_BACKEND").unwrap_or_else(|_| "auto".to_string());
+    select(&name, env_threads()).unwrap_or_else(|e| {
+        crate::util::logging::log(1, &format!("{}; falling back to scalar", e));
+        Arc::new(Scalar)
+    })
+}
+
+/// The process-wide backend every `Tensor::matmul`/`gram` call routes
+/// through. First use initializes from the environment.
+pub fn active() -> Arc<dyn Backend> {
+    registry().read().unwrap().clone()
+}
+
+/// Install a backend instance as the process-wide handle.
+pub fn set_active(backend: Arc<dyn Backend>) {
+    *registry().write().unwrap() = backend;
+}
+
+/// Parse-and-install, as the CLI flags do: `configure("threaded", 8)`.
+pub fn configure(name: &str, threads: usize) -> Result<(), String> {
+    set_active(select(name, threads)?);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rand_tensor(rng: &mut crate::util::rng::Pcg64, m: usize, k: usize) -> Tensor {
+        Tensor::new(vec![m, k], prop::heavy_vec(rng, m * k, 1.0))
+    }
+
+    fn alt_backends() -> Vec<Arc<dyn Backend>> {
+        vec![
+            Arc::new(Blocked),
+            Arc::new(Threaded::new(1)),
+            Arc::new(Threaded::new(3)),
+            Arc::new(Threaded::new(8)),
+        ]
+    }
+
+    #[test]
+    fn matmul_parity_exact_property() {
+        // blocked must be bit-exact; threaded's row partition is too
+        // (each output element is one thread's scalar-kernel work), which
+        // is stronger than its documented <= 1e-5 contract.
+        prop::check("backend_matmul_parity", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let a = rand_tensor(rng, m, k);
+            let b = rand_tensor(rng, k, n);
+            let want = Scalar.matmul(&a, &b);
+            for be in alt_backends() {
+                let got = be.matmul(&a, &b);
+                prop_eq_bits(&got, &want, be.describe(), "matmul")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_parity_exact_property() {
+        prop::check("backend_gram_parity", 15, |rng| {
+            let (m, k) = (1 + rng.below(40), 1 + rng.below(40));
+            let x = rand_tensor(rng, m, k);
+            let want = Scalar.gram(&x);
+            for be in alt_backends() {
+                let got = be.gram(&x);
+                prop_eq_bits(&got, &want, be.describe(), "gram")?;
+            }
+            Ok(())
+        });
+    }
+
+    fn prop_eq_bits(
+        got: &Tensor,
+        want: &Tensor,
+        who: String,
+        what: &str,
+    ) -> Result<(), String> {
+        crate::prop_assert!(got.shape == want.shape, "{} {} shape", who, what);
+        for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+            crate::prop_assert!(
+                g.to_bits() == w.to_bits(),
+                "{} {} idx {}: {} vs scalar {}",
+                who,
+                what,
+                i,
+                g,
+                w
+            );
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn parity_on_large_shapes_forces_parallel_paths() {
+        // Big enough that every thread of an 8-way split owns rows and
+        // axpy/sum_sq cross their parallel thresholds.
+        let mut rng = crate::util::rng::Pcg64::new(17);
+        let a = rand_tensor(&mut rng, 96, 80);
+        let b = rand_tensor(&mut rng, 80, 64);
+        let x = rand_tensor(&mut rng, 70, 130);
+        let v = prop::heavy_vec(&mut rng, (1 << 15) + 777, 1.0);
+        let want_mm = Scalar.matmul(&a, &b);
+        let want_g = Scalar.gram(&x);
+        let want_sq = Scalar.sum_sq(&v);
+        for be in alt_backends() {
+            assert_eq!(be.matmul(&a, &b), want_mm, "{} matmul", be.describe());
+            assert_eq!(be.gram(&x), want_g, "{} gram", be.describe());
+            let got = be.sum_sq(&v);
+            let rel = (got - want_sq).abs() / want_sq.abs().max(1e-12);
+            assert!(rel <= 1e-5, "{} sum_sq rel err {}", be.describe(), rel);
+        }
+    }
+
+    #[test]
+    fn axpy_parity_across_backends() {
+        let mut rng = crate::util::rng::Pcg64::new(23);
+        let x = prop::heavy_vec(&mut rng, (1 << 15) + 131, 1.0);
+        let y0 = prop::heavy_vec(&mut rng, x.len(), 1.0);
+        let mut want = y0.clone();
+        Scalar.axpy(-0.75, &x, &mut want);
+        for be in alt_backends() {
+            let mut got = y0.clone();
+            be.axpy(-0.75, &x, &mut got);
+            assert_eq!(got, want, "{} axpy", be.describe());
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        for be in alt_backends() {
+            let got = be.par_map_f64(23, &|i| (i * i) as f64);
+            let want: Vec<f64> = (0..23).map(|i| (i * i) as f64).collect();
+            assert_eq!(got, want, "{}", be.describe());
+        }
+        assert!(Scalar.par_map_f64(0, &|_| 1.0).is_empty());
+    }
+
+    #[test]
+    fn selection_and_configuration() {
+        assert_eq!(select("scalar", 0).unwrap().name(), "scalar");
+        assert_eq!(select("blocked", 2).unwrap().name(), "blocked");
+        let t = select("threaded", 5).unwrap();
+        assert_eq!(t.name(), "threaded");
+        assert_eq!(t.threads(), 5);
+        assert_eq!(t.describe(), "threaded(x5)");
+        assert!(select("gpu", 1).is_err());
+        // auto resolves to a real backend for any thread count
+        assert!(["blocked", "threaded"].contains(&select("auto", 1).unwrap().name()));
+        assert_eq!(select("auto", 4).unwrap().threads(), 4);
+
+        // install + restore the process-wide handle
+        let before = active().describe();
+        configure("threaded", 2).unwrap();
+        assert_eq!(active().describe(), "threaded(x2)");
+        assert!(configure("nope", 1).is_err());
+        assert_eq!(active().describe(), "threaded(x2)", "failed configure must not switch");
+        configure(&before_name(&before), thread_of(&before)).unwrap();
+    }
+
+    fn before_name(desc: &str) -> String {
+        desc.split('(').next().unwrap().to_string()
+    }
+
+    fn thread_of(desc: &str) -> usize {
+        desc.split("(x")
+            .nth(1)
+            .and_then(|s| s.trim_end_matches(')').parse().ok())
+            .unwrap_or(1)
+    }
+}

@@ -1,0 +1,110 @@
+//! Scalar reference backend: the original single-threaded loops, kept as
+//! the bit-exact baseline every other backend is verified against.
+//!
+//! The row-range kernels below are shared by the `blocked` and `threaded`
+//! backends — each output element is always produced by the *same*
+//! instruction sequence in the same order, which is what makes the
+//! cross-backend parity tests exact rather than approximate.
+
+use super::Backend;
+use crate::tensor::Tensor;
+
+/// Row-block size of the gram accumulator (§Perf L3 iteration 4): each
+/// output row is loaded once per `GRAM_RB` rank-1 updates.
+pub(crate) const GRAM_RB: usize = 8;
+
+/// C rows = A rows @ B for a contiguous block of output rows.
+/// `a` holds `rows * k` elements, `out` holds `rows * n`; `b` is (K, N).
+/// ikj loop order: streams B rows, accumulates into C rows.
+pub(crate) fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Output rows [i0, i0 + out_rows.len()/k) of A^T A for `x` of shape
+/// (m, k). Per (i, j) element the accumulation runs in ascending-r order
+/// (grouped in `GRAM_RB` row blocks), identical for every row partition.
+pub(crate) fn gram_rows(x: &[f32], m: usize, k: usize, i0: usize, out_rows: &mut [f32]) {
+    let ni = if k == 0 { 0 } else { out_rows.len() / k };
+    let mut r0 = 0;
+    while r0 < m {
+        let rend = (r0 + GRAM_RB).min(m);
+        for ii in 0..ni {
+            let i = i0 + ii;
+            let orow = &mut out_rows[ii * k..(ii + 1) * k];
+            for r in r0..rend {
+                let row = &x[r * k..(r + 1) * k];
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for (o, &xj) in orow.iter_mut().zip(row.iter()) {
+                    *o += xi * xj;
+                }
+            }
+        }
+        r0 = rend;
+    }
+}
+
+/// y += alpha * x over a contiguous range.
+pub(crate) fn axpy_range(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Left-to-right f64 sum of squares.
+pub(crate) fn sum_sq_range(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// The original single-threaded implementation.
+pub struct Scalar;
+
+impl Backend for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        matmul_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn gram(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let mut out = vec![0.0f32; k * k];
+        gram_rows(&x.data, m, k, 0, &mut out);
+        Tensor::new(vec![k, k], out)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        axpy_range(alpha, x, y);
+    }
+
+    fn sum_sq(&self, x: &[f32]) -> f64 {
+        sum_sq_range(x)
+    }
+
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64> {
+        (0..n).map(f).collect()
+    }
+}

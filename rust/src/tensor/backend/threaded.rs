@@ -1,0 +1,134 @@
+//! Row-partitioned multi-threaded backend (std scoped threads only).
+//!
+//! Determinism contract: `matmul` and `gram` partition *output rows*
+//! across threads and each output element is produced entirely by one
+//! thread running the shared scalar kernel — the reduction order per
+//! element is identical to the scalar backend, so results are
+//! bit-identical (stronger than the documented <= 1e-5 guarantee, and
+//! asserted exactly by the parity tests). `sum_sq` reduces fixed-size
+//! chunk partials in ascending chunk order — deterministic for a given
+//! thread count, but a different f64 association than the scalar
+//! left-fold, hence the documented 1e-5 relative tolerance.
+
+use super::scalar;
+use super::Backend;
+use crate::tensor::Tensor;
+
+/// Below this many elements, reductions/axpy stay single-threaded (the
+/// result is then bit-identical to scalar as well).
+const PAR_MIN_LEN: usize = 1 << 15;
+
+pub struct Threaded {
+    threads: usize,
+}
+
+impl Threaded {
+    pub fn new(threads: usize) -> Threaded {
+        Threaded { threads: threads.max(1) }
+    }
+
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Backend for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads.min(m.max(1));
+        if t <= 1 || n == 0 {
+            scalar::matmul_rows(&a.data, &b.data, &mut out, k, n);
+        } else {
+            let rows_per = m.div_ceil(t);
+            let (adata, bdata) = (&a.data[..], &b.data[..]);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    let rows = chunk.len() / n;
+                    let ablock = &adata[i0 * k..(i0 + rows) * k];
+                    s.spawn(move || scalar::matmul_rows(ablock, bdata, chunk, k, n));
+                }
+            });
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn gram(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let mut out = vec![0.0f32; k * k];
+        let t = self.threads.min(k.max(1));
+        if t <= 1 {
+            scalar::gram_rows(&x.data, m, k, 0, &mut out);
+        } else {
+            let rows_per = k.div_ceil(t);
+            let xdata = &x.data[..];
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * k).enumerate() {
+                    let i0 = ci * rows_per;
+                    s.spawn(move || scalar::gram_rows(xdata, m, k, i0, chunk));
+                }
+            });
+        }
+        Tensor::new(vec![k, k], out)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        let t = self.threads;
+        if t <= 1 || y.len() < PAR_MIN_LEN {
+            scalar::axpy_range(alpha, x, y);
+            return;
+        }
+        let chunk = y.len().div_ceil(t);
+        std::thread::scope(|s| {
+            for (xc, yc) in x.chunks(chunk).zip(y.chunks_mut(chunk)) {
+                s.spawn(move || scalar::axpy_range(alpha, xc, yc));
+            }
+        });
+    }
+
+    fn sum_sq(&self, x: &[f32]) -> f64 {
+        let t = self.threads;
+        if t <= 1 || x.len() < PAR_MIN_LEN {
+            return scalar::sum_sq_range(x);
+        }
+        let chunk = x.len().div_ceil(t);
+        let mut partials = vec![0.0f64; x.len().div_ceil(chunk)];
+        std::thread::scope(|s| {
+            for (xc, p) in x.chunks(chunk).zip(partials.iter_mut()) {
+                s.spawn(move || *p = scalar::sum_sq_range(xc));
+            }
+        });
+        partials.iter().sum()
+    }
+
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64> {
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out = vec![0.0f64; n];
+        let chunk = n.div_ceil(t);
+        std::thread::scope(|s| {
+            for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (j, slot) in oc.iter_mut().enumerate() {
+                        *slot = f(ci * chunk + j);
+                    }
+                });
+            }
+        });
+        out
+    }
+}

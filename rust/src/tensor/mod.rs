@@ -2,6 +2,7 @@
 //! calibration, metrics). Device math runs in the compiled HLO; this
 //! exists for everything the coordinator computes itself.
 
+pub mod backend;
 pub mod io;
 mod ops;
 

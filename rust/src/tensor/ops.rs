@@ -1,62 +1,23 @@
 //! Host-side tensor math: the pieces GPTQ/SmoothQuant/RPTQ and the
-//! calibrator need. Cache-blocked matmul is enough for our Hessian sizes
-//! (≤ 2048²); correctness is cross-checked against naive loops in tests.
+//! calibrator need. The hot paths (`matmul`, `gram`, reductions) route
+//! through the process-wide execution backend (`tensor::backend`):
+//! scalar reference, cache-tiled, or row-partitioned threads — all
+//! bit-exact for matmul/gram, cross-checked in the backend parity tests
+//! and against naive loops here.
 
+use super::backend;
 use super::Tensor;
 
 impl Tensor {
-    /// C = A @ B for 2-D tensors (M,K) x (K,N).
+    /// C = A @ B for 2-D tensors (M,K) x (K,N), on the active backend.
     pub fn matmul(&self, b: &Tensor) -> Tensor {
-        let (m, k) = self.dims2();
-        let (k2, n) = b.dims2();
-        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
-        let mut out = vec![0.0f32; m * n];
-        // ikj loop order: streams B rows, accumulates into C rows.
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let crow = &mut out[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[p * n..(p + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *c += a * bv;
-                }
-            }
-        }
-        Tensor::new(vec![m, n], out)
+        backend::active().matmul(self, b)
     }
 
-    /// A^T @ A, the Gram/Hessian accumulator used by GPTQ (K,K from M,K).
+    /// A^T @ A, the Gram/Hessian accumulator used by GPTQ (K,K from M,K),
+    /// on the active backend.
     pub fn gram(&self) -> Tensor {
-        // §Perf L3 iteration 4 (EXPERIMENTS.md): accumulate RB=8 input
-        // rows per sweep of the (k, k) output so each output row is
-        // loaded once per 8 rank-1 updates instead of once per row.
-        // Per (i, j) element the accumulation stays in ascending-r order,
-        // so the result is bit-identical to the row-at-a-time loop.
-        const RB: usize = 8;
-        let (m, k) = self.dims2();
-        let mut out = vec![0.0f32; k * k];
-        let mut r0 = 0;
-        while r0 < m {
-            let rend = (r0 + RB).min(m);
-            for i in 0..k {
-                let orow = &mut out[i * k..(i + 1) * k];
-                for r in r0..rend {
-                    let row = self.row(r);
-                    let xi = row[i];
-                    if xi == 0.0 {
-                        continue;
-                    }
-                    for (o, &xj) in orow.iter_mut().zip(row.iter()) {
-                        *o += xi * xj;
-                    }
-                }
-            }
-            r0 = rend;
-        }
-        Tensor::new(vec![k, k], out)
+        backend::active().gram(self)
     }
 
     pub fn transpose(&self) -> Tensor {
@@ -136,13 +97,12 @@ impl Tensor {
         Tensor::new(vec![m, n], out)
     }
 
-    /// Mean of squared elements.
+    /// Mean of squared elements (f64 reduction on the active backend).
     pub fn mean_sq(&self) -> f64 {
         if self.data.is_empty() {
             return 0.0;
         }
-        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
-            / self.data.len() as f64
+        backend::active().sum_sq(&self.data) / self.data.len() as f64
     }
 
     /// Mean squared error against another tensor of the same shape.

@@ -101,6 +101,25 @@ mod tests {
     }
 
     #[test]
+    fn backend_and_threads_options() {
+        // the exact global-flag shapes main.rs feeds to backend::configure
+        let a = Args::parse(
+            &sv(&["eval", "--backend", "threaded", "--threads", "8", "--model", "m"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get("backend", "auto"), "threaded");
+        assert_eq!(a.get_usize("threads", 0), 8);
+        // `=` form; unparsable thread counts fall back to the default (0
+        // = all cores); a dangling --backend is a parse error
+        let d = Args::parse(&sv(&["eval", "--backend=blocked", "--threads=junk"]), &[])
+            .unwrap();
+        assert_eq!(d.get("backend", "auto"), "blocked");
+        assert_eq!(d.get_usize("threads", 0), 0);
+        assert!(Args::parse(&sv(&["eval", "--threads"]), &[]).is_err());
+    }
+
+    #[test]
     fn defaults_apply() {
         let a = Args::parse(&sv(&["run"]), &[]).unwrap();
         assert_eq!(a.get("missing", "dflt"), "dflt");

@@ -34,7 +34,8 @@ fn training_reduces_loss_and_eval_runs() {
     let sim = tmp_sim("train");
     let cfg = sim.rt.manifest.model("sim-opt-125m").unwrap().clone();
     let init = model::init_params(&cfg, 5);
-    let opts = TrainOpts { steps: 40, peak_lr: 3e-3, warmup: 5, log_every: 1000, ..Default::default() };
+    let opts =
+        TrainOpts { steps: 40, peak_lr: 3e-3, warmup: 5, log_every: 1000, ..Default::default() };
     let res = train::run_training(&sim.rt, "sim-opt-125m/train_fp32", init, &opts).unwrap();
     // smoothed loss must drop substantially from the uniform start
     let head: f32 = res.losses[..5].iter().sum::<f32>() / 5.0;

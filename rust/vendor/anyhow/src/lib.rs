@@ -1,0 +1,219 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build environment has no crates.io registry, so the crate
+//! is provided as a path dependency implementing exactly the API surface
+//! this repository uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Formatting matches upstream `anyhow` where the repo depends on
+//! it: `{}` prints the outermost message, `{:#}` prints the full
+//! `outer: inner: root` chain, and `{:?}` prints a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost message plus the chain of
+/// underlying causes, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    fn from_std<E: std::error::Error>(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {}", cause)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+/// Conversion into [`Error`] for both std errors and `Error` itself
+/// (mirrors `anyhow`'s `ext::StdError` trick so `Context` has one
+/// blanket impl over `Result`).
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from_std(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// `anyhow::Context`: attach context to failures of `Result` / `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formatted message, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(format!(
+                "condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+            .context("read config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = io_fail().unwrap_err();
+        let plain = format!("{}", err);
+        let full = format!("{:#}", err);
+        assert_eq!(plain, "read config");
+        assert!(full.starts_with("read config: "), "{}", full);
+        assert!(full.len() > plain.len());
+        let dbg = format!("{:?}", err);
+        assert!(dbg.contains("Caused by:"), "{}", dbg);
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{:#}", err), "missing value");
+
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {}", x);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(format!("{}", f(12).unwrap_err()).contains("12"));
+        assert!(format!("{}", f(3).unwrap_err()).contains("three"));
+        let from_string = anyhow!(String::from("plain message"));
+        assert_eq!(format!("{}", from_string), "plain message");
+    }
+
+    #[test]
+    fn with_context_on_result_and_error_passthrough() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let err = base.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(format!("{:#}", err), "layer 1: root");
+    }
+}
