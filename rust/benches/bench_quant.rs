@@ -1,8 +1,9 @@
 //! L1-mirror micro-benchmarks: the host-side quantizer arithmetic that
 //! the PTQ methods and the calibrator run in their inner loops, the GPTQ
 //! per-site transform, and the tensor execution backends (scalar vs
-//! blocked vs threaded) on the matmul/gram hot paths. Part of the §Perf
-//! pass (EXPERIMENTS.md).
+//! blocked vs simd vs threaded vs pool) on the matmul/gram/axpy hot
+//! paths, plus the many-small-sites spawn-overhead microbench (threaded
+//! vs pool). Part of the §Perf pass (EXPERIMENTS.md).
 //!
 //!   cargo bench --bench bench_quant             # full
 //!   cargo bench --bench bench_quant -- --fast   # CI smoke (one pass)
@@ -15,7 +16,7 @@ use std::sync::Arc;
 
 use intfpqsim::formats::{self, Format};
 use intfpqsim::methods::gptq;
-use intfpqsim::tensor::backend::{self, Backend, Blocked, Scalar, Threaded};
+use intfpqsim::tensor::backend::{self, Backend, Blocked, Pool, Scalar, Simd, Threaded};
 use intfpqsim::tensor::Tensor;
 use intfpqsim::util::json::Json;
 use intfpqsim::util::rng::Pcg64;
@@ -114,7 +115,9 @@ fn main() {
     let backends: Vec<Arc<dyn Backend>> = vec![
         Arc::new(Scalar),
         Arc::new(Blocked),
+        Arc::new(Simd),
         Arc::new(Threaded::new(threads)),
+        Arc::new(Pool::new(threads)),
     ];
     let (bwarm, biters) = if fast { (0, 1) } else { (1, 3) };
     // (op, backend, mean_ms)
@@ -133,8 +136,18 @@ fn main() {
         println!("{}", s.report(&format!("gram {}", be.describe()), None));
         results.push(("gram", be.describe(), s.mean_ms()));
     }
+    let xv = heavy(&mut rng, size * size);
+    for be in &backends {
+        let mut yv = heavy(&mut rng, size * size);
+        let s = bench(bwarm, biters.max(3), || {
+            be.axpy(-0.5, &xv, &mut yv);
+            std::hint::black_box(&yv);
+        });
+        println!("{}", s.report(&format!("axpy {}", be.describe()), None));
+        results.push(("axpy", be.describe(), s.mean_ms()));
+    }
     let mut speedups = Vec::new();
-    for op in ["matmul", "gram"] {
+    for op in ["matmul", "gram", "axpy"] {
         let base = results.iter().find(|r| r.0 == op && r.1 == "scalar").unwrap().2;
         for r in results.iter().filter(|r| r.0 == op && r.1 != "scalar") {
             let sp = base / r.2.max(1e-9);
@@ -142,6 +155,35 @@ fn main() {
             speedups.push((op, r.1.clone(), sp));
         }
     }
+
+    // ---- spawn overhead: many small calibration-style sites ----
+    // `threaded` pays a scoped-thread spawn + join per call; `pool`
+    // reuses persistent workers across calls. 64 sites x tiny per-site
+    // work approximates the `mse_site_alphas` fan-out that ROADMAP
+    // flagged. At least 2 workers so the parallel path is exercised even
+    // on a single-core runner.
+    let wt = threads.max(2);
+    println!(
+        "\n== spawn overhead (64-site fan-out x 512-elem site, {} workers) ==",
+        wt
+    );
+    let site = heavy(&mut rng, 512);
+    let threaded_be = Threaded::new(wt);
+    let pool_be = Pool::new(wt);
+    let contenders: [(&str, &dyn Backend); 2] =
+        [("threaded", &threaded_be), ("pool", &pool_be)];
+    let (swarm, siters) = if fast { (1, 5) } else { (2, 20) };
+    let mut spawn_ms: Vec<(&str, f64)> = Vec::new();
+    for (name, be) in contenders {
+        let s = bench(swarm, siters, || {
+            let v = be.par_map_f64(64, &|_| Scalar.sum_sq(&site));
+            std::hint::black_box(v);
+        });
+        println!("{}", s.report(&format!("small sites {}", be.describe()), None));
+        spawn_ms.push((name, s.mean_ms()));
+    }
+    let spawn_speedup = spawn_ms[0].1 / spawn_ms[1].1.max(1e-9);
+    println!("  pool {:>6.2}x vs threaded on the small-site fan-out", spawn_speedup);
 
     let json = Json::obj(vec![
         ("bench", Json::Str("tensor_backends".to_string())),
@@ -177,6 +219,17 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "spawn_overhead",
+            Json::obj(vec![
+                ("sites", Json::Num(64.0)),
+                ("site_elems", Json::Num(512.0)),
+                ("workers", Json::Num(wt as f64)),
+                ("threaded_ms", Json::Num(spawn_ms[0].1)),
+                ("pool_ms", Json::Num(spawn_ms[1].1)),
+                ("pool_speedup_vs_threaded", Json::Num(spawn_speedup)),
+            ]),
         ),
     ]);
     match std::fs::write("BENCH_tensor.json", json.pretty()) {

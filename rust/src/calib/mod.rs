@@ -107,7 +107,10 @@ pub fn mse_alpha(x: &[f32], bits: u32) -> f32 {
 /// Sites are independent, so the per-site grid searches fan out across
 /// the active tensor backend's workers; results are keyed by site name
 /// and each search is single-threaded internally, so the output is
-/// identical for every backend.
+/// identical for every backend. Under the `pool` backend the fan-out
+/// reuses the persistent worker pool — no per-call thread spawn, which
+/// is the win on this many-small-sites pattern (see the spawn-overhead
+/// microbench in `bench_quant`).
 pub fn mse_site_alphas(stats: &CalibStats, bits: u32) -> BTreeMap<String, f32> {
     let sites: Vec<(&String, &Tensor)> = stats.acts.iter().collect();
     let alphas = crate::tensor::backend::active()

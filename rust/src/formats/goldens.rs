@@ -121,6 +121,75 @@ fn abfp2_matches_python() {
     }
 }
 
+// ---- FP8 boundary goldens (E4M3 / E5M2) ----
+//
+// Unlike the table-driven tests above, these encode the *known-answer*
+// edge values of the FP8 formats directly, so they run without built
+// artifacts: fmax, the smallest subnormal, the E4M3 NaN-code
+// reservation, and round-to-nearest-even tie behaviour.
+
+#[test]
+fn e4m3_boundary_goldens() {
+    // fmax: the all-ones code is NaN, so the top value drops one
+    // mantissa step: 2^8 * (2 - 2/8) = 448, not 480.
+    assert_eq!(E4M3.fmax(), 448.0);
+    let grid = E4M3.grid();
+    assert_eq!(grid.last().copied(), Some(448.0));
+    assert_eq!(grid[grid.len() - 2], 416.0);
+    assert!(!grid.contains(&480.0), "NaN code must not be a value");
+    // 1 (zero) + 7 subnormals + 15 binades x 8 codes - 1 NaN = 127
+    assert_eq!(grid.len(), 127);
+
+    // smallest subnormal: 2^emin * 2^-m = 2^-6 * 2^-3 = 2^-9
+    let tiny = 2.0f32.powi(-9);
+    assert_eq!(grid[1], tiny);
+    assert_eq!(fp_round(0.6 * tiny, E4M3), tiny);
+    // exactly half the smallest subnormal ties to even (zero)
+    assert_eq!(fp_round(0.5 * tiny, E4M3), 0.0);
+    // tie between subnormal codes 1 and 2 goes to the even code (2)
+    assert_eq!(fp_round(1.5 * tiny, E4M3), 2.0 * tiny);
+
+    // RNE ties in the [16, 32) binade (ulp = 2): halfway values go to
+    // the even mantissa code on both sides.
+    assert_eq!(fp_round(17.0, E4M3), 16.0);
+    assert_eq!(fp_round(19.0, E4M3), 20.0);
+
+    // values that would round onto the reserved NaN code saturate
+    assert_eq!(fp_round(470.0, E4M3), 448.0);
+    assert_eq!(fp_round(476.0, E4M3), 448.0);
+    assert_eq!(fp_round(f32::MAX, E4M3), 448.0);
+    assert_eq!(fp_round(-1.0e9, E4M3), -448.0);
+}
+
+#[test]
+fn e5m2_boundary_goldens() {
+    // Repo convention (python/compile/formats.py): finite-only, the full
+    // top binade holds values, so fmax = 2^16 * 1.75 = 114688 — NOT the
+    // OCP/IEEE 57344, which reserves the top exponent for inf/NaN.
+    assert_eq!(E5M2.fmax(), 114688.0);
+    let grid = E5M2.grid();
+    assert_eq!(grid.last().copied(), Some(114688.0));
+    assert_eq!(grid[grid.len() - 2], 98304.0);
+    assert_eq!(grid.len(), 128); // zero + 3 subnormals + 31 x 4 codes
+
+    // smallest subnormal: 2^emin * 2^-m = 2^-14 * 2^-2 = 2^-16
+    let tiny = 2.0f32.powi(-16);
+    assert_eq!(grid[1], tiny);
+    assert_eq!(fp_round(0.6 * tiny, E5M2), tiny);
+    assert_eq!(fp_round(0.5 * tiny, E5M2), 0.0); // tie to even (zero)
+    assert_eq!(fp_round(1.5 * tiny, E5M2), 2.0 * tiny);
+
+    // RNE ties in the [16, 32) binade (ulp = 4)
+    assert_eq!(fp_round(18.0, E5M2), 16.0);
+    assert_eq!(fp_round(22.0, E5M2), 24.0);
+
+    // top binade (ulp = 16384) and saturation
+    assert_eq!(fp_round(100_000.0, E5M2), 98304.0);
+    assert_eq!(fp_round(107_000.0, E5M2), 114688.0);
+    assert_eq!(fp_round(1.0e9, E5M2), 114688.0);
+    assert_eq!(fp_round(-f32::MAX, E5M2), -114688.0);
+}
+
 #[test]
 fn static_int_matches_python() {
     let g = need_goldens!();

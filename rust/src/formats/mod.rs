@@ -89,6 +89,12 @@ pub const INT8: IntFmt = IntFmt::new(8);
 pub const E2M1: FpFmt = FpFmt::new(2, 1, false);
 pub const E1M2: FpFmt = FpFmt::new(1, 2, false);
 pub const E4M3: FpFmt = FpFmt::new(4, 3, true);
+/// FP8 E5M2 under this repo's finite-only convention (`formats.py`:
+/// no inf encoding, the full top binade holds values), so fmax is
+/// 2^16 * 1.75 = 114688 — NOT the OCP/IEEE-style 57344, which reserves
+/// the top exponent for inf/NaN. Matches `python/compile/formats.py`
+/// `parse("e5m2")` bit-for-bit (asserted in `python/tests/test_formats.py`).
+pub const E5M2: FpFmt = FpFmt::new(5, 2, false);
 
 /// Either payload format, as named in the manifest (`int4`, `e4m3`, ...).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -105,9 +111,38 @@ impl Format {
             "e2m1" => Some(Format::Fp(E2M1)),
             "e1m2" => Some(Format::Fp(E1M2)),
             "e4m3" => Some(Format::Fp(E4M3)),
+            "e5m2" => Some(Format::Fp(E5M2)),
             _ => {
+                // generic intN, bounded like eXmY below: bits outside
+                // [2, 32] would make qmax() shift-overflow (int1's qmax
+                // of 0 divides to NaN scales) rather than quantize
                 if let Some(b) = name.strip_prefix("int") {
-                    return b.parse().ok().map(|bits| Format::Int(IntFmt::new(bits)));
+                    return b
+                        .parse::<u32>()
+                        .ok()
+                        .filter(|bits| (2..=32).contains(bits) && b == bits.to_string())
+                        .map(|bits| Format::Int(IntFmt::new(bits)));
+                }
+                // generic eXmY (mirrors formats.py parse: nan_reserved
+                // off), bounded to sane low-precision widths — wider e/m
+                // would overflow fmax()/explode grid() rather than
+                // describe a simulable format. e is capped at 7: e = 8
+                // already gives emax = 128, whose fmax casts to f32 inf.
+                if let Some(rest) = name.strip_prefix('e') {
+                    if let Some((e, m)) = rest.split_once('m') {
+                        if let (Ok(e), Ok(m)) = (e.parse::<u32>(), m.parse::<u32>()) {
+                            // round-trip guard: reject non-canonical
+                            // spellings ("e04m3", "e+4m3") rather than
+                            // silently constructing a format that shadows
+                            // a named constant with different semantics
+                            if (1..=7).contains(&e)
+                                && (1..=10).contains(&m)
+                                && format!("e{}m{}", e, m) == name
+                            {
+                                return Some(Format::Fp(FpFmt::new(e, m, false)));
+                            }
+                        }
+                    }
                 }
                 None
             }
@@ -543,6 +578,217 @@ mod tests {
     fn format_parse() {
         assert_eq!(Format::parse("int4"), Some(Format::Int(INT4)));
         assert_eq!(Format::parse("e4m3"), Some(Format::Fp(E4M3)));
+        assert_eq!(Format::parse("e5m2"), Some(Format::Fp(E5M2)));
+        // generic eXmY names mirror formats.py (nan_reserved off)
+        assert_eq!(
+            Format::parse("e3m4"),
+            Some(Format::Fp(FpFmt::new(3, 4, false)))
+        );
         assert!(Format::parse("nope").is_none());
+        assert!(Format::parse("emx").is_none());
+        // out-of-bounds widths are rejected, not constructed broken
+        // (e8m2 and wider would overflow fmax() to f32 inf; e4m99 would
+        // explode grid()); e7 is the widest exponent whose fmax is finite
+        assert!(Format::parse("e8m2").is_none());
+        assert!(Format::parse("e31m2").is_none());
+        assert!(Format::parse("e0m2").is_none());
+        assert!(Format::parse("e4m99").is_none());
+        // non-canonical spellings must not shadow named constants with
+        // different semantics (e04m3 would lose E4M3's NaN reservation)
+        assert!(Format::parse("e04m3").is_none());
+        assert!(Format::parse("e+4m3").is_none());
+        // intN widths that cannot quantize are rejected, not constructed
+        assert_eq!(Format::parse("int6"), Some(Format::Int(IntFmt::new(6))));
+        assert!(Format::parse("int0").is_none());
+        assert!(Format::parse("int1").is_none());
+        assert!(Format::parse("int40").is_none());
+        assert!(Format::parse("int04").is_none());
+        match Format::parse("e7m3") {
+            Some(Format::Fp(f)) => assert!(f.fmax().is_finite()),
+            other => panic!("e7m3 should parse, got {:?}", other),
+        }
+    }
+
+    // ---- quantizer property suite (bits/e/m sweeps) ----
+
+    /// FpFmt sweep used by the property tests: the paper's formats plus
+    /// off-grid e/m combinations and both NaN-reservation settings.
+    fn fp_sweep() -> Vec<FpFmt> {
+        vec![
+            E2M1,
+            E1M2,
+            E4M3,
+            E5M2,
+            FpFmt::new(3, 2, false),
+            FpFmt::new(2, 3, true),
+            FpFmt::new(5, 2, true),
+            FpFmt::new(3, 4, false),
+        ]
+    }
+
+    fn bits_sweep() -> Vec<u32> {
+        vec![2, 3, 4, 6, 8]
+    }
+
+    #[test]
+    fn qdq_idempotent_property() {
+        // quantize -> dequantize -> quantize must be a fixed point, bit
+        // for bit: the second pass re-quantizes exactly onto the same
+        // code (the defining property of fake-quant simulation).
+        prop::check("qdq_idempotent", 25, |rng| {
+            let alpha = 0.25 + 7.75 * rng.f32();
+            for bits in bits_sweep() {
+                let qmax = IntFmt::new(bits).qmax();
+                let s = qmax / alpha;
+                for _ in 0..16 {
+                    let x = rng.gaussian() * rng.lognormal(1.0);
+                    let once = int_qdq(x, s, qmax);
+                    let twice = int_qdq(once, s, qmax);
+                    prop_assert!(
+                        once.to_bits() == twice.to_bits(),
+                        "int{} s={}: {} -> {} -> {}",
+                        bits,
+                        s,
+                        x,
+                        once,
+                        twice
+                    );
+                }
+            }
+            for fmt in fp_sweep() {
+                let s = fmt.fmax() / alpha;
+                for _ in 0..16 {
+                    let x = rng.gaussian() * rng.lognormal(1.0);
+                    let ronce = fp_round(x, fmt);
+                    prop_assert!(
+                        ronce.to_bits() == fp_round(ronce, fmt).to_bits(),
+                        "{:?}: fp_round not idempotent at {}",
+                        fmt,
+                        x
+                    );
+                    let once = fp_qdq(x, s, fmt);
+                    let twice = fp_qdq(once, s, fmt);
+                    prop_assert!(
+                        once.to_bits() == twice.to_bits(),
+                        "{:?} s={}: {} -> {} -> {}",
+                        fmt,
+                        s,
+                        x,
+                        once,
+                        twice
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fp_round_output_in_grid_property() {
+        // every fp_round output must be a representable value of the
+        // format: a member of grid() (up to sign), never something
+        // in-between and never beyond fmax.
+        prop::check("fp_round_in_grid", 25, |rng| {
+            for fmt in fp_sweep() {
+                let grid = fmt.grid();
+                for _ in 0..24 {
+                    // span subnormals through saturation
+                    let x = rng.gaussian() * fmt.fmax() * rng.lognormal(2.0) / 4.0;
+                    let y = fp_round(x, fmt);
+                    prop_assert!(
+                        grid.iter().any(|&g| g.to_bits() == y.abs().to_bits()),
+                        "{:?}: fp_round({}) = {} not on the grid",
+                        fmt,
+                        x,
+                        y
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qdq_monotone_property() {
+        // x1 <= x2 implies q(x1) <= q(x2): RNE, clamping and positive
+        // scaling are all monotone, and any violation would reorder
+        // values across the quantization boundary.
+        prop::check("qdq_monotone", 25, |rng| {
+            let alpha = 0.25 + 7.75 * rng.f32();
+            for _ in 0..24 {
+                let a = rng.gaussian() * rng.lognormal(1.0);
+                let b = rng.gaussian() * rng.lognormal(1.0);
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                for bits in bits_sweep() {
+                    let qmax = IntFmt::new(bits).qmax();
+                    let s = qmax / alpha;
+                    prop_assert!(
+                        int_qdq(lo, s, qmax) <= int_qdq(hi, s, qmax),
+                        "int{}: qdq({}) > qdq({})",
+                        bits,
+                        lo,
+                        hi
+                    );
+                }
+                for fmt in fp_sweep() {
+                    prop_assert!(
+                        fp_round(lo, fmt) <= fp_round(hi, fmt),
+                        "{:?}: fp_round({}) > fp_round({})",
+                        fmt,
+                        lo,
+                        hi
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qdq_respects_clip_bounds_property() {
+        // outputs never escape the clip range: |int_qdq| <= qmax/s and
+        // |fp_qdq| <= fmax/s (saturation, paper Eqns 1-3).
+        prop::check("qdq_clip_bounds", 25, |rng| {
+            let alpha = 0.25 + 7.75 * rng.f32();
+            for _ in 0..24 {
+                // include magnitudes far beyond the clip range
+                let x = rng.gaussian() * rng.lognormal(2.0) * 100.0;
+                for bits in bits_sweep() {
+                    let qmax = IntFmt::new(bits).qmax();
+                    let s = qmax / alpha;
+                    let y = int_qdq(x, s, qmax);
+                    prop_assert!(
+                        y.abs() <= qmax / s,
+                        "int{}: |{}| > {}",
+                        bits,
+                        y,
+                        qmax / s
+                    );
+                }
+                for fmt in fp_sweep() {
+                    let s = fmt.fmax() / alpha;
+                    let y = fp_qdq(x, s, fmt);
+                    prop_assert!(
+                        y.abs() <= fmt.fmax() / s,
+                        "{:?}: |{}| > {}",
+                        fmt,
+                        y,
+                        fmt.fmax() / s
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn e5m2_follows_repo_convention() {
+        // finite-only convention (formats.py): full top binade usable
+        assert_eq!(E5M2.fmax(), 114688.0);
+        assert_eq!(E5M2.bias(), 15);
+        assert_eq!(E5M2.emin(), -14);
+        // 3 subnormals + 31 binades x 4 mantissa codes + zero
+        assert_eq!(E5M2.grid().len(), 128);
+        assert_eq!(E5M2.grid()[1], 2.0f32.powi(-16)); // smallest subnormal
     }
 }

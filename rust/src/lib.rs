@@ -11,10 +11,13 @@
 //!   coordinator reproducing every table/figure of the paper.
 //!
 //! Host-side tensor math (Hessian builds, weight transforms, metrics)
-//! executes on a pluggable backend — scalar / cache-blocked /
-//! multi-threaded, see [`tensor::backend`] — selected at runtime via
-//! `--backend`/`--threads` or `INTFPQSIM_BACKEND`/`INTFPQSIM_THREADS`;
-//! the same seam is where future SIMD/PJRT-offload backends plug in.
+//! executes on a pluggable backend — scalar / cache-blocked / 4-lane
+//! SIMD-unrolled / scoped-thread / persistent worker pool, see
+//! [`tensor::backend`] — selected at runtime via `--backend`/`--threads`
+//! or `INTFPQSIM_BACKEND`/`INTFPQSIM_THREADS`; every backend is held to
+//! bit-equality with the scalar reference by the conformance harness in
+//! `rust/tests/backend_conformance.rs`, and the same seam is where a
+//! future PJRT-offload backend plugs in.
 
 // The codebase predates clippy's impl-header lifetime elision lint;
 // keeping explicit `impl<'a> T<'a>` headers is a deliberate style.

@@ -11,7 +11,7 @@
 //!
 //! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
 //! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose,
-//! --backend scalar|blocked|threaded|auto, --threads N (0 = all cores).
+//! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (0 = all cores).
 
 use anyhow::{bail, Context, Result};
 
@@ -30,7 +30,7 @@ const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|r
   repro calibrate --model sim-opt-125m
   repro experiment --id table1 | --all  [--fast] [--force]
   repro report
-global: [--backend scalar|blocked|threaded|auto] [--threads N]";
+global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

@@ -26,6 +26,10 @@ use super::site_weight_param;
 /// checkpoint (other params untouched).
 pub fn apply(cfg: &ModelCfg, params: &TensorStore, stats: &CalibStats) -> Result<TensorStore> {
     let mut out = params.clone();
+    // One backend handle for the whole checkpoint: with the `pool`
+    // backend this reuses a single persistent worker pool across every
+    // site's Gram build and tail updates (no per-site teardown).
+    let be = crate::tensor::backend::active();
     for site in &cfg.sites {
         let wname = site_weight_param(&site.name)?;
         let w = out
@@ -47,9 +51,9 @@ pub fn apply(cfg: &ModelCfg, params: &TensorStore, stats: &CalibStats) -> Result
                 data.extend_from_slice(x.row(r));
             }
             let sub = Tensor::new(vec![data.len() / din, din], data);
-            gptq_site(w, &sub)?;
+            gptq_site_with(w, &sub, be.as_ref())?;
         } else {
-            gptq_site(w, x)?;
+            gptq_site_with(w, x, be.as_ref())?;
         }
     }
     Ok(out)
@@ -77,13 +81,24 @@ fn chol_inv_upper(h: &Tensor) -> Result<Tensor> {
 }
 
 /// One site: W (dout, din) quantized column-by-column with error
-/// compensation into the not-yet-quantized columns.
+/// compensation into the not-yet-quantized columns, on the active
+/// backend.
 pub fn gptq_site(w: &mut Tensor, x: &Tensor) -> Result<()> {
+    let be = crate::tensor::backend::active();
+    gptq_site_with(w, x, be.as_ref())
+}
+
+/// [`gptq_site`] on an explicit backend handle — `apply` hoists one
+/// handle across the per-site loop so a worker-pool backend is reused
+/// rather than re-resolved per site. The Gram/Hessian build and the
+/// rank-B tail updates below are the transform's hot paths.
+pub fn gptq_site_with(
+    w: &mut Tensor,
+    x: &Tensor,
+    be: &dyn crate::tensor::backend::Backend,
+) -> Result<()> {
     let (dout, din) = w.dims2();
     anyhow::ensure!(x.shape[1] == din, "X cols {} != W din {}", x.shape[1], din);
-    // One backend handle for the whole site: the Gram/Hessian build and
-    // the rank-B tail updates below are the transform's hot paths.
-    let be = crate::tensor::backend::active();
     let mut h = be.gram(x); // X^T X
     for v in h.data.iter_mut() {
         *v *= 2.0;

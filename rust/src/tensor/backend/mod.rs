@@ -2,37 +2,57 @@
 //!
 //! Every Hessian build (GPTQ), calibration pass and eval sweep funnels
 //! through `matmul`/`gram`; this module makes those paths swappable and
-//! parallel. Three implementations ship today:
+//! parallel. Five implementations ship today:
 //!
 //! * [`Scalar`] — the original single-threaded loops, the bit-exact
 //!   reference;
 //! * [`Blocked`] — cache-tiled, bit-identical to scalar (tiling only
 //!   reorders which *elements* are visited, never the per-element
 //!   reduction order);
+//! * [`Simd`] — portable 4-lane-unrolled kernels, bit-identical to
+//!   scalar on every op (the unroll never crosses a reduction);
 //! * [`Threaded`] — output-row-partitioned scoped threads. `matmul` and
 //!   `gram` are bit-identical to scalar (each element is produced by one
 //!   thread running the scalar kernel); `sum_sq` combines fixed-chunk
 //!   partials in ascending order — deterministic, documented tolerance
-//!   <= 1e-5 relative.
+//!   <= 1e-5 relative. Falls back to the scalar kernel (no spawns) when
+//!   rows < threads or a dimension is zero;
+//! * [`Pool`] — the same row partition on a persistent worker pool with
+//!   a shared injector queue: no per-call thread spawn, which wins on
+//!   the many-small-sites calibration pattern.
 //!
 //! Selection is a process-wide handle, configurable at runtime:
 //!
-//! * env: `INTFPQSIM_BACKEND=scalar|blocked|threaded|auto`,
+//! * env: `INTFPQSIM_BACKEND=scalar|blocked|simd|threaded|pool|auto`,
 //!   `INTFPQSIM_THREADS=N` (0 = all cores);
-//! * CLI: `repro ... --backend threaded --threads 8`;
+//! * CLI: `repro ... --backend pool --threads 8`;
 //! * API: [`configure`] / [`set_active`] (benches compare backends by
 //!   installing each in turn).
 //!
-//! The trait is the seam for future SIMD/PJRT-offload backends named in
-//! `lib.rs`.
+//! Every backend must pass the cross-backend conformance harness in
+//! `rust/tests/backend_conformance.rs` (bit-equality against `scalar`
+//! over a shape grid and adversarial values); add new backends to
+//! [`all_names`] and they inherit the full matrix for free. The trait is
+//! also the seam for a future PJRT-offload backend (`lib.rs`).
 
 mod blocked;
+mod pool;
 mod scalar;
+mod simd;
 mod threaded;
 
 pub use blocked::Blocked;
+pub use pool::Pool;
 pub use scalar::Scalar;
+pub use simd::Simd;
 pub use threaded::Threaded;
+
+/// Below this many elements, the parallel backends keep reductions and
+/// axpy single-threaded (and therefore bit-identical to scalar). Shared
+/// by `threaded` and `pool` so the serial/parallel boundary — part of
+/// the documented `sum_sq` tolerance contract — cannot drift between
+/// them.
+pub(crate) const PAR_MIN_LEN: usize = 1 << 15;
 
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -96,23 +116,44 @@ pub fn env_threads() -> usize {
     }
 }
 
+/// Every registered backend name, in the order the conformance harness
+/// and benches enumerate them. Adding a backend here enrolls it in the
+/// full `tests/backend_conformance.rs` matrix automatically.
+pub fn all_names() -> &'static [&'static str] {
+    &["scalar", "blocked", "simd", "threaded", "pool"]
+}
+
 /// Build a backend from a name + thread count (0 = all cores).
+///
+/// `all_names()` is the single registry: a name outside it is rejected
+/// here (so a backend wired into the match below but not registered
+/// fails loudly at selection), and a registered name missing a match
+/// arm panics (caught by the selection tests) — drift in either
+/// direction cannot silently escape the conformance matrix.
 pub fn select(name: &str, threads: usize) -> Result<Arc<dyn Backend>, String> {
     let t = if threads == 0 { default_threads() } else { threads };
-    match name {
-        "scalar" => Ok(Arc::new(Scalar)),
-        "blocked" => Ok(Arc::new(Blocked)),
-        "threaded" => Ok(Arc::new(Threaded::new(t))),
-        "auto" | "" => Ok(if t > 1 {
-            Arc::new(Threaded::new(t)) as Arc<dyn Backend>
+    if name == "auto" || name.is_empty() {
+        return Ok(if t > 1 {
+            Arc::new(Pool::new(t)) as Arc<dyn Backend>
         } else {
-            Arc::new(Blocked)
-        }),
-        other => Err(format!(
-            "unknown backend {:?} (expected scalar|blocked|threaded|auto)",
-            other
-        )),
+            Arc::new(Simd)
+        });
     }
+    if !all_names().contains(&name) {
+        return Err(format!(
+            "unknown backend {:?} (expected {}|auto)",
+            name,
+            all_names().join("|")
+        ));
+    }
+    Ok(match name {
+        "scalar" => Arc::new(Scalar),
+        "blocked" => Arc::new(Blocked),
+        "simd" => Arc::new(Simd),
+        "threaded" => Arc::new(Threaded::new(t)),
+        "pool" => Arc::new(Pool::new(t)),
+        other => unreachable!("{} is in all_names() but not constructible", other),
+    })
 }
 
 fn registry() -> &'static RwLock<Arc<dyn Backend>> {
@@ -157,9 +198,13 @@ mod tests {
     fn alt_backends() -> Vec<Arc<dyn Backend>> {
         vec![
             Arc::new(Blocked),
+            Arc::new(Simd),
             Arc::new(Threaded::new(1)),
             Arc::new(Threaded::new(3)),
             Arc::new(Threaded::new(8)),
+            Arc::new(Pool::new(1)),
+            Arc::new(Pool::new(3)),
+            Arc::new(Pool::new(8)),
         ]
     }
 
@@ -252,6 +297,33 @@ mod tests {
     }
 
     #[test]
+    fn threaded_falls_back_to_scalar_on_small_or_degenerate() {
+        // Regression: rows < threads used to clamp to one-row-per-thread
+        // spawns; degenerate dimensions must not panic either. The
+        // fallback must stay bit-identical to scalar.
+        let mut rng = crate::util::rng::Pcg64::new(31);
+        let be = Threaded::new(8);
+        let pool = Pool::new(8);
+        // fewer output rows than threads
+        let a = rand_tensor(&mut rng, 3, 5);
+        let b = rand_tensor(&mut rng, 5, 4);
+        assert_eq!(be.matmul(&a, &b), Scalar.matmul(&a, &b));
+        assert_eq!(pool.matmul(&a, &b), Scalar.matmul(&a, &b));
+        let x = rand_tensor(&mut rng, 9, 4); // k=4 < 8 threads
+        assert_eq!(be.gram(&x), Scalar.gram(&x));
+        assert_eq!(pool.gram(&x), Scalar.gram(&x));
+        // zero-sized dimensions: no panic, scalar-equal results
+        for (m, k, n) in [(0, 4, 3), (4, 0, 3), (4, 3, 0), (0, 0, 0)] {
+            let a = rand_tensor(&mut rng, m, k);
+            let b = rand_tensor(&mut rng, k, n);
+            assert_eq!(be.matmul(&a, &b), Scalar.matmul(&a, &b), "{}x{}x{}", m, k, n);
+            assert_eq!(pool.matmul(&a, &b), Scalar.matmul(&a, &b), "{}x{}x{}", m, k, n);
+            assert_eq!(be.gram(&a), Scalar.gram(&a), "gram {}x{}", m, k);
+            assert_eq!(pool.gram(&a), Scalar.gram(&a), "gram {}x{}", m, k);
+        }
+    }
+
+    #[test]
     fn par_map_preserves_index_order() {
         for be in alt_backends() {
             let got = be.par_map_f64(23, &|i| (i * i) as f64);
@@ -265,13 +337,22 @@ mod tests {
     fn selection_and_configuration() {
         assert_eq!(select("scalar", 0).unwrap().name(), "scalar");
         assert_eq!(select("blocked", 2).unwrap().name(), "blocked");
+        assert_eq!(select("simd", 2).unwrap().name(), "simd");
         let t = select("threaded", 5).unwrap();
         assert_eq!(t.name(), "threaded");
         assert_eq!(t.threads(), 5);
         assert_eq!(t.describe(), "threaded(x5)");
+        let p = select("pool", 3).unwrap();
+        assert_eq!(p.name(), "pool");
+        assert_eq!(p.threads(), 3);
+        assert_eq!(p.describe(), "pool(x3)");
         assert!(select("gpu", 1).is_err());
+        // every registered name constructs, and the registry is complete
+        for &name in all_names() {
+            assert_eq!(select(name, 2).unwrap().name(), name);
+        }
         // auto resolves to a real backend for any thread count
-        assert!(["blocked", "threaded"].contains(&select("auto", 1).unwrap().name()));
+        assert!(["simd", "pool"].contains(&select("auto", 1).unwrap().name()));
         assert_eq!(select("auto", 4).unwrap().threads(), 4);
 
         // install + restore the process-wide handle

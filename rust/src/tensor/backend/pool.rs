@@ -1,0 +1,309 @@
+//! Persistent worker-pool backend: the row-partitioned parallelism of
+//! `threaded` without the per-call scoped-thread spawn.
+//!
+//! `threaded` pays an OS thread spawn + join per `matmul`/`gram`/
+//! `par_map_f64` call, which dominates on the many-small-sites pattern
+//! the calibrator produces (ROADMAP flagged exactly this). `Pool` spawns
+//! its workers once, at construction; every call afterwards only pushes
+//! closures onto a shared injector queue and wakes sleeping workers.
+//!
+//! Determinism contract — identical to `threaded`: `matmul` and `gram`
+//! partition output rows and every output element is produced by one
+//! worker running the shared scalar kernel, so results are bit-identical
+//! to `scalar` (asserted by `tests/backend_conformance.rs`); `sum_sq`
+//! combines fixed-chunk partials in ascending chunk order (deterministic,
+//! <= 1e-5 relative vs scalar above the serial threshold).
+//!
+//! Nested fan-out (a pooled `par_map_f64` job that itself calls a pooled
+//! `matmul`, as calibration -> gram does) cannot deadlock: a thread
+//! waiting on its own batch *helps*, draining jobs from the injector
+//! until its batch completes, so queued work always makes progress even
+//! when every worker is blocked inside a nested wait.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::scalar;
+use super::{Backend, PAR_MIN_LEN};
+use crate::tensor::Tensor;
+
+/// A lifetime-erased unit of work on the injector queue.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A borrowed task in one batch (lifetime-bound to the caller's data).
+type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// The shared injector: a FIFO of jobs plus the worker wakeup signal.
+struct Injector {
+    queue: Mutex<InjectorState>,
+    ready: Condvar,
+}
+
+struct InjectorState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Injector {
+    fn push(&self, job: Job) {
+        self.queue.lock().unwrap().jobs.push_back(job);
+        self.ready.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().unwrap().jobs.pop_front()
+    }
+
+    /// Worker body: run jobs until shutdown is flagged *and* the queue
+    /// has drained (never strands a batch someone is waiting on).
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut st = self.queue.lock().unwrap();
+                loop {
+                    if let Some(j) = st.jobs.pop_front() {
+                        break Some(j);
+                    }
+                    if st.shutdown {
+                        break None;
+                    }
+                    st = self.ready.wait(st).unwrap();
+                }
+            };
+            match job {
+                Some(j) => j(),
+                None => return,
+            }
+        }
+    }
+}
+
+/// Completion tracking for one `run_batch` call.
+struct BatchState {
+    progress: Mutex<BatchProgress>,
+    done: Condvar,
+}
+
+struct BatchProgress {
+    pending: usize,
+    /// First caught panic payload, re-raised to the batch owner so the
+    /// original message survives (as it would under scoped threads).
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
+/// Persistent worker pool implementing [`Backend`]. Workers are spawned
+/// at construction and joined on drop (replacing the process-wide handle
+/// via `configure`/`set_active` drops the old pool once idle).
+pub struct Pool {
+    injector: Arc<Injector>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(InjectorState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        // A 1-thread pool runs every op on the serial path (the `t <= 1`
+        // guards below), so a worker would idle forever — don't spawn one.
+        let workers = if threads <= 1 {
+            Vec::new()
+        } else {
+            (0..threads)
+                .map(|i| {
+                    let inj = Arc::clone(&injector);
+                    std::thread::Builder::new()
+                        .name(format!("intfpqsim-pool-{}", i))
+                        .spawn(move || inj.worker_loop())
+                        .expect("spawn pool worker")
+                })
+                .collect()
+        };
+        Pool { injector, workers, threads }
+    }
+
+    /// Run a batch of borrowing closures on the pool and block until all
+    /// complete. The caller participates (helps drain the injector) while
+    /// it waits — that is what makes nested batches deadlock-free.
+    fn run_batch<'env>(&self, tasks: Vec<Task<'env>>) {
+        let state = Arc::new(BatchState {
+            progress: Mutex::new(BatchProgress { pending: tasks.len(), panic: None }),
+            done: Condvar::new(),
+        });
+        for task in tasks {
+            let st = Arc::clone(&state);
+            let wrapped: Task<'env> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(task));
+                let mut p = st.progress.lock().unwrap();
+                p.pending -= 1;
+                if let Err(payload) = result {
+                    p.panic.get_or_insert(payload);
+                }
+                if p.pending == 0 {
+                    st.done.notify_all();
+                }
+            });
+            // SAFETY: `run_batch` does not return until `pending` reaches
+            // zero, i.e. until every task has finished running, so no task
+            // outlives the `'env` borrows it captures. Erasing the
+            // lifetime only lets the job sit on the 'static injector queue
+            // in the meantime (the standard scoped-pool technique).
+            let wrapped = unsafe { std::mem::transmute::<Task<'env>, Job>(wrapped) };
+            self.injector.push(wrapped);
+        }
+        loop {
+            // Return as soon as OUR batch is done — before picking up any
+            // foreign job, so a finished caller never rides out another
+            // batch's long task.
+            let mut p = state.progress.lock().unwrap();
+            if p.pending == 0 {
+                let panic = p.panic.take();
+                drop(p);
+                if let Some(payload) = panic {
+                    resume_unwind(payload);
+                }
+                return;
+            }
+            drop(p);
+            // Help: run queued jobs (ours or a nested batch's) instead of
+            // sleeping while work is available.
+            if let Some(job) = self.injector.try_pop() {
+                job();
+                continue;
+            }
+            // The timeout bounds the window of the benign race where the
+            // last job completes between the try_pop miss and this wait.
+            let p = state.progress.lock().unwrap();
+            if p.pending > 0 {
+                let (guard, _timeout) =
+                    state.done.wait_timeout(p, Duration::from_micros(200)).unwrap();
+                drop(guard);
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.injector.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.injector.ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Backend for Pool {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        // Unlike `threaded` (whose fallback avoids OS thread spawns),
+        // enqueueing on the pool costs microseconds, so few-row shapes
+        // keep partial parallelism: clamp workers to rows rather than
+        // dropping to serial. Serial only when there is nothing to split.
+        let t = self.threads.min(m);
+        if t <= 1 || n == 0 || k == 0 {
+            scalar::matmul_rows(&a.data, &b.data, &mut out, k, n);
+        } else {
+            let rows_per = m.div_ceil(t);
+            let (adata, bdata) = (&a.data[..], &b.data[..]);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let i0 = ci * rows_per;
+                let rows = chunk.len() / n;
+                let ablock = &adata[i0 * k..(i0 + rows) * k];
+                tasks.push(Box::new(move || scalar::matmul_rows(ablock, bdata, chunk, k, n)));
+            }
+            self.run_batch(tasks);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn gram(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let mut out = vec![0.0f32; k * k];
+        let t = self.threads.min(k);
+        if t <= 1 || m == 0 {
+            scalar::gram_rows(&x.data, m, k, 0, &mut out);
+        } else {
+            let rows_per = k.div_ceil(t);
+            let xdata = &x.data[..];
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            for (ci, chunk) in out.chunks_mut(rows_per * k).enumerate() {
+                let i0 = ci * rows_per;
+                tasks.push(Box::new(move || scalar::gram_rows(xdata, m, k, i0, chunk)));
+            }
+            self.run_batch(tasks);
+        }
+        Tensor::new(vec![k, k], out)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        let t = self.threads;
+        if t <= 1 || y.len() < PAR_MIN_LEN {
+            scalar::axpy_range(alpha, x, y);
+            return;
+        }
+        let chunk = y.len().div_ceil(t);
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+        for (xc, yc) in x.chunks(chunk).zip(y.chunks_mut(chunk)) {
+            tasks.push(Box::new(move || scalar::axpy_range(alpha, xc, yc)));
+        }
+        self.run_batch(tasks);
+    }
+
+    fn sum_sq(&self, x: &[f32]) -> f64 {
+        let t = self.threads;
+        if t <= 1 || x.len() < PAR_MIN_LEN {
+            return scalar::sum_sq_range(x);
+        }
+        let chunk = x.len().div_ceil(t);
+        let mut partials = vec![0.0f64; x.len().div_ceil(chunk)];
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+        for (xc, p) in x.chunks(chunk).zip(partials.iter_mut()) {
+            tasks.push(Box::new(move || *p = scalar::sum_sq_range(xc)));
+        }
+        self.run_batch(tasks);
+        partials.iter().sum()
+    }
+
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64> {
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out = vec![0.0f64; n];
+        let chunk = n.div_ceil(t);
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+        for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+            tasks.push(Box::new(move || {
+                for (j, slot) in oc.iter_mut().enumerate() {
+                    *slot = f(ci * chunk + j);
+                }
+            }));
+        }
+        self.run_batch(tasks);
+        out
+    }
+}

@@ -1,0 +1,143 @@
+//! Portable 4-lane-unrolled backend: the scalar kernels with their inner
+//! loops unrolled four wide, written so the optimizer can keep four
+//! independent fused `+= a*b` streams in flight (SSE/NEON width without
+//! any platform intrinsics).
+//!
+//! Determinism contract — *bit-identical to `scalar` on every op*:
+//!
+//! * `matmul`/`gram`: the unroll runs across **output columns** (four
+//!   independent output elements per step), never across the reduction
+//!   dimension. Per output element the `+= a*b` updates still arrive in
+//!   the exact ascending order of the scalar kernel, so the reduction
+//!   tree is fixed and the results match `scalar` bit for bit — including
+//!   NaN propagation and the `a == 0.0` skip.
+//! * `axpy`: element-wise, so any unroll is trivially bit-identical.
+//! * `sum_sq`: the four f64 squares of a lane are computed together, but
+//!   they are folded into the single accumulator in ascending index
+//!   order — the same left fold as `scalar`, hence bit-identical (a
+//!   stronger guarantee than the 1e-5 reduction tolerance the trait
+//!   requires, and what lets the conformance harness assert bits).
+
+use super::Backend;
+use crate::tensor::Tensor;
+
+/// Unroll width (f32 lanes). Matches the narrowest ubiquitous SIMD
+/// register (SSE/NEON, 128-bit).
+const LANES: usize = 4;
+
+/// C rows = A rows @ B with the inner column loop 4-lane unrolled.
+/// Same signature/contract as `scalar::matmul_rows`.
+pub(crate) fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            axpy_lanes(av, brow, crow);
+        }
+    }
+}
+
+/// Output rows [i0, ..) of A^T A with the inner column loop unrolled.
+/// Same signature/contract as `scalar::gram_rows` (including the
+/// `GRAM_RB` row blocking, so the per-element r-order is unchanged).
+pub(crate) fn gram_rows(x: &[f32], m: usize, k: usize, i0: usize, out_rows: &mut [f32]) {
+    let ni = if k == 0 { 0 } else { out_rows.len() / k };
+    let mut r0 = 0;
+    while r0 < m {
+        let rend = (r0 + super::scalar::GRAM_RB).min(m);
+        for ii in 0..ni {
+            let i = i0 + ii;
+            let orow = &mut out_rows[ii * k..(ii + 1) * k];
+            for r in r0..rend {
+                let row = &x[r * k..(r + 1) * k];
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                axpy_lanes(xi, row, orow);
+            }
+        }
+        r0 = rend;
+    }
+}
+
+/// y += alpha * x, 4-lane unrolled. The lanes are disjoint elements, so
+/// this is bit-identical to `scalar::axpy_range` for any length.
+pub(crate) fn axpy_lanes(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let mut yit = y.chunks_exact_mut(LANES);
+    let mut xit = x.chunks_exact(LANES);
+    for (y4, x4) in (&mut yit).zip(&mut xit) {
+        y4[0] += alpha * x4[0];
+        y4[1] += alpha * x4[1];
+        y4[2] += alpha * x4[2];
+        y4[3] += alpha * x4[3];
+    }
+    for (yv, &xv) in yit.into_remainder().iter_mut().zip(xit.remainder()) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Sum of squares: lane squares computed four at a time, folded into the
+/// accumulator in ascending index order — the identical left fold (and
+/// therefore identical bits) as `scalar::sum_sq_range`.
+pub(crate) fn sum_sq_lanes(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut it = x.chunks_exact(LANES);
+    for c in &mut it {
+        let s0 = (c[0] as f64) * (c[0] as f64);
+        let s1 = (c[1] as f64) * (c[1] as f64);
+        let s2 = (c[2] as f64) * (c[2] as f64);
+        let s3 = (c[3] as f64) * (c[3] as f64);
+        acc += s0;
+        acc += s1;
+        acc += s2;
+        acc += s3;
+    }
+    for &v in it.remainder() {
+        acc += (v as f64) * (v as f64);
+    }
+    acc
+}
+
+/// Single-threaded 4-lane-unrolled backend.
+pub struct Simd;
+
+impl Backend for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        matmul_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn gram(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let mut out = vec![0.0f32; k * k];
+        gram_rows(&x.data, m, k, 0, &mut out);
+        Tensor::new(vec![k, k], out)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        axpy_lanes(alpha, x, y);
+    }
+
+    fn sum_sq(&self, x: &[f32]) -> f64 {
+        sum_sq_lanes(x)
+    }
+
+    fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64> {
+        (0..n).map(f).collect()
+    }
+}

@@ -9,14 +9,16 @@
 //! chunk partials in ascending chunk order — deterministic for a given
 //! thread count, but a different f64 association than the scalar
 //! left-fold, hence the documented 1e-5 relative tolerance.
+//!
+//! Fallback rule: when there are fewer output rows than threads (each
+//! spawn would own ~1 row, so spawn overhead dominates) or any dimension
+//! is zero, the call runs the scalar kernel directly — no threads are
+//! spawned. Covered by the regression tests here and by the shape grid
+//! in `tests/backend_conformance.rs`.
 
 use super::scalar;
-use super::Backend;
+use super::{Backend, PAR_MIN_LEN};
 use crate::tensor::Tensor;
-
-/// Below this many elements, reductions/axpy stay single-threaded (the
-/// result is then bit-identical to scalar as well).
-const PAR_MIN_LEN: usize = 1 << 15;
 
 pub struct Threaded {
     threads: usize,
@@ -46,8 +48,8 @@ impl Backend for Threaded {
         let (k2, n) = b.dims2();
         assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
         let mut out = vec![0.0f32; m * n];
-        let t = self.threads.min(m.max(1));
-        if t <= 1 || n == 0 {
+        let t = self.threads;
+        if t <= 1 || n == 0 || k == 0 || m < t {
             scalar::matmul_rows(&a.data, &b.data, &mut out, k, n);
         } else {
             let rows_per = m.div_ceil(t);
@@ -67,8 +69,8 @@ impl Backend for Threaded {
     fn gram(&self, x: &Tensor) -> Tensor {
         let (m, k) = x.dims2();
         let mut out = vec![0.0f32; k * k];
-        let t = self.threads.min(k.max(1));
-        if t <= 1 {
+        let t = self.threads;
+        if t <= 1 || m == 0 || k < t {
             scalar::gram_rows(&x.data, m, k, 0, &mut out);
         } else {
             let rows_per = k.div_ceil(t);

@@ -1,9 +1,11 @@
 //! Host-side tensor math: the pieces GPTQ/SmoothQuant/RPTQ and the
 //! calibrator need. The hot paths (`matmul`, `gram`, reductions) route
 //! through the process-wide execution backend (`tensor::backend`):
-//! scalar reference, cache-tiled, or row-partitioned threads — all
-//! bit-exact for matmul/gram, cross-checked in the backend parity tests
-//! and against naive loops here.
+//! scalar reference, cache-tiled, 4-lane SIMD-unrolled, row-partitioned
+//! threads, or a persistent worker pool — all bit-exact for matmul/gram,
+//! cross-checked in the backend parity tests, the cross-backend
+//! conformance harness (`tests/backend_conformance.rs`) and against
+//! naive loops here.
 
 use super::backend;
 use super::Tensor;

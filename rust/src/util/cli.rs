@@ -104,12 +104,17 @@ mod tests {
     fn backend_and_threads_options() {
         // the exact global-flag shapes main.rs feeds to backend::configure
         let a = Args::parse(
-            &sv(&["eval", "--backend", "threaded", "--threads", "8", "--model", "m"]),
+            &sv(&["eval", "--backend", "pool", "--threads", "8", "--model", "m"]),
             &[],
         )
         .unwrap();
-        assert_eq!(a.get("backend", "auto"), "threaded");
+        assert_eq!(a.get("backend", "auto"), "pool");
         assert_eq!(a.get_usize("threads", 0), 8);
+        // every registered backend name round-trips through the parser
+        for name in ["scalar", "blocked", "simd", "threaded", "pool", "auto"] {
+            let a = Args::parse(&sv(&["eval", "--backend", name]), &[]).unwrap();
+            assert_eq!(a.get("backend", "auto"), name);
+        }
         // `=` form; unparsable thread counts fall back to the default (0
         // = all cores); a dangling --backend is a parse error
         let d = Args::parse(&sv(&["eval", "--backend=blocked", "--threads=junk"]), &[])

@@ -1,0 +1,362 @@
+//! Cross-backend conformance harness.
+//!
+//! The paper's core promise — trustworthy simulation of many numeric
+//! formats — only holds if every execution path produces identical
+//! quantizer math. This suite enumerates **every registered backend**
+//! (`backend::all_names()`) at several thread counts and asserts
+//! bit-equality against the `scalar` reference across:
+//!
+//! * a shape grid: empty / 1x1 / non-square / prime-sized / tall-thin /
+//!   wide-flat / multi-worker sizes;
+//! * adversarial values: subnormals, signed zeros, infinities, NaN
+//!   propagation, and catastrophic-cancellation sums (which fail under
+//!   *any* reordering of a reduction — the sharpest probe of the fixed
+//!   reduction-order contract).
+//!
+//! A backend added later only needs a line in `all_names()`/`select()`
+//! to inherit the whole matrix. Ops with a documented tolerance
+//! (`sum_sq` above the parallel threshold) are checked at 1e-5 relative
+//! on finite data instead; serial configurations of every backend must
+//! still match bit-for-bit.
+//!
+//! Run against one backend end-to-end (through the `Tensor` API) with
+//! e.g. `INTFPQSIM_BACKEND=pool INTFPQSIM_THREADS=4 cargo test`.
+
+use std::sync::Arc;
+
+use intfpqsim::tensor::backend::{self, Backend, Pool, Scalar};
+use intfpqsim::tensor::Tensor;
+use intfpqsim::util::prop;
+use intfpqsim::util::rng::Pcg64;
+
+/// Adversarial f32 values: signed zeros, infinities, NaN, subnormals,
+/// extremes, and magnitudes that force catastrophic cancellation.
+const ADVERSARIAL: [f32; 16] = [
+    0.0,
+    -0.0,
+    1.0,
+    -1.0,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    f32::NAN,
+    f32::MIN_POSITIVE, // smallest normal
+    1.0e-42,           // subnormal
+    -1.0e-42,
+    f32::MAX,
+    -f32::MAX,
+    1.0e8,
+    -1.0e8,
+    1.0e-8,
+    16_777_216.0, // 2^24: integer-precision edge of f32
+];
+
+/// (m, k, n) matmul shapes; gram uses the (m, k) prefix.
+const SHAPES: [(usize, usize, usize); 10] = [
+    (0, 0, 0),
+    (0, 4, 3),
+    (4, 0, 3),
+    (4, 3, 0),
+    (1, 1, 1),
+    (3, 5, 2),    // non-square, rows < threads (forces fallback path)
+    (7, 11, 13),  // prime-sized
+    (64, 3, 5),   // tall/thin
+    (3, 48, 37),  // wide/flat
+    (33, 17, 29), // enough rows/cols for a real 8-way partition
+];
+
+/// How a test tensor is filled.
+#[derive(Clone, Copy)]
+enum Fill {
+    /// Pure adversarial cycle (every element from `ADVERSARIAL`).
+    Adversarial,
+    /// Heavy-tailed random with adversarial values sprinkled in.
+    Mixed,
+    /// Alternating huge/small magnitudes: any reduction reordering
+    /// changes the result, so bit-equality proves the order is fixed.
+    Cancellation,
+}
+
+impl Fill {
+    fn name(self) -> &'static str {
+        match self {
+            Fill::Adversarial => "adversarial",
+            Fill::Mixed => "mixed",
+            Fill::Cancellation => "cancellation",
+        }
+    }
+
+    fn vec(self, rng: &mut Pcg64, len: usize, salt: usize) -> Vec<f32> {
+        match self {
+            Fill::Adversarial => (0..len)
+                .map(|i| ADVERSARIAL[(i * 7 + salt) % ADVERSARIAL.len()])
+                .collect(),
+            Fill::Mixed => {
+                let mut v = prop::heavy_vec(rng, len, 1.0);
+                for (i, slot) in v.iter_mut().enumerate() {
+                    if i % 7 == salt % 7 {
+                        *slot = ADVERSARIAL[(i / 7 + salt) % ADVERSARIAL.len()];
+                    }
+                }
+                v
+            }
+            Fill::Cancellation => (0..len)
+                .map(|i| match (i + salt) % 4 {
+                    0 => 1.0e8,
+                    1 => 1.0 + (i % 13) as f32,
+                    2 => -1.0e8,
+                    _ => -(2.0 + (i % 11) as f32),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// All (label, backend) pairs under test: every registered name, and for
+/// the parallel backends several worker counts.
+fn backends_under_test() -> Vec<(String, Arc<dyn Backend>)> {
+    let mut out = Vec::new();
+    for &name in backend::all_names() {
+        // Build the 3-worker instance first; if the backend reports a
+        // single worker anyway it is serial and the thread count is
+        // irrelevant, so that one instance covers the whole name (no
+        // throwaway probe constructions).
+        let be3 = backend::select(name, 3).unwrap();
+        if be3.threads() == 1 {
+            out.push((format!("{}[serial]", be3.describe()), be3));
+            continue;
+        }
+        out.push((format!("{}[t=3]", be3.describe()), be3));
+        for threads in [1usize, 8] {
+            let be = backend::select(name, threads).unwrap();
+            out.push((format!("{}[t={}]", be.describe(), threads), be));
+        }
+    }
+    out
+}
+
+/// Bit-equality with a NaN escape hatch: any NaN payload is accepted as
+/// long as both sides are NaN (payload bits are not part of the
+/// contract; *where* NaNs appear is).
+fn assert_bits_f32(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{}: length", ctx);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let same = g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan());
+        assert!(
+            same,
+            "{}: idx {}: got {:e} ({:#010x}) want {:e} ({:#010x})",
+            ctx,
+            i,
+            g,
+            g.to_bits(),
+            w,
+            w.to_bits()
+        );
+    }
+}
+
+fn assert_bits_f64(got: f64, want: f64, ctx: &str) {
+    let same = got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan());
+    assert!(
+        same,
+        "{}: got {:e} ({:#018x}) want {:e} ({:#018x})",
+        ctx,
+        got,
+        got.to_bits(),
+        want,
+        want.to_bits()
+    );
+}
+
+#[test]
+fn matmul_bit_identical_across_backends_shapes_and_values() {
+    let mut rng = Pcg64::new(0xC04F);
+    let under_test = backends_under_test();
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for &(m, k, n) in &SHAPES {
+            let a = Tensor::new(vec![m, k], fill.vec(&mut rng, m * k, 1));
+            let b = Tensor::new(vec![k, n], fill.vec(&mut rng, k * n, 5));
+            let want = Scalar.matmul(&a, &b);
+            for (label, be) in &under_test {
+                let got = be.matmul(&a, &b);
+                assert_eq!(got.shape, want.shape);
+                let ctx = format!("matmul {} {}x{}x{} {}", label, m, k, n, fill.name());
+                assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_bit_identical_across_backends_shapes_and_values() {
+    let mut rng = Pcg64::new(0x6A40);
+    let under_test = backends_under_test();
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for &(m, k, _) in &SHAPES {
+            let x = Tensor::new(vec![m, k], fill.vec(&mut rng, m * k, 3));
+            let want = Scalar.gram(&x);
+            for (label, be) in &under_test {
+                let got = be.gram(&x);
+                assert_eq!(got.shape, want.shape);
+                let ctx = format!("gram {} {}x{} {}", label, m, k, fill.name());
+                assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn axpy_bit_identical_for_every_length_and_value() {
+    // axpy is element-wise: chunked parallelism cannot change per-element
+    // math, so bit-equality must hold at EVERY length, including above
+    // the parallel threshold, for every backend.
+    let mut rng = Pcg64::new(0xA417);
+    let under_test = backends_under_test();
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for len in [0usize, 1, 3, 4, 5, 257, (1 << 15) + 7] {
+            let x = fill.vec(&mut rng, len, 2);
+            let y0 = fill.vec(&mut rng, len, 9);
+            let mut want = y0.clone();
+            Scalar.axpy(-1.25, &x, &mut want);
+            for (label, be) in &under_test {
+                let mut got = y0.clone();
+                be.axpy(-1.25, &x, &mut got);
+                let ctx = format!("axpy {} len {} {}", label, len, fill.name());
+                assert_bits_f32(&got, &want, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn sum_sq_bit_identical_serial_tolerant_parallel() {
+    let mut rng = Pcg64::new(0x5059);
+    let under_test = backends_under_test();
+    // Below the parallel threshold every backend takes an order-preserving
+    // path: bit-equality even on NaN/inf/subnormal/cancellation data.
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for len in [0usize, 1, 3, 4, 5, 257, 4099] {
+            let x = fill.vec(&mut rng, len, 4);
+            let want = Scalar.sum_sq(&x);
+            for (label, be) in &under_test {
+                let ctx = format!("sum_sq {} len {} {}", label, len, fill.name());
+                assert_bits_f64(be.sum_sq(&x), want, &ctx);
+            }
+        }
+    }
+    // Above the threshold: serial configurations (threads() == 1, which
+    // includes simd — its unroll keeps the scalar fold order) stay
+    // bit-identical; parallel ones are held to the documented 1e-5.
+    let big = prop::heavy_vec(&mut rng, (1 << 15) + 777, 1.0);
+    let want = Scalar.sum_sq(&big);
+    for (label, be) in &under_test {
+        let got = be.sum_sq(&big);
+        if be.threads() == 1 {
+            assert_bits_f64(got, want, &format!("sum_sq {} big serial", label));
+        } else {
+            let rel = (got - want).abs() / want.abs().max(1e-12);
+            assert!(rel <= 1e-5, "sum_sq {}: rel err {}", label, rel);
+        }
+    }
+}
+
+#[test]
+fn par_map_preserves_index_order_everywhere() {
+    for (label, be) in backends_under_test() {
+        for n in [0usize, 1, 7, 23, 64] {
+            let got = be.par_map_f64(n, &|i| (i * i + 1) as f64);
+            let want: Vec<f64> = (0..n).map(|i| (i * i + 1) as f64).collect();
+            assert_eq!(got, want, "{} n={}", label, n);
+        }
+    }
+}
+
+#[test]
+fn nan_propagates_identically() {
+    // NaN must appear exactly where the scalar kernel puts one: a NaN in
+    // A poisons its whole output row; a NaN in B poisons a column —
+    // except where the kernel's documented a==0 skip masks it.
+    let mut a = Tensor::zeros(vec![3, 3]);
+    for v in a.data.iter_mut() {
+        *v = 1.0;
+    }
+    a.set2(1, 1, f32::NAN);
+    let mut b = Tensor::zeros(vec![3, 3]);
+    for v in b.data.iter_mut() {
+        *v = 2.0;
+    }
+    let want = Scalar.matmul(&a, &b);
+    for r in 0..3 {
+        for c in 0..3 {
+            assert_eq!(want.at2(r, c).is_nan(), r == 1, "scalar NaN row placement");
+        }
+    }
+    for (label, be) in backends_under_test() {
+        let got = be.matmul(&a, &b);
+        assert_bits_f32(&got.data, &want.data, &format!("nan prop {}", label));
+    }
+}
+
+#[test]
+fn active_backend_matches_scalar_through_tensor_api() {
+    // The env-selected backend (CI runs this file once per
+    // INTFPQSIM_BACKEND x INTFPQSIM_THREADS cell) must agree with scalar
+    // when driven through the public Tensor entry points.
+    let mut rng = Pcg64::new(0xAC71);
+    let a = Tensor::new(vec![24, 17], prop::heavy_vec(&mut rng, 24 * 17, 1.0));
+    let b = Tensor::new(vec![17, 19], prop::heavy_vec(&mut rng, 17 * 19, 1.0));
+    let desc = backend::active().describe();
+    assert_bits_f32(
+        &a.matmul(&b).data,
+        &Scalar.matmul(&a, &b).data,
+        &format!("Tensor::matmul via {}", desc),
+    );
+    assert_bits_f32(
+        &a.gram().data,
+        &Scalar.gram(&a).data,
+        &format!("Tensor::gram via {}", desc),
+    );
+}
+
+#[test]
+fn pool_survives_reuse_across_many_small_calls() {
+    // The persistent pool must give identical answers on the 500th call
+    // as on the first (no worker death, no queue corruption) — the
+    // many-small-sites calibration pattern it exists to accelerate.
+    let mut rng = Pcg64::new(0x9001);
+    let pool = Pool::new(4);
+    let a = Tensor::new(vec![12, 9], prop::heavy_vec(&mut rng, 12 * 9, 1.0));
+    let b = Tensor::new(vec![9, 7], prop::heavy_vec(&mut rng, 9 * 7, 1.0));
+    let want = Scalar.matmul(&a, &b);
+    for call in 0..500 {
+        let got = pool.matmul(&a, &b);
+        assert_bits_f32(&got.data, &want.data, &format!("pool call {}", call));
+    }
+}
+
+#[test]
+fn pool_nested_fan_out_does_not_deadlock() {
+    // calibration -> par_map over sites -> gram per site is a nested
+    // fan-out on ONE pool; the help-while-waiting design must complete it
+    // even when every worker is blocked inside an inner batch.
+    let mut rng = Pcg64::new(0x9002);
+    let pool = Pool::new(2);
+    let x = Tensor::new(vec![16, 8], prop::heavy_vec(&mut rng, 16 * 8, 1.0));
+    let want = Scalar.gram(&x).data[0] as f64;
+    let got = pool.par_map_f64(8, &|_| pool.gram(&x).data[0] as f64);
+    assert_eq!(got, vec![want; 8]);
+}
+
+#[test]
+fn pool_propagates_task_panics_and_keeps_working() {
+    let pool = Pool::new(2);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.par_map_f64(8, &|i| {
+            assert!(i != 5, "deliberate test panic");
+            i as f64
+        })
+    }));
+    assert!(r.is_err(), "panic in a pool task must propagate to the caller");
+    // the pool (and its workers) must remain fully usable afterwards
+    let got = pool.par_map_f64(6, &|i| i as f64 * 3.0);
+    assert_eq!(got, vec![0.0, 3.0, 6.0, 9.0, 12.0, 15.0]);
+}
