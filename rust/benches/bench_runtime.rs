@@ -1,61 +1,117 @@
-//! L3 runtime benchmarks: artifact execution throughput (the simulator's
-//! request hot path) and the coordinator overhead budget. §Perf target:
-//! PJRT execute should dominate; session/upload overhead < 10%.
+//! L3 runtime benchmarks: end-to-end artifact evaluation throughput on
+//! the native executor, compared across every tensor backend.
 //!
-//!   cargo bench --bench bench_runtime
+//! The native path needs no on-disk artifacts (the manifest is
+//! synthesized), so unlike the PJRT era this bench always runs — in CI
+//! it writes `BENCH_runtime.json` (tokens/sec per model × quant ×
+//! backend) which the workflow uploads as an artifact, seeding the
+//! repo's end-to-end perf trajectory.
+//!
+//!   cargo bench --bench bench_runtime [-- --fast]
 
 use intfpqsim::corpus::TextCorpus;
 use intfpqsim::model;
 use intfpqsim::runtime::{Runtime, Val};
+use intfpqsim::tensor::backend;
+use intfpqsim::util::json::Json;
 use intfpqsim::util::timer::bench;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return;
-    }
+    let fast = std::env::args().any(|a| a == "--fast");
     let rt = Runtime::new("artifacts").unwrap();
     let corpus = TextCorpus::new(intfpqsim::corpus::TEXT_SEED);
+    let threads = backend::env_threads();
+    let (warmup, iters) = if fast { (1, 3) } else { (3, 12) };
 
-    for model_name in ["sim-opt-125m", "sim-opt-2.7b"] {
+    let models: &[&str] = if fast {
+        &["sim-opt-125m"]
+    } else {
+        &["sim-opt-125m", "sim-opt-2.7b"]
+    };
+    let quants = ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64"];
+
+    let mut rows: Vec<(String, String, String, f64, f64)> = Vec::new();
+    for model_name in models {
         let cfg = rt.manifest.model(model_name).unwrap().clone();
         let params = model::init_params(&cfg, 1);
         let sticky = model::param_vals(&cfg, &params).unwrap();
         let toks_per_batch = (cfg.batch * cfg.seq) as f64;
+        let tb = corpus.eval_batch(0, cfg.batch, cfg.seq);
+        let tv = Val::I32(tb.tokens.clone(), vec![cfg.batch, cfg.seq]);
 
         println!("\n== {} (batch {} x seq {}) ==", model_name, cfg.batch, cfg.seq);
-        for quant in ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64", "abfp_w4a4_n128"] {
-            let id = format!("{}/eval_{}", model_name, quant);
-            let mut st = sticky.clone();
-            if quant != "fp32" {
-                for s in &cfg.sites {
-                    st.insert(
-                        format!("smooth.{}", s.name),
-                        Val::F32(vec![1.0; s.dim], vec![s.dim]),
-                    );
+        for &be_name in backend::all_names() {
+            backend::configure(be_name, threads).unwrap();
+            let be_desc = backend::active().describe();
+            for quant in quants {
+                let id = format!("{}/eval_{}", model_name, quant);
+                let mut st = sticky.clone();
+                if quant != "fp32" {
+                    for s in &cfg.sites {
+                        st.insert(
+                            format!("smooth.{}", s.name),
+                            Val::F32(vec![1.0; s.dim], vec![s.dim]),
+                        );
+                    }
                 }
+                // session open includes the one-time weight QDQ prep
+                let sess = rt.session(&id, &st).unwrap();
+                let s = bench(warmup, iters, || {
+                    std::hint::black_box(sess.run(std::slice::from_ref(&tv)).unwrap());
+                });
+                let label = format!("{} @ {}", quant, be_desc);
+                println!("{}", s.report(&label, Some((toks_per_batch, "tok"))));
+                rows.push((
+                    model_name.to_string(),
+                    quant.to_string(),
+                    be_desc.clone(),
+                    s.mean_ms(),
+                    toks_per_batch / (s.mean_ns / 1e9),
+                ));
             }
-            let sess = rt.session(&id, &st).unwrap();
-            let tb = corpus.eval_batch(0, cfg.batch, cfg.seq);
-            let tv = Val::I32(tb.tokens.clone(), vec![cfg.batch, cfg.seq]);
-            let s = bench(3, 15, || {
-                std::hint::black_box(sess.run(std::slice::from_ref(&tv)).unwrap());
-            });
-            println!("{}", s.report(quant, Some((toks_per_batch, "tok"))));
         }
+        backend::configure("auto", threads).unwrap();
 
-        // coordinator overhead: data-generation + upload only (no execute)
-        let s = bench(3, 50, || {
+        // coordinator overhead: data generation only (no execute)
+        let s = bench(1, 20, || {
             let tb = corpus.eval_batch(1, cfg.batch, cfg.seq);
             std::hint::black_box(Val::I32(tb.tokens, vec![cfg.batch, cfg.seq]));
         });
         println!("{}", s.report("coordinator-side batch prep", Some((toks_per_batch, "tok"))));
 
-        // session-open cost (weight upload) — amortized once per config
+        // session-open cost (weight conversion + QDQ prep) — amortized
+        // once per config
         let s = bench(1, 5, || {
             let id = format!("{}/eval_fp32", model_name);
             std::hint::black_box(rt.session(&id, &sticky).unwrap());
         });
-        println!("{}", s.report("session open (weight upload)", None));
+        println!("{}", s.report("session open (weight prep)", None));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("runtime_native".into())),
+        ("fast", Json::Bool(fast)),
+        ("executor", Json::Str(rt.executor_name().into())),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "eval_throughput",
+            Json::Arr(
+                rows.iter()
+                    .map(|(m, q, be, ms, tps)| {
+                        Json::obj(vec![
+                            ("model", Json::Str(m.clone())),
+                            ("quant", Json::Str(q.clone())),
+                            ("backend", Json::Str(be.clone())),
+                            ("mean_ms", Json::Num(*ms)),
+                            ("toks_per_s", Json::Num(*tps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_runtime.json", json.pretty()) {
+        Ok(()) => println!("\nwrote BENCH_runtime.json"),
+        Err(e) => eprintln!("could not write BENCH_runtime.json: {}", e),
     }
 }

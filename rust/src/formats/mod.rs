@@ -210,15 +210,50 @@ pub fn fp_qdq(x: f32, scale: f32, fmt: FpFmt) -> f32 {
     fp_round(x * scale, fmt) / scale
 }
 
-/// Static integer QDQ from a clip range alpha (per-tensor broadcast).
+/// Dispatch a row-local QDQ kernel over (rows, `row`) data: serial below
+/// the parallel threshold, otherwise split across the active backend's
+/// workers with row-aligned chunk boundaries. The kernel runs the same
+/// per-element math on disjoint pieces either way, so results are
+/// bit-identical to the serial loop (regression-tested against every
+/// backend in `tests/backend_conformance.rs`).
+fn bulk_rows(
+    x: &mut [f32],
+    row: usize,
+    be: &dyn crate::tensor::backend::Backend,
+    kernel: &(dyn Fn(&mut [f32]) + Sync),
+) {
+    let t = be.threads();
+    if row == 0 || t <= 1 || x.len() < crate::tensor::backend::PAR_MIN_LEN {
+        kernel(x);
+        return;
+    }
+    let rows = x.len() / row;
+    let per = rows.div_ceil(t).max(1) * row;
+    be.par_chunks_f32(x, per, &|_, piece| kernel(piece));
+}
+
+/// Static integer QDQ from a clip range alpha (per-tensor broadcast),
+/// on the active backend for large tensors.
 pub fn static_int_qdq(x: &mut [f32], alpha: &[f32], bits: u32) {
+    static_int_qdq_with(x, alpha, bits, crate::tensor::backend::active().as_ref());
+}
+
+/// [`static_int_qdq`] on an explicit backend handle.
+pub fn static_int_qdq_with(
+    x: &mut [f32],
+    alpha: &[f32],
+    bits: u32,
+    be: &dyn crate::tensor::backend::Backend,
+) {
     let qmax = IntFmt::new(bits).qmax();
     if alpha.len() == 1 {
         let a = if alpha[0] > 0.0 { alpha[0] } else { 1.0 };
         let s = qmax / a;
-        for v in x.iter_mut() {
-            *v = int_qdq(*v, s, qmax);
-        }
+        bulk_rows(x, 1, be, &|piece: &mut [f32]| {
+            for v in piece.iter_mut() {
+                *v = int_qdq(*v, s, qmax);
+            }
+        });
     } else {
         // per-channel over the last axis; x is (rows, alpha.len())
         let k = alpha.len();
@@ -227,32 +262,64 @@ pub fn static_int_qdq(x: &mut [f32], alpha: &[f32], bits: u32) {
             .iter()
             .map(|&a| qmax / if a > 0.0 { a } else { 1.0 })
             .collect();
-        for row in x.chunks_mut(k) {
-            for (v, &s) in row.iter_mut().zip(scales.iter()) {
+        bulk_rows(x, k, be, &|piece: &mut [f32]| {
+            for row in piece.chunks_mut(k) {
+                for (v, &s) in row.iter_mut().zip(scales.iter()) {
+                    *v = int_qdq(*v, s, qmax);
+                }
+            }
+        });
+    }
+}
+
+/// Per-output-channel max weight QDQ: w is (dout, din) row-major, on
+/// the active backend for large tensors.
+pub fn pcmax_weight_qdq(w: &mut [f32], din: usize, bits: u32) {
+    pcmax_weight_qdq_with(w, din, bits, crate::tensor::backend::active().as_ref());
+}
+
+/// [`pcmax_weight_qdq`] on an explicit backend handle.
+pub fn pcmax_weight_qdq_with(
+    w: &mut [f32],
+    din: usize,
+    bits: u32,
+    be: &dyn crate::tensor::backend::Backend,
+) {
+    let qmax = IntFmt::new(bits).qmax();
+    bulk_rows(w, din, be, &|piece: &mut [f32]| {
+        for row in piece.chunks_mut(din) {
+            let a = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let a = if a > 0.0 { a } else { 1.0 };
+            let s = qmax / a;
+            for v in row.iter_mut() {
                 *v = int_qdq(*v, s, qmax);
             }
         }
-    }
-}
-
-/// Per-output-channel max weight QDQ: w is (dout, din) row-major.
-pub fn pcmax_weight_qdq(w: &mut [f32], din: usize, bits: u32) {
-    let qmax = IntFmt::new(bits).qmax();
-    for row in w.chunks_mut(din) {
-        let a = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        let a = if a > 0.0 { a } else { 1.0 };
-        let s = qmax / a;
-        for v in row.iter_mut() {
-            *v = int_qdq(*v, s, qmax);
-        }
-    }
+    });
 }
 
 /// ABFP QDQ along the last axis: x is (rows, k) row-major, k % n == 0.
-/// Mirrors ref.abfp_qdq exactly (BF16 scales, zero-vector -> 1).
+/// Mirrors ref.abfp_qdq exactly (BF16 scales, zero-vector -> 1); bulk
+/// tensors fan out across the active backend.
 pub fn abfp_qdq(x: &mut [f32], k: usize, fmt: Format, n: usize) {
+    abfp_qdq_with(x, k, fmt, n, crate::tensor::backend::active().as_ref());
+}
+
+/// [`abfp_qdq`] on an explicit backend handle.
+pub fn abfp_qdq_with(
+    x: &mut [f32],
+    k: usize,
+    fmt: Format,
+    n: usize,
+    be: &dyn crate::tensor::backend::Backend,
+) {
     assert_eq!(k % n, 0, "ABFP needs k % n == 0 (k={}, n={})", k, n);
     assert_eq!(x.len() % k, 0);
+    bulk_rows(x, k, be, &|piece: &mut [f32]| abfp_rows(piece, k, fmt, n));
+}
+
+/// The serial per-row ABFP kernel (row-local, chunking-invariant).
+fn abfp_rows(x: &mut [f32], k: usize, fmt: Format, n: usize) {
     for row in x.chunks_mut(k) {
         for chunk in row.chunks_mut(n) {
             let alpha = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));

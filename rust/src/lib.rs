@@ -6,9 +6,11 @@
 //! * L1 (build-time Python): Pallas fake-quant kernels (`python/compile/kernels/`);
 //! * L2 (build-time Python): JAX model families with quantizer-wrapped
 //!   layers, lowered to `artifacts/*.hlo.txt`;
-//! * L3 (this crate): the simulator product — runtime, calibration, PTQ
-//!   methods (SmoothQuant/GPTQ/RPTQ), training drivers, experiment
-//!   coordinator reproducing every table/figure of the paper.
+//! * L3 (this crate): the simulator product — runtime (a native host
+//!   executor plus the PJRT path behind one [`runtime::executor`] seam;
+//!   `auto` = native, fully offline), calibration, PTQ methods
+//!   (SmoothQuant/GPTQ/RPTQ), training drivers, experiment coordinator
+//!   reproducing every table/figure of the paper.
 //!
 //! Host-side tensor math (Hessian builds, weight transforms, metrics)
 //! executes on a pluggable backend — scalar / cache-blocked / 4-lane

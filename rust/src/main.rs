@@ -11,7 +11,9 @@
 //!
 //! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
 //! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose,
-//! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (0 = all cores).
+//! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (0 = all cores),
+//! --executor native|pjrt|auto (auto = native host execution, no
+//! artifacts required).
 
 use anyhow::{bail, Context, Result};
 
@@ -30,7 +32,8 @@ const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|r
   repro calibrate --model sim-opt-125m
   repro experiment --id table1 | --all  [--fast] [--force]
   repro report
-global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]";
+global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]
+        [--executor native|pjrt|auto]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -56,6 +59,7 @@ fn make_sim(a: &Args) -> Result<Simulator> {
         sim.opts.eval_batches = 4;
         sim.opts.pass1_programs = 16;
         sim.opts.qat_opts.steps = 8;
+        sim.opts.pretrain_opts.steps = 60;
     }
     Ok(sim)
 }
@@ -87,6 +91,13 @@ fn run(argv: &[String]) -> Result<()> {
             a.get_usize("threads", 0),
         )
         .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // Runtime executor: native host evaluation (default) or the PJRT
+    // compiled-artifact path. Only explicit flags override, so the
+    // INTFPQSIM_EXECUTOR environment selection stays in effect.
+    if a.options.contains_key("executor") {
+        intfpqsim::runtime::executor::configure(a.get("executor", "auto"))
+            .map_err(|e| anyhow::anyhow!(e))?;
     }
     match a.command.as_str() {
         "list" => {

@@ -27,6 +27,22 @@ pub fn site_weight_param(site: &str) -> Result<String> {
     Ok(format!("{}.{}", layer, w))
 }
 
+/// The bias parameter of each quantized site (the native executor binds
+/// both halves of every site linear).
+pub fn site_bias_param(site: &str) -> Result<String> {
+    let (layer, kind) = site
+        .split_once('.')
+        .ok_or_else(|| anyhow::anyhow!("bad site name {}", site))?;
+    let b = match kind {
+        "qkv" => "bqkv",
+        "attn_out" => "bo",
+        "fc1" => "bfc1",
+        "fc2" => "bfc2",
+        other => bail!("unknown site kind {}", other),
+    };
+    Ok(format!("{}.{}", layer, b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -36,5 +52,8 @@ mod tests {
         assert_eq!(site_weight_param("l0.qkv").unwrap(), "l0.wqkv");
         assert_eq!(site_weight_param("l3.fc2").unwrap(), "l3.wfc2");
         assert!(site_weight_param("nonsense").is_err());
+        assert_eq!(site_bias_param("l0.qkv").unwrap(), "l0.bqkv");
+        assert_eq!(site_bias_param("l2.attn_out").unwrap(), "l2.bo");
+        assert!(site_bias_param("l0.what").is_err());
     }
 }

@@ -6,6 +6,8 @@
 //! for norms, log-normal embedding gain — the outlier-channel injector,
 //! DESIGN.md §1).
 
+pub mod net;
+
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

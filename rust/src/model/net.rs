@@ -1,0 +1,1319 @@
+//! Host-side reference network: the forward (and backward) computation
+//! of the three simulated architectures, mirroring
+//! `python/compile/models/{opt,bert,vit}.py` + `common.py`.
+//!
+//! The native executor (`runtime::native`) reconstructs each artifact's
+//! computation from the manifest with these functions: embedding (with
+//! the log-normal outlier gains), pre-LN blocks whose four linears are
+//! quantizer-wrapped (QDQ via `formats::`, wiring from the registry
+//! mirror), fp32 attention internals, and the per-task heads. Every
+//! matmul routes through the caller's tensor-backend handle, so the
+//! `pool`/`simd` backends accelerate evaluation end to end.
+//!
+//! Training support is a hand-rolled reverse pass over a [`Tape`] of
+//! forward intermediates. QDQ sites follow the PWL straight-through
+//! estimator (paper Eqn 5); with ABFP the per-vector absmax clip makes
+//! the PWL mask all-ones (`quantizers.py` notes), so gradients pass
+//! through the QDQ unchanged — the only wirings the train artifacts use
+//! (`fp32`, `qat_*`) are exactly those.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::registry::{QuantKind, QuantSpec, QuantWiring};
+use crate::tensor::backend::Backend;
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+
+const LN_EPS: f32 = 1e-5;
+const MASK_NEG: f32 = -1e30;
+
+/// One quantized site, prepared for execution: the weight QDQ is
+/// pre-applied and the weight stored transposed (din, dout) so the hot
+/// loop is `x_q @ wq_t` on the backend.
+pub struct SiteCtx {
+    pub wq_t: Tensor,
+    pub bias: Vec<f32>,
+    pub aq: QuantSpec,
+    pub oq: QuantSpec,
+    pub smooth: Option<Vec<f32>>,
+    pub alpha: Option<Vec<f32>>,
+}
+
+/// Layer index of a `l{i}.{kind}` site name.
+fn site_layer(site: &str) -> Result<usize> {
+    site.strip_prefix('l')
+        .and_then(|rest| rest.split_once('.'))
+        .and_then(|(li, _)| li.parse().ok())
+        .with_context(|| format!("bad site name {:?}", site))
+}
+
+/// Build every site's execution context: effective per-layer wiring
+/// (mixed-precision overrides), QDQ-transformed weights, smoothing and
+/// clip-range runtime inputs.
+pub fn build_sites(
+    cfg: &ModelCfg,
+    wiring: &QuantWiring,
+    params: &TensorStore,
+    smooth: &BTreeMap<String, Vec<f32>>,
+    alpha: &BTreeMap<String, Vec<f32>>,
+    be: &dyn Backend,
+) -> Result<BTreeMap<String, SiteCtx>> {
+    let mut out = BTreeMap::new();
+    for site in &cfg.sites {
+        let lw = wiring.for_layer(site_layer(&site.name)?, cfg.layers);
+        let wname = crate::methods::site_weight_param(&site.name)?;
+        let bname = crate::methods::site_bias_param(&site.name)?;
+        let mut wq = params.expect(&wname)?.clone();
+        let (_, din) = wq.dims2();
+        anyhow::ensure!(
+            din == site.dim,
+            "site {} dim {} vs weight din {}",
+            site.name,
+            site.dim,
+            din
+        );
+        lw.wq.apply_with(&mut wq.data, din, None, be)?;
+        out.insert(
+            site.name.clone(),
+            SiteCtx {
+                wq_t: wq.transpose(),
+                bias: params.expect(&bname)?.data.clone(),
+                aq: lw.aq,
+                oq: lw.oq,
+                smooth: smooth.get(&site.name).cloned(),
+                alpha: alpha.get(&site.name).cloned(),
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// The data tensor feeding one forward pass.
+pub enum NetInput<'a> {
+    /// (B, S) token ids (opt/bert).
+    Tokens(&'a [i32]),
+    /// (B, H, W, C) pixels (vit).
+    Images(&'a [f32]),
+}
+
+/// (batch, rows-per-batch-item) of the encoded sequence.
+pub fn seq_rows(cfg: &ModelCfg) -> (usize, usize) {
+    if cfg.arch == "vit" {
+        let np = (cfg.image / cfg.patch.max(1)) * (cfg.image / cfg.patch.max(1));
+        (cfg.batch, np + 1)
+    } else {
+        (cfg.batch, cfg.seq)
+    }
+}
+
+// --- small dense helpers ---------------------------------------------------
+
+fn col_sum(x: &Tensor) -> Vec<f32> {
+    let (m, n) = x.dims2();
+    let mut out = vec![0.0f32; n];
+    for r in 0..m {
+        for (o, &v) in out.iter_mut().zip(x.row(r)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn add_assign(dst: &mut Tensor, src: &Tensor) {
+    debug_assert_eq!(dst.shape, src.shape);
+    for (d, &s) in dst.data.iter_mut().zip(src.data.iter()) {
+        *d += s;
+    }
+}
+
+fn add_slice(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d += s;
+    }
+}
+
+/// Copy rows r0..r0+rows, cols c0..c0+cols out of a (_, stride) tensor.
+fn take_block(x: &Tensor, r0: usize, rows: usize, c0: usize, cols: usize) -> Tensor {
+    let (_, stride) = x.dims2();
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let src = &x.data[(r0 + r) * stride + c0..(r0 + r) * stride + c0 + cols];
+        out[r * cols..(r + 1) * cols].copy_from_slice(src);
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// dst[r0+r, c0..c0+cols] += block[r, :] into a (_, stride) tensor.
+fn add_block(dst: &mut Tensor, block: &Tensor, r0: usize, c0: usize) {
+    let (rows, cols) = block.dims2();
+    let stride = dst.shape[1];
+    for r in 0..rows {
+        let d = &mut dst.data[(r0 + r) * stride + c0..(r0 + r) * stride + c0 + cols];
+        add_slice(d, block.row(r));
+    }
+}
+
+// --- layer norm ------------------------------------------------------------
+
+pub struct LnTape {
+    xhat: Tensor,
+    inv_std: Vec<f32>,
+}
+
+/// Pre-LN layer norm (`common.py layer_norm`), population variance.
+fn layer_norm(
+    x: &Tensor,
+    g: &[f32],
+    b: &[f32],
+    want_tape: bool,
+) -> (Tensor, Option<LnTape>) {
+    let (m, d) = x.dims2();
+    let mut out = vec![0.0f32; m * d];
+    let mut xhat = vec![0.0f32; if want_tape { m * d } else { 0 }];
+    let mut inv_std = vec![0.0f32; if want_tape { m } else { 0 }];
+    for r in 0..m {
+        let row = x.row(r);
+        let mut mu = 0.0f64;
+        for &v in row {
+            mu += v as f64;
+        }
+        let mu = (mu / d as f64) as f32;
+        let mut var = 0.0f64;
+        for &v in row {
+            let c = (v - mu) as f64;
+            var += c * c;
+        }
+        let var = (var / d as f64) as f32;
+        let istd = 1.0 / (var + LN_EPS).sqrt();
+        let dst = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            let xh = (row[j] - mu) * istd;
+            dst[j] = xh * g[j] + b[j];
+            if want_tape {
+                xhat[r * d + j] = xh;
+            }
+        }
+        if want_tape {
+            inv_std[r] = istd;
+        }
+    }
+    let tape = want_tape.then(|| LnTape {
+        xhat: Tensor::new(vec![m, d], xhat),
+        inv_std,
+    });
+    (Tensor::new(vec![m, d], out), tape)
+}
+
+/// dL/dx, dL/dg, dL/db of [`layer_norm`].
+fn layer_norm_bwd(dy: &Tensor, lt: &LnTape, g: &[f32]) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (m, d) = dy.dims2();
+    let mut dx = vec![0.0f32; m * d];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    for r in 0..m {
+        let dyr = dy.row(r);
+        let xh = lt.xhat.row(r);
+        let istd = lt.inv_std[r];
+        let mut m1 = 0.0f64; // mean(dxhat)
+        let mut m2 = 0.0f64; // mean(dxhat * xhat)
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh as f64;
+            m2 += (dxh * xh[j]) as f64;
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        let m1 = (m1 / d as f64) as f32;
+        let m2 = (m2 / d as f64) as f32;
+        let dst = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dst[j] = istd * (dxh - m1 - xh[j] * m2);
+        }
+    }
+    (Tensor::new(vec![m, d], dx), dg, db)
+}
+
+// --- quantizer-wrapped linear ----------------------------------------------
+
+pub struct LinTape {
+    /// (N, din) post-smooth, post-QDQ input — the matmul operand.
+    xq: Tensor,
+}
+
+/// `common.py qlinear`: y = f_q^x(x · smooth) @ f_q^w(W)^T + b, with the
+/// optional output quantizer f_q^y. `capture` collects the raw (pre-
+/// smoothing, pre-quantizer) activations for the calibration engine.
+fn qlinear(
+    x: &Tensor,
+    site: &SiteCtx,
+    be: &dyn Backend,
+    want_tape: bool,
+    capture: Option<(&mut Vec<(String, Tensor)>, String)>,
+) -> Result<(Tensor, Option<LinTape>)> {
+    if let Some((cap, name)) = capture {
+        cap.push((name, x.clone()));
+    }
+    let mut xq = x.clone();
+    if let Some(sm) = &site.smooth {
+        xq.scale_cols(sm);
+    }
+    let (n, din) = xq.dims2();
+    site.aq.apply_with(&mut xq.data, din, site.alpha.as_deref(), be)?;
+    let mut y = be.matmul(&xq, &site.wq_t);
+    let dout = site.wq_t.shape[1];
+    anyhow::ensure!(site.bias.len() == dout, "bias len {} vs dout {}", site.bias.len(), dout);
+    for r in 0..n {
+        add_slice(y.row_mut(r), &site.bias);
+    }
+    if site.oq.kind != QuantKind::None {
+        site.oq.apply_with(&mut y.data, dout, None, be)?;
+    }
+    Ok((y, want_tape.then(|| LinTape { xq })))
+}
+
+/// Gradients of [`qlinear`] under the PWL straight-through estimator
+/// with an all-ones mask (ABFP / no-quant wirings — the train configs).
+fn qlinear_bwd(
+    dy: &Tensor,
+    lt: &LinTape,
+    site: &SiteCtx,
+    be: &dyn Backend,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let db = col_sum(dy);
+    // dW (dout, din) = dy^T @ x_q
+    let dw = be.matmul(&dy.transpose(), &lt.xq);
+    // dx (N, din) = dy @ W_q, then back through the smoothing multiply
+    let mut dx = be.matmul(dy, &site.wq_t.transpose());
+    if let Some(sm) = &site.smooth {
+        dx.scale_cols(sm);
+    }
+    (dx, dw, db)
+}
+
+// --- attention --------------------------------------------------------------
+
+pub struct AttnTape {
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    /// Softmax probabilities per (batch, head), each (S, S).
+    probs: Vec<Tensor>,
+}
+
+/// Multi-head attention over packed (N, 3d) qkv projections, fp32
+/// internals (`common.py attention`).
+fn attention(
+    qkv: &Tensor,
+    b: usize,
+    s: usize,
+    heads: usize,
+    causal: bool,
+    be: &dyn Backend,
+    want_tape: bool,
+) -> (Tensor, Option<AttnTape>) {
+    let d = qkv.shape[1] / 3;
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Tensor::zeros(vec![b * s, d]);
+    let mut probs = Vec::with_capacity(if want_tape { b * heads } else { 0 });
+    for bi in 0..b {
+        for h in 0..heads {
+            let r0 = bi * s;
+            let c = h * hd;
+            let qh = take_block(qkv, r0, s, c, hd);
+            let kh = take_block(qkv, r0, s, d + c, hd);
+            let vh = take_block(qkv, r0, s, 2 * d + c, hd);
+            let mut scores = be.matmul(&qh, &kh.transpose());
+            for v in scores.data.iter_mut() {
+                *v *= scale;
+            }
+            if causal {
+                for i in 0..s {
+                    for j in (i + 1)..s {
+                        scores.data[i * s + j] = MASK_NEG;
+                    }
+                }
+            }
+            // row softmax with max-shift
+            for i in 0..s {
+                let row = scores.row_mut(i);
+                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                let mut sum = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                    sum += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= sum;
+                }
+            }
+            let oh = be.matmul(&scores, &vh);
+            add_block(&mut out, &oh, r0, c);
+            if want_tape {
+                probs.push(scores);
+            }
+        }
+    }
+    let tape = want_tape.then(|| AttnTape {
+        q: take_block(qkv, 0, b * s, 0, d),
+        k: take_block(qkv, 0, b * s, d, d),
+        v: take_block(qkv, 0, b * s, 2 * d, d),
+        probs,
+    });
+    (out, tape)
+}
+
+/// d qkv (N, 3d) given d out (N, d).
+fn attention_bwd(
+    dout: &Tensor,
+    at: &AttnTape,
+    b: usize,
+    s: usize,
+    heads: usize,
+    be: &dyn Backend,
+) -> Tensor {
+    let d = dout.shape[1];
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = Tensor::zeros(vec![b * s, 3 * d]);
+    for bi in 0..b {
+        for h in 0..heads {
+            let r0 = bi * s;
+            let c = h * hd;
+            let doh = take_block(dout, r0, s, c, hd);
+            let ph = &at.probs[bi * heads + h];
+            let kh = take_block(&at.k, r0, s, c, hd);
+            let qh = take_block(&at.q, r0, s, c, hd);
+            let vh = take_block(&at.v, r0, s, c, hd);
+            // dV = P^T dO ; dP = dO V^T
+            let dvh = be.matmul(&ph.transpose(), &doh);
+            let dp = be.matmul(&doh, &vh.transpose());
+            // softmax backward: dS = P ∘ (dP − rowsum(dP ∘ P))
+            let mut ds = Tensor::zeros(vec![s, s]);
+            for i in 0..s {
+                let pr = ph.row(i);
+                let dpr = dp.row(i);
+                let mut dot = 0.0f64;
+                for j in 0..s {
+                    dot += (dpr[j] * pr[j]) as f64;
+                }
+                let dot = dot as f32;
+                let dst = ds.row_mut(i);
+                for j in 0..s {
+                    dst[j] = pr[j] * (dpr[j] - dot);
+                }
+            }
+            // masked positions have P == 0, so dS is already 0 there.
+            let mut dqh = be.matmul(&ds, &kh);
+            let mut dkh = be.matmul(&ds.transpose(), &qh);
+            for v in dqh.data.iter_mut() {
+                *v *= scale;
+            }
+            for v in dkh.data.iter_mut() {
+                *v *= scale;
+            }
+            add_block(&mut dqkv, &dqh, r0, c);
+            add_block(&mut dqkv, &dkh, r0, d + c);
+            add_block(&mut dqkv, &dvh, r0, 2 * d + c);
+        }
+    }
+    dqkv
+}
+
+// --- transformer block ------------------------------------------------------
+
+pub struct BlockTape {
+    ln1: LnTape,
+    qkv: LinTape,
+    attn: AttnTape,
+    wo: LinTape,
+    ln2: LnTape,
+    fc1: LinTape,
+    /// fc1 pre-activation (N, d_ff) for the ReLU mask.
+    relu_in: Tensor,
+    fc2: LinTape,
+}
+
+struct BlockSites<'a> {
+    qkv: &'a SiteCtx,
+    attn_out: &'a SiteCtx,
+    fc1: &'a SiteCtx,
+    fc2: &'a SiteCtx,
+}
+
+fn block_sites<'a>(
+    sites: &'a BTreeMap<String, SiteCtx>,
+    li: usize,
+) -> Result<BlockSites<'a>> {
+    let get = |kind: &str| {
+        sites
+            .get(&format!("l{}.{}", li, kind))
+            .with_context(|| format!("site l{}.{} missing", li, kind))
+    };
+    Ok(BlockSites {
+        qkv: get("qkv")?,
+        attn_out: get("attn_out")?,
+        fc1: get("fc1")?,
+        fc2: get("fc2")?,
+    })
+}
+
+/// Pre-LN transformer block (`common.py block`).
+#[allow(clippy::too_many_arguments)]
+fn block_fwd(
+    x: Tensor,
+    li: usize,
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    sites: &BTreeMap<String, SiteCtx>,
+    causal: bool,
+    be: &dyn Backend,
+    want_tape: bool,
+    capture: Option<&mut Vec<(String, Tensor)>>,
+) -> Result<(Tensor, Option<BlockTape>)> {
+    let (b, s) = seq_rows(cfg);
+    let bs = block_sites(sites, li)?;
+    let p = |n: &str| params.expect(&format!("l{}.{}", li, n));
+    let mut cap = capture;
+
+    let (h, t_ln1) = layer_norm(&x, &p("ln1_g")?.data, &p("ln1_b")?.data, want_tape);
+    let (qkv, t_qkv) =
+        qlinear(&h, bs.qkv, be, want_tape, cap_arg(&mut cap, format!("l{}.qkv", li)))?;
+    let (a, t_attn) = attention(&qkv, b, s, cfg.heads, causal, be, want_tape);
+    let (a2, t_wo) = qlinear(
+        &a,
+        bs.attn_out,
+        be,
+        want_tape,
+        cap_arg(&mut cap, format!("l{}.attn_out", li)),
+    )?;
+    let mut x_mid = x;
+    add_assign(&mut x_mid, &a2);
+
+    let (h2, t_ln2) = layer_norm(&x_mid, &p("ln2_g")?.data, &p("ln2_b")?.data, want_tape);
+    let (f1, t_fc1) =
+        qlinear(&h2, bs.fc1, be, want_tape, cap_arg(&mut cap, format!("l{}.fc1", li)))?;
+    let mut r = f1.clone();
+    for v in r.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let (f2, t_fc2) =
+        qlinear(&r, bs.fc2, be, want_tape, cap_arg(&mut cap, format!("l{}.fc2", li)))?;
+    let mut x_out = x_mid;
+    add_assign(&mut x_out, &f2);
+
+    let tape = if want_tape {
+        Some(BlockTape {
+            ln1: t_ln1.unwrap(),
+            qkv: t_qkv.unwrap(),
+            attn: t_attn.unwrap(),
+            wo: t_wo.unwrap(),
+            ln2: t_ln2.unwrap(),
+            fc1: t_fc1.unwrap(),
+            relu_in: f1,
+            fc2: t_fc2.unwrap(),
+        })
+    } else {
+        None
+    };
+    Ok((x_out, tape))
+}
+
+/// Reborrow the optional capture sink for one `qlinear` call.
+fn cap_arg<'x>(
+    cap: &'x mut Option<&mut Vec<(String, Tensor)>>,
+    name: String,
+) -> Option<(&'x mut Vec<(String, Tensor)>, String)> {
+    cap.as_mut().map(|c| (&mut **c, name))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_bwd(
+    dx_out: Tensor,
+    bt: &BlockTape,
+    li: usize,
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    sites: &BTreeMap<String, SiteCtx>,
+    grads: &mut TensorStore,
+    be: &dyn Backend,
+) -> Result<Tensor> {
+    let (b, s) = seq_rows(cfg);
+    let bs = block_sites(sites, li)?;
+    let add_grad = |grads: &mut TensorStore, name: String, dw: Tensor| {
+        add_assign(grads.get_mut(&name).unwrap(), &dw);
+    };
+    let add_vec = |grads: &mut TensorStore, name: String, dv: &[f32]| {
+        add_slice(&mut grads.get_mut(&name).unwrap().data, dv);
+    };
+
+    // x_out = x_mid + fc2(relu(fc1(ln2(x_mid))))
+    let (dr, dw_fc2, db_fc2) = qlinear_bwd(&dx_out, &bt.fc2, bs.fc2, be);
+    add_grad(grads, format!("l{}.wfc2", li), dw_fc2);
+    add_vec(grads, format!("l{}.bfc2", li), &db_fc2);
+    let mut df1 = dr;
+    for (g, &pre) in df1.data.iter_mut().zip(bt.relu_in.data.iter()) {
+        if pre <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    let (dh2, dw_fc1, db_fc1) = qlinear_bwd(&df1, &bt.fc1, bs.fc1, be);
+    add_grad(grads, format!("l{}.wfc1", li), dw_fc1);
+    add_vec(grads, format!("l{}.bfc1", li), &db_fc1);
+    let g2 = &params.expect(&format!("l{}.ln2_g", li))?.data;
+    let (dx_ln2, dg2, db2) = layer_norm_bwd(&dh2, &bt.ln2, g2);
+    add_vec(grads, format!("l{}.ln2_g", li), &dg2);
+    add_vec(grads, format!("l{}.ln2_b", li), &db2);
+    let mut dx_mid = dx_out;
+    add_assign(&mut dx_mid, &dx_ln2);
+
+    // x_mid = x_in + wo(attention(qkv(ln1(x_in))))
+    let (da, dw_wo, db_wo) = qlinear_bwd(&dx_mid, &bt.wo, bs.attn_out, be);
+    add_grad(grads, format!("l{}.wo", li), dw_wo);
+    add_vec(grads, format!("l{}.bo", li), &db_wo);
+    let dqkv = attention_bwd(&da, &bt.attn, b, s, cfg.heads, be);
+    let (dh, dw_qkv, db_qkv) = qlinear_bwd(&dqkv, &bt.qkv, bs.qkv, be);
+    add_grad(grads, format!("l{}.wqkv", li), dw_qkv);
+    add_vec(grads, format!("l{}.bqkv", li), &db_qkv);
+    let g1 = &params.expect(&format!("l{}.ln1_g", li))?.data;
+    let (dx_ln1, dg1, db1) = layer_norm_bwd(&dh, &bt.ln1, g1);
+    add_vec(grads, format!("l{}.ln1_g", li), &dg1);
+    add_vec(grads, format!("l{}.ln1_b", li), &db1);
+    let mut dx_in = dx_mid;
+    add_assign(&mut dx_in, &dx_ln1);
+    Ok(dx_in)
+}
+
+// --- embeddings & heads -----------------------------------------------------
+
+fn embed_tokens(cfg: &ModelCfg, params: &TensorStore, tokens: &[i32]) -> Result<Tensor> {
+    let (b, s) = (cfg.batch, cfg.seq);
+    anyhow::ensure!(tokens.len() == b * s, "tokens len {} vs {}x{}", tokens.len(), b, s);
+    let d = cfg.d;
+    let tok = params.expect("tok_emb")?;
+    let pos = params.expect("pos_emb")?;
+    let gain = &params.expect("emb_gain")?.data;
+    let mut x = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let t = tokens[bi * s + si];
+            anyhow::ensure!(
+                (0..cfg.vocab as i32).contains(&t),
+                "token {} out of vocab {}",
+                t,
+                cfg.vocab
+            );
+            let e = &tok.data[t as usize * d..(t as usize + 1) * d];
+            let pr = &pos.data[si * d..(si + 1) * d];
+            let dst = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+            for j in 0..d {
+                dst[j] = e[j] * gain[j] + pr[j];
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b * s, d], x))
+}
+
+/// `vit.py patchify`: (B, H, W, C) → (B·P, patch·patch·C).
+fn patchify(cfg: &ModelCfg, images: &[f32]) -> Tensor {
+    let (b, img, ch, p) = (cfg.batch, cfg.image, cfg.channels, cfg.patch);
+    let per_side = img / p;
+    let pdim = p * p * ch;
+    let np = per_side * per_side;
+    let mut out = vec![0.0f32; b * np * pdim];
+    for bi in 0..b {
+        for ph in 0..per_side {
+            for pw in 0..per_side {
+                let pi = ph * per_side + pw;
+                let dst0 = (bi * np + pi) * pdim;
+                for dy in 0..p {
+                    for dx in 0..p {
+                        let src0 = ((bi * img + ph * p + dy) * img + pw * p + dx) * ch;
+                        let d0 = dst0 + (dy * p + dx) * ch;
+                        out[d0..d0 + ch].copy_from_slice(&images[src0..src0 + ch]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b * np, pdim], out)
+}
+
+fn embed_images(
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    images: &[f32],
+    be: &dyn Backend,
+) -> Result<(Tensor, Tensor)> {
+    let d = cfg.d;
+    let (b, srows) = seq_rows(cfg);
+    let np = srows - 1;
+    anyhow::ensure!(
+        images.len() == b * cfg.image * cfg.image * cfg.channels,
+        "images len {} vs expected",
+        images.len()
+    );
+    let patches = patchify(cfg, images);
+    let patch_w = params.expect("patch_w")?; // (d, pdim)
+    let patch_b = &params.expect("patch_b")?.data;
+    let cls = &params.expect("cls_tok")?.data;
+    let pos = params.expect("pos_emb")?; // (np + 1, d)
+    let gain = &params.expect("emb_gain")?.data;
+    let xe = be.matmul(&patches, &patch_w.transpose());
+    let mut x = vec![0.0f32; b * srows * d];
+    for bi in 0..b {
+        for r in 0..srows {
+            let dst = &mut x[(bi * srows + r) * d..(bi * srows + r + 1) * d];
+            if r == 0 {
+                dst.copy_from_slice(cls);
+            } else {
+                let src = xe.row(bi * np + (r - 1));
+                for j in 0..d {
+                    dst[j] = src[j] + patch_b[j];
+                }
+            }
+            let pr = &pos.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                dst[j] = (dst[j] + pr[j]) * gain[j];
+            }
+        }
+    }
+    Ok((Tensor::new(vec![b * srows, d], x), patches))
+}
+
+// --- full forward -----------------------------------------------------------
+
+pub struct Tape {
+    blocks: Vec<BlockTape>,
+    lnf: LnTape,
+    /// Final layer-norm output (N, d) — the head input.
+    pub xf: Tensor,
+    /// vit only: (B·P, pdim) patch matrix for the patch-embed backward.
+    patches: Option<Tensor>,
+}
+
+pub struct FwdOut {
+    /// Task-head output: opt → logits (N, vocab); bert → span (N, 2);
+    /// vit → class logits (B, classes).
+    pub head: Tensor,
+    pub tape: Option<Tape>,
+    /// Raw per-site input activations in model order (capture purpose).
+    pub capture: Vec<(String, Tensor)>,
+}
+
+pub fn forward(
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    sites: &BTreeMap<String, SiteCtx>,
+    input: &NetInput,
+    be: &dyn Backend,
+    want_tape: bool,
+    want_capture: bool,
+) -> Result<FwdOut> {
+    let causal = cfg.arch == "opt";
+    let mut capture: Vec<(String, Tensor)> = Vec::new();
+    let (mut x, patches) = match (cfg.arch.as_str(), input) {
+        ("vit", NetInput::Images(img)) => {
+            let (x, patches) = embed_images(cfg, params, img, be)?;
+            (x, Some(patches))
+        }
+        ("vit", _) => bail!("vit model needs image input"),
+        (_, NetInput::Tokens(toks)) => (embed_tokens(cfg, params, toks)?, None),
+        (_, _) => bail!("{} model needs token input", cfg.arch),
+    };
+    let mut blocks = Vec::with_capacity(if want_tape { cfg.layers } else { 0 });
+    for li in 0..cfg.layers {
+        let cap = if want_capture { Some(&mut capture) } else { None };
+        let (x2, bt) = block_fwd(x, li, cfg, params, sites, causal, be, want_tape, cap)?;
+        x = x2;
+        if let Some(bt) = bt {
+            blocks.push(bt);
+        }
+    }
+    let (xf, t_lnf) = layer_norm(
+        &x,
+        &params.expect("lnf_g")?.data,
+        &params.expect("lnf_b")?.data,
+        want_tape,
+    );
+
+    let head = match cfg.arch.as_str() {
+        "opt" => {
+            // tied LM head, unquantized: logits = xf @ tok_emb^T
+            be.matmul(&xf, &params.expect("tok_emb")?.transpose())
+        }
+        "bert" => {
+            let mut span = be.matmul(&xf, &params.expect("span_w")?.transpose());
+            let sb = &params.expect("span_b")?.data;
+            let n = span.shape[0];
+            for r in 0..n {
+                add_slice(span.row_mut(r), sb);
+            }
+            span
+        }
+        "vit" => {
+            let (b, srows) = seq_rows(cfg);
+            let xc = gather_cls(&xf, b, srows);
+            let mut logits = be.matmul(&xc, &params.expect("head_w")?.transpose());
+            let hb = &params.expect("head_b")?.data;
+            for r in 0..b {
+                add_slice(logits.row_mut(r), hb);
+            }
+            logits
+        }
+        other => bail!("unknown arch {}", other),
+    };
+
+    let tape = want_tape.then(|| Tape {
+        blocks,
+        lnf: t_lnf.unwrap(),
+        xf,
+        patches,
+    });
+    Ok(FwdOut { head, tape, capture })
+}
+
+fn gather_cls(xf: &Tensor, b: usize, srows: usize) -> Tensor {
+    let d = xf.shape[1];
+    let mut out = vec![0.0f32; b * d];
+    for bi in 0..b {
+        out[bi * d..(bi + 1) * d].copy_from_slice(xf.row(bi * srows));
+    }
+    Tensor::new(vec![b, d], out)
+}
+
+// --- full backward ----------------------------------------------------------
+
+/// Reverse pass: gradients of every parameter given `dhead` (the loss
+/// gradient at the head output, same shape as `FwdOut::head`). Returns a
+/// full-parameter-layout store (zeros where nothing flows).
+pub fn backward(
+    cfg: &ModelCfg,
+    params: &TensorStore,
+    sites: &BTreeMap<String, SiteCtx>,
+    input: &NetInput,
+    tape: &Tape,
+    dhead: &Tensor,
+    be: &dyn Backend,
+) -> Result<TensorStore> {
+    let mut grads = crate::model::zero_like_params(cfg);
+    let (b, srows) = seq_rows(cfg);
+    let n = b * srows;
+    let d = cfg.d;
+
+    // head backward → dxf
+    let mut dx = match cfg.arch.as_str() {
+        "opt" => {
+            let tok = params.expect("tok_emb")?;
+            let dxf = be.matmul(dhead, tok);
+            let dtok = be.matmul(&dhead.transpose(), &tape.xf);
+            add_assign(grads.get_mut("tok_emb").unwrap(), &dtok);
+            dxf
+        }
+        "bert" => {
+            let sw = params.expect("span_w")?;
+            let dxf = be.matmul(dhead, sw);
+            let dsw = be.matmul(&dhead.transpose(), &tape.xf);
+            add_assign(grads.get_mut("span_w").unwrap(), &dsw);
+            add_slice(&mut grads.get_mut("span_b").unwrap().data, &col_sum(dhead));
+            dxf
+        }
+        "vit" => {
+            let hw = params.expect("head_w")?;
+            let xc = gather_cls(&tape.xf, b, srows);
+            let dxc = be.matmul(dhead, hw); // (B, d)
+            let dhw = be.matmul(&dhead.transpose(), &xc);
+            add_assign(grads.get_mut("head_w").unwrap(), &dhw);
+            add_slice(&mut grads.get_mut("head_b").unwrap().data, &col_sum(dhead));
+            let mut dxf = Tensor::zeros(vec![n, d]);
+            for bi in 0..b {
+                dxf.row_mut(bi * srows).copy_from_slice(dxc.row(bi));
+            }
+            dxf
+        }
+        other => bail!("unknown arch {}", other),
+    };
+
+    // final LN
+    let (dx2, dgf, dbf) = layer_norm_bwd(&dx, &tape.lnf, &params.expect("lnf_g")?.data);
+    add_slice(&mut grads.get_mut("lnf_g").unwrap().data, &dgf);
+    add_slice(&mut grads.get_mut("lnf_b").unwrap().data, &dbf);
+    dx = dx2;
+
+    // blocks, in reverse
+    anyhow::ensure!(tape.blocks.len() == cfg.layers, "tape missing block records");
+    for li in (0..cfg.layers).rev() {
+        dx = block_bwd(dx, &tape.blocks[li], li, cfg, params, sites, &mut grads, be)?;
+    }
+
+    // embedding backward
+    match (cfg.arch.as_str(), input) {
+        ("vit", NetInput::Images(_)) => {
+            let gain = params.expect("emb_gain")?.data.clone();
+            let np = srows - 1;
+            // x = (concat(cls, patch_embed) + pos) * gain
+            let mut dpre = dx;
+            for r in 0..n {
+                let row = dpre.row_mut(r);
+                for j in 0..d {
+                    row[j] *= gain[j];
+                }
+            }
+            {
+                let dpos = grads.get_mut("pos_emb").unwrap();
+                for bi in 0..b {
+                    for r in 0..srows {
+                        let src = dpre.row(bi * srows + r);
+                        add_slice(&mut dpos.data[r * d..(r + 1) * d], src);
+                    }
+                }
+            }
+            {
+                let dcls = grads.get_mut("cls_tok").unwrap();
+                for bi in 0..b {
+                    add_slice(&mut dcls.data, dpre.row(bi * srows));
+                }
+            }
+            // patch rows: xe = patches @ patch_w^T + patch_b
+            let mut dxe = vec![0.0f32; b * np * d];
+            for bi in 0..b {
+                for r in 0..np {
+                    dxe[(bi * np + r) * d..(bi * np + r + 1) * d]
+                        .copy_from_slice(dpre.row(bi * srows + r + 1));
+                }
+            }
+            let dxe = Tensor::new(vec![b * np, d], dxe);
+            let patches = tape.patches.as_ref().context("vit tape missing patches")?;
+            let dpw = be.matmul(&dxe.transpose(), patches);
+            add_assign(grads.get_mut("patch_w").unwrap(), &dpw);
+            add_slice(&mut grads.get_mut("patch_b").unwrap().data, &col_sum(&dxe));
+        }
+        (_, NetInput::Tokens(tokens)) => {
+            let gain = params.expect("emb_gain")?.data.clone();
+            let (bsz, s) = (cfg.batch, cfg.seq);
+            {
+                let dtok = grads.get_mut("tok_emb").unwrap();
+                for r in 0..bsz * s {
+                    let t = tokens[r] as usize;
+                    let src = dx.row(r);
+                    let dst = &mut dtok.data[t * d..(t + 1) * d];
+                    for j in 0..d {
+                        dst[j] += src[j] * gain[j];
+                    }
+                }
+            }
+            {
+                let dpos = grads.get_mut("pos_emb").unwrap();
+                for bi in 0..bsz {
+                    for si in 0..s {
+                        add_slice(
+                            &mut dpos.data[si * d..(si + 1) * d],
+                            dx.row(bi * s + si),
+                        );
+                    }
+                }
+            }
+        }
+        _ => bail!("input kind does not match arch {}", cfg.arch),
+    }
+
+    Ok(grads)
+}
+
+// --- losses ------------------------------------------------------------------
+
+/// Sum of next-token NLLs (`opt.py nll_sum`): positions 0..S-2 predict
+/// tokens 1..S-1. Optionally also the gradient w.r.t. the (N, V) logits
+/// (softmax − onehot at predicting positions, zero at the last one).
+pub fn nll_sum_and_grad(
+    logits: &Tensor,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    want_grad: bool,
+) -> (f64, Option<Tensor>) {
+    let v = logits.shape[1];
+    let mut total = 0.0f64;
+    let mut grad = want_grad.then(|| Tensor::zeros(vec![b * s, v]));
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let r = bi * s + si;
+            let row = logits.row(r);
+            let tgt = tokens[bi * s + si + 1] as usize;
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut sum = 0.0f64;
+            for &z in row {
+                sum += ((z - mx) as f64).exp();
+            }
+            let lse = sum.ln();
+            total += lse - ((row[tgt] - mx) as f64);
+            if let Some(g) = grad.as_mut() {
+                let gr = g.row_mut(r);
+                for (j, &z) in row.iter().enumerate() {
+                    gr[j] = (((z - mx) as f64).exp() / sum) as f32;
+                }
+                gr[tgt] -= 1.0;
+            }
+        }
+    }
+    (total, grad)
+}
+
+/// Mean softmax cross-entropy over rows of (R, C) logits, plus the
+/// gradient (softmax − onehot) / R.
+pub fn softmax_ce_mean(
+    logits: &Tensor,
+    targets: &[i32],
+    want_grad: bool,
+) -> (f64, Option<Tensor>) {
+    let (rows, c) = logits.dims2();
+    let mut total = 0.0f64;
+    let mut grad = want_grad.then(|| Tensor::zeros(vec![rows, c]));
+    for r in 0..rows {
+        let row = logits.row(r);
+        let tgt = targets[r] as usize;
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0.0f64;
+        for &z in row {
+            sum += ((z - mx) as f64).exp();
+        }
+        let lse = sum.ln();
+        total += lse - ((row[tgt] - mx) as f64);
+        if let Some(g) = grad.as_mut() {
+            let gr = g.row_mut(r);
+            for (j, &z) in row.iter().enumerate() {
+                gr[j] = ((((z - mx) as f64).exp() / sum) / rows as f64) as f32;
+            }
+            gr[tgt] -= 1.0 / rows as f32;
+        }
+    }
+    (total / rows as f64, grad)
+}
+
+/// LM training loss (`aot.py lm_loss`): nll_sum / (B·(S−1)), with the
+/// logits gradient scaled the same way.
+pub fn lm_loss_and_grad(
+    logits: &Tensor,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    want_grad: bool,
+) -> (f64, Option<Tensor>) {
+    let denom = (b * (s - 1)) as f64;
+    let (nll, mut grad) = nll_sum_and_grad(logits, tokens, b, s, want_grad);
+    if let Some(g) = grad.as_mut() {
+        let inv = (1.0 / denom) as f32;
+        for v in g.data.iter_mut() {
+            *v *= inv;
+        }
+    }
+    (nll / denom, grad)
+}
+
+/// Span-QA training loss (`bert.py span_loss`): the mean of the start-
+/// and end-position cross-entropies over a (N, 2) span-logit head.
+pub fn bert_span_loss_and_grad(
+    span: &Tensor,
+    b: usize,
+    s: usize,
+    starts: &[i32],
+    ends: &[i32],
+    want_grad: bool,
+) -> (f64, Option<Tensor>) {
+    // Column c of `span` is a (B, S) logit matrix over positions.
+    let unpack = |c: usize| {
+        let mut m = vec![0.0f32; b * s];
+        for (r, slot) in m.iter_mut().enumerate() {
+            *slot = span.data[r * 2 + c];
+        }
+        Tensor::new(vec![b, s], m)
+    };
+    let (ls, gs) = softmax_ce_mean(&unpack(0), starts, want_grad);
+    let (le, ge) = softmax_ce_mean(&unpack(1), ends, want_grad);
+    let loss = 0.5 * (ls + le);
+    let grad = want_grad.then(|| {
+        let (gs, ge) = (gs.unwrap(), ge.unwrap());
+        let mut g = Tensor::zeros(vec![b * s, 2]);
+        for (r, pair) in g.data.chunks_mut(2).enumerate() {
+            pair[0] = 0.5 * gs.data[r];
+            pair[1] = 0.5 * ge.data[r];
+        }
+        g
+    });
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::runtime::registry::{quant_config, ModelDef};
+    use crate::util::rng::Pcg64;
+
+    fn tiny(arch: &'static str) -> ModelCfg {
+        let (task, vocab, image, patch, channels, classes) = match arch {
+            "opt" => ("lm", 12, 0, 0, 0, 0),
+            "bert" => ("span_qa", 12, 0, 0, 0, 0),
+            _ => ("image_cls", 0, 8, 4, 3, 5),
+        };
+        ModelDef {
+            name: "tiny",
+            arch,
+            task,
+            stands_for: "",
+            vocab,
+            d: 8,
+            l: 2,
+            heads: 2,
+            seq: if arch == "vit" { 0 } else { 6 },
+            batch: 2,
+            image,
+            patch,
+            channels,
+            classes,
+        }
+        .to_model_cfg()
+    }
+
+    fn fp32_sites(
+        cfg: &ModelCfg,
+        params: &TensorStore,
+    ) -> BTreeMap<String, SiteCtx> {
+        let be = crate::tensor::backend::active();
+        build_sites(
+            cfg,
+            &quant_config("fp32").unwrap(),
+            params,
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+            be.as_ref(),
+        )
+        .unwrap()
+    }
+
+    fn rand_tokens(cfg: &ModelCfg, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(seed);
+        (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    /// Forward + task loss for one arch, used by the finite-difference
+    /// checks (always fresh sites so weight perturbations take effect).
+    fn loss_of(cfg: &ModelCfg, params: &TensorStore, input: &NetInput, aux: &[i32]) -> f64 {
+        let be = crate::tensor::backend::active();
+        let sites = fp32_sites(cfg, params);
+        let fwd = forward(cfg, params, &sites, input, be.as_ref(), false, false).unwrap();
+        match cfg.arch.as_str() {
+            "opt" => match input {
+                NetInput::Tokens(t) => {
+                    lm_loss_and_grad(&fwd.head, t, cfg.batch, cfg.seq, false).0
+                }
+                _ => unreachable!(),
+            },
+            "bert" => {
+                let (starts, ends) = aux.split_at(cfg.batch);
+                bert_span_loss_and_grad(&fwd.head, cfg.batch, cfg.seq, starts, ends, false).0
+            }
+            _ => softmax_ce_mean(&fwd.head, aux, false).0,
+        }
+    }
+
+    fn check_grads(cfg: &ModelCfg, input: &NetInput, aux: &[i32], probe: &[&str]) {
+        let be = crate::tensor::backend::active();
+        let params = init_params(cfg, 3);
+        let sites = fp32_sites(cfg, &params);
+        let fwd = forward(cfg, &params, &sites, input, be.as_ref(), true, false).unwrap();
+        let (_, dhead) = match cfg.arch.as_str() {
+            "opt" => match input {
+                NetInput::Tokens(t) => lm_loss_and_grad(&fwd.head, t, cfg.batch, cfg.seq, true),
+                _ => unreachable!(),
+            },
+            "bert" => {
+                let (starts, ends) = aux.split_at(cfg.batch);
+                bert_span_loss_and_grad(&fwd.head, cfg.batch, cfg.seq, starts, ends, true)
+            }
+            _ => softmax_ce_mean(&fwd.head, aux, true),
+        };
+        let grads = backward(
+            cfg,
+            &params,
+            &sites,
+            input,
+            fwd.tape.as_ref().unwrap(),
+            &dhead.unwrap(),
+            be.as_ref(),
+        )
+        .unwrap();
+
+        let mut rng = Pcg64::new(17);
+        let mut checked = 0usize;
+        for &pname in probe {
+            let len = params.get(pname).unwrap().data.len();
+            for _ in 0..3 {
+                let idx = rng.below(len);
+                let eps = 1e-2f32;
+                let mut pp = params.clone();
+                pp.get_mut(pname).unwrap().data[idx] += eps;
+                let lp = loss_of(cfg, &pp, input, aux);
+                let mut pm = params.clone();
+                pm.get_mut(pname).unwrap().data[idx] -= eps;
+                let lm = loss_of(cfg, &pm, input, aux);
+                let num = (lp - lm) / (2.0 * eps as f64);
+                let ana = grads.get(pname).unwrap().data[idx] as f64;
+                let tol = 0.12 * num.abs().max(ana.abs()) + 3e-3;
+                assert!(
+                    (num - ana).abs() <= tol,
+                    "{}[{}]: numeric {} vs analytic {}",
+                    pname,
+                    idx,
+                    num,
+                    ana
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 3 * probe.len());
+    }
+
+    #[test]
+    fn opt_gradients_match_finite_difference() {
+        let cfg = tiny("opt");
+        let tokens = rand_tokens(&cfg, 5);
+        check_grads(
+            &cfg,
+            &NetInput::Tokens(&tokens),
+            &[],
+            &[
+                "tok_emb", "pos_emb", "l0.wqkv", "l0.bqkv", "l0.wo", "l1.wfc1",
+                "l1.wfc2", "l1.bfc2", "l0.ln1_b", "lnf_g", "lnf_b",
+            ],
+        );
+    }
+
+    #[test]
+    fn bert_gradients_match_finite_difference() {
+        let cfg = tiny("bert");
+        let tokens = rand_tokens(&cfg, 6);
+        let mut rng = Pcg64::new(7);
+        let mut aux: Vec<i32> =
+            (0..cfg.batch).map(|_| rng.below(cfg.seq) as i32).collect();
+        aux.extend((0..cfg.batch).map(|_| rng.below(cfg.seq) as i32));
+        check_grads(
+            &cfg,
+            &NetInput::Tokens(&tokens),
+            &aux,
+            &["span_w", "span_b", "l0.wqkv", "l1.wo", "l0.wfc1", "tok_emb"],
+        );
+    }
+
+    #[test]
+    fn vit_gradients_match_finite_difference() {
+        let cfg = tiny("vit");
+        let mut rng = Pcg64::new(8);
+        let images: Vec<f32> = (0..cfg.batch * cfg.image * cfg.image * cfg.channels)
+            .map(|_| rng.gaussian())
+            .collect();
+        let labels: Vec<i32> =
+            (0..cfg.batch).map(|_| rng.below(cfg.classes) as i32).collect();
+        check_grads(
+            &cfg,
+            &NetInput::Images(&images),
+            &labels,
+            &["head_w", "head_b", "patch_w", "patch_b", "cls_tok", "pos_emb", "l0.wqkv"],
+        );
+    }
+
+    #[test]
+    fn capture_collects_sites_in_model_order() {
+        let cfg = tiny("opt");
+        let params = init_params(&cfg, 1);
+        let sites = fp32_sites(&cfg, &params);
+        let tokens = rand_tokens(&cfg, 2);
+        let be = crate::tensor::backend::active();
+        let fwd = forward(
+            &cfg,
+            &params,
+            &sites,
+            &NetInput::Tokens(&tokens),
+            be.as_ref(),
+            false,
+            true,
+        )
+        .unwrap();
+        let names: Vec<&str> = fwd.capture.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "l0.qkv", "l0.attn_out", "l0.fc1", "l0.fc2", "l1.qkv",
+                "l1.attn_out", "l1.fc1", "l1.fc2"
+            ]
+        );
+        for (name, t) in &fwd.capture {
+            let dim = if name.ends_with("fc2") { 4 * cfg.d } else { cfg.d };
+            assert_eq!(t.shape, vec![cfg.batch * cfg.seq, dim], "{}", name);
+        }
+    }
+
+    #[test]
+    fn random_init_lm_nll_is_near_uniform() {
+        let cfg = tiny("opt");
+        let params = init_params(&cfg, 4);
+        let sites = fp32_sites(&cfg, &params);
+        let tokens = rand_tokens(&cfg, 3);
+        let be = crate::tensor::backend::active();
+        let fwd = forward(
+            &cfg,
+            &params,
+            &sites,
+            &NetInput::Tokens(&tokens),
+            be.as_ref(),
+            false,
+            false,
+        )
+        .unwrap();
+        let (nll, _) = nll_sum_and_grad(&fwd.head, &tokens, cfg.batch, cfg.seq, false);
+        let per_tok = nll / (cfg.batch * (cfg.seq - 1)) as f64;
+        let uniform = (cfg.vocab as f64).ln();
+        assert!(
+            (per_tok - uniform).abs() < 0.8,
+            "per-token NLL {} vs uniform {}",
+            per_tok,
+            uniform
+        );
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_tokens() {
+        // Changing a future token must not change earlier positions'
+        // logits (opt is causal); for bert (bidirectional) it must.
+        let cfg = tiny("opt");
+        let params = init_params(&cfg, 9);
+        let sites = fp32_sites(&cfg, &params);
+        let be = crate::tensor::backend::active();
+        let t1 = rand_tokens(&cfg, 11);
+        let mut t2 = t1.clone();
+        let s = cfg.seq;
+        t2[s - 1] = (t2[s - 1] + 1) % cfg.vocab as i32; // last token, batch row 0
+        let f1 = forward(&cfg, &params, &sites, &NetInput::Tokens(&t1), be.as_ref(), false, false)
+            .unwrap();
+        let f2 = forward(&cfg, &params, &sites, &NetInput::Tokens(&t2), be.as_ref(), false, false)
+            .unwrap();
+        let v = cfg.vocab;
+        // positions 0..S-2 of row 0 identical
+        assert_eq!(
+            f1.head.data[..(s - 1) * v],
+            f2.head.data[..(s - 1) * v],
+            "causal leak"
+        );
+        // the changed position itself differs
+        assert_ne!(
+            f1.head.data[(s - 1) * v..s * v],
+            f2.head.data[(s - 1) * v..s * v]
+        );
+    }
+}

@@ -120,6 +120,10 @@ pub struct EvalOpts {
     pub eval_batches: u64,
     pub pass1_programs: usize,
     pub qat_opts: TrainOpts,
+    /// FP32 pretraining options for `Simulator::weights` (the native
+    /// executor actually runs these steps host-side; tests and `--fast`
+    /// sweeps dial them down).
+    pub pretrain_opts: TrainOpts,
     pub seed: u64,
 }
 
@@ -129,6 +133,7 @@ impl Default for EvalOpts {
             eval_batches: eval::EVAL_BATCHES,
             pass1_programs: 64,
             qat_opts: TrainOpts { steps: 60, peak_lr: 3e-4, warmup: 6, ..Default::default() },
+            pretrain_opts: TrainOpts::default(),
             seed: 1234,
         }
     }
@@ -162,7 +167,7 @@ impl Simulator {
 
     /// FP32 weights for a model, pretraining (and caching) if needed.
     pub fn weights(&self, model_name: &str) -> Result<TensorStore> {
-        train::pretrain_cached(&self.rt, model_name, &self.ck, &TrainOpts::default())
+        train::pretrain_cached(&self.rt, model_name, &self.ck, &self.opts.pretrain_opts)
     }
 
     /// Calibration stats for (model, fp32 weights), cached in-process.

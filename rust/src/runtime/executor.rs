@@ -1,0 +1,149 @@
+//! Runtime `Executor` seam — how a [`super::Session`] actually runs.
+//!
+//! Mirrors the `tensor::backend::Backend` selection pattern: a small
+//! process-wide registry of named strategies, configurable at runtime:
+//!
+//! * env: `INTFPQSIM_EXECUTOR=native|pjrt|auto` (`auto` = `native`);
+//! * CLI: `repro ... --executor native`;
+//! * API: [`configure`].
+//!
+//! Two executors ship:
+//!
+//! * [`super::native::Native`] — evaluates each artifact host-side by
+//!   reconstructing its forward computation from the manifest (and the
+//!   Rust registry mirror), with all matmuls routed through the active
+//!   tensor backend. Works fully offline: when no artifacts directory
+//!   exists the manifest is synthesized.
+//! * [`super::pjrt::Pjrt`] — the original PJRT path (HLO text →
+//!   compile → execute). Requires built artifacts and real `xla`
+//!   bindings; under the vendored stub every execution reports "PJRT
+//!   unavailable".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::Result;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::Val;
+use crate::tensor::Tensor;
+
+/// An artifact-execution strategy. `open` binds an artifact's sticky
+/// inputs (weights, smoothing vectors, calibrated scales) into an
+/// [`ExecSession`]; everything per-batch goes through `ExecSession::run`.
+pub trait Executor {
+    fn name(&self) -> &'static str;
+
+    /// Whether this executor can run without on-disk HLO artifacts
+    /// (if so, `Runtime::new` synthesizes the manifest when absent).
+    fn offline(&self) -> bool;
+
+    fn open(
+        &self,
+        dir: &Path,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        sticky: &BTreeMap<String, Val>,
+    ) -> Result<Box<dyn ExecSession>>;
+}
+
+/// One opened artifact with its sticky inputs resident (uploaded to the
+/// device for PJRT, converted to host tensors once for native).
+pub trait ExecSession {
+    /// Execute with per-call values for the free inputs, in free-input
+    /// order. Input counts/shapes are validated by the outer `Session`.
+    fn run(&self, free: &[&Val]) -> Result<Vec<Tensor>>;
+
+    /// Replace one sticky input (position `i` of the artifact's input
+    /// list) — e.g. swap transformed weights in place. Implementations
+    /// copy only if they retain the value (PJRT uploads and moves on).
+    fn rebind(&mut self, i: usize, v: &Val) -> Result<()>;
+}
+
+/// Every registered executor name.
+pub fn all_names() -> &'static [&'static str] {
+    &["native", "pjrt"]
+}
+
+/// Resolve a user-facing name (`auto`/empty = native).
+pub fn resolve(name: &str) -> Result<&'static str, String> {
+    match name {
+        "" | "auto" | "native" => Ok("native"),
+        "pjrt" => Ok("pjrt"),
+        other => Err(format!(
+            "unknown executor {:?} (expected {}|auto)",
+            other,
+            all_names().join("|")
+        )),
+    }
+}
+
+fn registry() -> &'static RwLock<&'static str> {
+    static ACTIVE: OnceLock<RwLock<&'static str>> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let name = std::env::var("INTFPQSIM_EXECUTOR").unwrap_or_default();
+        RwLock::new(resolve(&name).unwrap_or_else(|e| {
+            crate::util::logging::log(1, &format!("{}; falling back to native", e));
+            "native"
+        }))
+    })
+}
+
+/// The executor name new `Runtime`s are built with.
+pub fn active_name() -> &'static str {
+    *registry().read().unwrap()
+}
+
+/// Parse-and-install, as the `--executor` CLI flag does.
+pub fn configure(name: &str) -> Result<(), String> {
+    let resolved = resolve(name)?;
+    *registry().write().unwrap() = resolved;
+    Ok(())
+}
+
+/// Construct an executor instance by name. Instances are per-`Runtime`
+/// (they hold non-Send state: PJRT clients, compile caches), so unlike
+/// tensor backends only the *name* is process-wide.
+pub fn select(name: &str) -> Result<Rc<dyn Executor>, String> {
+    Ok(match resolve(name)? {
+        "native" => Rc::new(super::native::Native) as Rc<dyn Executor>,
+        "pjrt" => Rc::new(super::pjrt::Pjrt::new().map_err(|e| e.to_string())?),
+        other => unreachable!("{} resolves but is not constructible", other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_names() {
+        assert_eq!(resolve("auto").unwrap(), "native");
+        assert_eq!(resolve("").unwrap(), "native");
+        assert_eq!(resolve("native").unwrap(), "native");
+        assert_eq!(resolve("pjrt").unwrap(), "pjrt");
+        assert!(resolve("tpu").is_err());
+        for &n in all_names() {
+            assert_eq!(resolve(n).unwrap(), n);
+            assert_eq!(select(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn configure_validates_and_installs() {
+        let before = active_name();
+        assert!(configure("nope").is_err());
+        assert_eq!(active_name(), before, "failed configure must not switch");
+        configure("pjrt").unwrap();
+        assert_eq!(active_name(), "pjrt");
+        configure(before).unwrap();
+    }
+
+    #[test]
+    fn offline_contract() {
+        assert!(select("native").unwrap().offline());
+        assert!(!select("pjrt").unwrap().offline());
+    }
+}

@@ -1,24 +1,38 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute
-//! from the Rust hot path with device-resident sticky inputs.
+//! Artifact runtime: a [`Runtime`] loads (or synthesizes) the manifest
+//! and opens [`Session`]s that execute artifacts through a pluggable
+//! [`executor::Executor`]:
 //!
-//! Pattern (per /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
-//! Compiled executables are cached per artifact id; a [`Session`] binds
-//! the inputs that stay fixed across calls (weights, smoothing vectors,
-//! calibrated scales) as device buffers so the per-batch work is just
-//! "upload tokens, execute, fetch outputs".
+//! * `native` (default) — reconstructs each artifact's forward (and
+//!   train-step) computation host-side from the manifest + the registry
+//!   mirror, with all matmuls on the active tensor backend. Needs no
+//!   on-disk artifacts: when `<dir>/manifest.json` is absent it is
+//!   synthesized from [`registry`].
+//! * `pjrt` — the original compiled-HLO path (see [`pjrt`]); requires
+//!   built artifacts and real `xla` bindings.
+//!
+//! Selection: `--executor native|pjrt|auto`, `INTFPQSIM_EXECUTOR`, or
+//! [`executor::configure`]; `auto` resolves to `native`.
+//!
+//! A [`Session`] binds the inputs that stay fixed across calls (weights,
+//! smoothing vectors, calibrated scales) once — uploaded to the device
+//! under PJRT, converted to host tensors (weights QDQ-prepared, one
+//! backend handle hoisted) under native — so the per-batch work is just
+//! "hand over tokens, execute, fetch outputs".
 
+pub mod executor;
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
+pub mod registry;
 
-use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::info;
 use crate::tensor::Tensor;
+use executor::{ExecSession, Executor};
 use manifest::{ArtifactSpec, DType, Manifest};
 
 /// A host-side input value.
@@ -45,81 +59,51 @@ impl Val {
 }
 
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    pub compile_count: RefCell<usize>,
+    exec: Rc<dyn Executor>,
 }
 
 impl Runtime {
     pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let exec = executor::select(executor::active_name())
+            .map_err(anyhow::Error::msg)
+            .context("select runtime executor")?;
         let dir = PathBuf::from(artifacts_dir);
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir,
-            cache: RefCell::new(HashMap::new()),
-            compile_count: RefCell::new(0),
-        })
+        // Offline executors synthesize the manifest when none was built;
+        // a *present but broken* manifest.json still errors (a corrupt
+        // build must not be silently shadowed by the synthesizer).
+        let manifest = if dir.join("manifest.json").exists() || !exec.offline() {
+            Manifest::load(&dir)?
+        } else {
+            crate::debug!(
+                "no artifacts at {:?}; synthesizing manifest for the {} executor",
+                dir,
+                exec.name()
+            );
+            registry::synthesize_manifest()
+        };
+        Ok(Runtime { manifest, dir, exec })
     }
 
-    /// Compile (or fetch from cache) the executable for an artifact id.
-    pub fn executable(&self, id: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(id) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.artifact(id)?;
-        let path = self.dir.join(&spec.file);
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path utf8")?,
-        )
-        .with_context(|| format!("parse HLO text {:?}", path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compile artifact {}", id))?,
-        );
-        *self.compile_count.borrow_mut() += 1;
-        info!("compiled {} in {:.2}s", id, t0.elapsed().as_secs_f64());
-        self.cache.borrow_mut().insert(id.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    fn upload(&self, val: &Val) -> Result<xla::PjRtBuffer> {
-        match val {
-            Val::F32(data, shape) => self
-                .client
-                .buffer_from_host_buffer::<f32>(data, shape, None)
-                .context("upload f32 buffer"),
-            Val::I32(data, shape) => self
-                .client
-                .buffer_from_host_buffer::<i32>(data, shape, None)
-                .context("upload i32 buffer"),
-        }
+    /// Name of the executor this runtime dispatches to.
+    pub fn executor_name(&self) -> &'static str {
+        self.exec.name()
     }
 
     /// Open a session binding `sticky` inputs (by manifest input name).
     /// Inputs not in `sticky` must be provided per call.
-    pub fn session(&self, id: &str, sticky: &BTreeMap<String, Val>) -> Result<Session<'_>> {
-        let exe = self.executable(id)?;
+    pub fn session(&self, id: &str, sticky: &BTreeMap<String, Val>) -> Result<Session> {
         let spec = self.manifest.artifact(id)?.clone();
-        let mut bound: Vec<Option<xla::PjRtBuffer>> = Vec::new();
         let mut free_idx = Vec::new();
         for (i, input) in spec.inputs.iter().enumerate() {
-            if let Some(v) = sticky.get(&input.name) {
-                check_shape(&spec, i, v)?;
-                bound.push(Some(self.upload(v)?));
-            } else {
-                bound.push(None);
-                free_idx.push(i);
+            match sticky.get(&input.name) {
+                Some(v) => check_shape(&spec, i, v)?,
+                None => free_idx.push(i),
             }
         }
-        Ok(Session { rt: self, exe, spec, bound, free_idx })
+        let inner = self.exec.open(&self.dir, &self.manifest, &spec, sticky)?;
+        Ok(Session { spec, free_idx, inner })
     }
 }
 
@@ -151,16 +135,15 @@ fn check_shape(spec: &ArtifactSpec, i: usize, v: &Val) -> Result<()> {
     Ok(())
 }
 
-/// A compiled artifact with its sticky inputs resident on device.
-pub struct Session<'r> {
-    rt: &'r Runtime,
-    exe: Rc<xla::PjRtLoadedExecutable>,
+/// An opened artifact with its sticky inputs resident (device buffers
+/// under PJRT, prepared host tensors under native).
+pub struct Session {
     pub spec: ArtifactSpec,
-    bound: Vec<Option<xla::PjRtBuffer>>,
     free_idx: Vec<usize>,
+    inner: Box<dyn ExecSession>,
 }
 
-impl<'r> Session<'r> {
+impl Session {
     /// Re-bind one sticky input (e.g. swap transformed weights in place).
     pub fn rebind(&mut self, name: &str, v: &Val) -> Result<()> {
         let i = self
@@ -169,9 +152,15 @@ impl<'r> Session<'r> {
             .iter()
             .position(|s| s.name == name)
             .with_context(|| format!("no input named {}", name))?;
+        if self.free_idx.contains(&i) {
+            bail!(
+                "artifact {}: input {} is free, not sticky — pass it per call",
+                self.spec.id,
+                name
+            );
+        }
         check_shape(&self.spec, i, v)?;
-        self.bound[i] = Some(self.rt.upload(v)?);
-        Ok(())
+        self.inner.rebind(i, v)
     }
 
     /// Names of the inputs that must be supplied per call, in order.
@@ -191,48 +180,10 @@ impl<'r> Session<'r> {
                 free.len()
             );
         }
-        // Upload ephemerals, then assemble the full positional arg list.
-        let mut ephemeral: Vec<xla::PjRtBuffer> = Vec::with_capacity(free.len());
         for (&i, v) in self.free_idx.iter().zip(free.iter()) {
             check_shape(&self.spec, i, v)?;
-            ephemeral.push(self.rt.upload(v)?);
         }
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
-        let mut e = 0;
-        for (i, b) in self.bound.iter().enumerate() {
-            match b {
-                Some(buf) => args.push(buf),
-                None => {
-                    let _ = i;
-                    args.push(&ephemeral[e]);
-                    e += 1;
-                }
-            }
-        }
-        let result = self
-            .exe
-            .execute_b(&args)
-            .with_context(|| format!("execute {}", self.spec.id))?;
-        // return_tuple=True => single tuple output; decompose to parts.
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetch result literal")?;
-        let parts = lit.to_tuple().context("decompose result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "artifact {}: {} outputs, manifest says {}",
-                self.spec.id,
-                parts.len(),
-                self.spec.outputs.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (part, ospec) in parts.iter().zip(self.spec.outputs.iter()) {
-            let data = part
-                .to_vec::<f32>()
-                .with_context(|| format!("output {} to f32", ospec.name))?;
-            out.push(Tensor::new(ospec.shape.clone(), data));
-        }
-        Ok(out)
+        let refs: Vec<&Val> = free.iter().collect();
+        self.inner.run(&refs)
     }
 }

@@ -1,0 +1,451 @@
+//! Native host executor: evaluates artifacts by reconstructing their
+//! computation from the manifest, with no PJRT and no on-disk HLO.
+//!
+//! Each artifact id encodes `model/purpose_quant`; the model config
+//! comes from the manifest, the quantizer wiring from the registry
+//! mirror (`super::registry`), and the math from `model::net` — the
+//! host-side reference network whose matmuls all route through the
+//! active tensor backend (one handle hoisted per session).
+//!
+//! Supported purposes:
+//! * `eval` / `eval_logits` — forward + task output (LM `nll_sum`,
+//!   logits, span logits, class logits). When every non-data input is
+//!   sticky (the normal case), the prepared state — params converted to
+//!   tensors once, site weights QDQ-transformed and transposed once —
+//!   is cached across `run` calls, so the per-batch cost is just the
+//!   forward pass.
+//! * `capture` — FP32 forward collecting every site's raw input
+//!   activations (the calibration stream).
+//! * `train` — forward + hand-rolled backward + Adam step, mirroring
+//!   the compiled train-step artifacts (`python/compile/train.py`):
+//!   PWL straight-through QDQ gradients, frozen outlier gains, flat
+//!   (params, m, v, loss) outputs.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::executor::{ExecSession, Executor};
+use super::manifest::{ArtifactSpec, InputKind, Manifest, ModelCfg};
+use super::registry::{self, QuantKind, QuantWiring};
+use super::Val;
+use crate::model::net::{self, NetInput, SiteCtx};
+use crate::tensor::backend::{self, Backend};
+use crate::tensor::io::TensorStore;
+use crate::tensor::Tensor;
+
+pub struct Native;
+
+impl Executor for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn offline(&self) -> bool {
+        true
+    }
+
+    fn open(
+        &self,
+        _dir: &Path,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        sticky: &BTreeMap<String, Val>,
+    ) -> Result<Box<dyn ExecSession>> {
+        let cfg = manifest.model(&spec.model)?.clone();
+        let wiring = registry::quant_config(&spec.quant).with_context(|| {
+            format!("artifact {}: quant {:?} not in the registry mirror", spec.id, spec.quant)
+        })?;
+        let mut bound: Vec<Option<Rc<Val>>> = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            bound.push(sticky.get(&input.name).cloned().map(Rc::new));
+        }
+        // The prepared fast path needs every non-data input sticky; the
+        // train purpose streams everything per call instead.
+        let cacheable = spec
+            .inputs
+            .iter()
+            .zip(bound.iter())
+            .all(|(i, b)| i.kind == InputKind::Data || b.is_some());
+        Ok(Box::new(NativeSession {
+            cfg,
+            spec: spec.clone(),
+            wiring,
+            be: backend::active(),
+            bound,
+            cacheable,
+            prepared: RefCell::new(None),
+        }))
+    }
+}
+
+/// Sticky state converted once per session: full param tensors plus the
+/// per-site execution contexts (QDQ-prepared transposed weights,
+/// smoothing vectors, clip ranges).
+struct Prepared {
+    params: TensorStore,
+    sites: BTreeMap<String, SiteCtx>,
+}
+
+struct NativeSession {
+    cfg: ModelCfg,
+    spec: ArtifactSpec,
+    wiring: QuantWiring,
+    be: Arc<dyn Backend>,
+    bound: Vec<Option<Rc<Val>>>,
+    cacheable: bool,
+    prepared: RefCell<Option<Prepared>>,
+}
+
+fn val_f32<'a>(spec: &ArtifactSpec, i: usize, v: &'a Val) -> Result<&'a [f32]> {
+    match v {
+        Val::F32(data, _) => Ok(data),
+        Val::I32(..) => bail!(
+            "artifact {} input {}: expected f32",
+            spec.id,
+            spec.inputs[i].name
+        ),
+    }
+}
+
+fn val_i32<'a>(spec: &ArtifactSpec, i: usize, v: &'a Val) -> Result<&'a [i32]> {
+    match v {
+        Val::I32(data, _) => Ok(data),
+        Val::F32(..) => bail!(
+            "artifact {} input {}: expected i32",
+            spec.id,
+            spec.inputs[i].name
+        ),
+    }
+}
+
+impl NativeSession {
+    /// Full positional argument list: sticky bindings filled in, free
+    /// values taken from `free` in free-input order.
+    fn assemble<'a>(&'a self, free: &[&'a Val]) -> Result<Vec<&'a Val>> {
+        let mut args: Vec<&Val> = Vec::with_capacity(self.spec.inputs.len());
+        let mut fi = 0;
+        for (i, b) in self.bound.iter().enumerate() {
+            match b {
+                Some(rc) => args.push(rc.as_ref()),
+                None => {
+                    let v = free.get(fi).with_context(|| {
+                        format!(
+                            "artifact {}: missing free input {}",
+                            self.spec.id, self.spec.inputs[i].name
+                        )
+                    })?;
+                    args.push(*v);
+                    fi += 1;
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Convert the param / smooth / alpha inputs into execution state.
+    fn build_prepared(&self, args: &[&Val]) -> Result<Prepared> {
+        let mut params = TensorStore::default();
+        let mut smooth: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        let mut alpha: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for (i, input) in self.spec.inputs.iter().enumerate() {
+            match input.kind {
+                InputKind::Param => {
+                    let data = val_f32(&self.spec, i, args[i])?;
+                    params.insert(&input.name, Tensor::new(input.shape.clone(), data.to_vec()));
+                }
+                InputKind::Smooth => {
+                    let site = input.name.trim_start_matches("smooth.").to_string();
+                    smooth.insert(site, val_f32(&self.spec, i, args[i])?.to_vec());
+                }
+                InputKind::AScale => {
+                    let site = input.name.trim_start_matches("alpha.").to_string();
+                    alpha.insert(site, val_f32(&self.spec, i, args[i])?.to_vec());
+                }
+                _ => {}
+            }
+        }
+        crate::model::check_params(&self.cfg, &params)?;
+        let sites = net::build_sites(
+            &self.cfg,
+            &self.wiring,
+            &params,
+            &smooth,
+            &alpha,
+            self.be.as_ref(),
+        )?;
+        Ok(Prepared { params, sites })
+    }
+
+    /// The data input (tokens or images), as a `NetInput`.
+    fn net_input<'a>(&self, args: &[&'a Val]) -> Result<(NetInput<'a>, Vec<usize>)> {
+        let mut data_idx = Vec::new();
+        for (i, input) in self.spec.inputs.iter().enumerate() {
+            if input.kind == InputKind::Data {
+                data_idx.push(i);
+            }
+        }
+        anyhow::ensure!(!data_idx.is_empty(), "artifact {} has no data input", self.spec.id);
+        let first = data_idx[0];
+        let input = if self.cfg.arch == "vit" {
+            NetInput::Images(val_f32(&self.spec, first, args[first])?)
+        } else {
+            NetInput::Tokens(val_i32(&self.spec, first, args[first])?)
+        };
+        Ok((input, data_idx))
+    }
+
+    /// Run `f` against the prepared execution state: cached across runs
+    /// when every non-data input is sticky, rebuilt per call otherwise.
+    /// (The sticky `Val`s stay resident in `bound` so `rebind` can
+    /// rebuild — the prepared tensors are a second, QDQ-transformed
+    /// copy, the host analog of PJRT's device upload.)
+    fn with_prepared<T>(
+        &self,
+        args: &[&Val],
+        f: impl FnOnce(&Prepared) -> Result<T>,
+    ) -> Result<T> {
+        if self.cacheable {
+            if self.prepared.borrow().is_none() {
+                let p = self.build_prepared(args)?;
+                *self.prepared.borrow_mut() = Some(p);
+            }
+            let guard = self.prepared.borrow();
+            f(guard.as_ref().unwrap())
+        } else {
+            let p = self.build_prepared(args)?;
+            f(&p)
+        }
+    }
+
+    fn run_eval(&self, args: &[&Val]) -> Result<Vec<Tensor>> {
+        self.with_prepared(args, |prep| self.eval_with(prep, args))
+    }
+
+    fn eval_with(&self, prep: &Prepared, args: &[&Val]) -> Result<Vec<Tensor>> {
+        let (input, _) = self.net_input(args)?;
+        let fwd = net::forward(
+            &self.cfg,
+            &prep.params,
+            &prep.sites,
+            &input,
+            self.be.as_ref(),
+            false,
+            false,
+        )?;
+        let (b, s) = (self.cfg.batch, self.cfg.seq);
+        Ok(match self.cfg.arch.as_str() {
+            "opt" => {
+                if self.spec.purpose == "eval" && self.cfg.task != "codegen" {
+                    let tokens = match input {
+                        NetInput::Tokens(t) => t,
+                        _ => unreachable!(),
+                    };
+                    let (nll, _) = net::nll_sum_and_grad(&fwd.head, tokens, b, s, false);
+                    vec![Tensor::scalar(nll as f32)]
+                } else {
+                    vec![fwd.head.reshape(vec![b, s, self.cfg.vocab])]
+                }
+            }
+            "bert" => {
+                // span (N, 2) → start/end logits, each (B, S)
+                let n = b * s;
+                let mut sl = vec![0.0f32; n];
+                let mut el = vec![0.0f32; n];
+                for (r, pair) in fwd.head.data.chunks(2).enumerate() {
+                    sl[r] = pair[0];
+                    el[r] = pair[1];
+                }
+                vec![Tensor::new(vec![b, s], sl), Tensor::new(vec![b, s], el)]
+            }
+            "vit" => vec![fwd.head],
+            other => bail!("unknown arch {}", other),
+        })
+    }
+
+    fn run_capture(&self, args: &[&Val]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            self.wiring == QuantWiring::fp32(),
+            "capture artifacts run the FP32 graph"
+        );
+        let (input, _) = self.net_input(args)?;
+        let fwd = self.with_prepared(args, |prep| {
+            net::forward(
+                &self.cfg,
+                &prep.params,
+                &prep.sites,
+                &input,
+                self.be.as_ref(),
+                false,
+                true,
+            )
+        })?;
+        // _anchor mirrors the graph-liveness scalar of the compiled
+        // capture artifacts: mean of the head output(s).
+        let anchor = {
+            let len = fwd.head.len().max(1) as f64;
+            let sum: f64 = fwd.head.data.iter().map(|&v| v as f64).sum();
+            match self.cfg.arch.as_str() {
+                // bert: mean(start_logits) + mean(end_logits); the two
+                // columns have equal counts, so 2 * mean(span).
+                "bert" => 2.0 * sum / len,
+                _ => sum / len,
+            }
+        };
+        let mut out: Vec<Tensor> = Vec::with_capacity(fwd.capture.len() + 1);
+        for (site, ospec) in fwd.capture.into_iter().zip(self.spec.outputs.iter()) {
+            anyhow::ensure!(site.0 == ospec.name, "capture order mismatch at {}", ospec.name);
+            out.push(site.1);
+        }
+        out.push(Tensor::scalar(anchor as f32));
+        Ok(out)
+    }
+
+    fn run_train(&self, args: &[&Val]) -> Result<Vec<Tensor>> {
+        let cfg = &self.cfg;
+        let p = cfg.params.len();
+        anyhow::ensure!(
+            args.len() == self.spec.inputs.len() && args.len() > 3 * p + 2,
+            "artifact {}: train input layout mismatch",
+            self.spec.id
+        );
+        // Train wirings are fp32 or ABFP-QAT: the PWL mask is all-ones
+        // (quantizers.py), which is exactly what net::backward assumes.
+        for spec in [&self.wiring.wq, &self.wiring.aq] {
+            anyhow::ensure!(
+                matches!(spec.kind, QuantKind::None | QuantKind::Abfp),
+                "artifact {}: train with {:?} quantizers is not supported natively",
+                self.spec.id,
+                spec.kind
+            );
+        }
+        anyhow::ensure!(
+            self.wiring.oq.kind == QuantKind::None && self.wiring.layer_overrides.is_empty(),
+            "artifact {}: unsupported train wiring",
+            self.spec.id
+        );
+
+        let mut params = TensorStore::default();
+        let mut mstore = TensorStore::default();
+        let mut vstore = TensorStore::default();
+        for (j, ps) in cfg.params.iter().enumerate() {
+            let t = |i: usize| -> Result<Tensor> {
+                Ok(Tensor::new(
+                    ps.shape.clone(),
+                    val_f32(&self.spec, i, args[i])?.to_vec(),
+                ))
+            };
+            params.insert(&ps.name, t(j)?);
+            mstore.insert(&ps.name, t(p + j)?);
+            vstore.insert(&ps.name, t(2 * p + j)?);
+        }
+        let step = val_f32(&self.spec, 3 * p, args[3 * p])?[0];
+        let lr = val_f32(&self.spec, 3 * p + 1, args[3 * p + 1])?[0];
+        let (input, data_idx) = self.net_input(args)?;
+
+        let sites = net::build_sites(
+            cfg,
+            &self.wiring,
+            &params,
+            &BTreeMap::new(),
+            &BTreeMap::new(),
+            self.be.as_ref(),
+        )?;
+        let fwd = net::forward(cfg, &params, &sites, &input, self.be.as_ref(), true, false)?;
+        let (b, s) = (cfg.batch, cfg.seq);
+        let (loss, dhead) = match cfg.arch.as_str() {
+            "opt" => {
+                let tokens = match &input {
+                    NetInput::Tokens(t) => *t,
+                    _ => unreachable!(),
+                };
+                net::lm_loss_and_grad(&fwd.head, tokens, b, s, true)
+            }
+            "bert" => {
+                anyhow::ensure!(data_idx.len() == 3, "bert train needs starts/ends");
+                let starts = val_i32(&self.spec, data_idx[1], args[data_idx[1]])?;
+                let ends = val_i32(&self.spec, data_idx[2], args[data_idx[2]])?;
+                net::bert_span_loss_and_grad(&fwd.head, b, s, starts, ends, true)
+            }
+            "vit" => {
+                anyhow::ensure!(data_idx.len() == 2, "vit train needs labels");
+                let labels = val_i32(&self.spec, data_idx[1], args[data_idx[1]])?;
+                net::softmax_ce_mean(&fwd.head, labels, true)
+            }
+            other => bail!("unknown arch {}", other),
+        };
+
+        let tape = fwd.tape.context("train forward must tape")?;
+        let mut grads = net::backward(
+            cfg,
+            &params,
+            &sites,
+            &input,
+            &tape,
+            &dhead.context("loss grad")?,
+            self.be.as_ref(),
+        )?;
+
+        // One Adam step (frozen outlier gains get zero gradient).
+        let mut out = Vec::with_capacity(3 * p + 1);
+        for ps in &cfg.params {
+            if crate::train::is_frozen(&ps.name) {
+                let g = grads.get_mut(&ps.name).unwrap();
+                for v in g.data.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            let pt = params.get_mut(&ps.name).unwrap();
+            let mt = mstore.get_mut(&ps.name).unwrap();
+            let vt = vstore.get_mut(&ps.name).unwrap();
+            crate::train::adam_step(
+                &mut pt.data,
+                &mut mt.data,
+                &mut vt.data,
+                &grads.get(&ps.name).unwrap().data,
+                step,
+                lr,
+            );
+        }
+        for mut store in [params, mstore, vstore] {
+            for ps in &cfg.params {
+                out.push(store.tensors.remove(&ps.name).unwrap());
+            }
+        }
+        out.push(Tensor::scalar(loss as f32));
+        Ok(out)
+    }
+}
+
+impl ExecSession for NativeSession {
+    fn run(&self, free: &[&Val]) -> Result<Vec<Tensor>> {
+        let args = self.assemble(free)?;
+        match self.spec.purpose.as_str() {
+            "eval" | "eval_logits" => self.run_eval(&args),
+            "capture" => self.run_capture(&args),
+            "train" => self.run_train(&args),
+            other => bail!(
+                "artifact {}: purpose {:?} is not supported by the native executor",
+                self.spec.id,
+                other
+            ),
+        }
+    }
+
+    fn rebind(&mut self, i: usize, v: &Val) -> Result<()> {
+        if self.bound[i].is_none() {
+            bail!(
+                "artifact {}: input {} is free, not sticky — cannot rebind",
+                self.spec.id,
+                self.spec.inputs[i].name
+            );
+        }
+        self.bound[i] = Some(Rc::new(v.clone()));
+        *self.prepared.borrow_mut() = None;
+        Ok(())
+    }
+}

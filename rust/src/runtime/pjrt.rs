@@ -1,0 +1,176 @@
+//! PJRT executor: load AOT artifacts (HLO text), compile once, execute
+//! with device-resident sticky inputs.
+//!
+//! Pattern (per /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Compiled executables are cached per artifact id; a session binds the
+//! inputs that stay fixed across calls (weights, smoothing vectors,
+//! calibrated scales) as device buffers so the per-batch work is just
+//! "upload tokens, execute, fetch outputs".
+//!
+//! Under the vendored `xla` stub every execution reports "PJRT
+//! unavailable"; swap in real bindings (rust/Cargo.toml) to use this
+//! path. The native executor (`super::native`) is the default.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::executor::{ExecSession, Executor};
+use super::manifest::{ArtifactSpec, Manifest};
+use super::Val;
+use crate::info;
+use crate::tensor::Tensor;
+
+pub struct Pjrt {
+    client: Rc<xla::PjRtClient>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub compile_count: RefCell<usize>,
+}
+
+impl Pjrt {
+    pub fn new() -> Result<Pjrt> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Pjrt {
+            client: Rc::new(client),
+            cache: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    fn executable(&self, dir: &Path, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.id) {
+            return Ok(exe.clone());
+        }
+        let path = dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {:?}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {}", spec.id))?,
+        );
+        *self.compile_count.borrow_mut() += 1;
+        info!("compiled {} in {:.2}s", spec.id, t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(spec.id.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+fn upload(client: &xla::PjRtClient, val: &Val) -> Result<xla::PjRtBuffer> {
+    match val {
+        Val::F32(data, shape) => client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .context("upload f32 buffer"),
+        Val::I32(data, shape) => client
+            .buffer_from_host_buffer::<i32>(data, shape, None)
+            .context("upload i32 buffer"),
+    }
+}
+
+impl Executor for Pjrt {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn offline(&self) -> bool {
+        false
+    }
+
+    fn open(
+        &self,
+        dir: &Path,
+        _manifest: &Manifest,
+        spec: &ArtifactSpec,
+        sticky: &BTreeMap<String, Val>,
+    ) -> Result<Box<dyn ExecSession>> {
+        let exe = self.executable(dir, spec)?;
+        let mut bound: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            match sticky.get(&input.name) {
+                Some(v) => bound.push(Some(upload(&self.client, v)?)),
+                None => bound.push(None),
+            }
+        }
+        Ok(Box::new(PjrtSession {
+            client: self.client.clone(),
+            exe,
+            spec: spec.clone(),
+            bound,
+        }))
+    }
+}
+
+/// A compiled artifact with its sticky inputs resident on device.
+struct PjrtSession {
+    client: Rc<xla::PjRtClient>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    spec: ArtifactSpec,
+    bound: Vec<Option<xla::PjRtBuffer>>,
+}
+
+impl ExecSession for PjrtSession {
+    fn run(&self, free: &[&Val]) -> Result<Vec<Tensor>> {
+        // Upload ephemerals, then assemble the full positional arg list.
+        let mut ephemeral: Vec<xla::PjRtBuffer> = Vec::with_capacity(free.len());
+        for v in free {
+            ephemeral.push(upload(&self.client, v)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
+        let mut e = 0;
+        for b in &self.bound {
+            match b {
+                Some(buf) => args.push(buf),
+                None => {
+                    args.push(&ephemeral[e]);
+                    e += 1;
+                }
+            }
+        }
+        let result = self
+            .exe
+            .execute_b(&args)
+            .with_context(|| format!("execute {}", self.spec.id))?;
+        // return_tuple=True => single tuple output; decompose to parts.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = lit.to_tuple().context("decompose result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest says {}",
+                self.spec.id,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, ospec) in parts.iter().zip(self.spec.outputs.iter()) {
+            let data = part
+                .to_vec::<f32>()
+                .with_context(|| format!("output {} to f32", ospec.name))?;
+            out.push(Tensor::new(ospec.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    fn rebind(&mut self, i: usize, v: &Val) -> Result<()> {
+        if self.bound[i].is_none() {
+            bail!(
+                "artifact {}: input {} is free, not sticky — cannot rebind",
+                self.spec.id,
+                self.spec.inputs[i].name
+            );
+        }
+        self.bound[i] = Some(upload(&self.client, v)?);
+        Ok(())
+    }
+}

@@ -1,0 +1,855 @@
+//! Rust mirror of `python/compile/registry.py` — the artifact matrix.
+//!
+//! The Python registry is the build-time source of truth: it enumerates
+//! every simulated model and quantizer configuration and `aot.py` lowers
+//! them to HLO artifacts plus `manifest.json`. This module mirrors that
+//! registry host-side so the **native executor** can (a) reconstruct the
+//! quantizer wiring an artifact simulates from its `quant` name and
+//! (b) synthesize the manifest offline — `Runtime::new` works with no
+//! artifacts directory at all.
+//!
+//! Keep the tables here in lock-step with `registry.py`; the synthesized
+//! manifest must enumerate the same models, artifacts and I/O layouts the
+//! AOT builder writes (`python/tests/test_manifest.py` checks the Python
+//! side, `tests` below check this side).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::{self, Format, IntFmt, E1M2, E2M1, E4M3, INT4, INT8};
+use crate::runtime::manifest::{
+    ArtifactSpec, DType, InputKind, IoSpec, Manifest, ModelCfg, ParamSpec, SiteSpec,
+};
+use crate::tensor::backend::Backend;
+
+pub const VOCAB: usize = 512;
+pub const CODE_VOCAB: usize = 64;
+pub const SEQ: usize = 64;
+pub const BATCH: usize = 8;
+
+/// Quantized sites per transformer block (`common.py` SITE_NAMES).
+pub const SITE_NAMES: [&str; 4] = ["qkv", "attn_out", "fc1", "fc2"];
+
+/// Input dim of a site (`common.py site_in_dim`): fc2 reads the 4d FFN
+/// hidden, everything else reads the d-wide residual stream.
+pub fn site_in_dim(site: &str, d: usize) -> usize {
+    if site == "fc2" {
+        4 * d
+    } else {
+        d
+    }
+}
+
+// --- quantizer specs -------------------------------------------------------
+
+/// One of the paper's QDQ kinds (`quantizers.py QuantSpec.kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    None,
+    Abfp,
+    Abfp2,
+    StaticInt,
+    StaticIntPc,
+    WPcmaxInt,
+}
+
+/// A quantize–de-quantize spec: Eqns (6)/(7)/(9) applied to one tensor
+/// role while the data stays f32 (simulated quantization).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    pub kind: QuantKind,
+    pub fmt: Option<Format>,
+    /// ABFP vector length over the reduction axis.
+    pub n: usize,
+}
+
+/// Second-level scale-code width used by every `abfp2` config
+/// (`kernels/abfp.py` default).
+pub const ABFP2_SCALE_BITS: u32 = 8;
+
+pub const Q_NONE: QuantSpec = QuantSpec { kind: QuantKind::None, fmt: None, n: 64 };
+
+fn abfp(fmt: Format, n: usize) -> QuantSpec {
+    QuantSpec { kind: QuantKind::Abfp, fmt: Some(fmt), n }
+}
+
+fn abfp2(fmt: Format, n: usize) -> QuantSpec {
+    QuantSpec { kind: QuantKind::Abfp2, fmt: Some(fmt), n }
+}
+
+fn static_int(bits: u32) -> QuantSpec {
+    QuantSpec {
+        kind: QuantKind::StaticInt,
+        fmt: Some(Format::Int(IntFmt::new(bits))),
+        n: 64,
+    }
+}
+
+fn static_int_pc(bits: u32) -> QuantSpec {
+    QuantSpec {
+        kind: QuantKind::StaticIntPc,
+        fmt: Some(Format::Int(IntFmt::new(bits))),
+        n: 64,
+    }
+}
+
+fn w_pcmax_int(bits: u32) -> QuantSpec {
+    QuantSpec {
+        kind: QuantKind::WPcmaxInt,
+        fmt: Some(Format::Int(IntFmt::new(bits))),
+        n: 64,
+    }
+}
+
+impl QuantSpec {
+    pub fn needs_runtime_scale(&self) -> bool {
+        matches!(self.kind, QuantKind::StaticInt | QuantKind::StaticIntPc)
+    }
+
+    fn int_bits(&self) -> Result<u32> {
+        match self.fmt {
+            Some(Format::Int(f)) => Ok(f.bits),
+            other => bail!("quantizer needs an integer format, got {:?}", other),
+        }
+    }
+
+    /// Apply this QDQ in place to a row-major (rows, k) slice, with the
+    /// bulk loops routed through `be` (see `formats::abfp_qdq_with`).
+    /// `alpha` feeds the runtime clip range of the static kinds.
+    pub fn apply_with(
+        &self,
+        x: &mut [f32],
+        k: usize,
+        alpha: Option<&[f32]>,
+        be: &dyn Backend,
+    ) -> Result<()> {
+        match self.kind {
+            QuantKind::None => {}
+            QuantKind::Abfp => {
+                let fmt = self.fmt.context("abfp needs a payload format")?;
+                anyhow::ensure!(
+                    self.n > 0 && k % self.n == 0,
+                    "site width {} not a multiple of ABFP n={}",
+                    k,
+                    self.n
+                );
+                formats::abfp_qdq_with(x, k, fmt, self.n, be);
+            }
+            QuantKind::Abfp2 => {
+                let fmt = self.fmt.context("abfp2 needs a payload format")?;
+                anyhow::ensure!(
+                    self.n > 0 && k % self.n == 0,
+                    "site width {} not a multiple of ABFP n={}",
+                    k,
+                    self.n
+                );
+                formats::abfp2_qdq(x, k, fmt, self.n, ABFP2_SCALE_BITS);
+            }
+            QuantKind::StaticInt | QuantKind::StaticIntPc => {
+                let a = alpha.context("static quantizer needs a runtime clip range")?;
+                formats::static_int_qdq_with(x, a, self.int_bits()?, be);
+            }
+            QuantKind::WPcmaxInt => {
+                formats::pcmax_weight_qdq_with(x, k, self.int_bits()?, be);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// How every quantized site of one artifact is wired (`common.py
+/// QuantWiring`): weight / input-activation / output quantizers plus the
+/// SmoothQuant and STE flags and per-layer mixed-precision overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantWiring {
+    pub wq: QuantSpec,
+    pub aq: QuantSpec,
+    /// f_q^y; identity in all paper experiments.
+    pub oq: QuantSpec,
+    /// SmoothQuant per-channel input vectors are wired as inputs.
+    pub smooth: bool,
+    /// QAT: PWL estimator around every QDQ.
+    pub ste: bool,
+    /// (layer_index, wq, aq, oq); negative indices count from the back.
+    pub layer_overrides: Vec<(i64, QuantSpec, QuantSpec, QuantSpec)>,
+}
+
+impl QuantWiring {
+    pub fn fp32() -> QuantWiring {
+        QuantWiring {
+            wq: Q_NONE,
+            aq: Q_NONE,
+            oq: Q_NONE,
+            smooth: false,
+            ste: false,
+            layer_overrides: Vec::new(),
+        }
+    }
+
+    /// Effective wiring for block `li` of an `l`-block model
+    /// (`common.py for_layer`: Python modulo semantics, so `-1` means
+    /// the last block for any depth).
+    pub fn for_layer(&self, li: usize, l: usize) -> QuantWiring {
+        let l = l.max(1) as i64;
+        for (idx, wq, aq, oq) in &self.layer_overrides {
+            if idx.rem_euclid(l) == (li as i64).rem_euclid(l) {
+                return QuantWiring {
+                    wq: *wq,
+                    aq: *aq,
+                    oq: *oq,
+                    smooth: self.smooth,
+                    ste: self.ste,
+                    layer_overrides: Vec::new(),
+                };
+            }
+        }
+        QuantWiring { layer_overrides: Vec::new(), ..self.clone() }
+    }
+}
+
+/// The quantizer configuration table (`registry.py QUANT_CONFIGS`),
+/// keyed by the `quant` name recorded in every artifact id.
+pub fn quant_config(name: &str) -> Option<QuantWiring> {
+    let base = QuantWiring::fp32();
+    let sm = |wq: QuantSpec, aq: QuantSpec| QuantWiring {
+        wq,
+        aq,
+        smooth: true,
+        ..base.clone()
+    };
+    let smo = |wq: QuantSpec, aq: QuantSpec, oq: QuantSpec| QuantWiring {
+        wq,
+        aq,
+        oq,
+        smooth: true,
+        ..base.clone()
+    };
+    let stat = |wq: QuantSpec, aq: QuantSpec| QuantWiring { wq, aq, ..base.clone() };
+    let qat = |wq: QuantSpec, aq: QuantSpec| QuantWiring {
+        wq,
+        aq,
+        ste: true,
+        ..base.clone()
+    };
+    let i4 = Format::Int(INT4);
+    let i8 = Format::Int(INT8);
+    Some(match name {
+        "fp32" => base.clone(),
+        // ABFP, dynamic per-vector scales; smooth inputs allow ABFP-SQ reuse.
+        "abfp_w4a4_n64" => sm(abfp(i4, 64), abfp(i4, 64)),
+        "abfp_w4a4_n128" => sm(abfp(i4, 128), abfp(i4, 128)),
+        "abfp_w4a8_n64" => sm(abfp(i4, 64), abfp(i8, 64)),
+        "abfp_w4a8_n128" => sm(abfp(i4, 128), abfp(i8, 128)),
+        "abfp_e2m1_n64" => sm(abfp(Format::Fp(E2M1), 64), abfp(Format::Fp(E2M1), 64)),
+        "abfp_e1m2_n64" => sm(abfp(Format::Fp(E1M2), 64), abfp(Format::Fp(E1M2), 64)),
+        "abfp_e1m2_n128" => sm(abfp(Format::Fp(E1M2), 128), abfp(Format::Fp(E1M2), 128)),
+        "abfp_w4ae4m3_n64" => sm(abfp(i4, 64), abfp(Format::Fp(E4M3), 64)),
+        // Static MSE calibration: per-channel max weights (in-graph),
+        // runtime per-tensor activation clip ranges from the calibrator.
+        "mse_w4a4" => stat(w_pcmax_int(4), static_int(4)),
+        "mse_w4a8" => stat(w_pcmax_int(4), static_int(8)),
+        // RPTQ: cluster-wise activation scales expressed per-channel.
+        "rptq_w4a4" => stat(w_pcmax_int(4), static_int_pc(4)),
+        "rptq_w4a8" => stat(w_pcmax_int(4), static_int_pc(8)),
+        // QAT (train-step artifacts only): ABFP forward, PWL backward.
+        "qat_w4a4_n64" => qat(abfp(i4, 64), abfp(i4, 64)),
+        "qat_w4a4_n128" => qat(abfp(i4, 128), abfp(i4, 128)),
+        "qat_w4a8_n64" => qat(abfp(i4, 64), abfp(i8, 64)),
+        "qat_w4a8_n128" => qat(abfp(i4, 128), abfp(i8, 128)),
+        // Extensions: two-level scales (VS-Quant §II-B-2).
+        "abfp2_w4a4_n64" => sm(abfp2(i4, 64), abfp2(i4, 64)),
+        "abfp2_w4a8_n64" => sm(abfp2(i4, 64), abfp2(i8, 64)),
+        // Extensions: output quantization f_q^y (Eqn 9).
+        "abfp_w4a4_o8_n64" => smo(abfp(i4, 64), abfp(i4, 64), abfp(i8, 64)),
+        "abfp_w4a4_oe4m3_n64" => {
+            smo(abfp(i4, 64), abfp(i4, 64), abfp(Format::Fp(E4M3), 64))
+        }
+        "abfp_w4a8_o8_n64" => smo(abfp(i4, 64), abfp(i8, 64), abfp(i8, 64)),
+        // Extensions: per-layer mixed precision (boundary blocks at
+        // higher precision, interior at W4A4).
+        "mixed_a8_boundary_n64" => QuantWiring {
+            layer_overrides: vec![
+                (0, abfp(i4, 64), abfp(i8, 64), Q_NONE),
+                (-1, abfp(i4, 64), abfp(i8, 64), Q_NONE),
+            ],
+            ..sm(abfp(i4, 64), abfp(i4, 64))
+        },
+        "mixed_w8a8_boundary_n64" => QuantWiring {
+            layer_overrides: vec![
+                (0, abfp(i8, 64), abfp(i8, 64), Q_NONE),
+                (-1, abfp(i8, 64), abfp(i8, 64), Q_NONE),
+            ],
+            ..sm(abfp(i4, 64), abfp(i4, 64))
+        },
+        _ => return None,
+    })
+}
+
+// --- model table -----------------------------------------------------------
+
+/// Static definition of one simulated model (`registry.py MODELS`).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDef {
+    pub name: &'static str,
+    pub arch: &'static str,
+    pub task: &'static str,
+    pub stands_for: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub l: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub image: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+fn lm(name: &'static str, stands_for: &'static str, d: usize, l: usize, heads: usize) -> ModelDef {
+    ModelDef {
+        name,
+        arch: "opt",
+        task: "lm",
+        stands_for,
+        vocab: VOCAB,
+        d,
+        l,
+        heads,
+        seq: SEQ,
+        batch: BATCH,
+        image: 0,
+        patch: 0,
+        channels: 0,
+        classes: 0,
+    }
+}
+
+fn codegen(name: &'static str, stands: &'static str, d: usize, l: usize, heads: usize) -> ModelDef {
+    ModelDef { vocab: CODE_VOCAB, task: "codegen", ..lm(name, stands, d, l, heads) }
+}
+
+fn bert(name: &'static str, stands: &'static str, d: usize, l: usize, heads: usize) -> ModelDef {
+    ModelDef { arch: "bert", task: "span_qa", ..lm(name, stands, d, l, heads) }
+}
+
+fn vit(name: &'static str, stands_for: &'static str, patch: usize) -> ModelDef {
+    ModelDef {
+        name,
+        arch: "vit",
+        task: "image_cls",
+        stands_for,
+        vocab: 0,
+        d: 128,
+        l: 2,
+        heads: 2,
+        seq: 0,
+        batch: 16,
+        image: 32,
+        patch,
+        channels: 3,
+        classes: 16,
+    }
+}
+
+/// Every simulated model, in `registry.py` declaration order.
+pub fn model_defs() -> Vec<ModelDef> {
+    vec![
+        lm("sim-opt-125m", "OPT 125M", 128, 2, 2),
+        lm("sim-opt-350m", "OPT 350M", 256, 2, 4),
+        lm("sim-opt-1.3b", "OPT 1.3B", 384, 3, 6),
+        lm("sim-opt-2.7b", "OPT 2.7B", 512, 3, 8),
+        codegen("sim-codegen-2b", "Codegen 2B", 256, 2, 4),
+        codegen("sim-codegen-6b", "Codegen 6B", 384, 3, 6),
+        bert("sim-bert-base", "BERT-base", 128, 2, 2),
+        bert("sim-bert-large", "BERT-large", 256, 3, 4),
+        vit("sim-vit-16", "ViT-large-16", 4),
+        vit("sim-vit-32", "ViT-large-32", 8),
+    ]
+}
+
+impl ModelDef {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d
+    }
+
+    pub fn n_patches(&self) -> usize {
+        if self.patch == 0 {
+            0
+        } else {
+            (self.image / self.patch) * (self.image / self.patch)
+        }
+    }
+
+    /// Per-block parameters (`common.py block_param_specs`).
+    fn block_params(&self, li: usize) -> Vec<ParamSpec> {
+        let d = self.d;
+        let dff = self.d_ff();
+        let p = |name: String, shape: Vec<usize>, init: &str| ParamSpec {
+            name,
+            shape,
+            init: init.to_string(),
+        };
+        vec![
+            p(format!("l{}.ln1_g", li), vec![d], "lngain"),
+            p(format!("l{}.ln1_b", li), vec![d], "zeros"),
+            p(format!("l{}.wqkv", li), vec![3 * d, d], "normal"),
+            p(format!("l{}.bqkv", li), vec![3 * d], "zeros"),
+            p(format!("l{}.wo", li), vec![d, d], "residual"),
+            p(format!("l{}.bo", li), vec![d], "zeros"),
+            p(format!("l{}.ln2_g", li), vec![d], "lngain"),
+            p(format!("l{}.ln2_b", li), vec![d], "zeros"),
+            p(format!("l{}.wfc1", li), vec![dff, d], "normal"),
+            p(format!("l{}.bfc1", li), vec![dff], "zeros"),
+            p(format!("l{}.wfc2", li), vec![d, dff], "residual"),
+            p(format!("l{}.bfc2", li), vec![d], "zeros"),
+        ]
+    }
+
+    /// Full parameter layout (`{opt,bert,vit}.py param_specs`).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let d = self.d;
+        let p = |name: &str, shape: Vec<usize>, init: &str| ParamSpec {
+            name: name.to_string(),
+            shape,
+            init: init.to_string(),
+        };
+        let mut specs = Vec::new();
+        match self.arch {
+            "vit" => {
+                let pdim = self.patch * self.patch * self.channels;
+                specs.push(p("patch_w", vec![d, pdim], "normal"));
+                specs.push(p("patch_b", vec![d], "zeros"));
+                specs.push(p("cls_tok", vec![d], "normal"));
+                specs.push(p("pos_emb", vec![self.n_patches() + 1, d], "normal"));
+                specs.push(p("emb_gain", vec![d], "lognormal"));
+            }
+            _ => {
+                specs.push(p("tok_emb", vec![self.vocab, d], "normal"));
+                specs.push(p("pos_emb", vec![self.seq, d], "normal"));
+                specs.push(p("emb_gain", vec![d], "lognormal"));
+            }
+        }
+        for li in 0..self.l {
+            specs.extend(self.block_params(li));
+        }
+        specs.push(p("lnf_g", vec![d], "ones"));
+        specs.push(p("lnf_b", vec![d], "zeros"));
+        match self.arch {
+            "bert" => {
+                specs.push(p("span_w", vec![2, d], "normal"));
+                specs.push(p("span_b", vec![2], "zeros"));
+            }
+            "vit" => {
+                specs.push(p("head_w", vec![self.classes, d], "normal"));
+                specs.push(p("head_b", vec![self.classes], "zeros"));
+            }
+            _ => {}
+        }
+        specs
+    }
+
+    /// Every quantized site in model order (`common.py all_site_names`).
+    pub fn site_specs(&self) -> Vec<SiteSpec> {
+        let mut out = Vec::with_capacity(self.l * SITE_NAMES.len());
+        for li in 0..self.l {
+            for s in SITE_NAMES {
+                out.push(SiteSpec {
+                    name: format!("l{}.{}", li, s),
+                    dim: site_in_dim(s, self.d),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn to_model_cfg(&self) -> ModelCfg {
+        ModelCfg {
+            name: self.name.to_string(),
+            arch: self.arch.to_string(),
+            task: self.task.to_string(),
+            stands_for: self.stands_for.to_string(),
+            vocab: self.vocab,
+            d: self.d,
+            layers: self.l,
+            heads: self.heads,
+            d_ff: self.d_ff(),
+            seq: self.seq,
+            batch: self.batch,
+            image: self.image,
+            patch: self.patch,
+            channels: self.channels,
+            classes: self.classes,
+            params: self.param_specs(),
+            sites: self.site_specs(),
+        }
+    }
+}
+
+// --- artifact enumeration --------------------------------------------------
+
+pub const OPT_EVAL_CONFIGS: [&str; 13] = [
+    "fp32",
+    "abfp_w4a4_n64",
+    "abfp_w4a4_n128",
+    "abfp_w4a8_n64",
+    "abfp_w4a8_n128",
+    "abfp_e2m1_n64",
+    "abfp_e1m2_n64",
+    "abfp_e1m2_n128",
+    "abfp_w4ae4m3_n64",
+    "mse_w4a4",
+    "mse_w4a8",
+    "rptq_w4a4",
+    "rptq_w4a8",
+];
+pub const SMALL_EVAL_CONFIGS: [&str; 3] = ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64"];
+pub const OPT_TRAIN_CONFIGS: [&str; 5] =
+    ["fp32", "qat_w4a4_n64", "qat_w4a4_n128", "qat_w4a8_n64", "qat_w4a8_n128"];
+pub const ABLATION_MODELS: [&str; 2] = ["sim-opt-125m", "sim-opt-1.3b"];
+pub const ABLATION_EVAL_CONFIGS: [&str; 7] = [
+    "abfp2_w4a4_n64",
+    "abfp2_w4a8_n64",
+    "abfp_w4a4_o8_n64",
+    "abfp_w4a4_oe4m3_n64",
+    "abfp_w4a8_o8_n64",
+    "mixed_a8_boundary_n64",
+    "mixed_w8a8_boundary_n64",
+];
+
+#[derive(Debug, Clone, Copy)]
+pub struct ArtifactDef {
+    pub model: &'static str,
+    pub purpose: &'static str,
+    pub quant: &'static str,
+}
+
+impl ArtifactDef {
+    pub fn id(&self) -> String {
+        format!("{}/{}_{}", self.model, self.purpose, self.quant)
+    }
+}
+
+/// The full artifact matrix (`registry.py artifact_defs`).
+pub fn artifact_defs() -> Vec<ArtifactDef> {
+    let mut defs = Vec::new();
+    for m in model_defs() {
+        let push = |defs: &mut Vec<ArtifactDef>, purpose: &'static str, quant: &'static str| {
+            defs.push(ArtifactDef { model: m.name, purpose, quant });
+        };
+        match m.task {
+            "lm" => {
+                for q in OPT_EVAL_CONFIGS {
+                    push(&mut defs, "eval", q);
+                }
+                if ABLATION_MODELS.contains(&m.name) {
+                    for q in ABLATION_EVAL_CONFIGS {
+                        push(&mut defs, "eval", q);
+                    }
+                }
+                push(&mut defs, "capture", "fp32");
+                for q in OPT_TRAIN_CONFIGS {
+                    push(&mut defs, "train", q);
+                }
+            }
+            "codegen" => {
+                for q in SMALL_EVAL_CONFIGS {
+                    push(&mut defs, "eval_logits", q);
+                }
+                push(&mut defs, "train", "fp32");
+            }
+            "span_qa" | "image_cls" => {
+                for q in SMALL_EVAL_CONFIGS {
+                    push(&mut defs, "eval", q);
+                }
+                push(&mut defs, "train", "fp32");
+            }
+            other => unreachable!("unknown task {}", other),
+        }
+    }
+    defs
+}
+
+// --- manifest synthesis ----------------------------------------------------
+
+fn f32_io(kind: InputKind, name: String, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name, kind, shape, dtype: DType::F32 }
+}
+
+fn i32_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), kind: InputKind::Data, shape, dtype: DType::I32 }
+}
+
+fn out_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), kind: InputKind::Data, shape, dtype: DType::F32 }
+}
+
+/// Data tensors of one artifact (`aot.py data_inputs`).
+fn data_inputs(cfg: &ModelCfg, purpose: &str) -> Vec<IoSpec> {
+    if cfg.arch == "vit" {
+        let img = f32_io(
+            InputKind::Data,
+            "images".to_string(),
+            vec![cfg.batch, cfg.image, cfg.image, cfg.channels],
+        );
+        if purpose == "train" {
+            return vec![img, i32_io("labels", vec![cfg.batch])];
+        }
+        return vec![img];
+    }
+    let toks = i32_io("tokens", vec![cfg.batch, cfg.seq]);
+    if cfg.arch == "bert" && purpose == "train" {
+        return vec![
+            toks,
+            i32_io("starts", vec![cfg.batch]),
+            i32_io("ends", vec![cfg.batch]),
+        ];
+    }
+    vec![toks]
+}
+
+/// Smoothing vectors and static clip ranges (`aot.py quant_inputs`).
+fn quant_inputs(cfg: &ModelCfg, wiring: &QuantWiring) -> Vec<IoSpec> {
+    let mut out = Vec::new();
+    if wiring.smooth {
+        for s in &cfg.sites {
+            out.push(f32_io(
+                InputKind::Smooth,
+                format!("smooth.{}", s.name),
+                vec![s.dim],
+            ));
+        }
+    }
+    match wiring.aq.kind {
+        QuantKind::StaticInt => {
+            for s in &cfg.sites {
+                out.push(f32_io(InputKind::AScale, format!("alpha.{}", s.name), vec![]));
+            }
+        }
+        QuantKind::StaticIntPc => {
+            for s in &cfg.sites {
+                out.push(f32_io(
+                    InputKind::AScale,
+                    format!("alpha.{}", s.name),
+                    vec![s.dim],
+                ));
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+fn artifact_spec(adef: &ArtifactDef, cfg: &ModelCfg) -> Result<ArtifactSpec> {
+    let wiring = quant_config(adef.quant)
+        .with_context(|| format!("unknown quant config {:?}", adef.quant))?;
+    let params: Vec<IoSpec> = cfg
+        .params
+        .iter()
+        .map(|p| f32_io(InputKind::Param, p.name.clone(), p.shape.clone()))
+        .collect();
+    let (b, s) = (cfg.batch, cfg.seq);
+
+    let (inputs, outputs) = match adef.purpose {
+        "eval" | "eval_logits" => {
+            let mut inputs = params;
+            inputs.extend(quant_inputs(cfg, &wiring));
+            inputs.extend(data_inputs(cfg, adef.purpose));
+            let outputs = if cfg.arch == "opt" && adef.purpose == "eval" && cfg.task != "codegen"
+            {
+                vec![out_io("nll_sum", vec![])]
+            } else if cfg.arch == "opt" {
+                vec![out_io("logits", vec![b, s, cfg.vocab])]
+            } else if cfg.arch == "bert" {
+                vec![out_io("start_logits", vec![b, s]), out_io("end_logits", vec![b, s])]
+            } else {
+                vec![out_io("logits", vec![b, cfg.classes])]
+            };
+            (inputs, outputs)
+        }
+        "capture" => {
+            let mut inputs = params;
+            inputs.extend(data_inputs(cfg, adef.purpose));
+            let ntok = if cfg.arch == "vit" {
+                let np = (cfg.image / cfg.patch) * (cfg.image / cfg.patch);
+                b * (np + 1)
+            } else {
+                b * s
+            };
+            let mut outputs: Vec<IoSpec> = cfg
+                .sites
+                .iter()
+                .map(|site| out_io(&site.name, vec![ntok, site.dim]))
+                .collect();
+            outputs.push(out_io("_anchor", vec![]));
+            (inputs, outputs)
+        }
+        "train" => {
+            let mut inputs = params;
+            for p in &cfg.params {
+                inputs.push(f32_io(InputKind::AdamM, format!("m.{}", p.name), p.shape.clone()));
+            }
+            for p in &cfg.params {
+                inputs.push(f32_io(InputKind::AdamV, format!("v.{}", p.name), p.shape.clone()));
+            }
+            inputs.push(f32_io(InputKind::Scalar, "step".to_string(), vec![]));
+            inputs.push(f32_io(InputKind::Scalar, "lr".to_string(), vec![]));
+            inputs.extend(data_inputs(cfg, adef.purpose));
+            let mut outputs = Vec::with_capacity(3 * cfg.params.len() + 1);
+            for prefix in ["p", "m", "v"] {
+                for p in &cfg.params {
+                    outputs.push(out_io(&format!("{}.{}", prefix, p.name), p.shape.clone()));
+                }
+            }
+            outputs.push(out_io("loss", vec![]));
+            (inputs, outputs)
+        }
+        other => bail!("unknown artifact purpose {:?}", other),
+    };
+
+    Ok(ArtifactSpec {
+        id: adef.id(),
+        file: format!("{}/{}_{}.hlo.txt", adef.model, adef.purpose, adef.quant),
+        model: adef.model.to_string(),
+        purpose: adef.purpose.to_string(),
+        quant: adef.quant.to_string(),
+        inputs,
+        outputs,
+    })
+}
+
+/// Build the full manifest offline — same models, artifacts and I/O
+/// layouts `aot.py` writes to `manifest.json`, minus the HLO files.
+pub fn synthesize_manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    for def in model_defs() {
+        models.insert(def.name.to_string(), def.to_model_cfg());
+    }
+    let mut artifacts = BTreeMap::new();
+    for adef in artifact_defs() {
+        let cfg = &models[adef.model];
+        let spec = artifact_spec(&adef, cfg)
+            .unwrap_or_else(|e| panic!("synthesize {}: {:#}", adef.id(), e));
+        artifacts.insert(spec.id.clone(), spec);
+    }
+    Manifest { models, artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::InputKind;
+
+    #[test]
+    fn model_table_matches_python_registry() {
+        let defs = model_defs();
+        assert_eq!(defs.len(), 10);
+        let opt = &defs[0];
+        assert_eq!(opt.name, "sim-opt-125m");
+        assert_eq!((opt.vocab, opt.d, opt.l, opt.heads), (512, 128, 2, 2));
+        assert_eq!(opt.d_ff(), 512);
+        let v16 = defs.iter().find(|d| d.name == "sim-vit-16").unwrap();
+        assert_eq!(v16.n_patches(), 64);
+        let v32 = defs.iter().find(|d| d.name == "sim-vit-32").unwrap();
+        assert_eq!(v32.n_patches(), 16);
+        // sites: L blocks x 4, fc2 reads the FFN hidden
+        let sites = opt.site_specs();
+        assert_eq!(sites.len(), 8);
+        assert_eq!(sites[0].name, "l0.qkv");
+        assert_eq!(sites[0].dim, 128);
+        assert_eq!(sites[3].name, "l0.fc2");
+        assert_eq!(sites[3].dim, 512);
+    }
+
+    #[test]
+    fn quant_config_table_complete() {
+        for q in OPT_EVAL_CONFIGS
+            .iter()
+            .chain(SMALL_EVAL_CONFIGS.iter())
+            .chain(OPT_TRAIN_CONFIGS.iter())
+            .chain(ABLATION_EVAL_CONFIGS.iter())
+            .copied()
+        {
+            assert!(quant_config(q).is_some(), "missing quant config {}", q);
+        }
+        assert!(quant_config("nope").is_none());
+        let w = quant_config("abfp_w4a8_n64").unwrap();
+        assert!(w.smooth && !w.ste);
+        assert_eq!(w.aq.kind, QuantKind::Abfp);
+        let qat = quant_config("qat_w4a4_n64").unwrap();
+        assert!(qat.ste && !qat.smooth);
+        let mse = quant_config("mse_w4a8").unwrap();
+        assert!(mse.aq.needs_runtime_scale());
+        assert_eq!(mse.wq.kind, QuantKind::WPcmaxInt);
+    }
+
+    #[test]
+    fn layer_overrides_use_python_modulo() {
+        let w = quant_config("mixed_a8_boundary_n64").unwrap();
+        // L = 2: both blocks are boundary blocks
+        for li in 0..2 {
+            let lw = w.for_layer(li, 2);
+            assert_eq!(lw.aq.fmt, Some(Format::Int(INT8)), "li={}", li);
+            assert!(lw.smooth, "overrides inherit the parent smooth flag");
+        }
+        // L = 3: the middle block keeps the base W4A4 wiring
+        let mid = w.for_layer(1, 3);
+        assert_eq!(mid.aq.fmt, Some(Format::Int(INT4)));
+        assert_eq!(w.for_layer(2, 3).aq.fmt, Some(Format::Int(INT8)));
+    }
+
+    #[test]
+    fn synthesized_manifest_mirrors_real_invariants() {
+        // The same invariants `manifest.rs real_manifest_invariants`
+        // checks against the AOT-built manifest.json.
+        let man = synthesize_manifest();
+        assert_eq!(man.models.len(), 10);
+        for (id, a) in &man.artifacts {
+            assert_eq!(*id, format!("{}/{}_{}", a.model, a.purpose, a.quant));
+            assert!(man.models.contains_key(&a.model), "{}", id);
+            let m = &man.models[&a.model];
+            let pnames: Vec<&str> = a
+                .inputs
+                .iter()
+                .filter(|i| i.kind == InputKind::Param)
+                .map(|i| i.name.as_str())
+                .collect();
+            assert_eq!(pnames.len(), m.params.len(), "{}", id);
+            for (pi, ps) in pnames.iter().zip(&m.params) {
+                assert_eq!(*pi, ps.name, "{}", id);
+            }
+            assert!(!a.outputs.is_empty(), "{}", id);
+        }
+        for q in ["abfp2_w4a4_n64", "mixed_a8_boundary_n64", "abfp_w4a4_o8_n64"] {
+            assert!(
+                man.artifacts.contains_key(&format!("sim-opt-125m/eval_{}", q)),
+                "{}",
+                q
+            );
+        }
+        // train artifact layout: P params, P adam_m, P adam_v, 2 scalars,
+        // then data — the exact contract train::run_training asserts.
+        let t = man.artifact("sim-opt-125m/train_fp32").unwrap();
+        let p = man.model("sim-opt-125m").unwrap().params.len();
+        assert_eq!(t.inputs.len(), 3 * p + 2 + 1);
+        assert_eq!(t.inputs[p].kind, InputKind::AdamM);
+        assert_eq!(t.inputs[3 * p].kind, InputKind::Scalar);
+        assert_eq!(t.inputs[3 * p + 2].kind, InputKind::Data);
+        assert_eq!(t.outputs.len(), 3 * p + 1);
+        // capture rows cover the calibration token count
+        let c = man.artifact("sim-opt-125m/capture_fp32").unwrap();
+        assert_eq!(c.outputs.last().unwrap().name, "_anchor");
+        assert_eq!(c.outputs[0].shape, vec![8 * 64, 128]);
+        // smooth + alpha inputs for the static configs
+        let e = man.artifact("sim-opt-125m/eval_mse_w4a8").unwrap();
+        assert!(e.inputs.iter().any(|i| i.name == "alpha.l0.qkv" && i.shape.is_empty()));
+        assert!(!e.inputs.iter().any(|i| i.name.starts_with("smooth.")));
+        let r = man.artifact("sim-opt-125m/eval_rptq_w4a4").unwrap();
+        assert!(e.inputs.len() < r.inputs.len());
+        assert!(r
+            .inputs
+            .iter()
+            .any(|i| i.name == "alpha.l0.fc2" && i.shape == vec![512]));
+    }
+}

@@ -86,6 +86,25 @@ pub trait Backend: Send + Sync {
     /// order (used to fan independent per-site calibration jobs out).
     fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64>;
 
+    /// Apply `f(start_elem, piece)` to consecutive disjoint `chunk`-sized
+    /// pieces of `data` (the last may be short), in parallel where the
+    /// backend supports it. Callers pick `chunk` aligned to their row
+    /// size (≈ len / threads); since pieces are disjoint and `f` runs the
+    /// same per-element math either way, results are bit-identical to the
+    /// serial loop for ANY chunking — the contract the bulk-QDQ
+    /// regression tests in `tests/backend_conformance.rs` enforce.
+    fn par_chunks_f32(
+        &self,
+        data: &mut [f32],
+        chunk: usize,
+        f: &(dyn Fn(usize, &mut [f32]) + Sync),
+    ) {
+        let c = chunk.max(1);
+        for (ci, piece) in data.chunks_mut(c).enumerate() {
+            f(ci * c, piece);
+        }
+    }
+
     /// `"name"` or `"name(x T)"` for display.
     fn describe(&self) -> String {
         if self.threads() > 1 {

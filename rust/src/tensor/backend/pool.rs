@@ -306,4 +306,33 @@ impl Backend for Pool {
         self.run_batch(tasks);
         out
     }
+
+    fn par_chunks_f32(
+        &self,
+        data: &mut [f32],
+        chunk: usize,
+        f: &(dyn Fn(usize, &mut [f32]) + Sync),
+    ) {
+        let c = chunk.max(1);
+        let n_chunks = data.len().div_ceil(c);
+        if self.threads <= 1 || n_chunks <= 1 {
+            for (ci, piece) in data.chunks_mut(c).enumerate() {
+                f(ci * c, piece);
+            }
+            return;
+        }
+        // Same span grouping as `threaded`: at most `threads` queued
+        // tasks, each running its chunks serially — pieces (and so
+        // results) are bit-identical to the serial loop.
+        let per_span = n_chunks.div_ceil(self.threads) * c;
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(data.len().div_ceil(per_span));
+        for (si, span) in data.chunks_mut(per_span).enumerate() {
+            tasks.push(Box::new(move || {
+                for (cj, piece) in span.chunks_mut(c).enumerate() {
+                    f(si * per_span + cj * c, piece);
+                }
+            }));
+        }
+        self.run_batch(tasks);
+    }
 }

@@ -133,4 +133,34 @@ impl Backend for Threaded {
         });
         out
     }
+
+    fn par_chunks_f32(
+        &self,
+        data: &mut [f32],
+        chunk: usize,
+        f: &(dyn Fn(usize, &mut [f32]) + Sync),
+    ) {
+        let c = chunk.max(1);
+        let n_chunks = data.len().div_ceil(c);
+        if self.threads <= 1 || n_chunks <= 1 {
+            for (ci, piece) in data.chunks_mut(c).enumerate() {
+                f(ci * c, piece);
+            }
+            return;
+        }
+        // Group whole chunks into at most `threads` spans (one spawn
+        // each, chunks within a span processed serially): the pieces
+        // handed to `f` are identical to the serial loop's, so results
+        // stay bit-identical regardless of the grouping.
+        let per_span = n_chunks.div_ceil(self.threads) * c;
+        std::thread::scope(|s| {
+            for (si, span) in data.chunks_mut(per_span).enumerate() {
+                s.spawn(move || {
+                    for (cj, piece) in span.chunks_mut(c).enumerate() {
+                        f(si * per_span + cj * c, piece);
+                    }
+                });
+            }
+        });
+    }
 }

@@ -31,6 +31,39 @@ impl Default for TrainOpts {
     }
 }
 
+/// Adam hyperparameters, mirroring `python/compile/train.py`.
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Parameters excluded from optimization: the log-normal outlier gains
+/// model an *end state* of full pretraining, not something to learn
+/// away (`train.py FROZEN_SUFFIXES`; DESIGN.md §1 substitution table).
+pub const FROZEN_SUFFIXES: [&str; 3] = ["emb_gain", "ln1_g", "ln2_g"];
+
+pub fn is_frozen(name: &str) -> bool {
+    FROZEN_SUFFIXES.iter().any(|s| name.ends_with(s))
+}
+
+/// One Adam update over a flat parameter tensor (`train.py adam_update`):
+/// bias-corrected first/second moments, `step` is the 1-based f32 step
+/// counter the train artifacts take as a runtime scalar.
+pub fn adam_step(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], step: f32, lr: f32) {
+    debug_assert!(p.len() == m.len() && m.len() == v.len() && v.len() == g.len());
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    for i in 0..p.len() {
+        let gi = g[i];
+        let m2 = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+        let v2 = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+        m[i] = m2;
+        v[i] = v2;
+        let mhat = m2 / bc1;
+        let vhat = v2 / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
 /// Warmup + cosine decay to 10% of peak.
 pub fn lr_at(opts: &TrainOpts, step: usize) -> f32 {
     let s = step as f32;
@@ -241,6 +274,35 @@ fn save_losses(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn frozen_suffixes_match_python() {
+        assert!(is_frozen("emb_gain"));
+        assert!(is_frozen("l0.ln1_g"));
+        assert!(is_frozen("l7.ln2_g"));
+        assert!(!is_frozen("lnf_g"), "final LN gain is trainable");
+        assert!(!is_frozen("l0.ln1_b"));
+        assert!(!is_frozen("tok_emb"));
+    }
+
+    #[test]
+    fn adam_step_descends_and_corrects_bias() {
+        // First step: mhat == g exactly (bias correction), so the update
+        // is -lr * g / (|g| + eps) up to the vhat sqrt.
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        adam_step(&mut p, &mut m, &mut v, &[0.5], 1.0, 0.1);
+        assert!((p[0] - (1.0 - 0.1)).abs() < 1e-4, "p {}", p[0]);
+        assert!((m[0] - 0.05).abs() < 1e-7);
+        assert!((v[0] - 0.00025).abs() < 1e-9);
+        // Repeated identical gradients keep descending
+        let before = p[0];
+        for step in 2..6 {
+            adam_step(&mut p, &mut m, &mut v, &[0.5], step as f32, 0.1);
+        }
+        assert!(p[0] < before);
+    }
 
     #[test]
     fn lr_schedule_shape() {

@@ -125,6 +125,20 @@ mod tests {
     }
 
     #[test]
+    fn executor_option() {
+        // the exact global-flag shape main.rs feeds to executor::configure
+        let a = Args::parse(&sv(&["eval", "--executor", "native"]), &[]).unwrap();
+        assert_eq!(a.get("executor", "auto"), "native");
+        for name in ["native", "pjrt", "auto"] {
+            let a = Args::parse(&sv(&["eval", "--executor", name]), &[]).unwrap();
+            assert_eq!(a.get("executor", "auto"), name);
+        }
+        let b = Args::parse(&sv(&["eval", "--executor=pjrt"]), &[]).unwrap();
+        assert_eq!(b.get("executor", "auto"), "pjrt");
+        assert!(Args::parse(&sv(&["eval", "--executor"]), &[]).is_err());
+    }
+
+    #[test]
     fn defaults_apply() {
         let a = Args::parse(&sv(&["run"]), &[]).unwrap();
         assert_eq!(a.get("missing", "dflt"), "dflt");

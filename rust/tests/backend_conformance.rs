@@ -360,3 +360,81 @@ fn pool_propagates_task_panics_and_keeps_working() {
     let got = pool.par_map_f64(6, &|i| i as f64 * 3.0);
     assert_eq!(got, vec![0.0, 3.0, 6.0, 9.0, 12.0, 15.0]);
 }
+
+#[test]
+fn par_chunks_f32_bit_identical_for_any_chunking() {
+    // The chunked-dispatch primitive behind the bulk QDQ loops: disjoint
+    // pieces + identical per-element math ⇒ bit-equality with the serial
+    // loop for every backend, chunk size and length (incl. ragged tails).
+    let mut rng = Pcg64::new(0xC806);
+    let under_test = backends_under_test();
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for len in [0usize, 1, 5, 64, 257, (1 << 15) + 13] {
+            let base = fill.vec(&mut rng, len, 6);
+            let mut want = base.clone();
+            for (start, v) in want.iter_mut().enumerate() {
+                *v = *v * 0.5 + start as f32;
+            }
+            for (label, be) in &under_test {
+                for chunk in [1usize, 7, 64, len.max(1)] {
+                    let mut got = base.clone();
+                    be.par_chunks_f32(&mut got, chunk, &|start, piece| {
+                        for (j, v) in piece.iter_mut().enumerate() {
+                            *v = *v * 0.5 + (start + j) as f32;
+                        }
+                    });
+                    let ctx =
+                        format!("par_chunks {} len {} chunk {} {}", label, len, chunk, fill.name());
+                    assert_bits_f32(&got, &want, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bulk_qdq_bit_identical_to_scalar_backend() {
+    // Satellite regression: the three bulk QDQ loops route through
+    // Backend::par_chunks_f32 above the parallel threshold; every
+    // backend must reproduce the scalar backend's bytes exactly.
+    use intfpqsim::formats::{
+        abfp_qdq_with, pcmax_weight_qdq_with, static_int_qdq_with, Format, E4M3, INT4,
+    };
+    let mut rng = Pcg64::new(0xBD0);
+    let under_test = backends_under_test();
+    // (rows, k): big enough to cross PAR_MIN_LEN (1<<15) plus a small one
+    for (rows, k) in [(520usize, 128usize), (7, 64)] {
+        let base = prop::heavy_vec(&mut rng, rows * k, 2.5);
+        let alpha_pc: Vec<f32> = (0..k).map(|j| 0.25 + (j % 9) as f32 * 0.5).collect();
+
+        let mut want_abfp = base.clone();
+        abfp_qdq_with(&mut want_abfp, k, Format::Int(INT4), 64, &Scalar);
+        let mut want_abfp_fp = base.clone();
+        abfp_qdq_with(&mut want_abfp_fp, k, Format::Fp(E4M3), 64, &Scalar);
+        let mut want_static = base.clone();
+        static_int_qdq_with(&mut want_static, &[2.5], 8, &Scalar);
+        let mut want_static_pc = base.clone();
+        static_int_qdq_with(&mut want_static_pc, &alpha_pc, 4, &Scalar);
+        let mut want_pcmax = base.clone();
+        pcmax_weight_qdq_with(&mut want_pcmax, k, 4, &Scalar);
+
+        for (label, be) in &under_test {
+            let ctx = |what: &str| format!("{} {} {}x{}", what, label, rows, k);
+            let mut got = base.clone();
+            abfp_qdq_with(&mut got, k, Format::Int(INT4), 64, be.as_ref());
+            assert_bits_f32(&got, &want_abfp, &ctx("abfp_int4"));
+            let mut got = base.clone();
+            abfp_qdq_with(&mut got, k, Format::Fp(E4M3), 64, be.as_ref());
+            assert_bits_f32(&got, &want_abfp_fp, &ctx("abfp_e4m3"));
+            let mut got = base.clone();
+            static_int_qdq_with(&mut got, &[2.5], 8, be.as_ref());
+            assert_bits_f32(&got, &want_static, &ctx("static_int8"));
+            let mut got = base.clone();
+            static_int_qdq_with(&mut got, &alpha_pc, 4, be.as_ref());
+            assert_bits_f32(&got, &want_static_pc, &ctx("static_int4_pc"));
+            let mut got = base.clone();
+            pcmax_weight_qdq_with(&mut got, k, 4, be.as_ref());
+            assert_bits_f32(&got, &want_pcmax, &ctx("pcmax_int4"));
+        }
+    }
+}
