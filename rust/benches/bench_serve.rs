@@ -1,0 +1,117 @@
+//! Serving benchmarks: sustained tokens/sec, batch occupancy and
+//! p50/p95/p99 latency of the micro-batching server, per tensor backend
+//! × quant config (plus one mixed-config cell per backend).
+//!
+//! Each cell drives the in-process server with the closed-loop loadgen
+//! (4 clients, prewarmed sessions, 2 ms batching window), so the numbers
+//! measure steady-state serving — the trajectory future perf PRs
+//! optimize against. CI runs `-- --fast` and uploads `BENCH_serve.json`
+//! next to `BENCH_tensor.json`/`BENCH_runtime.json`.
+//!
+//!   cargo bench --bench bench_serve [-- --fast]
+
+use std::time::Duration;
+
+use intfpqsim::quantsim::Simulator;
+use intfpqsim::serve::loadgen::{run_loadgen, LoadgenCfg, LoadgenReport};
+use intfpqsim::serve::ServeCfg;
+use intfpqsim::tensor::backend;
+use intfpqsim::train::TrainOpts;
+use intfpqsim::util::json::Json;
+
+const MODEL: &str = "sim-opt-125m";
+
+fn cell(sim: &Simulator, mix: Vec<(String, String)>, requests: usize) -> LoadgenReport {
+    let cfg = LoadgenCfg {
+        clients: 4,
+        requests_per_client: requests,
+        mix,
+        deadline_ms: None,
+        seed: 17,
+        prewarm: true,
+        serve: ServeCfg {
+            queue_cap: 64,
+            batch_window: Duration::from_millis(2),
+            max_batch: 8,
+        },
+    };
+    run_loadgen(sim, &cfg).expect("loadgen cell")
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let threads = backend::env_threads();
+    let mut sim = Simulator::new("artifacts", "checkpoints").unwrap();
+    // brief pretrain: the bench measures serving, not training fidelity
+    sim.opts.pretrain_opts = TrainOpts { steps: if fast { 40 } else { 120 }, ..Default::default() };
+    let requests = if fast { 6 } else { 24 };
+    let quants: &[&str] = if fast {
+        &["fp32", "abfp_w4a4_n64"]
+    } else {
+        &["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64"]
+    };
+
+    let mut rows: Vec<(String, String, LoadgenReport)> = Vec::new();
+    for &be_name in backend::all_names() {
+        backend::configure(be_name, threads).unwrap();
+        let be_desc = backend::active().describe();
+        println!("\n== backend {} ==", be_desc);
+        for &quant in quants {
+            let rep = cell(
+                &sim,
+                vec![(MODEL.to_string(), quant.to_string())],
+                requests,
+            );
+            println!("{:<28} {}", quant, rep.render());
+            rows.push((quant.to_string(), be_desc.clone(), rep));
+        }
+        // mixed-config traffic: two quant keys interleaved, exercising
+        // per-key coalescing + session-cache sharing under contention
+        let mixed_label = "mixed(fp32+abfp_w4a4_n64)";
+        let rep = cell(
+            &sim,
+            vec![
+                (MODEL.to_string(), "fp32".to_string()),
+                (MODEL.to_string(), "abfp_w4a4_n64".to_string()),
+            ],
+            requests,
+        );
+        println!("{:<28} {}", mixed_label, rep.render());
+        rows.push((mixed_label.to_string(), be_desc.clone(), rep));
+    }
+    backend::configure("auto", threads).unwrap();
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("fast", Json::Bool(fast)),
+        ("model", Json::Str(MODEL.into())),
+        ("threads", Json::Num(threads as f64)),
+        ("clients", Json::Num(4.0)),
+        (
+            "serve_throughput",
+            Json::Arr(
+                rows.iter()
+                    .map(|(quant, be, rep)| {
+                        Json::obj(vec![
+                            ("model", Json::Str(MODEL.into())),
+                            ("quant", Json::Str(quant.clone())),
+                            ("backend", Json::Str(be.clone())),
+                            ("ok", Json::Num(rep.ok as f64)),
+                            ("errors", Json::Num(rep.errors as f64)),
+                            ("toks_per_s", Json::Num(rep.toks_per_s)),
+                            ("mean_occupancy", Json::Num(rep.mean_occupancy)),
+                            ("max_occupancy", Json::Num(rep.max_occupancy as f64)),
+                            ("p50_ms", Json::Num(rep.p50_ms)),
+                            ("p95_ms", Json::Num(rep.p95_ms)),
+                            ("p99_ms", Json::Num(rep.p99_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_serve.json", json.pretty()) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {}", e),
+    }
+}

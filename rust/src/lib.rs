@@ -10,7 +10,9 @@
 //!   executor plus the PJRT path behind one [`runtime::executor`] seam;
 //!   `auto` = native, fully offline), calibration, PTQ methods
 //!   (SmoothQuant/GPTQ/RPTQ), training drivers, experiment coordinator
-//!   reproducing every table/figure of the paper.
+//!   reproducing every table/figure of the paper, and a dynamic
+//!   micro-batching inference server ([`serve`]: `repro serve` /
+//!   `repro loadgen`) over prepared quantized sessions.
 //!
 //! Host-side tensor math (Hessian builds, weight transforms, metrics)
 //! executes on a pluggable backend — scalar / cache-blocked / 4-lane
@@ -36,4 +38,5 @@ pub mod eval;
 pub mod calib;
 pub mod methods;
 pub mod quantsim;
+pub mod serve;
 pub mod coordinator;

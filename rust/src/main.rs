@@ -8,23 +8,36 @@
 //!   repro calibrate --model <m>       capture + print calibration summary
 //!   repro experiment --id <tableN|figN> | --all [--fast]
 //!   repro report                      concatenate saved reports
+//!   repro serve                       micro-batching server on stdin/stdout
+//!   repro loadgen                     closed-loop load generator (in-process)
 //!
 //! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
 //! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose,
-//! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (0 = all cores),
+//! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (omit
+//! for all cores; 0 and non-numeric values are rejected),
 //! --executor native|pjrt|auto (auto = native host execution, no
 //! artifacts required).
+//!
+//! Serving options (serve + loadgen): --batch-window MS (default 5),
+//! --max-batch N (default 8), --queue-cap N (default 64); loadgen adds
+//! --clients N, --requests N (per client), --mix model:quant[,...],
+//! --deadline-ms D. All must be positive integers — 0 or junk is a
+//! hard error, never a silent default.
+
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use intfpqsim::coordinator::{self, registry};
 use intfpqsim::info;
 use intfpqsim::quantsim::{Method, QuantConfig, Simulator};
+use intfpqsim::serve::{self, loadgen::LoadgenCfg, ServeCfg};
 use intfpqsim::train::{self, TrainOpts};
 use intfpqsim::util::cli::Args;
 use intfpqsim::util::logging;
 
-const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|report> [options]
+const USAGE: &str =
+    "usage: repro <list|pretrain|qat|eval|calibrate|experiment|report|serve|loadgen> [options]
   repro list [--models]
   repro pretrain --model sim-opt-125m [--steps 300] [--lr 3e-3]
   repro qat --model sim-opt-125m --quant qat_w4a4_n64 [--steps 60]
@@ -32,6 +45,10 @@ const USAGE: &str = "usage: repro <list|pretrain|qat|eval|calibrate|experiment|r
   repro calibrate --model sim-opt-125m
   repro experiment --id table1 | --all  [--fast] [--force]
   repro report
+  repro serve [--batch-window MS] [--max-batch N] [--queue-cap N] [--fast]
+  repro loadgen [--clients N] [--requests N] [--mix model:quant,...]
+                [--deadline-ms D] [--batch-window MS] [--max-batch N]
+                [--queue-cap N] [--fast]
 global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]
         [--executor native|pjrt|auto]";
 
@@ -86,11 +103,12 @@ fn run(argv: &[String]) -> Result<()> {
     // explicit flags override; otherwise the INTFPQSIM_BACKEND /
     // INTFPQSIM_THREADS environment selection stays in effect.
     if a.options.contains_key("backend") || a.options.contains_key("threads") {
-        intfpqsim::tensor::backend::configure(
-            a.get("backend", "auto"),
-            a.get_usize("threads", 0),
-        )
-        .map_err(|e| anyhow::anyhow!(e))?;
+        // Strict: an explicit --threads must be a positive integer (omit
+        // the flag for all cores) — 0 or junk is a configuration error,
+        // never a silent fallback.
+        let threads = a.get_usize_min("threads", 0, 1).map_err(anyhow::Error::msg)?;
+        intfpqsim::tensor::backend::configure(a.get("backend", "auto"), threads)
+            .map_err(|e| anyhow::anyhow!(e))?;
     }
     // Runtime executor: native host evaluation (default) or the PJRT
     // compiled-artifact path. Only explicit flags override, so the
@@ -214,7 +232,68 @@ fn run(argv: &[String]) -> Result<()> {
             std::fs::write("results/ALL.md", &out).context("write results/ALL.md")?;
             Ok(())
         }
+        "serve" => {
+            let sim = make_sim(&a)?;
+            let cfg = serve_cfg_from(&a)?;
+            serve::run_stdio(&sim, &cfg)
+        }
+        "loadgen" => {
+            let sim = make_sim(&a)?;
+            let mut lcfg = LoadgenCfg { serve: serve_cfg_from(&a)?, ..Default::default() };
+            let fast = a.flag("fast");
+            lcfg.clients = a
+                .get_usize_min("clients", lcfg.clients, 1)
+                .map_err(anyhow::Error::msg)?;
+            lcfg.requests_per_client = a
+                .get_usize_min("requests", if fast { 3 } else { 16 }, 1)
+                .map_err(anyhow::Error::msg)?;
+            if a.options.contains_key("deadline-ms") {
+                lcfg.deadline_ms =
+                    Some(a.get_u64_min("deadline-ms", 0, 1).map_err(anyhow::Error::msg)?);
+            }
+            if let Some(mix) = a.options.get("mix") {
+                lcfg.mix = parse_mix(mix)?;
+            }
+            let report = serve::loadgen::run_loadgen(&sim, &lcfg)?;
+            println!("{}", report.render());
+            Ok(())
+        }
         "" => bail!("missing command"),
         other => bail!("unknown command {:?}", other),
     }
+}
+
+/// The serving knobs `serve` and `loadgen` share — all strictly parsed.
+fn serve_cfg_from(a: &Args) -> Result<ServeCfg> {
+    let defaults = ServeCfg::default();
+    let window_ms = a
+        .get_u64_min("batch-window", defaults.batch_window.as_millis() as u64, 1)
+        .map_err(anyhow::Error::msg)?;
+    Ok(ServeCfg {
+        queue_cap: a
+            .get_usize_min("queue-cap", defaults.queue_cap, 1)
+            .map_err(anyhow::Error::msg)?,
+        batch_window: Duration::from_millis(window_ms),
+        max_batch: a
+            .get_usize_min("max-batch", defaults.max_batch, 1)
+            .map_err(anyhow::Error::msg)?,
+    })
+}
+
+/// `--mix model:quant[,model:quant...]`.
+fn parse_mix(raw: &str) -> Result<Vec<(String, String)>> {
+    let mut mix = Vec::new();
+    for part in raw.split(',') {
+        let (model, quant) = part
+            .split_once(':')
+            .with_context(|| format!("--mix entry {:?} is not model:quant", part))?;
+        anyhow::ensure!(
+            !model.is_empty() && !quant.is_empty(),
+            "--mix entry {:?} is not model:quant",
+            part
+        );
+        mix.push((model.to_string(), quant.to_string()));
+    }
+    anyhow::ensure!(!mix.is_empty(), "--mix needs at least one model:quant entry");
+    Ok(mix)
 }

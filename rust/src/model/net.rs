@@ -304,8 +304,66 @@ pub struct AttnTape {
     probs: Vec<Tensor>,
 }
 
+/// One (batch item, head) attention: scores → causal mask → row softmax
+/// → context. Returns the (S, hd) context block and the (S, S) softmax
+/// probabilities (the tape record). This is the shared serial kernel of
+/// both the sequential and the batched dispatch below, so the two paths
+/// are bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn attn_head(
+    qkv: &Tensor,
+    bi: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+    hd: usize,
+    causal: bool,
+    be: &dyn Backend,
+) -> (Tensor, Tensor) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let r0 = bi * s;
+    let c = h * hd;
+    let qh = take_block(qkv, r0, s, c, hd);
+    let kh = take_block(qkv, r0, s, d + c, hd);
+    let vh = take_block(qkv, r0, s, 2 * d + c, hd);
+    let mut scores = be.matmul(&qh, &kh.transpose());
+    for v in scores.data.iter_mut() {
+        *v *= scale;
+    }
+    if causal {
+        for i in 0..s {
+            for j in (i + 1)..s {
+                scores.data[i * s + j] = MASK_NEG;
+            }
+        }
+    }
+    // row softmax with max-shift
+    for i in 0..s {
+        let row = scores.row_mut(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    let oh = be.matmul(&scores, &vh);
+    (oh, scores)
+}
+
 /// Multi-head attention over packed (N, 3d) qkv projections, fp32
 /// internals (`common.py attention`).
+///
+/// The inference path (no tape) dispatches every (batch item, head)
+/// block as one parallel wave through [`Backend::par_map_tensor`] —
+/// batching the per-(b, h) matmuls instead of running B·H sequential
+/// backend calls. Each wave job runs [`attn_head`], the same serial
+/// kernel the taped path uses, so results are bit-identical to the
+/// sequential loop on every backend (conformance-tested end to end by
+/// the `run_batch` parity suite).
 fn attention(
     qkv: &Tensor,
     b: usize,
@@ -317,42 +375,21 @@ fn attention(
 ) -> (Tensor, Option<AttnTape>) {
     let d = qkv.shape[1] / 3;
     let hd = d / heads;
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut out = Tensor::zeros(vec![b * s, d]);
+    if !want_tape && b * heads > 1 {
+        let outs = be.par_map_tensor(b * heads, &|i| {
+            attn_head(qkv, i / heads, i % heads, s, d, hd, causal, be).0
+        });
+        for (i, oh) in outs.iter().enumerate() {
+            add_block(&mut out, oh, (i / heads) * s, (i % heads) * hd);
+        }
+        return (out, None);
+    }
     let mut probs = Vec::with_capacity(if want_tape { b * heads } else { 0 });
     for bi in 0..b {
         for h in 0..heads {
-            let r0 = bi * s;
-            let c = h * hd;
-            let qh = take_block(qkv, r0, s, c, hd);
-            let kh = take_block(qkv, r0, s, d + c, hd);
-            let vh = take_block(qkv, r0, s, 2 * d + c, hd);
-            let mut scores = be.matmul(&qh, &kh.transpose());
-            for v in scores.data.iter_mut() {
-                *v *= scale;
-            }
-            if causal {
-                for i in 0..s {
-                    for j in (i + 1)..s {
-                        scores.data[i * s + j] = MASK_NEG;
-                    }
-                }
-            }
-            // row softmax with max-shift
-            for i in 0..s {
-                let row = scores.row_mut(i);
-                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-                let mut sum = 0.0f32;
-                for v in row.iter_mut() {
-                    *v = (*v - mx).exp();
-                    sum += *v;
-                }
-                for v in row.iter_mut() {
-                    *v /= sum;
-                }
-            }
-            let oh = be.matmul(&scores, &vh);
-            add_block(&mut out, &oh, r0, c);
+            let (oh, scores) = attn_head(qkv, bi, h, s, d, hd, causal, be);
+            add_block(&mut out, &oh, bi * s, h * hd);
             if want_tape {
                 probs.push(scores);
             }

@@ -24,7 +24,7 @@ use crate::eval;
 use crate::info;
 use crate::methods::{gptq, rptq, smoothquant};
 use crate::model::{self, CkptDir};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Session};
 use crate::tensor::io::TensorStore;
 use crate::train::{self, TrainOpts};
 
@@ -209,7 +209,10 @@ impl Simulator {
         Ok(rc)
     }
 
-    fn artifact_id(&self, model_name: &str, quant: &str) -> Result<String> {
+    /// Manifest id of the eval artifact for (model, quant) — validated
+    /// against the manifest. Public so the serving layer can pre-check a
+    /// traffic mix before spawning clients.
+    pub fn eval_artifact_id(&self, model_name: &str, quant: &str) -> Result<String> {
         let cfg = self.rt.manifest.model(model_name)?;
         let purpose = if cfg.task == "codegen" { "eval_logits" } else { "eval" };
         let id = format!("{}/{}_{}", model_name, purpose, quant);
@@ -217,9 +220,13 @@ impl Simulator {
         Ok(id)
     }
 
-    /// Evaluate a model under a quantization configuration; returns the
-    /// task metric (PPL / Pass@1 / F1 / Accuracy).
-    pub fn evaluate(&self, model_name: &str, qc: &QuantConfig) -> Result<Metric> {
+    /// Assemble everything an evaluation needs — method-transformed
+    /// weights, smoothing vectors, calibrated clip ranges — and open a
+    /// prepared runtime session with them bound sticky (weights
+    /// converted/QDQ-prepared once). [`Simulator::evaluate`] and the
+    /// serving layer (`serve::`) both go through here, so a cached serve
+    /// session is exactly the session `evaluate` would run.
+    pub fn open_eval_session(&self, model_name: &str, qc: &QuantConfig) -> Result<Session> {
         let cfg = self.rt.manifest.model(model_name)?.clone();
 
         // 1. weights (possibly method-transformed or QAT-fine-tuned)
@@ -257,7 +264,7 @@ impl Simulator {
             Method::Gptq => "fp32",
             _ => qc.quant.as_str(),
         };
-        let id = self.artifact_id(model_name, quant_for_artifact)?;
+        let id = self.eval_artifact_id(model_name, quant_for_artifact)?;
         let spec = self.rt.manifest.artifact(&id)?.clone();
 
         // 3. sticky inputs: params + smooth + calibrated alphas
@@ -280,8 +287,15 @@ impl Simulator {
             }
         }
 
-        // 4. run the task metric
-        let sess = self.rt.session(&id, &sticky)?;
+        // 4. open the prepared session
+        self.rt.session(&id, &sticky)
+    }
+
+    /// Evaluate a model under a quantization configuration; returns the
+    /// task metric (PPL / Pass@1 / F1 / Accuracy).
+    pub fn evaluate(&self, model_name: &str, qc: &QuantConfig) -> Result<Metric> {
+        let cfg = self.rt.manifest.model(model_name)?.clone();
+        let sess = self.open_eval_session(model_name, qc)?;
         let m = match cfg.task.as_str() {
             "lm" => Metric {
                 value: eval::perplexity(

@@ -56,6 +56,23 @@ pub trait ExecSession {
     /// order. Input counts/shapes are validated by the outer `Session`.
     fn run(&self, free: &[&Val]) -> Result<Vec<Tensor>>;
 
+    /// Execute a micro-batch of independent requests, each with its own
+    /// free-input values, returning one output vector per request.
+    /// Semantically identical to calling [`ExecSession::run`] once per
+    /// element — which is exactly what this default does. Implementations
+    /// may coalesce compatible requests into one batched forward (the
+    /// native executor does, for eval artifacts), but per-request results
+    /// must stay bit-identical to the sequential loop; the serving layer
+    /// and `tests/backend_conformance.rs` rely on it.
+    fn run_batch(&self, batch: &[Vec<Val>]) -> Result<Vec<Vec<Tensor>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for free in batch {
+            let refs: Vec<&Val> = free.iter().collect();
+            out.push(self.run(&refs)?);
+        }
+        Ok(out)
+    }
+
     /// Replace one sticky input (position `i` of the artifact's input
     /// list) — e.g. swap transformed weights in place. Implementations
     /// copy only if they retain the value (PJRT uploads and moves on).

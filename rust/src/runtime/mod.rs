@@ -168,9 +168,11 @@ impl Session {
         self.free_idx.iter().map(|&i| self.spec.inputs[i].name.as_str()).collect()
     }
 
-    /// Execute with per-call values for the free inputs (in free-input
-    /// order). Returns one host tensor per manifest output.
-    pub fn run(&self, free: &[Val]) -> Result<Vec<Tensor>> {
+    /// Count/shape/dtype validation of one request's free-input values —
+    /// the single gate both [`Session::run`] and [`Session::run_batch`]
+    /// go through, so the batched path can never accept inputs the
+    /// sequential path rejects.
+    fn check_free(&self, free: &[Val]) -> Result<()> {
         if free.len() != self.free_idx.len() {
             bail!(
                 "artifact {}: expected {} free inputs ({:?}), got {}",
@@ -183,7 +185,30 @@ impl Session {
         for (&i, v) in self.free_idx.iter().zip(free.iter()) {
             check_shape(&self.spec, i, v)?;
         }
+        Ok(())
+    }
+
+    /// Execute with per-call values for the free inputs (in free-input
+    /// order). Returns one host tensor per manifest output.
+    pub fn run(&self, free: &[Val]) -> Result<Vec<Tensor>> {
+        self.check_free(free)?;
         let refs: Vec<&Val> = free.iter().collect();
         self.inner.run(&refs)
+    }
+
+    /// Execute a micro-batch of independent requests (one free-input
+    /// vector per request, each validated like [`Session::run`]).
+    /// Returns one output vector per request, in request order, with
+    /// per-request results bit-identical to running each sequentially;
+    /// executors that support it (native, for eval artifacts) coalesce
+    /// the requests into a single batched forward.
+    pub fn run_batch(&self, batch: &[Vec<Val>]) -> Result<Vec<Vec<Tensor>>> {
+        for free in batch {
+            self.check_free(free)?;
+        }
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.inner.run_batch(batch)
     }
 }

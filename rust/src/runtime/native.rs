@@ -25,6 +25,7 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -39,6 +40,18 @@ use crate::tensor::io::TensorStore;
 use crate::tensor::Tensor;
 
 pub struct Native;
+
+/// Cumulative count of prepared-state builds (full weight conversion +
+/// QDQ transform) across every native session in the process. The
+/// serving tests assert this stays flat across repeated requests for a
+/// cached session — i.e. "the second request performs no re-QDQ".
+static PREPARED_BUILDS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many times any native session has (re)built its prepared sticky
+/// state since process start. Monotone; compare deltas, not absolutes.
+pub fn prepared_builds() -> usize {
+    PREPARED_BUILDS.load(Ordering::Relaxed)
+}
 
 impl Executor for Native {
     fn name(&self) -> &'static str {
@@ -170,6 +183,7 @@ impl NativeSession {
             }
         }
         crate::model::check_params(&self.cfg, &params)?;
+        PREPARED_BUILDS.fetch_add(1, Ordering::Relaxed);
         let sites = net::build_sites(
             &self.cfg,
             &self.wiring,
@@ -237,18 +251,28 @@ impl NativeSession {
             false,
             false,
         )?;
+        let tokens = match input {
+            NetInput::Tokens(t) => Some(t),
+            NetInput::Images(_) => None,
+        };
+        self.head_outputs(fwd.head, tokens)
+    }
+
+    /// Task outputs for one request given its slice of the forward head:
+    /// opt eval → scalar NLL sum; opt logits → (B, S, V); bert → start/
+    /// end logit pair; vit → class logits. Shared by the single-request
+    /// path and the coalesced `run_batch` split, so both produce the
+    /// same bytes for the same head rows.
+    fn head_outputs(&self, head: Tensor, tokens: Option<&[i32]>) -> Result<Vec<Tensor>> {
         let (b, s) = (self.cfg.batch, self.cfg.seq);
         Ok(match self.cfg.arch.as_str() {
             "opt" => {
                 if self.spec.purpose == "eval" && self.cfg.task != "codegen" {
-                    let tokens = match input {
-                        NetInput::Tokens(t) => t,
-                        _ => unreachable!(),
-                    };
-                    let (nll, _) = net::nll_sum_and_grad(&fwd.head, tokens, b, s, false);
+                    let tokens = tokens.context("lm eval needs its token stream")?;
+                    let (nll, _) = net::nll_sum_and_grad(&head, tokens, b, s, false);
                     vec![Tensor::scalar(nll as f32)]
                 } else {
-                    vec![fwd.head.reshape(vec![b, s, self.cfg.vocab])]
+                    vec![head.reshape(vec![b, s, self.cfg.vocab])]
                 }
             }
             "bert" => {
@@ -256,15 +280,87 @@ impl NativeSession {
                 let n = b * s;
                 let mut sl = vec![0.0f32; n];
                 let mut el = vec![0.0f32; n];
-                for (r, pair) in fwd.head.data.chunks(2).enumerate() {
+                for (r, pair) in head.data.chunks(2).enumerate() {
                     sl[r] = pair[0];
                     el[r] = pair[1];
                 }
                 vec![Tensor::new(vec![b, s], sl), Tensor::new(vec![b, s], el)]
             }
-            "vit" => vec![fwd.head],
+            "vit" => vec![head],
             other => bail!("unknown arch {}", other),
         })
+    }
+
+    /// Sequential fallback of [`ExecSession::run_batch`] (also the shape
+    /// every other purpose keeps).
+    fn run_seq(&self, batch: &[Vec<Val>]) -> Result<Vec<Vec<Tensor>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for free in batch {
+            let refs: Vec<&Val> = free.iter().collect();
+            out.push(self.run(&refs)?);
+        }
+        Ok(out)
+    }
+
+    /// Coalesced eval: concatenate every request's data tensor along the
+    /// batch axis, run ONE forward with `batch = B·requests` (embedding,
+    /// linears and QDQ fan-out all see a single [B·T, d] stream; the
+    /// per-(b, h) attention matmuls dispatch as one wave), then split the
+    /// head rows back per request. Per-request results are bit-identical
+    /// to sequential `run` calls: every row-wise op, dot product and
+    /// softmax sees exactly the same operands in the same order.
+    fn run_eval_coalesced(&self, batch: &[Vec<Val>]) -> Result<Vec<Vec<Tensor>>> {
+        let nb = batch.len();
+        let refs0: Vec<&Val> = batch[0].iter().collect();
+        let args0 = self.assemble(&refs0)?;
+        let mut bcfg = self.cfg.clone();
+        bcfg.batch = self.cfg.batch * nb;
+        let concat = |expect_i32: bool| -> Result<(Vec<f32>, Vec<i32>)> {
+            let mut f = Vec::new();
+            let mut i = Vec::new();
+            for free in batch {
+                match (&free[0], expect_i32) {
+                    (Val::I32(d, _), true) => i.extend_from_slice(d),
+                    (Val::F32(d, _), false) => f.extend_from_slice(d),
+                    _ => bail!(
+                        "artifact {}: mixed data dtypes in run_batch",
+                        self.spec.id
+                    ),
+                }
+            }
+            Ok((f, i))
+        };
+        let is_vit = self.cfg.arch == "vit";
+        let (fdata, idata) = concat(!is_vit)?;
+        let input = if is_vit {
+            NetInput::Images(&fdata)
+        } else {
+            NetInput::Tokens(&idata)
+        };
+        let fwd = self.with_prepared(&args0, |prep| {
+            net::forward(
+                &bcfg,
+                &prep.params,
+                &prep.sites,
+                &input,
+                self.be.as_ref(),
+                false,
+                false,
+            )
+        })?;
+        let rows_per = fwd.head.shape[0] / nb;
+        let cols = fwd.head.shape[1];
+        let mut out = Vec::with_capacity(nb);
+        for (r, free) in batch.iter().enumerate() {
+            let slice = &fwd.head.data[r * rows_per * cols..(r + 1) * rows_per * cols];
+            let head_r = Tensor::new(vec![rows_per, cols], slice.to_vec());
+            let tokens = match &free[0] {
+                Val::I32(d, _) => Some(d.as_slice()),
+                Val::F32(..) => None,
+            };
+            out.push(self.head_outputs(head_r, tokens)?);
+        }
+        Ok(out)
     }
 
     fn run_capture(&self, args: &[&Val]) -> Result<Vec<Tensor>> {
@@ -433,6 +529,22 @@ impl ExecSession for NativeSession {
                 self.spec.id,
                 other
             ),
+        }
+    }
+
+    fn run_batch(&self, batch: &[Vec<Val>]) -> Result<Vec<Vec<Tensor>>> {
+        // Coalescible: eval purposes on the prepared fast path, with
+        // exactly one free (data) input per request — the shape the
+        // serving layer produces. Everything else keeps the sequential
+        // semantics of the trait default.
+        let coalescible = matches!(self.spec.purpose.as_str(), "eval" | "eval_logits")
+            && self.cacheable
+            && batch.len() > 1
+            && batch.iter().all(|free| free.len() == 1);
+        if coalescible {
+            self.run_eval_coalesced(batch)
+        } else {
+            self.run_seq(batch)
         }
     }
 

@@ -110,6 +110,12 @@ impl Executor for Pjrt {
 }
 
 /// A compiled artifact with its sticky inputs resident on device.
+///
+/// `ExecSession::run_batch` keeps the trait's sequential default here:
+/// the compiled HLO has a fixed batch dimension, so PJRT cannot widen a
+/// forward the way the native executor does — micro-batches simply
+/// replay `run` per request (same results, no coalescing win until
+/// batch-polymorphic artifacts are built).
 struct PjrtSession {
     client: Rc<xla::PjRtClient>,
     exe: Rc<xla::PjRtLoadedExecutable>,

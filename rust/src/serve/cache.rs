@@ -1,0 +1,75 @@
+//! Prepared-session cache: open each (model × quant-config × executor ×
+//! backend) session once, reuse it for every subsequent request.
+//!
+//! Opening an eval session is the expensive part of serving — weights
+//! are converted to host tensors and QDQ-transformed (the host analog of
+//! a device upload, see `runtime::native`). The cache makes that a
+//! once-per-key cost: a hit hands back the same `Rc<Session>`, whose
+//! prepared state persists across `run_batch` calls, so the second
+//! request for a config performs **no re-QDQ** (asserted by the serving
+//! tests via `runtime::native::prepared_builds`).
+//!
+//! The executor and backend names are part of the key because the
+//! prepared state is specific to both (a session hoists one backend
+//! handle at open); reconfiguring the backend mid-serve simply faults in
+//! a fresh entry rather than silently running on a stale handle.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::Session;
+
+/// Full identity of a prepared session.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    pub model: String,
+    pub quant: String,
+    pub executor: String,
+    pub backend: String,
+}
+
+#[derive(Default)]
+pub struct SessionCache {
+    entries: HashMap<SessionKey, Rc<Session>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    /// The cached session for `key`, opening (and retaining) it on miss.
+    /// An open failure is returned to the caller and cached as nothing —
+    /// a later retry re-attempts the open.
+    pub fn get_or_open(
+        &mut self,
+        key: &SessionKey,
+        open: impl FnOnce() -> Result<Session>,
+    ) -> Result<Rc<Session>> {
+        if let Some(sess) = self.entries.get(key) {
+            self.hits += 1;
+            return Ok(Rc::clone(sess));
+        }
+        let sess = Rc::new(open()?);
+        self.misses += 1;
+        self.entries.insert(key.clone(), Rc::clone(&sess));
+        Ok(sess)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits, self.misses)
+    }
+}

@@ -1,0 +1,269 @@
+//! Closed-loop multi-client load generator (`repro loadgen`).
+//!
+//! N client threads each submit `requests_per_client` requests against
+//! an in-process server, one at a time (closed loop: the next request
+//! goes out only after the previous response lands — so a full queue is
+//! real backpressure, not an unbounded backlog). The traffic mix cycles
+//! deterministically over (model × quant config) pairs and the request
+//! stream indices derive from a fixed seed, so two runs with the same
+//! `LoadgenCfg` traffic issue byte-identical requests regardless of
+//! batching configuration or thread interleaving — the serving
+//! determinism tests compare exactly that.
+//!
+//! The report records sustained tokens/sec, batch occupancy and
+//! p50/p95/p99 client-observed latency; `bench_serve` snapshots it into
+//! `BENCH_serve.json` per backend × quant config.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::quantsim::{QuantConfig, Simulator};
+use crate::util::json::Json;
+
+use super::cache::SessionCache;
+use super::protocol::{Request, Response};
+use super::queue::{AdmissionQueue, Job};
+use super::{serve_loop, ServeCfg, ServeStats};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenCfg {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// The (model, quant config) pairs the clients cycle over.
+    pub mix: Vec<(String, String)>,
+    /// Per-request relative deadline; `None` = no deadline.
+    pub deadline_ms: Option<u64>,
+    /// Seeds the request stream indices (not the model weights).
+    pub seed: u64,
+    /// Open every mix session (pretraining weights as needed) before
+    /// the clock starts, so the report measures steady-state serving.
+    pub prewarm: bool,
+    pub serve: ServeCfg,
+}
+
+impl Default for LoadgenCfg {
+    fn default() -> LoadgenCfg {
+        LoadgenCfg {
+            clients: 4,
+            requests_per_client: 8,
+            mix: vec![
+                ("sim-opt-125m".to_string(), "fp32".to_string()),
+                ("sim-opt-125m".to_string(), "abfp_w4a4_n64".to_string()),
+            ],
+            deadline_ms: None,
+            seed: 1,
+            prewarm: true,
+            serve: ServeCfg::default(),
+        }
+    }
+}
+
+/// Which mix entry client `c`'s request `i` targets — the ONE place the
+/// formula lives, used both by the client threads (choosing what to
+/// send) and the throughput accounting (reconstructing what a response
+/// id targeted). Keep them in lock-step or tokens/sec misattributes.
+fn mix_slot(nmix: usize, c: usize, i: usize) -> usize {
+    (c + i) % nmix
+}
+
+/// Globally unique, reconstructible request id.
+fn request_id(c: usize, i: usize) -> u64 {
+    (c as u64) * 1_000_000 + i as u64
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Every response, sorted by request id.
+    pub responses: Vec<Response>,
+    pub ok: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub toks_per_s: f64,
+    pub mean_occupancy: f64,
+    pub max_occupancy: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub stats: ServeStats,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        format!(
+            "loadgen: {} ok / {} errors in {:.2}s  {:.1} tok/s  \
+             occupancy mean {:.2} max {}  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+            self.ok,
+            self.errors,
+            self.wall_s,
+            self.toks_per_s,
+            self.mean_occupancy,
+            self.max_occupancy,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("toks_per_s", Json::Num(self.toks_per_s)),
+            ("mean_occupancy", Json::Num(self.mean_occupancy)),
+            ("max_occupancy", Json::Num(self.max_occupancy as f64)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
+/// Drive `cfg.clients` concurrent closed-loop clients against an
+/// in-process server; the calling thread becomes the serving worker
+/// (sessions are not `Send`). Returns the aggregated report.
+pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.clients > 0, "loadgen needs at least one client");
+    anyhow::ensure!(cfg.requests_per_client > 0, "loadgen needs at least one request");
+    anyhow::ensure!(!cfg.mix.is_empty(), "loadgen needs a non-empty traffic mix");
+
+    // Validate the mix up front and record tokens-per-request per model.
+    let mut toks_per_model: HashMap<String, f64> = HashMap::new();
+    for (model, quant) in &cfg.mix {
+        sim.eval_artifact_id(model, quant)
+            .with_context(|| format!("mix entry {}:{}", model, quant))?;
+        let mcfg = sim.rt.manifest.model(model)?;
+        let toks = if mcfg.arch == "vit" {
+            mcfg.batch as f64
+        } else {
+            (mcfg.batch * mcfg.seq) as f64
+        };
+        toks_per_model.insert(model.clone(), toks);
+    }
+
+    let mut cache = SessionCache::new();
+    if cfg.prewarm {
+        for (model, quant) in &cfg.mix {
+            let key = super::session_key(sim, model, quant);
+            cache.get_or_open(&key, || {
+                sim.open_eval_session(model, &QuantConfig::abfp(quant))
+            })?;
+        }
+    }
+
+    let queue = AdmissionQueue::new(cfg.serve.queue_cap);
+    let (done_tx, done_rx) = mpsc::channel::<Vec<(Response, f64)>>();
+    let mut clients = Vec::with_capacity(cfg.clients);
+    let t0 = Instant::now();
+    for c in 0..cfg.clients {
+        let queue = Arc::clone(&queue);
+        let mix = cfg.mix.clone();
+        let n = cfg.requests_per_client;
+        let deadline = cfg.deadline_ms;
+        let seed = cfg.seed;
+        let nmix = cfg.mix.len();
+        let done = done_tx.clone();
+        clients.push(std::thread::spawn(move || {
+            let (tx, rx) = mpsc::channel::<Response>();
+            let mut records = Vec::with_capacity(n);
+            'requests: for i in 0..n {
+                let (model, quant) = mix[mix_slot(nmix, c, i)].clone();
+                let mut req = Request::new(
+                    request_id(c, i),
+                    &model,
+                    &quant,
+                    seed.wrapping_add((c * 131 + i * 17) as u64) % 64,
+                );
+                req.deadline_ms = deadline;
+                let started = Instant::now();
+                let mut job = Job::new(req, tx.clone());
+                // Closed-loop backpressure: a full queue means wait and
+                // retry, never pile on.
+                loop {
+                    match queue.try_push(job) {
+                        Ok(()) => break,
+                        Err(rejected) => {
+                            if queue.is_closed() {
+                                break 'requests;
+                            }
+                            job = rejected;
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    }
+                }
+                match rx.recv() {
+                    Ok(resp) => {
+                        records.push((resp, started.elapsed().as_secs_f64() * 1e3));
+                    }
+                    Err(_) => break,
+                }
+            }
+            let _ = done.send(records);
+        }));
+    }
+    drop(done_tx);
+
+    // Close the queue once every client has finished — from a helper
+    // thread, because this thread is about to become the server.
+    let closer = {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || {
+            for h in clients {
+                let _ = h.join();
+            }
+            queue.close();
+        })
+    };
+
+    let stats = serve_loop(sim, &queue, &cfg.serve, &mut cache);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let _ = closer.join();
+
+    let mut responses: Vec<Response> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let (mut ok, mut errors, mut toks) = (0usize, 0usize, 0.0f64);
+    let mut occ_sum = 0usize;
+    for records in done_rx.iter() {
+        for (resp, ms) in records {
+            if resp.ok {
+                ok += 1;
+                occ_sum += resp.batched;
+                let c = (resp.id / 1_000_000) as usize;
+                let i = (resp.id % 1_000_000) as usize;
+                let model = &cfg.mix[mix_slot(cfg.mix.len(), c, i)].0;
+                toks += toks_per_model.get(model).copied().unwrap_or(0.0);
+            } else {
+                errors += 1;
+            }
+            latencies.push(ms);
+            responses.push(resp);
+        }
+    }
+    responses.sort_by_key(|r| r.id);
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[((latencies.len() as f64 - 1.0) * p) as usize]
+        }
+    };
+
+    Ok(LoadgenReport {
+        ok,
+        errors,
+        wall_s,
+        toks_per_s: if wall_s > 0.0 { toks / wall_s } else { 0.0 },
+        mean_occupancy: if ok > 0 { occ_sum as f64 / ok as f64 } else { 0.0 },
+        max_occupancy: stats.max_occupancy,
+        p50_ms: pct(0.5),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+        responses,
+        stats,
+    })
+}

@@ -1,0 +1,362 @@
+//! Dynamic micro-batching inference server over the native executor.
+//!
+//! The subsystem turns prepared quantized sessions into a shared,
+//! batched, concurrently-driven service:
+//!
+//! * [`queue`] — bounded admission queue with reject-on-full
+//!   backpressure and per-request deadlines;
+//! * [`batcher`] — dynamic micro-batcher coalescing compatible requests
+//!   (same model × quant config) into one batched forward within a
+//!   configurable window / max batch;
+//! * [`cache`] — prepared-session cache keyed by (model, quant config,
+//!   executor, backend): weights converted/QDQ-prepared once per key;
+//! * [`protocol`] — the line-delimited JSON request/response format of
+//!   `repro serve`;
+//! * [`loadgen`] — closed-loop multi-client load generator
+//!   (`repro loadgen`) measuring tokens/sec, batch occupancy and
+//!   latency percentiles.
+//!
+//! Threading model: runtime sessions are deliberately **not** `Send`
+//! (they hold `Rc` sticky inputs and a hoisted backend handle), so one
+//! worker thread owns the [`Simulator`], the session cache and every
+//! dispatch; producers on other threads only touch the admission queue
+//! and per-request response channels. Parallelism comes from *inside*
+//! each batched forward — the coalesced `[B·T, d]` matmuls and the
+//! per-(b, h) attention wave fan out across the pool tensor backend —
+//! which is where the hardware-shaped win is, rather than from racing
+//! non-thread-safe sessions.
+
+pub mod batcher;
+pub mod cache;
+pub mod loadgen;
+pub mod protocol;
+pub mod queue;
+
+use std::io::{BufRead, Write as IoWrite};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::corpus::{
+    CodeCorpus, ImageCorpus, QaCorpus, TextCorpus, CODE_SEED, IMG_SEED, QA_SEED, TEXT_SEED,
+};
+use crate::quantsim::{QuantConfig, Simulator};
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::Val;
+use crate::tensor::backend;
+
+use batcher::{Batcher, MicroBatch};
+use cache::{SessionCache, SessionKey};
+use protocol::{summarize, Request, Response};
+use queue::{AdmissionQueue, Job};
+
+/// Server tuning knobs (`--queue-cap`, `--batch-window`, `--max-batch`).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub queue_cap: usize,
+    pub batch_window: Duration,
+    pub max_batch: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            queue_cap: 64,
+            batch_window: Duration::from_millis(5),
+            max_batch: 8,
+        }
+    }
+}
+
+/// Aggregate counters of one `serve_loop` run. `requests` counts
+/// dispatched jobs; `expired` counts jobs answered with a deadline
+/// error *before* dispatch (they never reach a batch), so the total
+/// responses sent is `ok + errors + expired`.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub expired: usize,
+    pub batches: usize,
+    pub max_occupancy: usize,
+}
+
+impl ServeStats {
+    /// Mean occupancy of the *dispatched* batches (expired-in-queue
+    /// jobs never occupy a batch and are excluded).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The shared, deterministic request streams — one corpus per model
+/// family, seeded exactly like evaluation, so request `batch` index `i`
+/// always denotes the same payload.
+struct Corpora {
+    text: TextCorpus,
+    code: CodeCorpus,
+    qa: QaCorpus,
+    image: ImageCorpus,
+}
+
+impl Corpora {
+    fn new() -> Corpora {
+        Corpora {
+            text: TextCorpus::new(TEXT_SEED),
+            code: CodeCorpus::new(CODE_SEED),
+            qa: QaCorpus::new(QA_SEED),
+            image: ImageCorpus::new(IMG_SEED),
+        }
+    }
+
+    /// Build one request's data tensor: inline tokens if supplied,
+    /// otherwise batch `index` of the family's deterministic stream.
+    fn input_for(&self, cfg: &ModelCfg, req: &Request) -> Result<Val> {
+        let (b, s) = (cfg.batch, cfg.seq);
+        if let Some(toks) = &req.tokens {
+            anyhow::ensure!(
+                cfg.arch != "vit",
+                "model {} takes images; inline tokens are not supported",
+                cfg.name
+            );
+            anyhow::ensure!(
+                toks.len() == b * s,
+                "inline tokens: expected {}x{} = {} ids, got {}",
+                b,
+                s,
+                b * s,
+                toks.len()
+            );
+            anyhow::ensure!(
+                toks.iter().all(|&t| (0..cfg.vocab as i32).contains(&t)),
+                "inline tokens out of vocab range [0, {})",
+                cfg.vocab
+            );
+            return Ok(Val::I32(toks.clone(), vec![b, s]));
+        }
+        let i = req.batch_index;
+        Ok(match cfg.task.as_str() {
+            "lm" => Val::I32(self.text.eval_batch(i, b, s).tokens, vec![b, s]),
+            "codegen" => Val::I32(self.code.train_batch(i, b, s).tokens, vec![b, s]),
+            "span_qa" => Val::I32(self.qa.eval_batch(i, b, s).tokens.tokens, vec![b, s]),
+            "image_cls" => {
+                let ib = self.image.eval_batch(i, b);
+                Val::F32(ib.pixels, vec![b, cfg.image, cfg.image, cfg.channels])
+            }
+            other => anyhow::bail!("model {}: unknown task {}", cfg.name, other),
+        })
+    }
+}
+
+/// The cache identity of a prepared session under the process's CURRENT
+/// executor + backend selection. Single constructor shared by dispatch
+/// and the loadgen prewarm, so the two can never key differently (a
+/// divergence would silently turn every prewarm into a cache miss).
+pub(crate) fn session_key(sim: &Simulator, model: &str, quant: &str) -> SessionKey {
+    SessionKey {
+        model: model.to_string(),
+        quant: quant.to_string(),
+        executor: sim.rt.executor_name().to_string(),
+        backend: backend::active().describe(),
+    }
+}
+
+/// Run one micro-batch to completion: resolve the cached session, build
+/// every request's input, drive `Session::run_batch`, and answer each
+/// job (post-run deadline expiry becomes an error — never stale output).
+fn dispatch(
+    sim: &Simulator,
+    cache: &mut SessionCache,
+    corpora: &Corpora,
+    mb: MicroBatch,
+    stats: &mut ServeStats,
+) {
+    stats.batches += 1;
+    stats.requests += mb.jobs.len();
+    stats.max_occupancy = stats.max_occupancy.max(mb.jobs.len());
+    let popped = Instant::now();
+
+    let cfg = match sim.rt.manifest.model(&mb.key.model) {
+        Ok(cfg) => cfg.clone(),
+        Err(e) => {
+            for job in &mb.jobs {
+                job.reply(Response::err(job.req.id, &format!("{:#}", e)));
+            }
+            stats.errors += mb.jobs.len();
+            return;
+        }
+    };
+
+    let key = session_key(sim, &mb.key.model, &mb.key.quant);
+    let sess = match cache.get_or_open(&key, || {
+        sim.open_eval_session(&mb.key.model, &QuantConfig::abfp(&mb.key.quant))
+    }) {
+        Ok(sess) => sess,
+        Err(e) => {
+            for job in &mb.jobs {
+                job.reply(Response::err(job.req.id, &format!("open session: {:#}", e)));
+            }
+            stats.errors += mb.jobs.len();
+            return;
+        }
+    };
+
+    // Per-request input build: a malformed request fails alone, the
+    // rest of the batch still runs.
+    let mut jobs = Vec::with_capacity(mb.jobs.len());
+    let mut frees: Vec<Vec<Val>> = Vec::with_capacity(mb.jobs.len());
+    for job in mb.jobs {
+        match corpora.input_for(&cfg, &job.req) {
+            Ok(v) => {
+                jobs.push(job);
+                frees.push(vec![v]);
+            }
+            Err(e) => {
+                job.reply(Response::err(job.req.id, &format!("{:#}", e)));
+                stats.errors += 1;
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+
+    let t0 = Instant::now();
+    let result = sess.run_batch(&frees);
+    let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+    match result {
+        Ok(outs) => {
+            let now = Instant::now();
+            let n = jobs.len();
+            for (job, out) in jobs.iter().zip(outs) {
+                if job.expired(now) {
+                    job.reply(Response::err(
+                        job.req.id,
+                        "deadline expired during batched run",
+                    ));
+                    stats.errors += 1;
+                    continue;
+                }
+                let queue_ms = popped.duration_since(job.enqueued).as_secs_f64() * 1e3;
+                job.reply(Response::ok(job.req.id, summarize(&out), n, queue_ms, run_ms));
+                stats.ok += 1;
+            }
+        }
+        Err(e) => {
+            for job in &jobs {
+                job.reply(Response::err(job.req.id, &format!("run: {:#}", e)));
+            }
+            stats.errors += jobs.len();
+        }
+    }
+}
+
+/// The worker loop: drain the queue batch-by-batch until it is closed
+/// and empty. Owns every session via `cache`; runs on the thread that
+/// owns `sim`.
+pub fn serve_loop(
+    sim: &Simulator,
+    queue: &Arc<AdmissionQueue>,
+    cfg: &ServeCfg,
+    cache: &mut SessionCache,
+) -> ServeStats {
+    let batcher = Batcher::new(Arc::clone(queue), cfg.batch_window, cfg.max_batch);
+    let corpora = Corpora::new();
+    let mut stats = ServeStats::default();
+    while let Some(mb) = batcher.next_batch() {
+        dispatch(sim, cache, &corpora, mb, &mut stats);
+    }
+    stats.expired = batcher.expired_count();
+    stats
+}
+
+/// `repro serve`: the in-process server on stdin/stdout. A reader
+/// thread parses request lines into the admission queue (answering
+/// parse failures and queue-full rejections directly); a writer thread
+/// serializes responses; the calling thread is the worker. Returns once
+/// stdin reaches EOF and the queue has drained.
+pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
+    let queue = AdmissionQueue::new(cfg.queue_cap);
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    let writer = std::thread::spawn(move || {
+        let stdout = std::io::stdout();
+        for resp in rx {
+            let mut out = stdout.lock();
+            let _ = writeln!(out, "{}", resp.line());
+            let _ = out.flush();
+        }
+    });
+
+    let reader = {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                let Ok(line) = line else { break };
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match protocol::parse_request(line) {
+                    Ok(req) => {
+                        let id = req.id;
+                        if queue.try_push(Job::new(req, tx.clone())).is_err() {
+                            let _ = tx.send(Response::err(
+                                id,
+                                "queue full (backpressure): retry later",
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        // no parseable id to echo: the reserved ERR_ID
+                        // cannot collide with a real request's id
+                        let _ = tx.send(Response::err(
+                            protocol::ERR_ID,
+                            &format!("bad request: {:#}", e),
+                        ));
+                    }
+                }
+            }
+            queue.close();
+        })
+    };
+
+    crate::info!(
+        "serving on stdin/stdout: queue_cap={} batch_window={:?} max_batch={} \
+         backend={} executor={}",
+        cfg.queue_cap,
+        cfg.batch_window,
+        cfg.max_batch,
+        backend::active().describe(),
+        sim.rt.executor_name()
+    );
+    let mut cache = SessionCache::new();
+    let stats = serve_loop(sim, &queue, cfg, &mut cache);
+    drop(tx);
+    let _ = reader.join();
+    let _ = writer.join();
+    let (hits, misses) = cache.stats();
+    crate::info!(
+        "served {} requests in {} batches (ok {}, errors {}, expired-in-queue {}, \
+         mean occupancy {:.2}, max {}); session cache: {} hits / {} misses",
+        stats.requests,
+        stats.batches,
+        stats.ok,
+        stats.errors,
+        stats.expired,
+        stats.mean_occupancy(),
+        stats.max_occupancy,
+        hits,
+        misses
+    );
+    Ok(())
+}

@@ -1,0 +1,326 @@
+//! Line-delimited JSON request/response protocol of `repro serve`.
+//!
+//! One request per line on stdin, one response per line on stdout;
+//! responses carry the request id and may arrive out of submission
+//! order (micro-batching reorders completion across keys).
+//!
+//! Request:
+//!
+//! ```json
+//! {"id": 7, "model": "sim-opt-125m", "quant": "abfp_w4a4_n64",
+//!  "batch": 3, "deadline_ms": 500}
+//! ```
+//!
+//! * `id` (required) — echoed back on the response; any non-negative
+//!   integer below [`ERR_ID`] (`u64::MAX`, reserved for responses to
+//!   lines that could not be parsed at all);
+//! * `model` (required) — a manifest model name;
+//! * `quant` (default `"fp32"`) — an eval quant-config name;
+//! * `batch` (default 0) — index into the model family's deterministic
+//!   eval stream (the server generates the input, so a fixed index
+//!   always means the same payload — the property the determinism tests
+//!   lean on);
+//! * `tokens` (optional) — inline token payload for token models,
+//!   overriding `batch`; must be exactly `B·S` ids in vocab range;
+//! * `deadline_ms` (optional) — relative deadline; a request that
+//!   expires before dispatch (or whose batch finishes past it) gets an
+//!   error response, never a stale output.
+//!
+//! Response:
+//!
+//! ```json
+//! {"id": 7, "ok": true, "batched": 4, "queue_ms": 0.4, "run_ms": 12.1,
+//!  "outputs": [{"shape": [], "sum": 1834.2, "first": [1834.2]}]}
+//! ```
+//!
+//! `outputs` summarizes each output tensor (shape, f64 sum in fixed
+//! iteration order, first values) — compact enough for a wire line yet
+//! exact enough that two responses are equal iff the tensors are.
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Response id used for lines that failed to parse (no request id to
+/// echo). Reserved: requests may use any id below it.
+pub const ERR_ID: u64 = u64::MAX;
+
+/// A JSON number that must be a non-negative integer — fractions and
+/// negatives are protocol errors, never silently truncated (`1.5` as a
+/// token id or `-5` as a deadline would otherwise evaluate as a
+/// plausible-but-wrong request).
+fn as_uint(j: &Json, what: &str) -> Result<u64> {
+    let n = j.as_f64().with_context(|| format!("{} must be a number", what))?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n < u64::MAX as f64,
+        "{} must be a non-negative integer, got {}",
+        what,
+        n
+    );
+    Ok(n as u64)
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub quant: String,
+    /// Index into the model family's deterministic eval stream.
+    pub batch_index: u64,
+    /// Inline token payload overriding `batch_index` (token models).
+    pub tokens: Option<Vec<i32>>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    /// A minimal well-formed request (tests and loadgen fill the rest).
+    pub fn new(id: u64, model: &str, quant: &str, batch_index: u64) -> Request {
+        Request {
+            id,
+            model: model.to_string(),
+            quant: quant.to_string(),
+            batch_index,
+            tokens: None,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Parse one protocol line into a [`Request`].
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {}", e))?;
+    let id = as_uint(j.get("id").context("request needs a numeric \"id\"")?, "\"id\"")?;
+    let model = j
+        .get("model")
+        .and_then(Json::as_str)
+        .context("request needs a \"model\" string")?
+        .to_string();
+    let quant = j
+        .get("quant")
+        .and_then(Json::as_str)
+        .unwrap_or("fp32")
+        .to_string();
+    let batch_index = match j.get("batch") {
+        None => 0,
+        Some(b) => as_uint(b, "\"batch\"")?,
+    };
+    // Strict: every inline token must be an integer in i32 range — a
+    // dropped or truncated entry could leave a shifted-but-right-length
+    // stream that evaluates as if it were valid.
+    let tokens = match j.get("tokens") {
+        None => None,
+        Some(t) => {
+            let arr = t.as_arr().context("\"tokens\" must be an array")?;
+            let mut toks = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                let n = v
+                    .as_f64()
+                    .with_context(|| format!("\"tokens\"[{}] is not a number", i))?;
+                anyhow::ensure!(
+                    n.fract() == 0.0 && (i32::MIN as f64..=i32::MAX as f64).contains(&n),
+                    "\"tokens\"[{}] must be an integer token id, got {}",
+                    i,
+                    n
+                );
+                toks.push(n as i32);
+            }
+            Some(toks)
+        }
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(d) => Some(as_uint(d, "\"deadline_ms\"")?),
+    };
+    Ok(Request { id, model, quant, batch_index, tokens, deadline_ms })
+}
+
+/// Exact-but-compact digest of one output tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputSummary {
+    pub shape: Vec<usize>,
+    /// f64 sum over elements in storage order (deterministic).
+    pub sum: f64,
+    /// The first (up to) 4 elements verbatim.
+    pub first: Vec<f32>,
+}
+
+/// Summarize a session's outputs for the wire.
+pub fn summarize(outputs: &[Tensor]) -> Vec<OutputSummary> {
+    outputs
+        .iter()
+        .map(|t| OutputSummary {
+            shape: t.shape.clone(),
+            sum: t.data.iter().map(|&v| v as f64).sum(),
+            first: t.data.iter().take(4).copied().collect(),
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub outputs: Vec<OutputSummary>,
+    /// Occupancy of the micro-batch this request rode in.
+    pub batched: usize,
+    /// Admission-to-dispatch wait.
+    pub queue_ms: f64,
+    /// Wall time of the (shared) batched forward.
+    pub run_ms: f64,
+}
+
+impl Response {
+    pub fn ok(
+        id: u64,
+        outputs: Vec<OutputSummary>,
+        batched: usize,
+        queue_ms: f64,
+        run_ms: f64,
+    ) -> Response {
+        Response { id, ok: true, error: None, outputs, batched, queue_ms, run_ms }
+    }
+
+    pub fn err(id: u64, msg: &str) -> Response {
+        Response {
+            id,
+            ok: false,
+            error: Some(msg.to_string()),
+            outputs: Vec::new(),
+            batched: 0,
+            queue_ms: 0.0,
+            run_ms: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("ok", Json::Bool(self.ok)),
+            ("batched", Json::Num(self.batched as f64)),
+            ("queue_ms", Json::Num(self.queue_ms)),
+            ("run_ms", Json::Num(self.run_ms)),
+            (
+                "outputs",
+                Json::Arr(
+                    self.outputs
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                (
+                                    "shape",
+                                    Json::Arr(
+                                        o.shape
+                                            .iter()
+                                            .map(|&v| Json::Num(v as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("sum", Json::Num(o.sum)),
+                                (
+                                    "first",
+                                    Json::Arr(
+                                        o.first
+                                            .iter()
+                                            .map(|&v| Json::Num(v as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// One compact protocol line.
+    pub fn line(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_and_defaulted_requests() {
+        let r = parse_request(
+            r#"{"id": 7, "model": "sim-opt-125m", "quant": "abfp_w4a4_n64",
+                "batch": 3, "deadline_ms": 500}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.model, "sim-opt-125m");
+        assert_eq!(r.quant, "abfp_w4a4_n64");
+        assert_eq!(r.batch_index, 3);
+        assert_eq!(r.deadline_ms, Some(500));
+        assert!(r.tokens.is_none());
+
+        let d = parse_request(r#"{"id": 1, "model": "m"}"#).unwrap();
+        assert_eq!(d.quant, "fp32");
+        assert_eq!(d.batch_index, 0);
+        assert!(d.deadline_ms.is_none());
+
+        let t = parse_request(r#"{"id": 2, "model": "m", "tokens": [1, 2, 3]}"#).unwrap();
+        assert_eq!(t.tokens, Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"model": "m"}"#).is_err(), "missing id");
+        assert!(parse_request(r#"{"id": 3}"#).is_err(), "missing model");
+        assert!(parse_request(r#"{"id": "x", "model": "m"}"#).is_err(), "non-numeric id");
+        // inline tokens must be all-numeric integers — no silent
+        // filtering, no silent truncation
+        assert!(
+            parse_request(r#"{"id": 4, "model": "m", "tokens": [1, "x", 3]}"#).is_err(),
+            "junk token entry"
+        );
+        assert!(
+            parse_request(r#"{"id": 4, "model": "m", "tokens": [1.5, 2]}"#).is_err(),
+            "fractional token id"
+        );
+        assert!(
+            parse_request(r#"{"id": 5, "model": "m", "tokens": 3}"#).is_err(),
+            "tokens must be an array"
+        );
+        // numeric fields must be non-negative integers, never truncated
+        assert!(parse_request(r#"{"id": 1.5, "model": "m"}"#).is_err(), "fractional id");
+        assert!(
+            parse_request(r#"{"id": 1, "model": "m", "deadline_ms": -5}"#).is_err(),
+            "negative deadline"
+        );
+        assert!(
+            parse_request(r#"{"id": 1, "model": "m", "batch": 2.5}"#).is_err(),
+            "fractional batch index"
+        );
+    }
+
+    #[test]
+    fn response_lines_are_valid_json_and_summaries_exact() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = summarize(&[t]);
+        assert_eq!(s[0].shape, vec![2, 3]);
+        assert_eq!(s[0].sum, 21.0);
+        assert_eq!(s[0].first, vec![1.0, 2.0, 3.0, 4.0]);
+
+        let ok = Response::ok(9, s, 4, 0.5, 12.0);
+        let j = Json::parse(&ok.line()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(9.0));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("batched").unwrap().as_f64(), Some(4.0));
+
+        let err = Response::err(3, "queue full");
+        let j = Json::parse(&err.line()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("queue full"));
+    }
+}

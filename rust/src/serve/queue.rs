@@ -1,0 +1,248 @@
+//! Bounded admission queue: the concurrency boundary of the server.
+//!
+//! Clients (the stdin reader, loadgen threads) push [`Job`]s from any
+//! thread; the single worker thread pops them through the micro-batcher.
+//! The queue is **bounded with reject-on-full backpressure**: a full
+//! queue hands the job straight back instead of buffering unboundedly or
+//! blocking the submitter — the client decides whether to retry (the
+//! closed-loop loadgen does) or surface the error (the stdio server
+//! answers `queue full`).
+//!
+//! Every job carries its own response channel and an optional absolute
+//! deadline; expiry is enforced by the batcher (pre-dispatch) and the
+//! dispatcher (post-run), never here — admission stays O(1).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::{Request, Response};
+
+/// Compatibility key of a micro-batch: requests for the same prepared
+/// session (model × quant config) can share one batched forward.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub model: String,
+    pub quant: String,
+}
+
+/// One admitted request: the parsed protocol request plus its response
+/// route and timing/deadline bookkeeping.
+pub struct Job {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub respond: Sender<Response>,
+}
+
+impl Job {
+    pub fn new(req: Request, respond: Sender<Response>) -> Job {
+        let enqueued = Instant::now();
+        let deadline = req
+            .deadline_ms
+            .map(|ms| enqueued + Duration::from_millis(ms));
+        Job { req, enqueued, deadline, respond }
+    }
+
+    pub fn key(&self) -> BatchKey {
+        BatchKey { model: self.req.model.clone(), quant: self.req.quant.clone() }
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Send `resp` to the requester; a hung-up client is not an error.
+    pub fn reply(&self, resp: Response) {
+        let _ = self.respond.send(resp);
+    }
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    closed: bool,
+    /// Monotone arrival counter — lets the batcher's window wait sleep
+    /// on "a NEW job arrived" instead of busy-polling a non-empty queue
+    /// of incompatible jobs.
+    arrivals: u64,
+}
+
+pub struct AdmissionQueue {
+    state: Mutex<State>,
+    arrived: Condvar,
+    cap: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> Arc<AdmissionQueue> {
+        Arc::new(AdmissionQueue {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                closed: false,
+                arrivals: 0,
+            }),
+            arrived: Condvar::new(),
+            cap: cap.max(1),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admission with backpressure: a full (or closed) queue rejects and
+    /// hands the job back to the caller instead of blocking.
+    pub fn try_push(&self, job: Job) -> Result<(), Job> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.jobs.len() >= self.cap {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        st.arrivals += 1;
+        drop(st);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// No more admissions; the worker drains what is queued and stops.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Blocking pop of the oldest job; `None` once closed *and* drained.
+    pub(crate) fn pop_front_blocking(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.jobs.pop_front() {
+                return Some(j);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.arrived.wait(st).unwrap();
+        }
+    }
+
+    /// Remove up to `max` queued jobs matching `key`. FIFO order is kept
+    /// both for the drained jobs and for the ones left behind, so an
+    /// incompatible request is never starved by later-arriving traffic
+    /// of another key jumping the whole queue.
+    pub(crate) fn drain_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
+        let mut st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        let mut rest = VecDeque::with_capacity(st.jobs.len());
+        while let Some(j) = st.jobs.pop_front() {
+            if out.len() < max && j.key() == *key {
+                out.push(j);
+            } else {
+                rest.push_back(j);
+            }
+        }
+        st.jobs = rest;
+        out
+    }
+
+    pub(crate) fn arrivals(&self) -> u64 {
+        self.state.lock().unwrap().arrivals
+    }
+
+    /// Block until an arrival newer than `seen` (or `timeout`, or close);
+    /// returns the current arrival count. The batching-window sleep.
+    pub(crate) fn wait_new_arrival(&self, seen: u64, timeout: Duration) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        if st.arrivals == seen && !st.closed {
+            let (guard, _) = self.arrived.wait_timeout(st, timeout).unwrap();
+            st = guard;
+        }
+        st.arrivals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job(id: u64, model: &str, quant: &str) -> (Job, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (Job::new(Request::new(id, model, quant, 0), tx), rx)
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full_and_after_close() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        let (j1, _r1) = job(1, "m", "fp32");
+        let (j2, _r2) = job(2, "m", "fp32");
+        let (j3, _r3) = job(3, "m", "fp32");
+        assert!(q.try_push(j1).is_ok());
+        assert!(q.try_push(j2).is_ok());
+        let rejected = q.try_push(j3).unwrap_err();
+        assert_eq!(rejected.req.id, 3, "full queue hands the job back");
+        assert_eq!(q.len(), 2);
+        // draining one slot re-admits
+        let popped = q.pop_front_blocking().unwrap();
+        assert_eq!(popped.req.id, 1);
+        assert!(q.try_push(rejected).is_ok());
+        // a closed queue rejects regardless of occupancy
+        q.close();
+        let (j4, _r4) = job(4, "m", "fp32");
+        assert!(q.try_push(j4).is_err());
+    }
+
+    #[test]
+    fn drain_matching_preserves_fifo_and_leaves_other_keys() {
+        let q = AdmissionQueue::new(16);
+        let mut rxs = Vec::new();
+        for (id, quant) in [(1, "a"), (2, "b"), (3, "a"), (4, "a"), (5, "b")] {
+            let (j, r) = job(id, "m", quant);
+            rxs.push(r);
+            q.try_push(j).unwrap();
+        }
+        let key = BatchKey { model: "m".into(), quant: "a".into() };
+        let got = q.drain_matching(&key, 2);
+        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![1, 3]);
+        // remaining: 2(b), 4(a), 5(b) in order
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_front_blocking().unwrap().req.id, 2);
+        assert_eq!(q.pop_front_blocking().unwrap().req.id, 4);
+        assert_eq!(q.pop_front_blocking().unwrap().req.id, 5);
+    }
+
+    #[test]
+    fn close_wakes_blocked_pop() {
+        let q = AdmissionQueue::new(4);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_front_blocking().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap(), "pop on a closed empty queue returns None");
+    }
+
+    #[test]
+    fn expiry_is_relative_to_admission() {
+        let (tx, _rx) = mpsc::channel();
+        let mut req = Request::new(1, "m", "fp32", 0);
+        req.deadline_ms = Some(5);
+        let j = Job::new(req, tx);
+        assert!(!j.expired(j.enqueued));
+        assert!(j.expired(j.enqueued + Duration::from_millis(6)));
+        let (tx2, _rx2) = mpsc::channel();
+        let j2 = Job::new(Request::new(2, "m", "fp32", 0), tx2);
+        assert!(!j2.expired(j2.enqueued + Duration::from_secs(3600)), "no deadline");
+    }
+}

@@ -24,8 +24,11 @@
 //! Selection is a process-wide handle, configurable at runtime:
 //!
 //! * env: `INTFPQSIM_BACKEND=scalar|blocked|simd|threaded|pool|auto`,
-//!   `INTFPQSIM_THREADS=N` (0 = all cores);
-//! * CLI: `repro ... --backend pool --threads 8`;
+//!   `INTFPQSIM_THREADS=N` (N >= 1; unset = all cores — an explicit 0
+//!   or junk is reported loudly and falls back to all cores, see
+//!   [`env_threads`]);
+//! * CLI: `repro ... --backend pool --threads 8` (strict: 0/non-numeric
+//!   rejected);
 //! * API: [`configure`] / [`set_active`] (benches compare backends by
 //!   installing each in turn).
 //!
@@ -86,6 +89,16 @@ pub trait Backend: Send + Sync {
     /// order (used to fan independent per-site calibration jobs out).
     fn par_map_f64(&self, n: usize, f: &(dyn Fn(usize) -> f64 + Sync)) -> Vec<f64>;
 
+    /// Tensor-valued variant of [`par_map_f64`]: evaluate `f(0..n)`
+    /// across the backend's workers, results in index order. Each job
+    /// runs the same per-element math as the serial loop, so the result
+    /// is bit-identical regardless of the worker count (enforced by the
+    /// conformance harness). Used to dispatch the per-(batch, head)
+    /// attention matmuls as one parallel wave.
+    fn par_map_tensor(&self, n: usize, f: &(dyn Fn(usize) -> Tensor + Sync)) -> Vec<Tensor> {
+        (0..n).map(f).collect()
+    }
+
     /// Apply `f(start_elem, piece)` to consecutive disjoint `chunk`-sized
     /// pieces of `data` (the last may be short), in parallel where the
     /// backend supports it. Callers pick `chunk` aligned to their row
@@ -115,23 +128,40 @@ pub trait Backend: Send + Sync {
     }
 }
 
-/// Number of workers `--threads 0` / `threads=0` resolves to.
+/// Number of workers the "all cores" default (`threads = 0` at the API
+/// level, an omitted `--threads` / `INTFPQSIM_THREADS` elsewhere)
+/// resolves to.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Thread count resolved from `INTFPQSIM_THREADS` (absent, unparsable
-/// or 0 mean "all cores"). Single source for the env parsing, shared by
-/// the process-wide initialization and the benches.
+/// Thread count resolved from `INTFPQSIM_THREADS`. Absent or empty
+/// means "all cores". A value that is present but invalid — non-numeric
+/// or an explicit `0` — is a configuration error: it is reported loudly
+/// (level-0 log, always printed) and the all-cores default applies, so
+/// a typo can never silently misconfigure the worker count. The CLI
+/// `--threads` flag is stricter still and rejects such values outright
+/// (`util::cli::Args::get_usize_min`).
 pub fn env_threads() -> usize {
-    let raw: usize = std::env::var("INTFPQSIM_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0);
-    if raw == 0 {
-        default_threads()
-    } else {
-        raw
+    let raw = match std::env::var("INTFPQSIM_THREADS") {
+        Err(_) => return default_threads(),
+        Ok(raw) if raw.is_empty() => return default_threads(),
+        Ok(raw) => raw,
+    };
+    match raw.parse::<usize>() {
+        Ok(n) if n >= 1 => n,
+        _ => {
+            crate::util::logging::log(
+                0,
+                &format!(
+                    "INTFPQSIM_THREADS must be a positive integer, got {:?}; \
+                     using all {} cores",
+                    raw,
+                    default_threads()
+                ),
+            );
+            default_threads()
+        }
     }
 }
 

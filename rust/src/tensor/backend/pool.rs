@@ -307,6 +307,25 @@ impl Backend for Pool {
         out
     }
 
+    fn par_map_tensor(&self, n: usize, f: &(dyn Fn(usize) -> Tensor + Sync)) -> Vec<Tensor> {
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let chunk = n.div_ceil(t);
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(n.div_ceil(chunk));
+        for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+            tasks.push(Box::new(move || {
+                for (j, slot) in oc.iter_mut().enumerate() {
+                    *slot = Some(f(ci * chunk + j));
+                }
+            }));
+        }
+        self.run_batch(tasks);
+        out.into_iter().map(|t| t.expect("par_map_tensor slot filled")).collect()
+    }
+
     fn par_chunks_f32(
         &self,
         data: &mut [f32],

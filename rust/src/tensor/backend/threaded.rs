@@ -134,6 +134,25 @@ impl Backend for Threaded {
         out
     }
 
+    fn par_map_tensor(&self, n: usize, f: &(dyn Fn(usize) -> Tensor + Sync)) -> Vec<Tensor> {
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let chunk = n.div_ceil(t);
+        std::thread::scope(|s| {
+            for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (j, slot) in oc.iter_mut().enumerate() {
+                        *slot = Some(f(ci * chunk + j));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|t| t.expect("par_map_tensor slot filled")).collect()
+    }
+
     fn par_chunks_f32(
         &self,
         data: &mut [f32],

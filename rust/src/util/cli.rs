@@ -70,6 +70,45 @@ impl Args {
             .and_then(|s| s.parse().ok())
             .unwrap_or(default)
     }
+
+    /// Shared body of the strict numeric getters: absent → `default`;
+    /// present but non-numeric or below `min` → a clear error naming
+    /// the flag — no silent fallback, no panic.
+    fn get_int_min<T>(&self, name: &str, default: T, min: T) -> Result<T, String>
+    where
+        T: std::str::FromStr + PartialOrd + std::fmt::Display + Copy,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(raw) => match raw.parse::<T>() {
+                Ok(v) if v >= min => Ok(v),
+                Ok(v) => Err(format!("--{} must be >= {}, got {}", name, min, v)),
+                Err(_) => Err(format!(
+                    "--{} needs a positive integer, got {:?}",
+                    name, raw
+                )),
+            },
+        }
+    }
+
+    /// Strict numeric option (see [`Args::get_int_min`]). Used for flags
+    /// where a typo must not misconfigure the process (`--threads`,
+    /// `--batch-window`, `--max-batch`, ...); the tolerant
+    /// [`Args::get_usize`] remains for knobs where the default is always
+    /// safe.
+    pub fn get_usize_min(
+        &self,
+        name: &str,
+        default: usize,
+        min: usize,
+    ) -> Result<usize, String> {
+        self.get_int_min(name, default, min)
+    }
+
+    /// `u64` twin of [`Args::get_usize_min`].
+    pub fn get_u64_min(&self, name: &str, default: u64, min: u64) -> Result<u64, String> {
+        self.get_int_min(name, default, min)
+    }
 }
 
 #[cfg(test)]
@@ -115,8 +154,10 @@ mod tests {
             let a = Args::parse(&sv(&["eval", "--backend", name]), &[]).unwrap();
             assert_eq!(a.get("backend", "auto"), name);
         }
-        // `=` form; unparsable thread counts fall back to the default (0
-        // = all cores); a dangling --backend is a parse error
+        // `=` form; the tolerant getter still falls back on junk (main.rs
+        // routes --threads through the strict get_usize_min instead — see
+        // strict_numeric_flags_reject_zero_and_garbage); a dangling
+        // --backend is a parse error
         let d = Args::parse(&sv(&["eval", "--backend=blocked", "--threads=junk"]), &[])
             .unwrap();
         assert_eq!(d.get("backend", "auto"), "blocked");
@@ -136,6 +177,40 @@ mod tests {
         let b = Args::parse(&sv(&["eval", "--executor=pjrt"]), &[]).unwrap();
         assert_eq!(b.get("executor", "auto"), "pjrt");
         assert!(Args::parse(&sv(&["eval", "--executor"]), &[]).is_err());
+    }
+
+    #[test]
+    fn strict_numeric_flags_reject_zero_and_garbage() {
+        // Regression (ISSUE 4 satellite): --threads and the serving
+        // knobs (--batch-window/--max-batch/--queue-cap) must reject 0
+        // and non-numeric values with a clear error instead of
+        // panicking or silently falling back to a default.
+        for flag in ["threads", "batch-window", "max-batch", "queue-cap"] {
+            // absent -> the caller's default, untouched
+            let a = Args::parse(&sv(&["serve"]), &[]).unwrap();
+            assert_eq!(a.get_usize_min(flag, 7, 1).unwrap(), 7, "--{} absent", flag);
+            assert_eq!(a.get_u64_min(flag, 9, 1).unwrap(), 9, "--{} absent", flag);
+            // a valid value round-trips
+            let a = Args::parse(&sv(&["serve", &format!("--{}", flag), "3"]), &[]).unwrap();
+            assert_eq!(a.get_usize_min(flag, 7, 1).unwrap(), 3);
+            assert_eq!(a.get_u64_min(flag, 9, 1).unwrap(), 3);
+            // explicit 0 is rejected with a message naming the flag
+            let a = Args::parse(&sv(&["serve", &format!("--{}", flag), "0"]), &[]).unwrap();
+            let e = a.get_usize_min(flag, 7, 1).unwrap_err();
+            assert!(e.contains(flag) && e.contains(">= 1"), "{}", e);
+            assert!(a.get_u64_min(flag, 9, 1).is_err());
+            // non-numeric is rejected, not silently defaulted
+            for junk in ["junk", "-3", "2.5", ""] {
+                let a = Args::parse(
+                    &sv(&["serve", &format!("--{}={}", flag, junk)]),
+                    &[],
+                )
+                .unwrap();
+                let e = a.get_usize_min(flag, 7, 1).unwrap_err();
+                assert!(e.contains(flag), "--{}={}: {}", flag, junk, e);
+                assert!(a.get_u64_min(flag, 9, 1).is_err(), "--{}={}", flag, junk);
+            }
+        }
     }
 
     #[test]

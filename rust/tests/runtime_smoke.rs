@@ -149,6 +149,41 @@ fn capture_artifact_emits_every_site() {
 }
 
 #[test]
+fn run_batch_splits_logits_artifacts_per_request() {
+    // The coalesced eval path on an `eval_logits` artifact (codegen):
+    // per-request logit tensors must match sequential runs exactly, and
+    // the manifest output shape must hold per request.
+    let rt = Runtime::new(ARTIFACTS).unwrap();
+    let cfg = rt.manifest.model("sim-codegen-2b").unwrap().clone();
+    let params = model::init_params(&cfg, 7);
+    let sticky = model::param_vals(&cfg, &params).unwrap();
+    let sess = rt.session("sim-codegen-2b/eval_logits_fp32", &sticky).unwrap();
+    let corpus = intfpqsim::corpus::CodeCorpus::new(intfpqsim::corpus::CODE_SEED);
+    let frees: Vec<Vec<Val>> = (0..2)
+        .map(|i| {
+            vec![Val::I32(
+                corpus.train_batch(i, cfg.batch, cfg.seq).tokens,
+                vec![cfg.batch, cfg.seq],
+            )]
+        })
+        .collect();
+    let batched = sess.run_batch(&frees).unwrap();
+    assert_eq!(batched.len(), 2);
+    for (i, free) in frees.iter().enumerate() {
+        let seq = sess.run(free).unwrap();
+        assert_eq!(batched[i].len(), 1);
+        assert_eq!(batched[i][0].shape, vec![cfg.batch, cfg.seq, cfg.vocab]);
+        assert_eq!(
+            batched[i][0].data, seq[0].data,
+            "request {} batched vs sequential",
+            i
+        );
+    }
+    // an empty batch is a no-op, not an error
+    assert!(sess.run_batch(&[]).unwrap().is_empty());
+}
+
+#[test]
 #[ignore] // PJRT-only: needs real `xla` bindings + `make artifacts`.
 fn pjrt_executor_compiles_and_runs_artifacts() {
     // Drive the pjrt executor directly (no process-global configure, so

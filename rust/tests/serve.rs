@@ -1,0 +1,248 @@
+//! Serving-subsystem integration tests: session-cache reuse (no re-QDQ),
+//! queue backpressure, deadline expiry, and multi-client determinism
+//! under different batching configurations.
+//!
+//! Like the other integration suites these run with no artifacts and no
+//! PJRT — the native executor synthesizes the manifest, and weights are
+//! pretrained briefly into throwaway checkpoint directories.
+//!
+//! The tests serialize on a file-local mutex: they observe the
+//! process-global prepared-builds counter and drive multi-threaded
+//! servers, so interleaving them would blur exactly the invariants under
+//! test.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use intfpqsim::quantsim::Simulator;
+use intfpqsim::runtime::native;
+use intfpqsim::serve::cache::SessionCache;
+use intfpqsim::serve::loadgen::{run_loadgen, LoadgenCfg};
+use intfpqsim::serve::protocol::{Request, Response};
+use intfpqsim::serve::queue::{AdmissionQueue, Job};
+use intfpqsim::serve::{serve_loop, ServeCfg};
+use intfpqsim::train::TrainOpts;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_sim(tag: &str) -> Simulator {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_serve_{}", tag));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut sim = Simulator::new("artifacts", dir.to_str().unwrap()).unwrap();
+    sim.opts.eval_batches = 2;
+    sim.opts.pretrain_opts = TrainOpts { steps: 25, log_every: 1000, ..Default::default() };
+    sim
+}
+
+fn push_req(
+    queue: &AdmissionQueue,
+    req: Request,
+) -> mpsc::Receiver<Response> {
+    let (tx, rx) = mpsc::channel();
+    queue.try_push(Job::new(req, tx)).map_err(|j| j.req.id).unwrap();
+    rx
+}
+
+#[test]
+fn session_cache_reuse_second_request_performs_no_requantize() {
+    let _g = lock();
+    let sim = tmp_sim("reuse");
+    let queue = AdmissionQueue::new(8);
+    // two requests for the SAME (model, quant) key, forced into separate
+    // micro-batches (max_batch 1) so the second goes through the cache
+    let rx1 = push_req(&queue, Request::new(1, "sim-opt-125m", "fp32", 0));
+    let rx2 = push_req(&queue, Request::new(2, "sim-opt-125m", "fp32", 1));
+    queue.close();
+
+    let cfg = ServeCfg {
+        queue_cap: 8,
+        batch_window: Duration::from_millis(1),
+        max_batch: 1,
+    };
+    let mut cache = SessionCache::new();
+    let before = native::prepared_builds();
+    let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+    let built = native::prepared_builds() - before;
+
+    assert_eq!(stats.batches, 2);
+    assert_eq!(stats.ok, 2);
+    assert_eq!(stats.errors, 0);
+    let r1 = rx1.try_recv().unwrap();
+    let r2 = rx2.try_recv().unwrap();
+    assert!(r1.ok && r2.ok);
+    // one session opened, one prepared-state build: the second request
+    // re-used the QDQ-prepared weights instead of re-transforming them
+    assert_eq!(cache.stats(), (1, 1), "(hits, misses)");
+    assert_eq!(cache.len(), 1);
+    assert_eq!(built, 1, "second request must not re-QDQ the weights");
+    // different stream indices -> different NLL outputs
+    assert_ne!(r1.outputs, r2.outputs);
+}
+
+#[test]
+fn queue_backpressure_rejects_overflow_and_server_recovers() {
+    let _g = lock();
+    let sim = tmp_sim("backpressure");
+    let queue = AdmissionQueue::new(2);
+    let rx1 = push_req(&queue, Request::new(1, "sim-opt-125m", "fp32", 0));
+    let rx2 = push_req(&queue, Request::new(2, "sim-opt-125m", "fp32", 1));
+    // the queue is full: admission must hand the job back (backpressure),
+    // and the would-be submitter answers the client itself
+    let (tx3, rx3) = mpsc::channel();
+    let rejected = queue
+        .try_push(Job::new(Request::new(3, "sim-opt-125m", "fp32", 2), tx3))
+        .unwrap_err();
+    rejected.reply(Response::err(rejected.req.id, "queue full (backpressure)"));
+    queue.close();
+
+    let cfg = ServeCfg::default();
+    let mut cache = SessionCache::new();
+    let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+    assert_eq!(stats.ok, 2, "admitted requests still serve after overflow");
+    assert!(rx1.try_recv().unwrap().ok);
+    assert!(rx2.try_recv().unwrap().ok);
+    let r3 = rx3.try_recv().unwrap();
+    assert!(!r3.ok);
+    assert!(r3.error.unwrap().contains("queue full"));
+}
+
+#[test]
+fn deadline_expiry_yields_error_not_stale_output() {
+    let _g = lock();
+    let sim = tmp_sim("deadline");
+    let queue = AdmissionQueue::new(8);
+    let mut expired = Request::new(1, "sim-opt-125m", "fp32", 0);
+    expired.deadline_ms = Some(1);
+    let rx_expired = push_req(&queue, expired);
+    let mut live = Request::new(2, "sim-opt-125m", "fp32", 0);
+    live.deadline_ms = Some(60_000);
+    let rx_live = push_req(&queue, live);
+    queue.close();
+    // let the first deadline lapse while the jobs sit in the queue
+    std::thread::sleep(Duration::from_millis(5));
+
+    let cfg = ServeCfg::default();
+    let mut cache = SessionCache::new();
+    let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+    let r1 = rx_expired.try_recv().unwrap();
+    assert!(!r1.ok, "expired request must error");
+    assert!(r1.error.unwrap().contains("deadline"));
+    assert!(r1.outputs.is_empty(), "no stale output");
+    let r2 = rx_live.try_recv().unwrap();
+    assert!(r2.ok, "generous deadline is honored");
+    assert_eq!(stats.ok, 1);
+    assert_eq!(stats.expired, 1, "pre-dispatch expiry must be counted");
+}
+
+#[test]
+fn serve_errors_cleanly_on_unknown_model_and_quant() {
+    let _g = lock();
+    let sim = tmp_sim("unknown");
+    let queue = AdmissionQueue::new(8);
+    let rx_model = push_req(&queue, Request::new(1, "sim-opt-125b", "fp32", 0));
+    let rx_quant = push_req(&queue, Request::new(2, "sim-opt-125m", "w2a2", 0));
+    queue.close();
+    let mut cache = SessionCache::new();
+    let stats = serve_loop(&sim, &queue, &ServeCfg::default(), &mut cache);
+    assert_eq!(stats.errors, 2);
+    assert!(!rx_model.try_recv().unwrap().ok);
+    assert!(!rx_quant.try_recv().unwrap().ok);
+    assert!(cache.is_empty(), "failed opens are not cached");
+}
+
+#[test]
+fn concurrent_clients_fixed_seeds_identical_outputs_regardless_of_batching() {
+    let _g = lock();
+    let sim = tmp_sim("determinism");
+    let mix = vec![
+        ("sim-opt-125m".to_string(), "fp32".to_string()),
+        ("sim-opt-125m".to_string(), "abfp_w4a4_n64".to_string()),
+    ];
+    // A: batching effectively disabled; B: aggressive coalescing. The
+    // request streams are identical (fixed seed), so every per-request
+    // output must match bit-for-bit even though B's requests ride in
+    // shared batched forwards in arbitrary groupings.
+    let base = LoadgenCfg {
+        clients: 3,
+        requests_per_client: 3,
+        mix,
+        deadline_ms: None,
+        seed: 7,
+        prewarm: true,
+        ..Default::default()
+    };
+    let run_a = run_loadgen(
+        &sim,
+        &LoadgenCfg {
+            serve: ServeCfg {
+                queue_cap: 64,
+                batch_window: Duration::from_millis(1),
+                max_batch: 1,
+            },
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let run_b = run_loadgen(
+        &sim,
+        &LoadgenCfg {
+            serve: ServeCfg {
+                queue_cap: 64,
+                batch_window: Duration::from_millis(30),
+                max_batch: 8,
+            },
+            ..base.clone()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(run_a.errors, 0);
+    assert_eq!(run_b.errors, 0);
+    assert_eq!(run_a.responses.len(), 9);
+    assert_eq!(run_b.responses.len(), 9);
+    for (ra, rb) in run_a.responses.iter().zip(run_b.responses.iter()) {
+        assert_eq!(ra.id, rb.id);
+        assert!(ra.ok && rb.ok);
+        assert_eq!(
+            ra.outputs, rb.outputs,
+            "request {}: batched output differs from unbatched",
+            ra.id
+        );
+    }
+}
+
+#[test]
+fn loadgen_single_key_traffic_coalesces_above_occupancy_one() {
+    let _g = lock();
+    let sim = tmp_sim("occupancy");
+    let cfg = LoadgenCfg {
+        clients: 4,
+        requests_per_client: 4,
+        mix: vec![("sim-opt-125m".to_string(), "fp32".to_string())],
+        deadline_ms: None,
+        seed: 3,
+        prewarm: true,
+        serve: ServeCfg {
+            queue_cap: 64,
+            batch_window: Duration::from_millis(30),
+            max_batch: 8,
+        },
+    };
+    let report = run_loadgen(&sim, &cfg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.ok, 16);
+    assert!(
+        report.max_occupancy >= 2,
+        "4 concurrent same-key clients must share at least one batch \
+         (max occupancy {})",
+        report.max_occupancy
+    );
+    assert!(report.toks_per_s > 0.0);
+    assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+}
