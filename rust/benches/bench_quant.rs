@@ -2,8 +2,10 @@
 //! the PTQ methods and the calibrator run in their inner loops, the GPTQ
 //! per-site transform, and the tensor execution backends (scalar vs
 //! blocked vs simd vs threaded vs pool) on the matmul/gram/axpy hot
-//! paths, plus the many-small-sites spawn-overhead microbench (threaded
-//! vs pool). Part of the §Perf pass (EXPERIMENTS.md).
+//! paths, plus the fused qdq_matmul_t vs unfused clone+QDQ+matmul A/B
+//! (per backend, with temporary-byte accounting) and the
+//! many-small-sites spawn-overhead microbench (threaded vs pool). Part
+//! of the §Perf pass (EXPERIMENTS.md).
 //!
 //!   cargo bench --bench bench_quant             # full
 //!   cargo bench --bench bench_quant -- --fast   # CI smoke (one pass)
@@ -156,6 +158,64 @@ fn main() {
         }
     }
 
+    // ---- fused QDQ→matmul vs unfused (ISSUE 5 tentpole A/B) ----
+    // The unfused leg reproduces the old qlinear hot path exactly:
+    // clone the activations, smooth, bulk-QDQ, then matmul against a
+    // pre-transposed weight. The fused leg is one qdq_matmul_t call —
+    // same bytes (conformance-enforced), no (rows × k) temporary.
+    let (qrows, qk, qdout) = if fast { (128, 256, 256) } else { (512, 1024, 1024) };
+    println!(
+        "\n== fused qdq_matmul_t vs unfused ({}x{} @ {}^T, abfp int4 n64 + smooth) ==",
+        qrows, qk, qdout
+    );
+    let xa = Tensor::new(vec![qrows, qk], heavy(&mut rng, qrows * qk));
+    let wnat = Tensor::new(vec![qdout, qk], heavy(&mut rng, qdout * qk));
+    let smooth: Vec<f32> = (0..qk).map(|j| 0.5 + (j % 7) as f32 * 0.25).collect();
+    let wt_pre = wnat.transpose(); // the old prepared-session layout
+    let prep = |row: &mut [f32]| {
+        for (v, &s) in row.iter_mut().zip(smooth.iter()) {
+            *v *= s;
+        }
+        formats::abfp_qdq_with(row, qk, Format::Int(formats::INT4), 64, &Scalar);
+    };
+    // (backend, unfused_ms, fused_ms, unfused_temp_bytes, fused_temp_bytes)
+    let mut fused_rows: Vec<(String, f64, f64, u64, u64)> = Vec::new();
+    for be in &backends {
+        let s_unfused = bench(bwarm, biters, || {
+            let mut xq = xa.clone();
+            xq.scale_cols(&smooth);
+            formats::abfp_qdq_with(
+                &mut xq.data,
+                qk,
+                Format::Int(formats::INT4),
+                64,
+                be.as_ref(),
+            );
+            std::hint::black_box(be.matmul(&xq, &wt_pre));
+        });
+        let s_fused = bench(bwarm, biters, || {
+            std::hint::black_box(be.qdq_matmul_t(&xa, &prep, &wnat));
+        });
+        let unfused_temp = (qrows * qk * 4) as u64;
+        let fused_temp = (be.qdq_panel_rows().min(qrows) * qk * 4) as u64;
+        println!(
+            "{:<14} unfused {:>8.3} ms | fused {:>8.3} ms | {:>5.2}x | temps {} -> {} B",
+            be.describe(),
+            s_unfused.mean_ms(),
+            s_fused.mean_ms(),
+            s_unfused.mean_ms() / s_fused.mean_ms().max(1e-9),
+            unfused_temp,
+            fused_temp
+        );
+        fused_rows.push((
+            be.describe(),
+            s_unfused.mean_ms(),
+            s_fused.mean_ms(),
+            unfused_temp,
+            fused_temp,
+        ));
+    }
+
     // ---- spawn overhead: many small calibration-style sites ----
     // `threaded` pays a scoped-thread spawn + join per call; `pool`
     // reuses persistent workers across calls. 64 sites x tiny per-site
@@ -219,6 +279,36 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "fused_qdq",
+            Json::obj(vec![
+                ("rows", Json::Num(qrows as f64)),
+                ("k", Json::Num(qk as f64)),
+                ("dout", Json::Num(qdout as f64)),
+                ("quant", Json::Str("abfp_int4_n64+smooth".to_string())),
+                (
+                    "results",
+                    Json::Arr(
+                        fused_rows
+                            .iter()
+                            .map(|(be, unf, fus, ut, ft)| {
+                                Json::obj(vec![
+                                    ("backend", Json::Str(be.clone())),
+                                    ("unfused_ms", Json::Num(*unf)),
+                                    ("fused_ms", Json::Num(*fus)),
+                                    (
+                                        "fused_speedup",
+                                        Json::Num(unf / fus.max(1e-9)),
+                                    ),
+                                    ("unfused_temp_bytes", Json::Num(*ut as f64)),
+                                    ("fused_temp_bytes", Json::Num(*ft as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
         (
             "spawn_overhead",

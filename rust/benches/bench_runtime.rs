@@ -5,16 +5,33 @@
 //! synthesized), so unlike the PJRT era this bench always runs — in CI
 //! it writes `BENCH_runtime.json` (tokens/sec per model × quant ×
 //! backend) which the workflow uploads as an artifact, seeding the
-//! repo's end-to-end perf trajectory.
+//! repo's end-to-end perf trajectory. Every cell is also measured with
+//! the fused qdq_matmul_t path disabled (`net::set_qdq_fusion`), so the
+//! JSON carries a fused-vs-unfused A/B per backend × quant — tokens/sec
+//! both ways plus the activation-temporary bytes one forward requests
+//! on each path (`net::qdq_temp`).
 //!
 //!   cargo bench --bench bench_runtime [-- --fast]
 
 use intfpqsim::corpus::TextCorpus;
 use intfpqsim::model;
+use intfpqsim::model::net;
 use intfpqsim::runtime::{Runtime, Val};
 use intfpqsim::tensor::backend;
 use intfpqsim::util::json::Json;
 use intfpqsim::util::timer::bench;
+
+struct Row {
+    model: String,
+    quant: String,
+    backend: String,
+    mean_ms: f64,
+    toks_per_s: f64,
+    toks_per_s_unfused: f64,
+    fused_speedup: f64,
+    temp_bytes_fused: u64,
+    temp_bytes_unfused: u64,
+}
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
@@ -30,7 +47,7 @@ fn main() {
     };
     let quants = ["fp32", "abfp_w4a4_n64", "abfp_w4a8_n64"];
 
-    let mut rows: Vec<(String, String, String, f64, f64)> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for model_name in models {
         let cfg = rt.manifest.model(model_name).unwrap().clone();
         let params = model::init_params(&cfg, 1);
@@ -56,18 +73,46 @@ fn main() {
                 }
                 // session open includes the one-time weight QDQ prep
                 let sess = rt.session(&id, &st).unwrap();
+                // default (fused) leg — field names stay the baseline's
+                net::set_qdq_fusion(true);
                 let s = bench(warmup, iters, || {
                     std::hint::black_box(sess.run(std::slice::from_ref(&tv)).unwrap());
                 });
+                net::qdq_temp::reset();
+                let _ = sess.run(std::slice::from_ref(&tv)).unwrap();
+                let temp_fused = net::qdq_temp::bytes();
+                // unfused A/B leg (same bytes, different allocation)
+                net::set_qdq_fusion(false);
+                let s_unf = bench(warmup, iters, || {
+                    std::hint::black_box(sess.run(std::slice::from_ref(&tv)).unwrap());
+                });
+                net::qdq_temp::reset();
+                let _ = sess.run(std::slice::from_ref(&tv)).unwrap();
+                let temp_unfused = net::qdq_temp::bytes();
+                net::set_qdq_fusion(true);
+                let tps = toks_per_batch / (s.mean_ns / 1e9);
+                let tps_unf = toks_per_batch / (s_unf.mean_ns / 1e9);
                 let label = format!("{} @ {}", quant, be_desc);
                 println!("{}", s.report(&label, Some((toks_per_batch, "tok"))));
-                rows.push((
-                    model_name.to_string(),
-                    quant.to_string(),
-                    be_desc.clone(),
-                    s.mean_ms(),
-                    toks_per_batch / (s.mean_ns / 1e9),
-                ));
+                println!(
+                    "  fused {:.0} tok/s vs unfused {:.0} tok/s ({:.2}x); temps {} -> {} B/fwd",
+                    tps,
+                    tps_unf,
+                    tps / tps_unf.max(1e-9),
+                    temp_unfused,
+                    temp_fused
+                );
+                rows.push(Row {
+                    model: model_name.to_string(),
+                    quant: quant.to_string(),
+                    backend: be_desc.clone(),
+                    mean_ms: s.mean_ms(),
+                    toks_per_s: tps,
+                    toks_per_s_unfused: tps_unf,
+                    fused_speedup: tps / tps_unf.max(1e-9),
+                    temp_bytes_fused: temp_fused,
+                    temp_bytes_unfused: temp_unfused,
+                });
             }
         }
         backend::configure("auto", threads).unwrap();
@@ -97,13 +142,20 @@ fn main() {
             "eval_throughput",
             Json::Arr(
                 rows.iter()
-                    .map(|(m, q, be, ms, tps)| {
+                    .map(|r| {
                         Json::obj(vec![
-                            ("model", Json::Str(m.clone())),
-                            ("quant", Json::Str(q.clone())),
-                            ("backend", Json::Str(be.clone())),
-                            ("mean_ms", Json::Num(*ms)),
-                            ("toks_per_s", Json::Num(*tps)),
+                            ("model", Json::Str(r.model.clone())),
+                            ("quant", Json::Str(r.quant.clone())),
+                            ("backend", Json::Str(r.backend.clone())),
+                            ("mean_ms", Json::Num(r.mean_ms)),
+                            ("toks_per_s", Json::Num(r.toks_per_s)),
+                            ("toks_per_s_unfused", Json::Num(r.toks_per_s_unfused)),
+                            ("fused_speedup", Json::Num(r.fused_speedup)),
+                            ("temp_bytes_fused", Json::Num(r.temp_bytes_fused as f64)),
+                            (
+                                "temp_bytes_unfused",
+                                Json::Num(r.temp_bytes_unfused as f64),
+                            ),
                         ])
                     })
                     .collect(),

@@ -319,7 +319,10 @@ pub fn abfp_qdq_with(
 }
 
 /// The serial per-row ABFP kernel (row-local, chunking-invariant).
-fn abfp_rows(x: &mut [f32], k: usize, fmt: Format, n: usize) {
+/// `pub(crate)` so the fused QDQ→matmul A-panel prep
+/// (`runtime::registry::RowQdq`) can run it on a single row without
+/// per-row re-validation — same bytes as the bulk entry points above.
+pub(crate) fn abfp_rows(x: &mut [f32], k: usize, fmt: Format, n: usize) {
     for row in x.chunks_mut(k) {
         for chunk in row.chunks_mut(n) {
             let alpha = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -353,6 +356,13 @@ fn abfp_rows(x: &mut [f32], k: usize, fmt: Format, n: usize) {
 pub fn abfp2_qdq(x: &mut [f32], k: usize, fmt: Format, n: usize, scale_bits: u32) {
     assert_eq!(k % n, 0, "ABFP needs k % n == 0 (k={}, n={})", k, n);
     assert_eq!(x.len() % k, 0);
+    abfp2_rows(x, k, fmt, n, scale_bits);
+}
+
+/// The serial per-row two-level ABFP kernel (row-local, chunking-
+/// invariant), shared by [`abfp2_qdq`] and the fused A-panel prep
+/// (`runtime::registry::RowQdq`).
+pub(crate) fn abfp2_rows(x: &mut [f32], k: usize, fmt: Format, n: usize, scale_bits: u32) {
     let smax = ((1u32 << scale_bits) - 1) as f32;
     let chunks = k / n;
     let mut alpha = vec![0.0f32; chunks];

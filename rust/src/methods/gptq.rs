@@ -193,8 +193,8 @@ pub fn nearest_site(w: &mut Tensor) {
 /// Layer-output MSE proxy: ||X W^T - X Ŵ^T||² / numel — the objective
 /// GPTQ minimizes; used by tests and the ablation bench.
 pub fn layer_mse(x: &Tensor, w_orig: &Tensor, w_quant: &Tensor) -> f64 {
-    let y1 = x.matmul(&w_orig.transpose());
-    let y2 = x.matmul(&w_quant.transpose());
+    let y1 = x.matmul_t(w_orig);
+    let y2 = x.matmul_t(w_quant);
     y1.mse(&y2)
 }
 

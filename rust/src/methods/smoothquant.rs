@@ -131,8 +131,8 @@ mod tests {
             let mut xs = x.clone();
             xs.scale_cols(&sm.smooth["l0.qkv"]);
             let w2 = sm.params.get("l0.wqkv").unwrap();
-            let y1 = x.matmul(&w.transpose());
-            let y2 = xs.matmul(&w2.transpose());
+            let y1 = x.matmul_t(&w);
+            let y2 = xs.matmul_t(w2);
             for (a, b) in y1.data.iter().zip(y2.data.iter()) {
                 crate::prop_assert!(
                     (a - b).abs() <= 2e-3 * (1.0 + a.abs()),

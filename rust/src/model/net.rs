@@ -10,6 +10,15 @@
 //! matmul routes through the caller's tensor-backend handle, so the
 //! `pool`/`simd` backends accelerate evaluation end to end.
 //!
+//! The inference hot path is **transpose-free and fused**: site weights
+//! stay in their natural (dout, din) layout and are consumed row-major
+//! by `Backend::qdq_matmul_t`, which applies smoothing + activation QDQ
+//! inside the matmul's A-panel load ([`qlinear`]); attention scores and
+//! the task heads use `Backend::matmul_t` the same way. Both kernels
+//! are bit-identical to their unfused transposed references, so this
+//! moves no output bit — the [`set_qdq_fusion`] toggle exists purely so
+//! benches and the conformance harness can A/B the two paths.
+//!
 //! Training support is a hand-rolled reverse pass over a [`Tape`] of
 //! forward intermediates. QDQ sites follow the PWL straight-through
 //! estimator (paper Eqn 5); with ABFP the per-vector absmax clip makes
@@ -18,11 +27,12 @@
 //! (`fp32`, `qat_*`) are exactly those.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::ModelCfg;
-use crate::runtime::registry::{QuantKind, QuantSpec, QuantWiring};
+use crate::runtime::registry::{QuantKind, QuantSpec, QuantWiring, RowQdq};
 use crate::tensor::backend::Backend;
 use crate::tensor::io::TensorStore;
 use crate::tensor::Tensor;
@@ -30,13 +40,61 @@ use crate::tensor::Tensor;
 const LN_EPS: f32 = 1e-5;
 const MASK_NEG: f32 = -1e30;
 
+/// Process-wide switch for the fused QDQ→matmul inference path
+/// (`Backend::qdq_matmul_t` inside [`qlinear`]). On by default; benches
+/// and the conformance harness flip it to A/B the fused kernels against
+/// the unfused reference. Both paths produce identical bytes (the fused
+/// kernel contract), so the toggle can never change results — only
+/// allocation and throughput.
+static QDQ_FUSION: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable the fused inference path; returns the previous value.
+pub fn set_qdq_fusion(on: bool) -> bool {
+    QDQ_FUSION.swap(on, Ordering::Relaxed)
+}
+
+/// Whether [`qlinear`] takes the fused `qdq_matmul_t` path (inference
+/// only — the training tape always materializes `x_q`).
+pub fn qdq_fusion() -> bool {
+    QDQ_FUSION.load(Ordering::Relaxed)
+}
+
+/// Activation-temporary accounting for the fused-vs-unfused A/B benches:
+/// cumulative bytes of quantized-activation temporaries requested by
+/// [`qlinear`] since the last reset. The unfused path materializes the
+/// full (N, din) copy per site; the fused path counts the backend's
+/// actual peak panel footprint (`Backend::qdq_panel_rows` × din).
+pub mod qdq_temp {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    pub fn reset() {
+        BYTES.store(0, Ordering::Relaxed);
+    }
+
+    pub fn bytes() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn add(b: u64) {
+        BYTES.fetch_add(b, Ordering::Relaxed);
+    }
+}
+
 /// One quantized site, prepared for execution: the weight QDQ is
-/// pre-applied and the weight stored transposed (din, dout) so the hot
-/// loop is `x_q @ wq_t` on the backend.
+/// pre-applied and the weight kept in its natural (dout, din) row-major
+/// layout — the hot loop reads its rows directly via
+/// `Backend::qdq_matmul_t`/`matmul_t`, so no transposed copy is ever
+/// built (neither at session prep nor per forward).
 pub struct SiteCtx {
-    pub wq_t: Tensor,
+    pub wq: Tensor,
     pub bias: Vec<f32>,
     pub aq: QuantSpec,
+    /// `aq` resolved against the site width once at build time
+    /// (validation + static-scale precomputation out of the per-forward
+    /// path) — the fused `qdq_matmul_t` A-panel prep kernel.
+    pub row_aq: RowQdq,
     pub oq: QuantSpec,
     pub smooth: Option<Vec<f32>>,
     pub alpha: Option<Vec<f32>>,
@@ -76,15 +134,25 @@ pub fn build_sites(
             din
         );
         lw.wq.apply_with(&mut wq.data, din, None, be)?;
+        let alpha_v = alpha.get(&site.name).cloned();
+        // Resolve the activation row kernel once per site: validation
+        // and static-scale precomputation leave the per-forward path
+        // entirely (errors surface here — still the first `run`, with
+        // the same message the bulk path produced).
+        let row_aq = lw
+            .aq
+            .row_kernel(din, alpha_v.as_deref())
+            .with_context(|| format!("site {} activation quantizer", site.name))?;
         out.insert(
             site.name.clone(),
             SiteCtx {
-                wq_t: wq.transpose(),
+                wq,
                 bias: params.expect(&bname)?.data.clone(),
                 aq: lw.aq,
+                row_aq,
                 oq: lw.oq,
                 smooth: smooth.get(&site.name).cloned(),
-                alpha: alpha.get(&site.name).cloned(),
+                alpha: alpha_v,
             },
         );
     }
@@ -247,6 +315,15 @@ pub struct LinTape {
 /// `common.py qlinear`: y = f_q^x(x · smooth) @ f_q^w(W)^T + b, with the
 /// optional output quantizer f_q^y. `capture` collects the raw (pre-
 /// smoothing, pre-quantizer) activations for the calibration engine.
+///
+/// Inference (no tape, [`qdq_fusion`] on — the default) runs the fused
+/// hot path: smoothing + activation QDQ are applied to each row exactly
+/// once inside the matmul's A-panel load (`Backend::qdq_matmul_t`), so
+/// the full quantized (N, din) activation tensor is never materialized
+/// and the weight is consumed row-major with no transpose. The training
+/// tape needs the materialized `x_q`, so the taped path keeps the
+/// unfused reference — both produce identical bytes (the fused kernel
+/// contract, conformance-enforced per backend × thread count).
 fn qlinear(
     x: &Tensor,
     site: &SiteCtx,
@@ -257,22 +334,52 @@ fn qlinear(
     if let Some((cap, name)) = capture {
         cap.push((name, x.clone()));
     }
-    let mut xq = x.clone();
-    if let Some(sm) = &site.smooth {
-        xq.scale_cols(sm);
-    }
-    let (n, din) = xq.dims2();
-    site.aq.apply_with(&mut xq.data, din, site.alpha.as_deref(), be)?;
-    let mut y = be.matmul(&xq, &site.wq_t);
-    let dout = site.wq_t.shape[1];
+    let (n, din) = x.dims2();
+    let (dout, w_din) = site.wq.dims2();
+    anyhow::ensure!(w_din == din, "site weight din {} vs input width {}", w_din, din);
     anyhow::ensure!(site.bias.len() == dout, "bias len {} vs dout {}", site.bias.len(), dout);
+    if let Some(sm) = &site.smooth {
+        anyhow::ensure!(sm.len() == din, "smooth len {} vs din {}", sm.len(), din);
+    }
+    let (mut y, tape) = if !want_tape && qdq_fusion() {
+        let y = if site.smooth.is_none() && site.aq.kind == QuantKind::None {
+            // nothing to prep: skip the panel copies entirely
+            be.matmul_t(x, &site.wq)
+        } else {
+            // `row_aq` was resolved at build_sites time, so the prep
+            // closure does zero validation/allocation per forward.
+            let kern = &site.row_aq;
+            let smooth = site.smooth.as_deref();
+            qdq_temp::add((be.qdq_panel_rows().min(n.max(1)) * din * 4) as u64);
+            let prep = move |row: &mut [f32]| {
+                if let Some(sm) = smooth {
+                    for (v, &s) in row.iter_mut().zip(sm.iter()) {
+                        *v *= s;
+                    }
+                }
+                kern.apply(row);
+            };
+            be.qdq_matmul_t(x, &prep, &site.wq)
+        };
+        (y, None)
+    } else {
+        // Unfused reference: materialize x_q (the tape operand).
+        let mut xq = x.clone();
+        if let Some(sm) = &site.smooth {
+            xq.scale_cols(sm);
+        }
+        site.aq.apply_with(&mut xq.data, din, site.alpha.as_deref(), be)?;
+        qdq_temp::add((xq.len() * 4) as u64);
+        let y = be.matmul_t(&xq, &site.wq);
+        (y, want_tape.then(|| LinTape { xq }))
+    };
     for r in 0..n {
         add_slice(y.row_mut(r), &site.bias);
     }
     if site.oq.kind != QuantKind::None {
         site.oq.apply_with(&mut y.data, dout, None, be)?;
     }
-    Ok((y, want_tape.then(|| LinTape { xq })))
+    Ok((y, tape))
 }
 
 /// Gradients of [`qlinear`] under the PWL straight-through estimator
@@ -286,8 +393,11 @@ fn qlinear_bwd(
     let db = col_sum(dy);
     // dW (dout, din) = dy^T @ x_q
     let dw = be.matmul(&dy.transpose(), &lt.xq);
-    // dx (N, din) = dy @ W_q, then back through the smoothing multiply
-    let mut dx = be.matmul(dy, &site.wq_t.transpose());
+    // dx (N, din) = dy @ W_q, then back through the smoothing multiply.
+    // W_q is stored natural (dout, din), so this is one plain matmul —
+    // the old `wq_t.transpose()` round-trip (materializing the weight a
+    // second time every backward step) is gone; same bytes, zero copies.
+    let mut dx = be.matmul(dy, &site.wq);
     if let Some(sm) = &site.smooth {
         dx.scale_cols(sm);
     }
@@ -326,7 +436,9 @@ fn attn_head(
     let qh = take_block(qkv, r0, s, c, hd);
     let kh = take_block(qkv, r0, s, d + c, hd);
     let vh = take_block(qkv, r0, s, 2 * d + c, hd);
-    let mut scores = be.matmul(&qh, &kh.transpose());
+    // q @ k^T straight off the row-major K block — no transposed copy
+    // of K is ever materialized (bit-identical per the matmul_t contract)
+    let mut scores = be.matmul_t(&qh, &kh);
     for v in scores.data.iter_mut() {
         *v *= scale;
     }
@@ -426,9 +538,9 @@ fn attention_bwd(
             let kh = take_block(&at.k, r0, s, c, hd);
             let qh = take_block(&at.q, r0, s, c, hd);
             let vh = take_block(&at.v, r0, s, c, hd);
-            // dV = P^T dO ; dP = dO V^T
+            // dV = P^T dO ; dP = dO V^T (transpose-free off row-major V)
             let dvh = be.matmul(&ph.transpose(), &doh);
-            let dp = be.matmul(&doh, &vh.transpose());
+            let dp = be.matmul_t(&doh, &vh);
             // softmax backward: dS = P ∘ (dP − rowsum(dP ∘ P))
             let mut ds = Tensor::zeros(vec![s, s]);
             for i in 0..s {
@@ -702,7 +814,7 @@ fn embed_images(
     let cls = &params.expect("cls_tok")?.data;
     let pos = params.expect("pos_emb")?; // (np + 1, d)
     let gain = &params.expect("emb_gain")?.data;
-    let xe = be.matmul(&patches, &patch_w.transpose());
+    let xe = be.matmul_t(&patches, patch_w);
     let mut x = vec![0.0f32; b * srows * d];
     for bi in 0..b {
         for r in 0..srows {
@@ -780,13 +892,17 @@ pub fn forward(
         want_tape,
     );
 
+    // Task heads read their (rows, d) weights row-major through
+    // matmul_t: the per-forward transposed copies (a fresh (d, vocab)
+    // tensor for the LM head on EVERY call) are gone — bit-identical by
+    // the matmul_t contract.
     let head = match cfg.arch.as_str() {
         "opt" => {
             // tied LM head, unquantized: logits = xf @ tok_emb^T
-            be.matmul(&xf, &params.expect("tok_emb")?.transpose())
+            be.matmul_t(&xf, params.expect("tok_emb")?)
         }
         "bert" => {
-            let mut span = be.matmul(&xf, &params.expect("span_w")?.transpose());
+            let mut span = be.matmul_t(&xf, params.expect("span_w")?);
             let sb = &params.expect("span_b")?.data;
             let n = span.shape[0];
             for r in 0..n {
@@ -797,7 +913,7 @@ pub fn forward(
         "vit" => {
             let (b, srows) = seq_rows(cfg);
             let xc = gather_cls(&xf, b, srows);
-            let mut logits = be.matmul(&xc, &params.expect("head_w")?.transpose());
+            let mut logits = be.matmul_t(&xc, params.expect("head_w")?);
             let hb = &params.expect("head_b")?.data;
             for r in 0..b {
                 add_slice(logits.row_mut(r), hb);
@@ -1263,6 +1379,118 @@ mod tests {
             &labels,
             &["head_w", "head_b", "patch_w", "patch_b", "cls_tok", "pos_emb", "l0.wqkv"],
         );
+    }
+
+    /// Bit-equality helper for the parity regressions below.
+    fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{} length", what);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()),
+                "{} idx {}: {} vs {}",
+                what,
+                i,
+                g,
+                w
+            );
+        }
+    }
+
+    #[test]
+    fn qlinear_bwd_matches_double_transpose_reference_bits() {
+        // Satellite regression (ISSUE 5): the backward used to rebuild
+        // the weight via `wq_t.transpose()` every step. The natural
+        // (dout, din) layout must reproduce those gradients bit for bit.
+        use crate::runtime::registry::Q_NONE;
+        use crate::util::prop;
+        let be = crate::tensor::backend::active();
+        let mut rng = Pcg64::new(41);
+        let (n, din, dout) = (7usize, 12usize, 9usize);
+        let wq = Tensor::new(vec![dout, din], prop::heavy_vec(&mut rng, dout * din, 1.0));
+        let smooth: Vec<f32> = (0..din).map(|j| 0.5 + 0.125 * (j % 4) as f32).collect();
+        let site = SiteCtx {
+            wq: wq.clone(),
+            bias: vec![0.0; dout],
+            aq: Q_NONE,
+            row_aq: RowQdq::None,
+            oq: Q_NONE,
+            smooth: Some(smooth.clone()),
+            alpha: None,
+        };
+        let x = Tensor::new(vec![n, din], prop::heavy_vec(&mut rng, n * din, 1.0));
+        let (_, tape) = qlinear(&x, &site, be.as_ref(), true, None).unwrap();
+        let lt = tape.unwrap();
+        let dy = Tensor::new(vec![n, dout], prop::heavy_vec(&mut rng, n * dout, 1.0));
+        let (dx, dw, db) = qlinear_bwd(&dy, &lt, &site, be.as_ref());
+        // the pre-refactor formulas, double transpose and all
+        let wq_t = wq.transpose();
+        let mut dx_ref = be.matmul(&dy, &wq_t.transpose());
+        dx_ref.scale_cols(&smooth);
+        let dw_ref = be.matmul(&dy.transpose(), &lt.xq);
+        assert_bits(&dx.data, &dx_ref.data, "qlinear_bwd dx");
+        assert_bits(&dw.data, &dw_ref.data, "qlinear_bwd dw");
+        assert_bits(&db, &col_sum(&dy), "qlinear_bwd db");
+    }
+
+    #[test]
+    fn fused_forward_bit_identical_to_unfused() {
+        // The fused qdq_matmul_t inference path vs the unfused reference
+        // (materialized x_q), end to end through `forward`, for wirings
+        // covering smoothing + ABFP, static-int clip ranges, and output
+        // quantization. Identical bytes is the tentpole contract.
+        use crate::formats::{Format, INT4, INT8};
+        struct RestoreFusion(bool);
+        impl Drop for RestoreFusion {
+            fn drop(&mut self) {
+                set_qdq_fusion(self.0);
+            }
+        }
+        let _restore = RestoreFusion(set_qdq_fusion(true));
+
+        let cfg = tiny("opt");
+        let params = init_params(&cfg, 12);
+        let tokens = rand_tokens(&cfg, 13);
+        let be = crate::tensor::backend::active();
+        let abfp4 = QuantSpec { kind: QuantKind::Abfp, fmt: Some(Format::Int(INT4)), n: 4 };
+        let abfp8 = QuantSpec { kind: QuantKind::Abfp, fmt: Some(Format::Int(INT8)), n: 4 };
+        let stat8 =
+            QuantSpec { kind: QuantKind::StaticInt, fmt: Some(Format::Int(INT8)), n: 4 };
+        let wirings = vec![
+            QuantWiring { wq: abfp4, aq: abfp4, smooth: true, ..QuantWiring::fp32() },
+            QuantWiring { wq: abfp4, aq: stat8, ..QuantWiring::fp32() },
+            QuantWiring { wq: abfp4, aq: abfp8, oq: abfp8, smooth: true, ..QuantWiring::fp32() },
+            QuantWiring::fp32(),
+        ];
+        for (wi, wiring) in wirings.into_iter().enumerate() {
+            let mut smooth = BTreeMap::new();
+            let mut alpha = BTreeMap::new();
+            for site in &cfg.sites {
+                if wiring.smooth {
+                    let sm: Vec<f32> =
+                        (0..site.dim).map(|j| 0.5 + 0.25 * (j % 3) as f32).collect();
+                    smooth.insert(site.name.clone(), sm);
+                }
+                if wiring.aq.kind == QuantKind::StaticInt {
+                    alpha.insert(site.name.clone(), vec![1.5]);
+                }
+            }
+            let sites =
+                build_sites(&cfg, &wiring, &params, &smooth, &alpha, be.as_ref()).unwrap();
+            let input = NetInput::Tokens(&tokens);
+            set_qdq_fusion(true);
+            let fused =
+                forward(&cfg, &params, &sites, &input, be.as_ref(), false, false).unwrap();
+            set_qdq_fusion(false);
+            let unfused =
+                forward(&cfg, &params, &sites, &input, be.as_ref(), false, false).unwrap();
+            set_qdq_fusion(true);
+            assert_eq!(fused.head.shape, unfused.head.shape, "wiring {}", wi);
+            assert_bits(
+                &fused.head.data,
+                &unfused.head.data,
+                &format!("fused-vs-unfused head, wiring {}", wi),
+            );
+        }
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //! * `eval` / `eval_logits` — forward + task output (LM `nll_sum`,
 //!   logits, span logits, class logits). When every non-data input is
 //!   sticky (the normal case), the prepared state — params converted to
-//!   tensors once, site weights QDQ-transformed and transposed once —
-//!   is cached across `run` calls, so the per-batch cost is just the
-//!   forward pass.
+//!   tensors once, site weights QDQ-transformed once and kept in their
+//!   natural (dout, din) layout (the fused `qdq_matmul_t`/`matmul_t`
+//!   hot loop reads weight rows directly, so no transposed copy exists
+//!   anywhere: not in the session, not per forward) — is cached across
+//!   `run` calls, so the per-batch cost is just the forward pass.
 //! * `capture` — FP32 forward collecting every site's raw input
 //!   activations (the calibration stream).
 //! * `train` — forward + hand-rolled backward + Adam step, mirroring
@@ -97,8 +99,10 @@ impl Executor for Native {
 }
 
 /// Sticky state converted once per session: full param tensors plus the
-/// per-site execution contexts (QDQ-prepared transposed weights,
-/// smoothing vectors, clip ranges).
+/// per-site execution contexts (QDQ-prepared natural-layout weights,
+/// smoothing vectors, clip ranges). Weights are never transposed — the
+/// forward consumes them row-major through the fused
+/// `Backend::qdq_matmul_t` / `Backend::matmul_t` kernels.
 struct Prepared {
     params: TensorStore,
     sites: BTreeMap<String, SiteCtx>,

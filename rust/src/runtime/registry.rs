@@ -156,6 +156,98 @@ impl QuantSpec {
         }
         Ok(())
     }
+
+    /// Resolve this spec against a fixed row width `k` into a
+    /// [`RowQdq`]: validation and scale precomputation hoisted out of
+    /// the per-row hot loop, so the fused `Backend::qdq_matmul_t`
+    /// A-panel prep allocates nothing per row. `alpha` feeds the
+    /// runtime clip range of the static kinds, exactly as in
+    /// [`QuantSpec::apply_with`].
+    pub fn row_kernel(&self, k: usize, alpha: Option<&[f32]>) -> Result<RowQdq> {
+        Ok(match self.kind {
+            QuantKind::None => RowQdq::None,
+            QuantKind::Abfp | QuantKind::Abfp2 => {
+                let fmt = self.fmt.context("abfp needs a payload format")?;
+                anyhow::ensure!(
+                    self.n > 0 && k % self.n == 0,
+                    "site width {} not a multiple of ABFP n={}",
+                    k,
+                    self.n
+                );
+                if self.kind == QuantKind::Abfp {
+                    RowQdq::Abfp { fmt, n: self.n }
+                } else {
+                    RowQdq::Abfp2 { fmt, n: self.n }
+                }
+            }
+            QuantKind::StaticInt | QuantKind::StaticIntPc => {
+                let a = alpha.context("static quantizer needs a runtime clip range")?;
+                anyhow::ensure!(
+                    a.len() == 1 || a.len() == k,
+                    "clip range len {} vs row width {}",
+                    a.len(),
+                    k
+                );
+                let qmax = formats::IntFmt::new(self.int_bits()?).qmax();
+                let scales = a
+                    .iter()
+                    .map(|&v| qmax / if v > 0.0 { v } else { 1.0 })
+                    .collect();
+                RowQdq::StaticInt { scales, qmax }
+            }
+            QuantKind::WPcmaxInt => RowQdq::WPcmax { bits: self.int_bits()? },
+        })
+    }
+}
+
+/// A [`QuantSpec`] pre-resolved against a fixed row width: the
+/// row-local QDQ kernel the fused `Backend::qdq_matmul_t` applies
+/// inside its A-panel load. `apply` runs exactly the per-row math of
+/// the bulk [`QuantSpec::apply_with`] path (every kernel in
+/// `formats::` is row-local by construction), so fused results are
+/// bit-identical to the unfused reference — the contract
+/// `tests/backend_conformance.rs` enforces per backend × thread count.
+#[derive(Debug, Clone)]
+pub enum RowQdq {
+    None,
+    Abfp { fmt: Format, n: usize },
+    Abfp2 { fmt: Format, n: usize },
+    /// Static integer QDQ with precomputed scales: len 1 broadcasts
+    /// (per-tensor clip), len k is per-channel.
+    StaticInt { scales: Vec<f32>, qmax: f32 },
+    WPcmax { bits: u32 },
+}
+
+impl RowQdq {
+    /// In-place QDQ of one row — same bytes as the bulk path.
+    pub fn apply(&self, row: &mut [f32]) {
+        if row.is_empty() {
+            return;
+        }
+        match self {
+            RowQdq::None => {}
+            RowQdq::Abfp { fmt, n } => formats::abfp_rows(row, row.len(), *fmt, *n),
+            RowQdq::Abfp2 { fmt, n } => {
+                formats::abfp2_rows(row, row.len(), *fmt, *n, ABFP2_SCALE_BITS)
+            }
+            RowQdq::StaticInt { scales, qmax } => {
+                if scales.len() == 1 {
+                    let s = scales[0];
+                    for v in row.iter_mut() {
+                        *v = formats::int_qdq(*v, s, *qmax);
+                    }
+                } else {
+                    for (v, &s) in row.iter_mut().zip(scales.iter()) {
+                        *v = formats::int_qdq(*v, s, *qmax);
+                    }
+                }
+            }
+            RowQdq::WPcmax { bits } => {
+                let k = row.len();
+                formats::pcmax_weight_qdq_with(row, k, *bits, &crate::tensor::backend::Scalar)
+            }
+        }
+    }
 }
 
 /// How every quantized site of one artifact is wired (`common.py
@@ -782,6 +874,50 @@ mod tests {
         let mse = quant_config("mse_w4a8").unwrap();
         assert!(mse.aq.needs_runtime_scale());
         assert_eq!(mse.wq.kind, QuantKind::WPcmaxInt);
+    }
+
+    #[test]
+    fn row_kernel_matches_bulk_apply_with() {
+        // The fused A-panel prep (RowQdq) must reproduce the bulk
+        // QuantSpec::apply_with bytes exactly, for every quantizer kind
+        // the wiring tables use.
+        use crate::tensor::backend::Scalar;
+        let mut rng = crate::util::rng::Pcg64::new(0x50);
+        let (rows, k) = (6usize, 128usize);
+        let base = crate::util::prop::heavy_vec(&mut rng, rows * k, 2.0);
+        let alpha_pc: Vec<f32> = (0..k).map(|j| 0.2 + (j % 5) as f32).collect();
+        let cases: Vec<(QuantSpec, Option<Vec<f32>>)> = vec![
+            (abfp(Format::Int(INT4), 64), None),
+            (abfp(Format::Fp(E4M3), 64), None),
+            (abfp2(Format::Int(INT4), 64), None),
+            (static_int(8), Some(vec![2.5])),
+            (static_int_pc(4), Some(alpha_pc)),
+            (w_pcmax_int(4), None),
+            (Q_NONE, None),
+        ];
+        for (spec, alpha) in cases {
+            let mut want = base.clone();
+            spec.apply_with(&mut want, k, alpha.as_deref(), &Scalar).unwrap();
+            let kern = spec.row_kernel(k, alpha.as_deref()).unwrap();
+            let mut got = base.clone();
+            for row in got.chunks_mut(k) {
+                kern.apply(row);
+            }
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "{:?} idx {}: {} vs {}",
+                    spec.kind,
+                    i,
+                    g,
+                    w
+                );
+            }
+        }
+        // invalid resolutions fail loudly, like the bulk path
+        assert!(abfp(Format::Int(INT4), 64).row_kernel(100, None).is_err());
+        assert!(static_int(8).row_kernel(128, None).is_err());
+        assert!(static_int(8).row_kernel(128, Some(&[1.0, 2.0])).is_err());
     }
 
     #[test]

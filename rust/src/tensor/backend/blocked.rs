@@ -7,13 +7,20 @@
 //! scalar reference (asserted by the parity property tests).
 
 use super::scalar::{self, GRAM_RB};
-use super::Backend;
+use super::{simd, Backend};
 use crate::tensor::Tensor;
 
 /// Column-tile width of the C/B panels (f32 elements).
 const JB: usize = 256;
 /// Depth-tile height: a PB x JB panel of B is 128 KiB, L2-resident.
 const PB: usize = 128;
+/// B-row tile of `matmul_t`: a TBT x k panel of B (k up to a few
+/// thousand f32) stays L2-resident while every A row is swept past it.
+const TBT: usize = 16;
+/// A-row panel height of the fused `qdq_matmul_t`: `prep` runs once per
+/// row into an RBQ x k scratch, then each B row is loaded once and
+/// reused across the whole panel.
+const RBQ: usize = 8;
 
 pub struct Blocked;
 
@@ -51,6 +58,68 @@ impl Backend for Blocked {
                 p0 = pend;
             }
             j0 = jend;
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        // j-tile outer, i inner: a TBT-row panel of B is reused across
+        // all M output rows, and within a tile the 4-wide `dots_lanes`
+        // kernel shares one A-row pass across four output dots. Each
+        // output element is still one complete ascending-k dot with the
+        // a == 0 skip, so bits match the transposed scalar reference.
+        let mut j0 = 0;
+        while j0 < n {
+            let jend = (j0 + TBT).min(n);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                simd::dots_lanes(arow, &b.data[j0 * k..], &mut out[i * n + j0..i * n + jend], k);
+            }
+            j0 = jend;
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn qdq_panel_rows(&self) -> usize {
+        RBQ
+    }
+
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        if m == 0 || n == 0 || k == 0 {
+            return Tensor::new(vec![m, n], out);
+        }
+        // A-row panels: prep each row's copy exactly once into an
+        // RBQ x k scratch, then sweep B in TBT-row tiles — each tile
+        // stays hot across all RBQ prepped rows, and `dots_lanes`
+        // shares one prepped-row pass across four output dots.
+        let mut panel = vec![0.0f32; RBQ * k];
+        let mut i0 = 0;
+        while i0 < m {
+            let iend = (i0 + RBQ).min(m);
+            let rows = iend - i0;
+            let pan = &mut panel[..rows * k];
+            pan.copy_from_slice(&x.data[i0 * k..iend * k]);
+            for row in pan.chunks_mut(k) {
+                prep(row);
+            }
+            let mut j0 = 0;
+            while j0 < n {
+                let jend = (j0 + TBT).min(n);
+                for (ri, arow) in pan.chunks(k).enumerate() {
+                    let orow = &mut out[(i0 + ri) * n + j0..(i0 + ri) * n + jend];
+                    simd::dots_lanes(arow, &w.data[j0 * k..], orow, k);
+                }
+                j0 = jend;
+            }
+            i0 = iend;
         }
         Tensor::new(vec![m, n], out)
     }

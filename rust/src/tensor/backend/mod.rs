@@ -13,13 +13,23 @@
 //!   scalar on every op (the unroll never crosses a reduction);
 //! * [`Threaded`] — output-row-partitioned scoped threads. `matmul` and
 //!   `gram` are bit-identical to scalar (each element is produced by one
-//!   thread running the scalar kernel); `sum_sq` combines fixed-chunk
-//!   partials in ascending order — deterministic, documented tolerance
-//!   <= 1e-5 relative. Falls back to the scalar kernel (no spawns) when
-//!   rows < threads or a dimension is zero;
+//!   thread running the shared simd row kernel, itself bit-identical);
+//!   `sum_sq` combines fixed-chunk partials in ascending order —
+//!   deterministic, documented tolerance <= 1e-5 relative. Falls back to
+//!   the serial kernel (no spawns) when rows < threads or a dimension is
+//!   zero;
 //! * [`Pool`] — the same row partition on a persistent worker pool with
-//!   a shared injector queue: no per-call thread spawn, which wins on
-//!   the many-small-sites calibration pattern.
+//!   per-worker work-stealing deques: no per-call thread spawn, which
+//!   wins on the many-small-sites calibration pattern, and no single
+//!   shared queue to contend on at high core counts.
+//!
+//! Besides `matmul`/`gram`, every backend implements the transpose-free
+//! [`Backend::matmul_t`] (`a @ b^T` off row-major `b`) and the fused
+//! [`Backend::qdq_matmul_t`] (smoothing + activation QDQ applied inside
+//! the A-panel load) — both bit-identical to their unfused transposed
+//! references, which is what lets the simulated-quantization forward
+//! path drop every materialized transpose and activation copy without
+//! moving a single output bit.
 //!
 //! Selection is a process-wide handle, configurable at runtime:
 //!
@@ -75,6 +85,54 @@ pub trait Backend: Send + Sync {
 
     /// C = A @ B for 2-D tensors (M, K) x (K, N).
     fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    /// C = A @ B^T for 2-D tensors (M, K) x (N, K) — `b` is row-major
+    /// and **un-transposed**; the kernel reads its rows directly, so no
+    /// transposed copy is ever materialized. Contract: bit-identical to
+    /// `matmul(a, b.transpose())` — every output element folds the same
+    /// ascending-k `+= a*b` sequence with the same `a == 0.0` skip
+    /// (conformance-enforced). This is the transpose-free hot path of
+    /// attention scores (`q @ k^T`) and every head/linear projection
+    /// whose weight is stored natural (dout, din).
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        scalar::matmul_t_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Fused QDQ→matmul: C = prep(A) @ B^T where `prep` applies the
+    /// caller's smoothing + activation-QDQ to ONE row in place.
+    ///
+    /// Contract — enforced by the conformance harness for every
+    /// registered backend × thread count:
+    /// * `prep` must be **row-local** (a pure function of the row it is
+    ///   handed — exactly what every QDQ kernel in `formats::` is) and
+    ///   is applied to a *copy* of each A row **exactly once** before
+    ///   that row's dots are taken;
+    /// * the result is bit-identical to the unfused reference
+    ///   (clone A; prep every row; `matmul_t`), while the transformed
+    ///   activation tensor is never materialized — implementations hold
+    ///   at most a few k-wide row panels (one per worker) at a time.
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        scalar::qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// How many k-wide A-row panels [`Backend::qdq_matmul_t`] holds at
+    /// peak: the accounting honesty hook behind the fused-vs-unfused
+    /// temporary-byte numbers in the benches (`model::net::qdq_temp`).
+    /// Serial kernels hold one; the blocked backend preps a fixed row
+    /// block at a time; the parallel backends hold one panel per worker.
+    fn qdq_panel_rows(&self) -> usize {
+        1
+    }
 
     /// A^T @ A — the Gram/Hessian accumulator used by GPTQ.
     fn gram(&self, x: &Tensor) -> Tensor;
@@ -270,6 +328,58 @@ mod tests {
             for be in alt_backends() {
                 let got = be.matmul(&a, &b);
                 prop_eq_bits(&got, &want, be.describe(), "matmul")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_t_parity_exact_property() {
+        // a @ b^T off row-major b must reproduce the transposed-operand
+        // reference bit for bit on every backend.
+        prop::check("backend_matmul_t_parity", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let a = rand_tensor(rng, m, k);
+            let b = rand_tensor(rng, n, k);
+            let want = Scalar.matmul(&a, &b.transpose());
+            prop_eq_bits(&Scalar.matmul_t(&a, &b), &want, "scalar".into(), "matmul_t")?;
+            for be in alt_backends() {
+                let got = be.matmul_t(&a, &b);
+                prop_eq_bits(&got, &want, be.describe(), "matmul_t")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qdq_matmul_t_fused_matches_unfused_property() {
+        // The fused A-panel prep must equal "clone, prep every row,
+        // matmul_t" exactly. The prep is deliberately non-idempotent
+        // (affine, not a fixed point) so any implementation that preps a
+        // row buffer twice in place fails loudly.
+        prop::check("backend_qdq_matmul_t_parity", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let a = rand_tensor(rng, m, k);
+            let w = rand_tensor(rng, n, k);
+            let prep = |row: &mut [f32]| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = *v * 0.5 + (j % 5) as f32;
+                }
+            };
+            let mut xq = a.clone();
+            for i in 0..m {
+                prep(xq.row_mut(i));
+            }
+            let want = Scalar.matmul(&xq, &w.transpose());
+            prop_eq_bits(
+                &Scalar.qdq_matmul_t(&a, &prep, &w),
+                &want,
+                "scalar".into(),
+                "qdq_matmul_t",
+            )?;
+            for be in alt_backends() {
+                let got = be.qdq_matmul_t(&a, &prep, &w);
+                prop_eq_bits(&got, &want, be.describe(), "qdq_matmul_t")?;
             }
             Ok(())
         });

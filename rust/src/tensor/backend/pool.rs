@@ -1,83 +1,131 @@
 //! Persistent worker-pool backend: the row-partitioned parallelism of
-//! `threaded` without the per-call scoped-thread spawn.
+//! `threaded` without the per-call scoped-thread spawn, on per-worker
+//! **work-stealing deques**.
 //!
 //! `threaded` pays an OS thread spawn + join per `matmul`/`gram`/
 //! `par_map_f64` call, which dominates on the many-small-sites pattern
 //! the calibrator produces (ROADMAP flagged exactly this). `Pool` spawns
-//! its workers once, at construction; every call afterwards only pushes
-//! closures onto a shared injector queue and wakes sleeping workers.
+//! its workers once, at construction; every call afterwards only places
+//! closures on the worker deques and wakes sleeping workers.
 //!
-//! Determinism contract — identical to `threaded`: `matmul` and `gram`
-//! partition output rows and every output element is produced by one
-//! worker running the shared scalar kernel, so results are bit-identical
-//! to `scalar` (asserted by `tests/backend_conformance.rs`); `sum_sq`
-//! combines fixed-chunk partials in ascending chunk order (deterministic,
-//! <= 1e-5 relative vs scalar above the serial threshold).
+//! The original design used ONE shared injector queue: every push and
+//! every pop crossed the same mutex, which serializes queue traffic at
+//! high core counts (the second ROADMAP contention item). Now each
+//! worker owns a deque; `run_batch` sprays its tasks round-robin across
+//! them, a worker pops from its **own** deque first (one uncontended
+//! lock in the common case) and steals oldest-first from a sibling only
+//! when it runs dry — the pop side, where workers hammer the queue,
+//! no longer shares a lock. (Pushes still pass through the global
+//! `sleep` mutex, but only as an empty-critical-section handshake that
+//! makes the sleep/wake protocol lost-wakeup-free; they do no work
+//! under it.) Task placement has no effect on results: tasks write
+//! disjoint output ranges and every output element is produced by the
+//! same serial kernel regardless of which worker runs it.
+//!
+//! Determinism contract — identical to `threaded`: `matmul`/`matmul_t`/
+//! `qdq_matmul_t` and `gram` partition output rows and every output
+//! element is produced by one worker running the shared simd row kernel
+//! (itself bit-identical to scalar on every op), so results are
+//! bit-identical to `scalar` (asserted by `tests/backend_conformance.rs`);
+//! `sum_sq` combines fixed-chunk partials in ascending chunk order
+//! (deterministic, <= 1e-5 relative vs scalar above the serial
+//! threshold).
 //!
 //! Nested fan-out (a pooled `par_map_f64` job that itself calls a pooled
 //! `matmul`, as calibration -> gram does) cannot deadlock: a thread
-//! waiting on its own batch *helps*, draining jobs from the injector
+//! waiting on its own batch *helps*, draining jobs from the deques
 //! until its batch completes, so queued work always makes progress even
 //! when every worker is blocked inside a nested wait.
 
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::scalar;
-use super::{Backend, PAR_MIN_LEN};
+use super::{simd, Backend, PAR_MIN_LEN};
 use crate::tensor::Tensor;
 
-/// A lifetime-erased unit of work on the injector queue.
+/// A lifetime-erased unit of work on a worker deque.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A borrowed task in one batch (lifetime-bound to the caller's data).
 type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
 
-/// The shared injector: a FIFO of jobs plus the worker wakeup signal.
-struct Injector {
-    queue: Mutex<InjectorState>,
+/// Shared pool state: one deque per worker plus the sleep machinery.
+struct Shared {
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Upper bound on the jobs queued across all deques: incremented
+    /// BEFORE the job lands in a deque, decremented after a successful
+    /// pop — so it can read high transiently (a pusher mid-flight) but
+    /// never underflows. A worker that found every deque empty re-checks
+    /// it under the `sleep` lock before blocking; a pusher passes
+    /// through that same lock (empty critical section) before notifying,
+    /// so the classic lost-wakeup race (push lands between a worker's
+    /// last scan and its wait) cannot happen and idle workers can sleep
+    /// on a plain untimed `wait`.
+    queued: AtomicUsize,
+    /// Guards the shutdown flag and serializes the sleep/wake handshake.
+    sleep: Mutex<bool>,
     ready: Condvar,
 }
 
-struct InjectorState {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
-}
-
-impl Injector {
-    fn push(&self, job: Job) {
-        self.queue.lock().unwrap().jobs.push_back(job);
+impl Shared {
+    fn push(&self, slot: usize, job: Job) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.deques[slot % self.deques.len()].lock().unwrap().push_back(job);
+        // Sleep handshake: a sleeper holds `sleep` from its queued
+        // re-check until `wait` releases it, so by blocking here (empty
+        // critical section) we cannot notify in that gap — either the
+        // sleeper saw our increment, or it is already waiting and the
+        // notify lands.
+        drop(self.sleep.lock().unwrap());
         self.ready.notify_one();
     }
 
-    fn try_pop(&self) -> Option<Job> {
-        self.queue.lock().unwrap().jobs.pop_front()
+    /// Pop a job, preferring `home`'s own deque (newest first — its
+    /// operands are the hottest), then stealing oldest-first from the
+    /// other deques in ring order.
+    fn pop(&self, home: usize) -> Option<Job> {
+        let t = self.deques.len();
+        let home = home % t;
+        if let Some(j) = self.deques[home].lock().unwrap().pop_back() {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            return Some(j);
+        }
+        for off in 1..t {
+            let victim = (home + off) % t;
+            if let Some(j) = self.deques[victim].lock().unwrap().pop_front() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Some(j);
+            }
+        }
+        None
     }
 
-    /// Worker body: run jobs until shutdown is flagged *and* the queue
-    /// has drained (never strands a batch someone is waiting on).
-    fn worker_loop(&self) {
+    /// Worker body: run jobs until shutdown is flagged *and* every
+    /// deque has drained (never strands a batch someone is waiting on).
+    fn worker_loop(&self, id: usize) {
         loop {
-            let job = {
-                let mut st = self.queue.lock().unwrap();
-                loop {
-                    if let Some(j) = st.jobs.pop_front() {
-                        break Some(j);
-                    }
-                    if st.shutdown {
-                        break None;
-                    }
-                    st = self.ready.wait(st).unwrap();
-                }
-            };
-            match job {
-                Some(j) => j(),
-                None => return,
+            if let Some(job) = self.pop(id) {
+                job();
+                continue;
             }
+            let guard = self.sleep.lock().unwrap();
+            if self.queued.load(Ordering::SeqCst) > 0 {
+                continue; // work appeared (or is landing) — rescan
+            }
+            if *guard {
+                return; // shutdown, and every deque is drained
+            }
+            // Untimed: safe because a pusher increments `queued` before
+            // enqueueing and passes through `sleep` before notifying —
+            // it cannot slip into the window between the re-check above
+            // and this wait. Idle workers therefore sleep for real (no
+            // periodic polling).
+            let _ = self.ready.wait(guard).unwrap();
         }
     }
 }
@@ -99,16 +147,20 @@ struct BatchProgress {
 /// at construction and joined on drop (replacing the process-wide handle
 /// via `configure`/`set_active` drops the old pool once idle).
 pub struct Pool {
-    injector: Arc<Injector>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Round-robin cursor for spraying batch tasks across the deques.
+    rr: AtomicUsize,
 }
 
 impl Pool {
     pub fn new(threads: usize) -> Pool {
         let threads = threads.max(1);
-        let injector = Arc::new(Injector {
-            queue: Mutex::new(InjectorState { jobs: VecDeque::new(), shutdown: false }),
+        let shared = Arc::new(Shared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: AtomicUsize::new(0),
+            sleep: Mutex::new(false),
             ready: Condvar::new(),
         });
         // A 1-thread pool runs every op on the serial path (the `t <= 1`
@@ -118,26 +170,27 @@ impl Pool {
         } else {
             (0..threads)
                 .map(|i| {
-                    let inj = Arc::clone(&injector);
+                    let sh = Arc::clone(&shared);
                     std::thread::Builder::new()
                         .name(format!("intfpqsim-pool-{}", i))
-                        .spawn(move || inj.worker_loop())
+                        .spawn(move || sh.worker_loop(i))
                         .expect("spawn pool worker")
                 })
                 .collect()
         };
-        Pool { injector, workers, threads }
+        Pool { shared, workers, threads, rr: AtomicUsize::new(0) }
     }
 
     /// Run a batch of borrowing closures on the pool and block until all
-    /// complete. The caller participates (helps drain the injector) while
+    /// complete. The caller participates (helps drain the deques) while
     /// it waits — that is what makes nested batches deadlock-free.
     fn run_batch<'env>(&self, tasks: Vec<Task<'env>>) {
         let state = Arc::new(BatchState {
             progress: Mutex::new(BatchProgress { pending: tasks.len(), panic: None }),
             done: Condvar::new(),
         });
-        for task in tasks {
+        let base = self.rr.fetch_add(tasks.len().max(1), Ordering::Relaxed);
+        for (ti, task) in tasks.into_iter().enumerate() {
             let st = Arc::clone(&state);
             let wrapped: Task<'env> = Box::new(move || {
                 let result = catch_unwind(AssertUnwindSafe(task));
@@ -153,10 +206,10 @@ impl Pool {
             // SAFETY: `run_batch` does not return until `pending` reaches
             // zero, i.e. until every task has finished running, so no task
             // outlives the `'env` borrows it captures. Erasing the
-            // lifetime only lets the job sit on the 'static injector queue
-            // in the meantime (the standard scoped-pool technique).
+            // lifetime only lets the job sit on the 'static deques in the
+            // meantime (the standard scoped-pool technique).
             let wrapped = unsafe { std::mem::transmute::<Task<'env>, Job>(wrapped) };
-            self.injector.push(wrapped);
+            self.shared.push(base + ti, wrapped);
         }
         loop {
             // Return as soon as OUR batch is done — before picking up any
@@ -174,12 +227,12 @@ impl Pool {
             drop(p);
             // Help: run queued jobs (ours or a nested batch's) instead of
             // sleeping while work is available.
-            if let Some(job) = self.injector.try_pop() {
+            if let Some(job) = self.shared.pop(base) {
                 job();
                 continue;
             }
             // The timeout bounds the window of the benign race where the
-            // last job completes between the try_pop miss and this wait.
+            // last job completes between the pop miss and this wait.
             let p = state.progress.lock().unwrap();
             if p.pending > 0 {
                 let (guard, _timeout) =
@@ -193,10 +246,10 @@ impl Pool {
 impl Drop for Pool {
     fn drop(&mut self) {
         {
-            let mut st = self.injector.queue.lock().unwrap();
-            st.shutdown = true;
+            let mut g = self.shared.sleep.lock().unwrap();
+            *g = true;
         }
-        self.injector.ready.notify_all();
+        self.shared.ready.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -212,6 +265,10 @@ impl Backend for Pool {
         self.threads
     }
 
+    fn qdq_panel_rows(&self) -> usize {
+        self.threads
+    }
+
     fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
         let (m, k) = a.dims2();
         let (k2, n) = b.dims2();
@@ -223,7 +280,7 @@ impl Backend for Pool {
         // dropping to serial. Serial only when there is nothing to split.
         let t = self.threads.min(m);
         if t <= 1 || n == 0 || k == 0 {
-            scalar::matmul_rows(&a.data, &b.data, &mut out, k, n);
+            simd::matmul_rows(&a.data, &b.data, &mut out, k, n);
         } else {
             let rows_per = m.div_ceil(t);
             let (adata, bdata) = (&a.data[..], &b.data[..]);
@@ -232,7 +289,58 @@ impl Backend for Pool {
                 let i0 = ci * rows_per;
                 let rows = chunk.len() / n;
                 let ablock = &adata[i0 * k..(i0 + rows) * k];
-                tasks.push(Box::new(move || scalar::matmul_rows(ablock, bdata, chunk, k, n)));
+                tasks.push(Box::new(move || simd::matmul_rows(ablock, bdata, chunk, k, n)));
+            }
+            self.run_batch(tasks);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads.min(m);
+        if t <= 1 || n == 0 || k == 0 {
+            simd::matmul_t_rows(&a.data, &b.data, &mut out, k, n);
+        } else {
+            let rows_per = m.div_ceil(t);
+            let (adata, bdata) = (&a.data[..], &b.data[..]);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let i0 = ci * rows_per;
+                let rows = chunk.len() / n;
+                let ablock = &adata[i0 * k..(i0 + rows) * k];
+                tasks.push(Box::new(move || simd::matmul_t_rows(ablock, bdata, chunk, k, n)));
+            }
+            self.run_batch(tasks);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads.min(m);
+        if t <= 1 || n == 0 || k == 0 {
+            simd::qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
+        } else {
+            // Row partition: each worker preps its own rows (every row
+            // exactly once) into its own k-panel — peak temporary
+            // footprint is `t` panels, never the full (m, k) copy.
+            let rows_per = m.div_ceil(t);
+            let (xdata, wdata) = (&x.data[..], &w.data[..]);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let i0 = ci * rows_per;
+                let rows = chunk.len() / n;
+                let xblock = &xdata[i0 * k..(i0 + rows) * k];
+                tasks.push(Box::new(move || {
+                    simd::qdq_matmul_t_rows(xblock, prep, wdata, chunk, k, n)
+                }));
             }
             self.run_batch(tasks);
         }
@@ -244,14 +352,14 @@ impl Backend for Pool {
         let mut out = vec![0.0f32; k * k];
         let t = self.threads.min(k);
         if t <= 1 || m == 0 {
-            scalar::gram_rows(&x.data, m, k, 0, &mut out);
+            simd::gram_rows(&x.data, m, k, 0, &mut out);
         } else {
             let rows_per = k.div_ceil(t);
             let xdata = &x.data[..];
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
             for (ci, chunk) in out.chunks_mut(rows_per * k).enumerate() {
                 let i0 = ci * rows_per;
-                tasks.push(Box::new(move || scalar::gram_rows(xdata, m, k, i0, chunk)));
+                tasks.push(Box::new(move || simd::gram_rows(xdata, m, k, i0, chunk)));
             }
             self.run_batch(tasks);
         }
@@ -262,13 +370,13 @@ impl Backend for Pool {
         assert_eq!(x.len(), y.len(), "axpy length mismatch");
         let t = self.threads;
         if t <= 1 || y.len() < PAR_MIN_LEN {
-            scalar::axpy_range(alpha, x, y);
+            simd::axpy_lanes(alpha, x, y);
             return;
         }
         let chunk = y.len().div_ceil(t);
         let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
         for (xc, yc) in x.chunks(chunk).zip(y.chunks_mut(chunk)) {
-            tasks.push(Box::new(move || scalar::axpy_range(alpha, xc, yc)));
+            tasks.push(Box::new(move || simd::axpy_lanes(alpha, xc, yc)));
         }
         self.run_batch(tasks);
     }
@@ -276,13 +384,13 @@ impl Backend for Pool {
     fn sum_sq(&self, x: &[f32]) -> f64 {
         let t = self.threads;
         if t <= 1 || x.len() < PAR_MIN_LEN {
-            return scalar::sum_sq_range(x);
+            return simd::sum_sq_lanes(x);
         }
         let chunk = x.len().div_ceil(t);
         let mut partials = vec![0.0f64; x.len().div_ceil(chunk)];
         let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
         for (xc, p) in x.chunks(chunk).zip(partials.iter_mut()) {
-            tasks.push(Box::new(move || *p = scalar::sum_sq_range(xc)));
+            tasks.push(Box::new(move || *p = simd::sum_sq_lanes(xc)));
         }
         self.run_batch(tasks);
         partials.iter().sum()

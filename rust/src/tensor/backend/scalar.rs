@@ -59,6 +59,70 @@ pub(crate) fn gram_rows(x: &[f32], m: usize, k: usize, i0: usize, out_rows: &mut
     }
 }
 
+/// Dot product with the kernel's `a == 0.0` skip, folded in ascending
+/// index order. This is exactly the accumulation sequence one output
+/// element of [`matmul_rows`] sees (the ikj loop adds `a[p] * b[p, j]`
+/// into `C[i, j]` for ascending p, skipping zero A elements), so a C
+/// built from these dots is bit-identical to `A @ B` — which is what
+/// lets [`matmul_t_rows`] read B row-major without materializing B^T.
+#[inline]
+pub(crate) fn dot_skip(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&av, &bv) in a.iter().zip(b.iter()) {
+        if av == 0.0 {
+            continue;
+        }
+        acc += av * bv;
+    }
+    acc
+}
+
+/// C rows = A rows @ B^T for a contiguous block of output rows.
+/// `a` holds `rows * k` elements, `out` holds `rows * n`; `b` is (N, K)
+/// row-major — **un-transposed**. Every output element is one complete
+/// ascending-k [`dot_skip`], so the result matches
+/// `matmul_rows(a, transpose(b), ..)` bit for bit with no transposed
+/// copy of B ever existing.
+pub(crate) fn matmul_t_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            *c = dot_skip(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Fused rows of `prep(A rows) @ B^T`: each A row is copied into one
+/// reusable k-panel, transformed by `prep` (the caller's smoothing +
+/// activation-QDQ kernel — row-local by contract) **exactly once**, and
+/// dotted against every B row. The full transformed activation tensor
+/// is never materialized: peak temporary footprint is a single k-wide
+/// panel per caller instead of rows × k. Because `prep` runs the same
+/// per-row math as the unfused bulk path and the dots fold in the same
+/// ascending-k order, results are bit-identical to
+/// "clone A; prep each row; matmul_t".
+pub(crate) fn qdq_matmul_t_rows(
+    a: &[f32],
+    prep: &(dyn Fn(&mut [f32]) + Sync),
+    b: &[f32],
+    out: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    let mut panel = vec![0.0f32; k];
+    for i in 0..rows {
+        panel.copy_from_slice(&a[i * k..(i + 1) * k]);
+        prep(&mut panel);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            *c = dot_skip(&panel, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
 /// y += alpha * x over a contiguous range.
 pub(crate) fn axpy_range(alpha: f32, x: &[f32], y: &mut [f32]) {
     for (yv, &xv) in y.iter_mut().zip(x.iter()) {
@@ -85,6 +149,24 @@ impl Backend for Scalar {
         assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
         let mut out = vec![0.0f32; m * n];
         matmul_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        matmul_t_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
         Tensor::new(vec![m, n], out)
     }
 

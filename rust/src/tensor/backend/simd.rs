@@ -11,6 +11,10 @@
 //!   the exact ascending order of the scalar kernel, so the reduction
 //!   tree is fixed and the results match `scalar` bit for bit — including
 //!   NaN propagation and the `a == 0.0` skip.
+//! * `matmul_t`/`qdq_matmul_t`: the unroll runs across four independent
+//!   output *dots* ([`dots_lanes`]); each dot still folds ascending-k
+//!   with the `a == 0.0` skip, so bits match the transposed scalar
+//!   reference.
 //! * `axpy`: element-wise, so any unroll is trivially bit-identical.
 //! * `sum_sq`: the four f64 squares of a lane are computed together, but
 //!   they are folded into the single accumulator in ascending index
@@ -66,6 +70,71 @@ pub(crate) fn gram_rows(x: &[f32], m: usize, k: usize, i0: usize, out_rows: &mut
     }
 }
 
+/// out[j] = dot_skip(a, b row j) with four output dots in flight.
+/// Each accumulator folds its `+= a*b` updates in ascending-k order
+/// with the same `a == 0.0` skip as `scalar::dot_skip` — the unroll
+/// runs across four *independent* output elements, never across a
+/// reduction — so every element is bit-identical to the scalar dot.
+pub(crate) fn dots_lanes(a: &[f32], b: &[f32], out: &mut [f32], k: usize) {
+    let mut jit = out.chunks_exact_mut(LANES);
+    let mut j = 0;
+    for c4 in &mut jit {
+        let b0 = &b[j * k..(j + 1) * k];
+        let b1 = &b[(j + 1) * k..(j + 2) * k];
+        let b2 = &b[(j + 2) * k..(j + 3) * k];
+        let b3 = &b[(j + 3) * k..(j + 4) * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (p, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            s0 += av * b0[p];
+            s1 += av * b1[p];
+            s2 += av * b2[p];
+            s3 += av * b3[p];
+        }
+        c4[0] = s0;
+        c4[1] = s1;
+        c4[2] = s2;
+        c4[3] = s3;
+        j += LANES;
+    }
+    for (jj, c) in jit.into_remainder().iter_mut().enumerate() {
+        *c = super::scalar::dot_skip(a, &b[(j + jj) * k..(j + jj + 1) * k]);
+    }
+}
+
+/// C rows = A rows @ B^T with the output columns 4-lane unrolled.
+/// Same signature/contract as `scalar::matmul_t_rows` (bit-identical to
+/// the transposed scalar reference).
+pub(crate) fn matmul_t_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        dots_lanes(arow, b, &mut out[i * n..(i + 1) * n], k);
+    }
+}
+
+/// Fused `prep(A rows) @ B^T` with 4-lane-unrolled dots: one reusable
+/// k-panel, `prep` applied to each row's copy exactly once. Same
+/// contract as `scalar::qdq_matmul_t_rows`.
+pub(crate) fn qdq_matmul_t_rows(
+    a: &[f32],
+    prep: &(dyn Fn(&mut [f32]) + Sync),
+    b: &[f32],
+    out: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    let mut panel = vec![0.0f32; k];
+    for i in 0..rows {
+        panel.copy_from_slice(&a[i * k..(i + 1) * k]);
+        prep(&mut panel);
+        dots_lanes(&panel, b, &mut out[i * n..(i + 1) * n], k);
+    }
+}
+
 /// y += alpha * x, 4-lane unrolled. The lanes are disjoint elements, so
 /// this is bit-identical to `scalar::axpy_range` for any length.
 pub(crate) fn axpy_lanes(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -118,6 +187,24 @@ impl Backend for Simd {
         assert_eq!(k, k2, "matmul inner dim {} vs {}", k, k2);
         let mut out = vec![0.0f32; m * n];
         matmul_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        matmul_t_rows(&a.data, &b.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
         Tensor::new(vec![m, n], out)
     }
 

@@ -1,23 +1,23 @@
 //! Row-partitioned multi-threaded backend (std scoped threads only).
 //!
-//! Determinism contract: `matmul` and `gram` partition *output rows*
-//! across threads and each output element is produced entirely by one
-//! thread running the shared scalar kernel — the reduction order per
-//! element is identical to the scalar backend, so results are
-//! bit-identical (stronger than the documented <= 1e-5 guarantee, and
-//! asserted exactly by the parity tests). `sum_sq` reduces fixed-size
-//! chunk partials in ascending chunk order — deterministic for a given
-//! thread count, but a different f64 association than the scalar
-//! left-fold, hence the documented 1e-5 relative tolerance.
+//! Determinism contract: `matmul`/`matmul_t`/`qdq_matmul_t` and `gram`
+//! partition *output rows* across threads and each output element is
+//! produced entirely by one thread running the shared **simd** row
+//! kernel — which is itself bit-identical to scalar on every op (the
+//! unroll never crosses a reduction), so results are bit-identical to
+//! the scalar backend (stronger than the documented <= 1e-5 guarantee,
+//! and asserted exactly by the parity tests). `sum_sq` reduces
+//! fixed-size chunk partials in ascending chunk order — deterministic
+//! for a given thread count, but a different f64 association than the
+//! scalar left-fold, hence the documented 1e-5 relative tolerance.
 //!
 //! Fallback rule: when there are fewer output rows than threads (each
 //! spawn would own ~1 row, so spawn overhead dominates) or any dimension
-//! is zero, the call runs the scalar kernel directly — no threads are
+//! is zero, the call runs the serial kernel directly — no threads are
 //! spawned. Covered by the regression tests here and by the shape grid
 //! in `tests/backend_conformance.rs`.
 
-use super::scalar;
-use super::{Backend, PAR_MIN_LEN};
+use super::{simd, Backend, PAR_MIN_LEN};
 use crate::tensor::Tensor;
 
 pub struct Threaded {
@@ -43,6 +43,10 @@ impl Backend for Threaded {
         self.threads
     }
 
+    fn qdq_panel_rows(&self) -> usize {
+        self.threads
+    }
+
     fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
         let (m, k) = a.dims2();
         let (k2, n) = b.dims2();
@@ -50,7 +54,7 @@ impl Backend for Threaded {
         let mut out = vec![0.0f32; m * n];
         let t = self.threads;
         if t <= 1 || n == 0 || k == 0 || m < t {
-            scalar::matmul_rows(&a.data, &b.data, &mut out, k, n);
+            simd::matmul_rows(&a.data, &b.data, &mut out, k, n);
         } else {
             let rows_per = m.div_ceil(t);
             let (adata, bdata) = (&a.data[..], &b.data[..]);
@@ -59,7 +63,56 @@ impl Backend for Threaded {
                     let i0 = ci * rows_per;
                     let rows = chunk.len() / n;
                     let ablock = &adata[i0 * k..(i0 + rows) * k];
-                    s.spawn(move || scalar::matmul_rows(ablock, bdata, chunk, k, n));
+                    s.spawn(move || simd::matmul_rows(ablock, bdata, chunk, k, n));
+                }
+            });
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_t(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        assert_eq!(k, k2, "matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads;
+        if t <= 1 || n == 0 || k == 0 || m < t {
+            simd::matmul_t_rows(&a.data, &b.data, &mut out, k, n);
+        } else {
+            let rows_per = m.div_ceil(t);
+            let (adata, bdata) = (&a.data[..], &b.data[..]);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    let rows = chunk.len() / n;
+                    let ablock = &adata[i0 * k..(i0 + rows) * k];
+                    s.spawn(move || simd::matmul_t_rows(ablock, bdata, chunk, k, n));
+                }
+            });
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn qdq_matmul_t(&self, x: &Tensor, prep: &(dyn Fn(&mut [f32]) + Sync), w: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        let (n, k2) = w.dims2();
+        assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads;
+        if t <= 1 || n == 0 || k == 0 || m < t {
+            simd::qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
+        } else {
+            // Output rows are partitioned; each thread preps its own
+            // rows (every row exactly once, by exactly one worker) into
+            // its own k-panel, so the fused contract holds per element.
+            let rows_per = m.div_ceil(t);
+            let (xdata, wdata) = (&x.data[..], &w.data[..]);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    let rows = chunk.len() / n;
+                    let xblock = &xdata[i0 * k..(i0 + rows) * k];
+                    s.spawn(move || simd::qdq_matmul_t_rows(xblock, prep, wdata, chunk, k, n));
                 }
             });
         }
@@ -71,14 +124,14 @@ impl Backend for Threaded {
         let mut out = vec![0.0f32; k * k];
         let t = self.threads;
         if t <= 1 || m == 0 || k < t {
-            scalar::gram_rows(&x.data, m, k, 0, &mut out);
+            simd::gram_rows(&x.data, m, k, 0, &mut out);
         } else {
             let rows_per = k.div_ceil(t);
             let xdata = &x.data[..];
             std::thread::scope(|s| {
                 for (ci, chunk) in out.chunks_mut(rows_per * k).enumerate() {
                     let i0 = ci * rows_per;
-                    s.spawn(move || scalar::gram_rows(xdata, m, k, i0, chunk));
+                    s.spawn(move || simd::gram_rows(xdata, m, k, i0, chunk));
                 }
             });
         }
@@ -89,13 +142,13 @@ impl Backend for Threaded {
         assert_eq!(x.len(), y.len(), "axpy length mismatch");
         let t = self.threads;
         if t <= 1 || y.len() < PAR_MIN_LEN {
-            scalar::axpy_range(alpha, x, y);
+            simd::axpy_lanes(alpha, x, y);
             return;
         }
         let chunk = y.len().div_ceil(t);
         std::thread::scope(|s| {
             for (xc, yc) in x.chunks(chunk).zip(y.chunks_mut(chunk)) {
-                s.spawn(move || scalar::axpy_range(alpha, xc, yc));
+                s.spawn(move || simd::axpy_lanes(alpha, xc, yc));
             }
         });
     }
@@ -103,13 +156,13 @@ impl Backend for Threaded {
     fn sum_sq(&self, x: &[f32]) -> f64 {
         let t = self.threads;
         if t <= 1 || x.len() < PAR_MIN_LEN {
-            return scalar::sum_sq_range(x);
+            return simd::sum_sq_lanes(x);
         }
         let chunk = x.len().div_ceil(t);
         let mut partials = vec![0.0f64; x.len().div_ceil(chunk)];
         std::thread::scope(|s| {
             for (xc, p) in x.chunks(chunk).zip(partials.iter_mut()) {
-                s.spawn(move || *p = scalar::sum_sq_range(xc));
+                s.spawn(move || *p = simd::sum_sq_lanes(xc));
             }
         });
         partials.iter().sum()

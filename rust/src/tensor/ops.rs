@@ -16,6 +16,14 @@ impl Tensor {
         backend::active().matmul(self, b)
     }
 
+    /// C = A @ B^T for 2-D tensors (M,K) x (N,K), on the active backend.
+    /// Reads `b` row-major — bit-identical to
+    /// `self.matmul(&b.transpose())` without materializing the
+    /// transpose (the `Backend::matmul_t` contract).
+    pub fn matmul_t(&self, b: &Tensor) -> Tensor {
+        backend::active().matmul_t(self, b)
+    }
+
     /// A^T @ A, the Gram/Hessian accumulator used by GPTQ (K,K from M,K),
     /// on the active backend.
     pub fn gram(&self) -> Tensor {
@@ -281,6 +289,22 @@ mod tests {
             let want = a.transpose().matmul(&a);
             for (g, w) in got.data.iter().zip(want.data.iter()) {
                 prop_assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "gram mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_t_matches_transposed_matmul_bits() {
+        prop::check("matmul_t_vs_transpose", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(10), 1 + rng.below(10), 1 + rng.below(10));
+            let a = Tensor::new(vec![m, k], prop::heavy_vec(rng, m * k, 1.0));
+            let b = Tensor::new(vec![n, k], prop::heavy_vec(rng, n * k, 1.0));
+            let got = a.matmul_t(&b);
+            let want = a.matmul(&b.transpose());
+            prop_assert!(got.shape == want.shape, "shape");
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                prop_assert!(g.to_bits() == w.to_bits(), "matmul_t {} vs {}", g, w);
             }
             Ok(())
         });

@@ -13,6 +13,12 @@
 //!   *any* reordering of a reduction — the sharpest probe of the fixed
 //!   reduction-order contract).
 //!
+//! The same matrix holds the transpose-free `matmul_t` to the
+//! `matmul(a, b.transpose())` reference and the fused `qdq_matmul_t` to
+//! the unfused clone-prep-matmul reference (synthetic non-idempotent
+//! preps plus the real quantizer row kernels), and pins a native eval
+//! session's fused output to the unfused path end to end.
+//!
 //! A backend added later only needs a line in `all_names()`/`select()`
 //! to inherit the whole matrix. Ops with a documented tolerance
 //! (`sum_sq` above the parallel threshold) are checked at 1e-5 relative
@@ -181,6 +187,201 @@ fn matmul_bit_identical_across_backends_shapes_and_values() {
                 assert_eq!(got.shape, want.shape);
                 let ctx = format!("matmul {} {}x{}x{} {}", label, m, k, n, fill.name());
                 assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_t_bit_identical_to_transposed_reference() {
+    // Satellite (ISSUE 5): a @ b^T off row-major b must reproduce the
+    // unfused `matmul(a, b.transpose())` scalar reference bit for bit —
+    // every backend, every shape, every adversarial fill. Registered
+    // backends inherit this suite automatically.
+    let mut rng = Pcg64::new(0x3A71);
+    let under_test = backends_under_test();
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for &(m, k, n) in &SHAPES {
+            let a = Tensor::new(vec![m, k], fill.vec(&mut rng, m * k, 2));
+            let b = Tensor::new(vec![n, k], fill.vec(&mut rng, n * k, 8));
+            let want = Scalar.matmul(&a, &b.transpose());
+            for (label, be) in &under_test {
+                let got = be.matmul_t(&a, &b);
+                assert_eq!(got.shape, want.shape);
+                let ctx = format!("matmul_t {} {}x{}x{} {}", label, m, k, n, fill.name());
+                assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn qdq_matmul_t_bit_identical_to_unfused_reference() {
+    // The fused A-panel prep must equal "clone x; prep every row;
+    // matmul(xq, w^T)" exactly. The synthetic preps are deliberately
+    // non-idempotent (an affine map, not a fixed point), so a backend
+    // that applies prep to a row buffer twice fails loudly; the
+    // smoothing prep covers the per-column multiply the real sites use.
+    let mut rng = Pcg64::new(0x9D07);
+    let under_test = backends_under_test();
+    type Prep<'a> = Box<dyn Fn(&mut [f32]) + Sync + 'a>;
+    for fill in [Fill::Adversarial, Fill::Mixed, Fill::Cancellation] {
+        for &(m, k, n) in &SHAPES {
+            let x = Tensor::new(vec![m, k], fill.vec(&mut rng, m * k, 4));
+            let w = Tensor::new(vec![n, k], fill.vec(&mut rng, n * k, 7));
+            let smooth: Vec<f32> = (0..k).map(|j| 0.25 + (j % 5) as f32 * 0.5).collect();
+            let preps: Vec<(&str, Prep<'_>)> = vec![
+                ("identity", Box::new(|_row: &mut [f32]| {})),
+                (
+                    "affine",
+                    Box::new(|row: &mut [f32]| {
+                        for (j, v) in row.iter_mut().enumerate() {
+                            *v = *v * 0.5 + (j % 3) as f32;
+                        }
+                    }),
+                ),
+                (
+                    "smooth",
+                    Box::new(|row: &mut [f32]| {
+                        for (v, &s) in row.iter_mut().zip(smooth.iter()) {
+                            *v *= s;
+                        }
+                    }),
+                ),
+            ];
+            for (pname, prep) in &preps {
+                let mut xq = x.clone();
+                for r in 0..m {
+                    prep(xq.row_mut(r));
+                }
+                let want = Scalar.matmul(&xq, &w.transpose());
+                for (label, be) in &under_test {
+                    let got = be.qdq_matmul_t(&x, prep.as_ref(), &w);
+                    assert_eq!(got.shape, want.shape);
+                    let ctx = format!(
+                        "qdq_matmul_t {} {}x{}x{} {} prep={}",
+                        label,
+                        m,
+                        k,
+                        n,
+                        fill.name(),
+                        pname
+                    );
+                    assert_bits_f32(&got.data, &want.data, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qdq_matmul_t_with_real_quantizer_kernels_matches_bulk_path() {
+    // The exact prep the native executor fuses: smoothing multiply +
+    // RowQdq (ABFP int4/e4m3, two-level ABFP, static per-tensor and
+    // per-channel int) vs the unfused bulk QuantSpec::apply_with path.
+    use intfpqsim::formats::{Format, E4M3, INT4, INT8};
+    use intfpqsim::runtime::registry::{QuantKind, QuantSpec};
+    let mut rng = Pcg64::new(0xF0CA);
+    let under_test = backends_under_test();
+    let q = |kind: QuantKind, fmt: Format, n: usize| QuantSpec { kind, fmt: Some(fmt), n };
+    for (rows, k, dout) in [(33usize, 128usize, 29usize), (5, 64, 9)] {
+        let x = Tensor::new(vec![rows, k], prop::heavy_vec(&mut rng, rows * k, 2.0));
+        let w = Tensor::new(vec![dout, k], prop::heavy_vec(&mut rng, dout * k, 1.0));
+        let smooth: Vec<f32> = (0..k).map(|j| 0.5 + (j % 7) as f32 * 0.25).collect();
+        let alpha_pc: Vec<f32> = (0..k).map(|j| 0.25 + (j % 9) as f32 * 0.5).collect();
+        let cases: Vec<(&str, QuantSpec, Option<Vec<f32>>)> = vec![
+            ("abfp_int4", q(QuantKind::Abfp, Format::Int(INT4), 64), None),
+            ("abfp_e4m3", q(QuantKind::Abfp, Format::Fp(E4M3), 64), None),
+            ("abfp2_int4", q(QuantKind::Abfp2, Format::Int(INT4), 64), None),
+            ("static_int8", q(QuantKind::StaticInt, Format::Int(INT8), 64), Some(vec![2.5])),
+            (
+                "static_int4_pc",
+                q(QuantKind::StaticIntPc, Format::Int(INT4), 64),
+                Some(alpha_pc.clone()),
+            ),
+        ];
+        for (cname, spec, alpha) in &cases {
+            // unfused reference: full materialized copy through the bulk path
+            let mut xq = x.clone();
+            xq.scale_cols(&smooth);
+            spec.apply_with(&mut xq.data, k, alpha.as_deref(), &Scalar).unwrap();
+            let want = Scalar.matmul(&xq, &w.transpose());
+            // fused: the site prep closure qlinear builds
+            let kern = spec.row_kernel(k, alpha.as_deref()).unwrap();
+            let prep = |row: &mut [f32]| {
+                for (v, &s) in row.iter_mut().zip(smooth.iter()) {
+                    *v *= s;
+                }
+                kern.apply(row);
+            };
+            for (label, be) in &under_test {
+                let got = be.qdq_matmul_t(&x, &prep, &w);
+                let ctx = format!("fused {} {} {}x{}x{}", cname, label, rows, k, dout);
+                assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_eval_session_bit_identical_to_unfused_across_backends() {
+    // End-to-end tentpole check: a native eval session run with the
+    // fused qdq_matmul_t path must produce byte-identical outputs to
+    // the unfused reference path, for a quantized-with-smoothing LM
+    // wiring and a static-clip wiring, on every registered backend.
+    // (The toggle swaps equal-bit kernels, so concurrent tests sampling
+    // it mid-flip cannot observe different results.)
+    use intfpqsim::corpus::TextCorpus;
+    use intfpqsim::model;
+    use intfpqsim::model::net;
+    use intfpqsim::runtime::{Runtime, Val};
+
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            net::set_qdq_fusion(self.0);
+            let name =
+                std::env::var("INTFPQSIM_BACKEND").unwrap_or_else(|_| "auto".to_string());
+            let threads = backend::env_threads();
+            if backend::configure(&name, threads).is_err() {
+                backend::configure("auto", threads).unwrap();
+            }
+        }
+    }
+    let _restore = Restore(net::set_qdq_fusion(true));
+
+    let rt = Runtime::new("artifacts").unwrap();
+    let model_name = "sim-opt-125m";
+    let cfg = rt.manifest.model(model_name).unwrap().clone();
+    let params = model::init_params(&cfg, 23);
+    let tb = TextCorpus::new(intfpqsim::corpus::TEXT_SEED).eval_batch(5, cfg.batch, cfg.seq);
+    let tv = vec![Val::I32(tb.tokens, vec![cfg.batch, cfg.seq])];
+    for art in ["eval_abfp_w4a8_n64", "eval_mse_w4a8"] {
+        let mut sticky = model::param_vals(&cfg, &params).unwrap();
+        if art.contains("abfp") {
+            for s in &cfg.sites {
+                let sm: Vec<f32> = (0..s.dim).map(|j| 0.5 + 0.25 * (j % 3) as f32).collect();
+                sticky.insert(format!("smooth.{}", s.name), Val::F32(sm, vec![s.dim]));
+            }
+        } else {
+            for s in &cfg.sites {
+                sticky.insert(format!("alpha.{}", s.name), Val::F32(vec![1.75], vec![]));
+            }
+        }
+        let id = format!("{}/{}", model_name, art);
+        for &be_name in backend::all_names() {
+            backend::set_active(backend::select(be_name, 3).unwrap());
+            let sess = rt.session(&id, &sticky).unwrap();
+            net::set_qdq_fusion(true);
+            let fused = sess.run(&tv.iter().collect::<Vec<_>>()).unwrap();
+            net::set_qdq_fusion(false);
+            let unfused = sess.run(&tv.iter().collect::<Vec<_>>()).unwrap();
+            net::set_qdq_fusion(true);
+            assert_eq!(fused.len(), unfused.len(), "{} @ {}", id, be_name);
+            for (o, (f, u)) in fused.iter().zip(unfused.iter()).enumerate() {
+                assert_eq!(f.shape, u.shape, "{} @ {} out {}", id, be_name, o);
+                let ctx = format!("fused session {} @ {} out {}", id, be_name, o);
+                assert_bits_f32(&f.data, &u.data, &ctx);
             }
         }
     }

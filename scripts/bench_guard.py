@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Bench regression guard: diff two BENCH_runtime.json files.
+
+Compares `toks_per_s` per (model, quant, backend) cell between a
+previous CI artifact and the fresh one, and emits non-blocking GitHub
+`::warning::` annotations for cells that regressed by more than the
+threshold (default 10%). Always exits 0 — the guard annotates, it does
+not gate (CI runners are shared and noisy; a red X on noise would train
+people to ignore it).
+
+Usage: bench_guard.py PREV.json CURRENT.json [--threshold 0.10]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_cells(path):
+    with open(path) as f:
+        doc = json.load(f)
+    cells = {}
+    for row in doc.get("eval_throughput", []):
+        key = (row.get("model"), row.get("quant"), row.get("backend"))
+        tps = row.get("toks_per_s")
+        if all(key) and isinstance(tps, (int, float)) and tps > 0:
+            cells[key] = tps
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args()
+
+    try:
+        prev = load_cells(args.previous)
+        cur = load_cells(args.current)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::notice::bench guard: could not parse inputs ({e}); skipping")
+        return 0
+
+    if not prev or not cur:
+        print("::notice::bench guard: no comparable eval_throughput cells; skipping")
+        return 0
+
+    regressions = []
+    improvements = 0
+    for key, old_tps in sorted(prev.items()):
+        new_tps = cur.get(key)
+        if new_tps is None:
+            continue
+        ratio = new_tps / old_tps
+        model, quant, backend = key
+        if ratio < 1.0 - args.threshold:
+            regressions.append((model, quant, backend, old_tps, new_tps, ratio))
+        elif ratio > 1.0 + args.threshold:
+            improvements += 1
+
+    for model, quant, backend, old_tps, new_tps, ratio in regressions:
+        print(
+            f"::warning title=bench regression::{model}/{quant} @ {backend}: "
+            f"{old_tps:.0f} -> {new_tps:.0f} tok/s ({(1 - ratio) * 100:.1f}% slower "
+            f"than the previous BENCH_runtime artifact)"
+        )
+
+    common = len(set(prev) & set(cur))
+    print(
+        f"bench guard: {common} comparable cells, "
+        f"{len(regressions)} regressed > {args.threshold:.0%}, "
+        f"{improvements} improved > {args.threshold:.0%}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
