@@ -1,19 +1,25 @@
 //! Serving benchmarks: sustained tokens/sec, batch occupancy and
 //! p50/p95/p99 latency of the micro-batching server, per tensor backend
-//! × quant config (plus one mixed-config cell per backend).
+//! × quant config (plus one mixed-config cell per backend), a
+//! shard-scaling sweep over worker counts, and a real-socket TCP cell.
 //!
-//! Each cell drives the in-process server with the closed-loop loadgen
-//! (4 clients, prewarmed sessions, 2 ms batching window), so the numbers
-//! measure steady-state serving — the trajectory future perf PRs
-//! optimize against. CI runs `-- --fast` and uploads `BENCH_serve.json`
-//! next to `BENCH_tensor.json`/`BENCH_runtime.json`.
+//! Each cell drives the server with the closed-loop loadgen (prewarmed
+//! sessions, 2 ms batching window), so the numbers measure steady-state
+//! serving — the trajectory future perf PRs optimize against. CI runs
+//! `-- --fast` and uploads `BENCH_serve.json` next to
+//! `BENCH_tensor.json`/`BENCH_runtime.json`; see the README field guide
+//! for the `shard_scaling`/`tcp` fields.
 //!
 //!   cargo bench --bench bench_serve [-- --fast]
 
 use std::time::Duration;
 
 use intfpqsim::quantsim::Simulator;
-use intfpqsim::serve::loadgen::{run_loadgen, LoadgenCfg, LoadgenReport};
+use intfpqsim::serve::loadgen::{
+    run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg, LoadgenReport,
+};
+use intfpqsim::serve::shard::{ShardCfg, SimSpec};
+use intfpqsim::serve::transport::TcpServer;
 use intfpqsim::serve::ServeCfg;
 use intfpqsim::tensor::backend;
 use intfpqsim::train::TrainOpts;
@@ -21,9 +27,16 @@ use intfpqsim::util::json::Json;
 
 const MODEL: &str = "sim-opt-125m";
 
-fn cell(sim: &Simulator, mix: Vec<(String, String)>, requests: usize) -> LoadgenReport {
-    let cfg = LoadgenCfg {
-        clients: 4,
+fn mixed_mix() -> Vec<(String, String)> {
+    vec![
+        (MODEL.to_string(), "fp32".to_string()),
+        (MODEL.to_string(), "abfp_w4a4_n64".to_string()),
+    ]
+}
+
+fn base_cfg(mix: Vec<(String, String)>, clients: usize, requests: usize) -> LoadgenCfg {
+    LoadgenCfg {
+        clients,
         requests_per_client: requests,
         mix,
         deadline_ms: None,
@@ -34,16 +47,34 @@ fn cell(sim: &Simulator, mix: Vec<(String, String)>, requests: usize) -> Loadgen
             batch_window: Duration::from_millis(2),
             max_batch: 8,
         },
-    };
-    run_loadgen(sim, &cfg).expect("loadgen cell")
+        ..Default::default()
+    }
+}
+
+fn cell(sim: &Simulator, mix: Vec<(String, String)>, requests: usize) -> LoadgenReport {
+    run_loadgen(sim, &base_cfg(mix, 4, requests)).expect("loadgen cell")
+}
+
+fn percentile_fields(rep: &LoadgenReport) -> Vec<(&'static str, Json)> {
+    vec![
+        ("ok", Json::Num(rep.ok as f64)),
+        ("errors", Json::Num(rep.errors as f64)),
+        ("toks_per_s", Json::Num(rep.toks_per_s)),
+        ("mean_occupancy", Json::Num(rep.mean_occupancy)),
+        ("max_occupancy", Json::Num(rep.max_occupancy as f64)),
+        ("p50_ms", Json::Num(rep.p50_ms)),
+        ("p95_ms", Json::Num(rep.p95_ms)),
+        ("p99_ms", Json::Num(rep.p99_ms)),
+    ]
 }
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
     let threads = backend::env_threads();
+    let pretrain = TrainOpts { steps: if fast { 40 } else { 120 }, ..Default::default() };
     let mut sim = Simulator::new("artifacts", "checkpoints").unwrap();
     // brief pretrain: the bench measures serving, not training fidelity
-    sim.opts.pretrain_opts = TrainOpts { steps: if fast { 40 } else { 120 }, ..Default::default() };
+    sim.opts.pretrain_opts = pretrain.clone();
     let requests = if fast { 6 } else { 24 };
     let quants: &[&str] = if fast {
         &["fp32", "abfp_w4a4_n64"]
@@ -68,17 +99,52 @@ fn main() {
         // mixed-config traffic: two quant keys interleaved, exercising
         // per-key coalescing + session-cache sharing under contention
         let mixed_label = "mixed(fp32+abfp_w4a4_n64)";
-        let rep = cell(
-            &sim,
-            vec![
-                (MODEL.to_string(), "fp32".to_string()),
-                (MODEL.to_string(), "abfp_w4a4_n64".to_string()),
-            ],
-            requests,
-        );
+        let rep = cell(&sim, mixed_mix(), requests);
         println!("{:<28} {}", mixed_label, rep.render());
         rows.push((mixed_label.to_string(), be_desc.clone(), rep));
     }
+
+    // Shard-scaling sweep: the same mixed traffic against the worker
+    // pool at 1/2/4 workers (one backend — the interesting axis here is
+    // worker count). Aggregate tokens/sec at N workers over the
+    // 1-worker cell is the scaling headline; bit-exactness across the
+    // sweep is asserted by the serve_shard tests, not re-checked here.
+    backend::configure("simd", threads).unwrap();
+    let shard_backend = backend::active().describe();
+    println!("\n== shard scaling ({}) ==", shard_backend);
+    let mut spec = SimSpec::new("artifacts", "checkpoints");
+    spec.opts.pretrain_opts = pretrain;
+    let shard_clients = if fast { 8 } else { 16 };
+    let mut scaling: Vec<(usize, LoadgenReport)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut cfg = base_cfg(mixed_mix(), shard_clients, requests);
+        cfg.shard = ShardCfg { workers, replicate_hot: true, hot_min: 4 };
+        let rep = run_loadgen_sharded(&spec, &cfg).expect("shard scaling cell");
+        println!("workers={:<21} {}", workers, rep.render());
+        scaling.push((workers, rep));
+    }
+    let base_tps = scaling[0].1.toks_per_s.max(1e-9);
+
+    // TCP cell: the same traffic over real sockets (2 workers), so the
+    // transport overhead is on the record next to the in-process cells.
+    println!("\n== tcp transport ({}) ==", shard_backend);
+    let srv = TcpServer::start(
+        spec.clone(),
+        "127.0.0.1:0",
+        base_cfg(mixed_mix(), shard_clients, requests).serve,
+        ShardCfg { workers: 2, replicate_hot: true, hot_min: 4 },
+        mixed_mix(),
+    )
+    .expect("tcp server");
+    let addr = srv.local_addr().to_string();
+    let tcp_rep = run_loadgen_tcp(
+        &sim,
+        &addr,
+        &base_cfg(mixed_mix(), shard_clients, requests),
+    )
+    .expect("tcp cell");
+    println!("{:<28} {}", "tcp(workers=2)", tcp_rep.render());
+    srv.shutdown().expect("tcp shutdown");
     backend::configure("auto", threads).unwrap();
 
     let json = Json::obj(vec![
@@ -92,22 +158,52 @@ fn main() {
             Json::Arr(
                 rows.iter()
                     .map(|(quant, be, rep)| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("model", Json::Str(MODEL.into())),
                             ("quant", Json::Str(quant.clone())),
                             ("backend", Json::Str(be.clone())),
-                            ("ok", Json::Num(rep.ok as f64)),
-                            ("errors", Json::Num(rep.errors as f64)),
-                            ("toks_per_s", Json::Num(rep.toks_per_s)),
-                            ("mean_occupancy", Json::Num(rep.mean_occupancy)),
-                            ("max_occupancy", Json::Num(rep.max_occupancy as f64)),
-                            ("p50_ms", Json::Num(rep.p50_ms)),
-                            ("p95_ms", Json::Num(rep.p95_ms)),
-                            ("p99_ms", Json::Num(rep.p99_ms)),
-                        ])
+                        ];
+                        fields.extend(percentile_fields(rep));
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
+        ),
+        (
+            "shard_scaling",
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|(workers, rep)| {
+                        let mut fields = vec![
+                            ("backend", Json::Str(shard_backend.clone())),
+                            ("workers", Json::Num(*workers as f64)),
+                            ("clients", Json::Num(shard_clients as f64)),
+                            ("replicate_hot", Json::Bool(true)),
+                            ("speedup_vs_1", Json::Num(rep.toks_per_s / base_tps)),
+                            ("stolen_batches", Json::Num(rep.stolen_batches() as f64)),
+                            ("hot_batches", Json::Num(rep.hot_batches() as f64)),
+                        ];
+                        fields.extend(percentile_fields(rep));
+                        // per-worker occupancy/attribution rides along
+                        // inside the full report payload
+                        fields.push(("report", rep.to_json()));
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tcp",
+            Json::obj({
+                let mut fields = vec![
+                    ("backend", Json::Str(shard_backend.clone())),
+                    ("workers", Json::Num(2.0)),
+                    ("clients", Json::Num(shard_clients as f64)),
+                ];
+                fields.extend(percentile_fields(&tcp_rep));
+                fields
+            }),
         ),
     ]);
     match std::fs::write("BENCH_serve.json", json.pretty()) {

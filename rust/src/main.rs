@@ -8,8 +8,8 @@
 //!   repro calibrate --model <m>       capture + print calibration summary
 //!   repro experiment --id <tableN|figN> | --all [--fast]
 //!   repro report                      concatenate saved reports
-//!   repro serve                       micro-batching server on stdin/stdout
-//!   repro loadgen                     closed-loop load generator (in-process)
+//!   repro serve                       micro-batching server (stdio or TCP)
+//!   repro loadgen                     closed-loop load generator
 //!
 //! Global options: --artifacts DIR (default artifacts), --checkpoints DIR
 //! (default checkpoints), --eval-batches N, --qat-steps N, -v/--verbose,
@@ -19,10 +19,14 @@
 //! artifacts required).
 //!
 //! Serving options (serve + loadgen): --batch-window MS (default 5),
-//! --max-batch N (default 8), --queue-cap N (default 64); loadgen adds
-//! --clients N, --requests N (per client), --mix model:quant[,...],
-//! --deadline-ms D. All must be positive integers — 0 or junk is a
-//! hard error, never a silent default.
+//! --max-batch N (default 8), --queue-cap N (default 64), --workers N
+//! (default 1; >1 = sharded pool), --replicate-hot, --hot-min N; serve
+//! adds --listen ADDR (TCP instead of stdio); loadgen adds --clients N,
+//! --requests N (per client), --mix model:quant[,...], --deadline-ms D,
+//! --connect ADDR (drive a --listen server over TCP; --listen is
+//! accepted as an alias). All counts must be positive integers — 0 or
+//! junk is a hard error, never a silent default. `docs/serving.md` is
+//! the full operator guide.
 
 use std::time::Duration;
 
@@ -30,7 +34,8 @@ use anyhow::{bail, Context, Result};
 
 use intfpqsim::coordinator::{self, registry};
 use intfpqsim::info;
-use intfpqsim::quantsim::{Method, QuantConfig, Simulator};
+use intfpqsim::quantsim::{EvalOpts, Method, QuantConfig, Simulator};
+use intfpqsim::serve::shard::{ShardCfg, SimSpec};
 use intfpqsim::serve::{self, loadgen::LoadgenCfg, ServeCfg};
 use intfpqsim::train::{self, TrainOpts};
 use intfpqsim::util::cli::Args;
@@ -45,10 +50,12 @@ const USAGE: &str =
   repro calibrate --model sim-opt-125m
   repro experiment --id table1 | --all  [--fast] [--force]
   repro report
-  repro serve [--batch-window MS] [--max-batch N] [--queue-cap N] [--fast]
-  repro loadgen [--clients N] [--requests N] [--mix model:quant,...]
-                [--deadline-ms D] [--batch-window MS] [--max-batch N]
-                [--queue-cap N] [--fast]
+  repro serve [--listen ADDR] [--workers N] [--replicate-hot] [--hot-min N]
+              [--batch-window MS] [--max-batch N] [--queue-cap N] [--fast]
+  repro loadgen [--connect ADDR] [--clients N] [--requests N]
+                [--mix model:quant,...] [--deadline-ms D] [--workers N]
+                [--replicate-hot] [--hot-min N] [--batch-window MS]
+                [--max-batch N] [--queue-cap N] [--fast]
 global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]
         [--executor native|pjrt|auto]";
 
@@ -64,21 +71,38 @@ fn main() {
     }
 }
 
+/// Apply the shared `--eval-batches`/`--qat-steps`/`--fast` knobs —
+/// used by both [`make_sim`] and [`make_spec`] so an in-process
+/// simulator and a shard-worker recipe can never disagree.
+fn apply_eval_opts(a: &Args, opts: &mut EvalOpts) {
+    opts.eval_batches = a.get_u64("eval-batches", opts.eval_batches);
+    opts.qat_opts.steps = a.get_usize("qat-steps", opts.qat_opts.steps);
+    if a.flag("fast") {
+        // reduced-fidelity mode for smoke runs and benches
+        opts.eval_batches = 4;
+        opts.pass1_programs = 16;
+        opts.qat_opts.steps = 8;
+        opts.pretrain_opts.steps = 60;
+    }
+}
+
 fn make_sim(a: &Args) -> Result<Simulator> {
     let mut sim = Simulator::new(
         a.get("artifacts", "artifacts"),
         a.get("checkpoints", "checkpoints"),
     )?;
-    sim.opts.eval_batches = a.get_u64("eval-batches", sim.opts.eval_batches);
-    sim.opts.qat_opts.steps = a.get_usize("qat-steps", sim.opts.qat_opts.steps);
-    if a.flag("fast") {
-        // reduced-fidelity mode for smoke runs and benches
-        sim.opts.eval_batches = 4;
-        sim.opts.pass1_programs = 16;
-        sim.opts.qat_opts.steps = 8;
-        sim.opts.pretrain_opts.steps = 60;
-    }
+    apply_eval_opts(a, &mut sim.opts);
     Ok(sim)
+}
+
+/// The cloneable recipe shard workers rebuild their simulators from.
+fn make_spec(a: &Args) -> Result<SimSpec> {
+    let mut spec = SimSpec::new(
+        a.get("artifacts", "artifacts"),
+        a.get("checkpoints", "checkpoints"),
+    );
+    apply_eval_opts(a, &mut spec.opts);
+    Ok(spec)
 }
 
 fn parse_method(s: &str) -> Result<Method> {
@@ -93,7 +117,7 @@ fn parse_method(s: &str) -> Result<Method> {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &["models", "all", "force", "fast", "verbose"])
+    let a = Args::parse(argv, &["models", "all", "force", "fast", "verbose", "replicate-hot"])
         .map_err(|e| anyhow::anyhow!(e))?;
     if a.flag("verbose") {
         logging::set_level(2);
@@ -233,13 +257,22 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            let sim = make_sim(&a)?;
             let cfg = serve_cfg_from(&a)?;
-            serve::run_stdio(&sim, &cfg)
+            let shard = shard_cfg_from(&a)?;
+            if let Some(addr) = a.options.get("listen") {
+                serve::transport::run_tcp(make_spec(&a)?, addr, &cfg, &shard)
+            } else if shard.workers > 1 {
+                serve::run_stdio_sharded(&make_spec(&a)?, &cfg, &shard)
+            } else {
+                serve::run_stdio(&make_sim(&a)?, &cfg)
+            }
         }
         "loadgen" => {
-            let sim = make_sim(&a)?;
-            let mut lcfg = LoadgenCfg { serve: serve_cfg_from(&a)?, ..Default::default() };
+            let mut lcfg = LoadgenCfg {
+                serve: serve_cfg_from(&a)?,
+                shard: shard_cfg_from(&a)?,
+                ..Default::default()
+            };
             let fast = a.flag("fast");
             lcfg.clients = a
                 .get_usize_min("clients", lcfg.clients, 1)
@@ -254,7 +287,16 @@ fn run(argv: &[String]) -> Result<()> {
             if let Some(mix) = a.options.get("mix") {
                 lcfg.mix = parse_mix(mix)?;
             }
-            let report = serve::loadgen::run_loadgen(&sim, &lcfg)?;
+            // `--connect ADDR` drives a remote `serve --listen` server;
+            // `--listen` is accepted as an alias for symmetry.
+            let remote = a.options.get("connect").or_else(|| a.options.get("listen"));
+            let report = if let Some(addr) = remote {
+                serve::loadgen::run_loadgen_tcp(&make_sim(&a)?, addr, &lcfg)?
+            } else if lcfg.shard.workers > 1 {
+                serve::loadgen::run_loadgen_sharded(&make_spec(&a)?, &lcfg)?
+            } else {
+                serve::loadgen::run_loadgen(&make_sim(&a)?, &lcfg)?
+            };
             println!("{}", report.render());
             Ok(())
         }
@@ -276,6 +318,20 @@ fn serve_cfg_from(a: &Args) -> Result<ServeCfg> {
         batch_window: Duration::from_millis(window_ms),
         max_batch: a
             .get_usize_min("max-batch", defaults.max_batch, 1)
+            .map_err(anyhow::Error::msg)?,
+    })
+}
+
+/// The shard-pool knobs `serve` and `loadgen` share.
+fn shard_cfg_from(a: &Args) -> Result<ShardCfg> {
+    let defaults = ShardCfg::default();
+    Ok(ShardCfg {
+        workers: a
+            .get_usize_min("workers", defaults.workers, 1)
+            .map_err(anyhow::Error::msg)?,
+        replicate_hot: a.flag("replicate-hot"),
+        hot_min: a
+            .get_usize_min("hot-min", defaults.hot_min, 1)
             .map_err(anyhow::Error::msg)?,
     })
 }

@@ -116,6 +116,7 @@ pub fn relative_to_fp32(q: Metric, fp32: Metric) -> f64 {
     }
 }
 
+#[derive(Debug, Clone)]
 pub struct EvalOpts {
     pub eval_batches: u64,
     pub pass1_programs: usize,

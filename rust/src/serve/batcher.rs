@@ -1,29 +1,64 @@
 //! Dynamic micro-batcher: coalesce compatible queued requests into one
 //! batched forward.
 //!
-//! Policy: pop the oldest job (its key anchors the batch), then keep
+//! Policy: pop the EDF-first job (its key anchors the batch), then keep
 //! draining same-key jobs for up to `window` — sleeping between
 //! arrivals, not polling — until `max_batch` is reached or the window
-//! closes. Incompatible jobs stay queued in FIFO order for the next
-//! round, so a minority key is delayed by at most the batches ahead of
-//! it, never starved.
+//! closes. Incompatible jobs stay queued for the next round, so a
+//! minority key is delayed by at most the batches ahead of it, never
+//! starved.
+//!
+//! Two anchor paths share the window-fill loop: [`Batcher::next_batch`]
+//! (the single-worker server) pops globally; [`Batcher::next_shard_batch`]
+//! asks the queue for an anchor this shard may serve (home keys first,
+//! stealing when idle, hot-key replication when enabled) and carries the
+//! key hold through dispatch.
 //!
 //! Deadlines are enforced here on the way out: a job that expired while
-//! queued is answered with an error and never dispatched.
+//! queued is answered with an error (`deadline_expired_in_queue`) and
+//! never dispatched.
 
 use std::cell::Cell;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::protocol::Response;
-use super::queue::{AdmissionQueue, BatchKey, Job};
+use super::protocol::{codes, Response};
+use super::queue::{AdmissionQueue, AnchorKind, BatchKey, Job, KeyHold};
 
 /// A dispatch-ready set of compatible jobs (same model × quant config).
 pub struct MicroBatch {
+    /// The shared (model × quant) key of every job in the batch.
     pub key: BatchKey,
+    /// The jobs, in EDF order at formation time.
     pub jobs: Vec<Job>,
 }
 
+/// A micro-batch granted to one shard worker, with the key hold that
+/// keeps other workers off the key until dispatch finishes.
+pub struct ShardBatch {
+    /// The dispatch-ready batch.
+    pub mb: MicroBatch,
+    /// How this worker came to serve the key.
+    pub kind: AnchorKind,
+    /// Held through dispatch; dropping it releases the key.
+    pub hold: KeyHold,
+}
+
+/// Which shard a [`Batcher::next_shard_batch`] call is forming for, and
+/// under which replication policy.
+#[derive(Debug, Clone)]
+pub struct ShardSel {
+    /// This worker's shard index in `0..nshards`.
+    pub shard: usize,
+    /// Total worker count.
+    pub nshards: usize,
+    /// Allow several shards to serve one key when its backlog is long.
+    pub replicate_hot: bool,
+    /// Minimum queued jobs for a key to count as hot.
+    pub hot_min: usize,
+}
+
+/// Forms micro-batches from an [`AdmissionQueue`] (see module docs).
 pub struct Batcher {
     queue: Arc<AdmissionQueue>,
     window: Duration,
@@ -35,6 +70,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A batcher over `queue` with the given window and occupancy cap.
     pub fn new(queue: Arc<AdmissionQueue>, window: Duration, max_batch: usize) -> Batcher {
         Batcher {
             queue,
@@ -55,6 +91,7 @@ impl Batcher {
         if job.expired(Instant::now()) {
             job.reply(Response::err(
                 job.req.id,
+                codes::DEADLINE_QUEUE,
                 "deadline expired before dispatch",
             ));
             self.expired.set(self.expired.get() + 1);
@@ -63,8 +100,38 @@ impl Batcher {
         false
     }
 
+    /// The shared window-fill loop: drain same-key jobs (shedding
+    /// expired ones) until `max_batch` or the window closes.
+    fn fill(&self, key: &BatchKey, jobs: &mut Vec<Job>) {
+        let start = Instant::now();
+        let mut seen = self.queue.arrivals();
+        while jobs.len() < self.max_batch {
+            for job in self
+                .queue
+                .drain_matching(key, self.max_batch - jobs.len())
+            {
+                if !self.expire_if_due(&job) {
+                    jobs.push(job);
+                }
+            }
+            if jobs.len() >= self.max_batch {
+                break;
+            }
+            // A closed queue admits nothing new: waiting out the
+            // window would only spin, so dispatch what we have.
+            if self.queue.is_closed() {
+                break;
+            }
+            let left = self.window.saturating_sub(start.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            seen = self.queue.wait_new_arrival(seen, left);
+        }
+    }
+
     /// Block until a micro-batch is ready; `None` once the queue is
-    /// closed and drained.
+    /// closed and drained. The single-worker path.
     pub fn next_batch(&self) -> Option<MicroBatch> {
         loop {
             let first = self.queue.pop_front_blocking()?;
@@ -73,32 +140,30 @@ impl Batcher {
             }
             let key = first.key();
             let mut jobs = vec![first];
-            let start = Instant::now();
-            let mut seen = self.queue.arrivals();
-            while jobs.len() < self.max_batch {
-                for job in self
-                    .queue
-                    .drain_matching(&key, self.max_batch - jobs.len())
-                {
-                    if !self.expire_if_due(&job) {
-                        jobs.push(job);
-                    }
-                }
-                if jobs.len() >= self.max_batch {
-                    break;
-                }
-                // A closed queue admits nothing new: waiting out the
-                // window would only spin, so dispatch what we have.
-                if self.queue.is_closed() {
-                    break;
-                }
-                let left = self.window.saturating_sub(start.elapsed());
-                if left.is_zero() {
-                    break;
-                }
-                seen = self.queue.wait_new_arrival(seen, left);
-            }
+            self.fill(&key, &mut jobs);
             return Some(MicroBatch { key, jobs });
+        }
+    }
+
+    /// Block until a micro-batch this shard may serve is ready; `None`
+    /// once the queue is closed and drained. The returned [`ShardBatch`]
+    /// carries the key hold — keep it alive through dispatch.
+    pub fn next_shard_batch(&self, sel: &ShardSel) -> Option<ShardBatch> {
+        loop {
+            let (first, kind, hold) = self.queue.take_anchor(
+                sel.shard,
+                sel.nshards,
+                sel.replicate_hot,
+                sel.hot_min,
+            )?;
+            if self.expire_if_due(&first) {
+                drop(hold);
+                continue;
+            }
+            let key = first.key();
+            let mut jobs = vec![first];
+            self.fill(&key, &mut jobs);
+            return Some(ShardBatch { mb: MicroBatch { key, jobs }, kind, hold });
         }
     }
 }
@@ -163,6 +228,24 @@ mod tests {
         let resp = rx.try_recv().unwrap();
         assert!(!resp.ok);
         assert!(resp.error.unwrap().contains("deadline"), "id 9 expired in queue");
+        assert_eq!(resp.code.as_deref(), Some(codes::DEADLINE_QUEUE));
         assert_eq!(b.expired_count(), 1);
+    }
+
+    #[test]
+    fn shard_batches_hold_the_key_and_fill_like_the_single_path() {
+        let q = AdmissionQueue::new(16);
+        let _rxs: Vec<_> = vec![push(&q, 1, "a"), push(&q, 2, "a"), push(&q, 3, "b")];
+        q.close();
+        let b = Batcher::new(Arc::clone(&q), Duration::from_millis(1), 8);
+        let sel = ShardSel { shard: 0, nshards: 1, replicate_hot: false, hot_min: 16 };
+        let sb = b.next_shard_batch(&sel).unwrap();
+        let ids: Vec<u64> = sb.mb.jobs.iter().map(|j| j.req.id).collect();
+        assert!(ids == vec![1, 2] || ids == vec![3], "one key per batch: {:?}", ids);
+        drop(sb);
+        let sb2 = b.next_shard_batch(&sel).unwrap();
+        assert_ne!(sb2.mb.key.quant, if ids == vec![3] { "b" } else { "a" });
+        drop(sb2);
+        assert!(b.next_shard_batch(&sel).is_none(), "closed + drained");
     }
 }

@@ -1,20 +1,31 @@
 //! Closed-loop multi-client load generator (`repro loadgen`).
 //!
-//! N client threads each submit `requests_per_client` requests against
-//! an in-process server, one at a time (closed loop: the next request
-//! goes out only after the previous response lands — so a full queue is
-//! real backpressure, not an unbounded backlog). The traffic mix cycles
+//! N client threads each submit `requests_per_client` requests against a
+//! server, one at a time (closed loop: the next request goes out only
+//! after the previous response lands — so a full queue is real
+//! backpressure, not an unbounded backlog). The traffic mix cycles
 //! deterministically over (model × quant config) pairs and the request
 //! stream indices derive from a fixed seed, so two runs with the same
 //! `LoadgenCfg` traffic issue byte-identical requests regardless of
-//! batching configuration or thread interleaving — the serving
-//! determinism tests compare exactly that.
+//! batching configuration, worker count or thread interleaving — the
+//! serving determinism tests compare exactly that.
+//!
+//! Three transports share the same clients and accounting:
+//!
+//! * [`run_loadgen`] — in-process, single worker (the calling thread
+//!   serves);
+//! * [`run_loadgen_sharded`] — in-process against an N-worker shard
+//!   pool (`--workers`);
+//! * [`run_loadgen_tcp`] — real sockets against a `--listen` server
+//!   (`--connect ADDR`), one TCP connection per client.
 //!
 //! The report records sustained tokens/sec, batch occupancy and
 //! p50/p95/p99 client-observed latency; `bench_serve` snapshots it into
-//! `BENCH_serve.json` per backend × quant config.
+//! `BENCH_serve.json` per backend × quant config × worker count.
 
 use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write as IoWrite};
+use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,13 +36,17 @@ use crate::quantsim::{QuantConfig, Simulator};
 use crate::util::json::Json;
 
 use super::cache::SessionCache;
-use super::protocol::{Request, Response};
+use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
+use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
 use super::{serve_loop, ServeCfg, ServeStats};
 
+/// Load-generator knobs (`repro loadgen --clients N ...`).
 #[derive(Debug, Clone)]
 pub struct LoadgenCfg {
+    /// Concurrent closed-loop client threads.
     pub clients: usize,
+    /// Requests each client submits before exiting.
     pub requests_per_client: usize,
     /// The (model, quant config) pairs the clients cycle over.
     pub mix: Vec<(String, String)>,
@@ -42,7 +57,10 @@ pub struct LoadgenCfg {
     /// Open every mix session (pretraining weights as needed) before
     /// the clock starts, so the report measures steady-state serving.
     pub prewarm: bool,
+    /// The server's tuning knobs (in-process transports only).
     pub serve: ServeCfg,
+    /// The shard pool shape ([`run_loadgen_sharded`] only).
+    pub shard: ShardCfg,
 }
 
 impl Default for LoadgenCfg {
@@ -58,6 +76,7 @@ impl Default for LoadgenCfg {
             seed: 1,
             prewarm: true,
             serve: ServeCfg::default(),
+            shard: ShardCfg::default(),
         }
     }
 }
@@ -75,25 +94,68 @@ fn request_id(c: usize, i: usize) -> u64 {
     (c as u64) * 1_000_000 + i as u64
 }
 
+/// The request client `c` sends at step `i` — shared by the in-process
+/// and TCP submit paths so the wire traffic is identical across
+/// transports.
+fn request_for(cfg: &LoadgenCfg, c: usize, i: usize) -> Request {
+    let (model, quant) = &cfg.mix[mix_slot(cfg.mix.len(), c, i)];
+    let mut req = Request::new(
+        request_id(c, i),
+        model,
+        quant,
+        cfg.seed.wrapping_add((c * 131 + i * 17) as u64) % 64,
+    );
+    req.deadline_ms = cfg.deadline_ms;
+    req
+}
+
+/// What one load-generator run observed, aggregated over all clients.
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
     /// Every response, sorted by request id.
     pub responses: Vec<Response>,
+    /// Successful responses.
     pub ok: usize,
+    /// Error responses (any code).
     pub errors: usize,
+    /// Wall-clock seconds from first submit to last response.
     pub wall_s: f64,
+    /// Sustained tokens/sec over the whole run (ok responses only).
     pub toks_per_s: f64,
+    /// Mean micro-batch occupancy over ok responses.
     pub mean_occupancy: f64,
+    /// Largest micro-batch any response reported.
     pub max_occupancy: usize,
+    /// Median client-observed latency (ms, includes queueing).
     pub p50_ms: f64,
+    /// 95th-percentile client-observed latency (ms).
     pub p95_ms: f64,
+    /// 99th-percentile client-observed latency (ms).
     pub p99_ms: f64,
+    /// Server-side counters (zeroed for the TCP transport — the server
+    /// is another process).
     pub stats: ServeStats,
+    /// Worker count the server ran with (1 = classic single worker,
+    /// 0 = remote server over TCP, shape unknown to the client).
+    pub workers: usize,
+    /// Per-worker counters (sharded in-process transport only).
+    pub per_worker: Vec<ShardStats>,
 }
 
 impl LoadgenReport {
+    /// Batches this run anchored on stolen keys, summed over workers.
+    pub fn stolen_batches(&self) -> usize {
+        self.per_worker.iter().map(|w| w.stolen_batches).sum()
+    }
+
+    /// Batches this run anchored on hot-replicated keys.
+    pub fn hot_batches(&self) -> usize {
+        self.per_worker.iter().map(|w| w.hot_batches).sum()
+    }
+
+    /// One-line human summary.
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "loadgen: {} ok / {} errors in {:.2}s  {:.1} tok/s  \
              occupancy mean {:.2} max {}  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
             self.ok,
@@ -105,11 +167,21 @@ impl LoadgenReport {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms
-        )
+        );
+        if !self.per_worker.is_empty() {
+            s.push_str(&format!(
+                "  workers {} (stolen {}, hot {})",
+                self.workers,
+                self.stolen_batches(),
+                self.hot_batches()
+            ));
+        }
+        s
     }
 
+    /// The report as JSON (the `BENCH_serve.json` cell payload).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("wall_s", Json::Num(self.wall_s)),
@@ -119,19 +191,42 @@ impl LoadgenReport {
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p95_ms", Json::Num(self.p95_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
-        ])
+            ("workers", Json::Num(self.workers as f64)),
+        ];
+        if !self.per_worker.is_empty() {
+            fields.push(("stolen_batches", Json::Num(self.stolen_batches() as f64)));
+            fields.push(("hot_batches", Json::Num(self.hot_batches() as f64)));
+            let per = self
+                .per_worker
+                .iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(w.shard as f64)),
+                        ("requests", Json::Num(w.serve.requests as f64)),
+                        ("batches", Json::Num(w.serve.batches as f64)),
+                        ("ok", Json::Num(w.serve.ok as f64)),
+                        ("errors", Json::Num(w.serve.errors as f64)),
+                        ("expired", Json::Num(w.serve.expired as f64)),
+                        ("max_occupancy", Json::Num(w.serve.max_occupancy as f64)),
+                        ("stolen_batches", Json::Num(w.stolen_batches as f64)),
+                        ("hot_batches", Json::Num(w.hot_batches as f64)),
+                        ("cache_hits", Json::Num(w.cache_hits as f64)),
+                        ("cache_misses", Json::Num(w.cache_misses as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("per_worker", Json::Arr(per)));
+        }
+        Json::obj(fields)
     }
 }
 
-/// Drive `cfg.clients` concurrent closed-loop clients against an
-/// in-process server; the calling thread becomes the serving worker
-/// (sessions are not `Send`). Returns the aggregated report.
-pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
+/// Validate every mix entry against the manifest and record each
+/// model's tokens-per-request (what a `toks_per_s` unit means).
+fn validate_mix(sim: &Simulator, cfg: &LoadgenCfg) -> Result<HashMap<String, f64>> {
     anyhow::ensure!(cfg.clients > 0, "loadgen needs at least one client");
     anyhow::ensure!(cfg.requests_per_client > 0, "loadgen needs at least one request");
     anyhow::ensure!(!cfg.mix.is_empty(), "loadgen needs a non-empty traffic mix");
-
-    // Validate the mix up front and record tokens-per-request per model.
     let mut toks_per_model: HashMap<String, f64> = HashMap::new();
     for (model, quant) in &cfg.mix {
         sim.eval_artifact_id(model, quant)
@@ -144,41 +239,26 @@ pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
         };
         toks_per_model.insert(model.clone(), toks);
     }
+    Ok(toks_per_model)
+}
 
-    let mut cache = SessionCache::new();
-    if cfg.prewarm {
-        for (model, quant) in &cfg.mix {
-            let key = super::session_key(sim, model, quant);
-            cache.get_or_open(&key, || {
-                sim.open_eval_session(model, &QuantConfig::abfp(quant))
-            })?;
-        }
-    }
-
-    let queue = AdmissionQueue::new(cfg.serve.queue_cap);
+/// Spawn the in-process closed-loop clients pushing into `queue`. Each
+/// client sends its records through the returned channel when done.
+fn spawn_clients(
+    cfg: &LoadgenCfg,
+    queue: &Arc<AdmissionQueue>,
+) -> (Vec<std::thread::JoinHandle<()>>, mpsc::Receiver<Vec<(Response, f64)>>) {
     let (done_tx, done_rx) = mpsc::channel::<Vec<(Response, f64)>>();
     let mut clients = Vec::with_capacity(cfg.clients);
-    let t0 = Instant::now();
     for c in 0..cfg.clients {
-        let queue = Arc::clone(&queue);
-        let mix = cfg.mix.clone();
-        let n = cfg.requests_per_client;
-        let deadline = cfg.deadline_ms;
-        let seed = cfg.seed;
-        let nmix = cfg.mix.len();
+        let queue = Arc::clone(queue);
+        let cfg = cfg.clone();
         let done = done_tx.clone();
         clients.push(std::thread::spawn(move || {
             let (tx, rx) = mpsc::channel::<Response>();
-            let mut records = Vec::with_capacity(n);
-            'requests: for i in 0..n {
-                let (model, quant) = mix[mix_slot(nmix, c, i)].clone();
-                let mut req = Request::new(
-                    request_id(c, i),
-                    &model,
-                    &quant,
-                    seed.wrapping_add((c * 131 + i * 17) as u64) % 64,
-                );
-                req.deadline_ms = deadline;
+            let mut records = Vec::with_capacity(cfg.requests_per_client);
+            'requests: for i in 0..cfg.requests_per_client {
+                let req = request_for(&cfg, c, i);
                 let started = Instant::now();
                 let mut job = Job::new(req, tx.clone());
                 // Closed-loop backpressure: a full queue means wait and
@@ -205,33 +285,31 @@ pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
             let _ = done.send(records);
         }));
     }
-    drop(done_tx);
+    (clients, done_rx)
+}
 
-    // Close the queue once every client has finished — from a helper
-    // thread, because this thread is about to become the server.
-    let closer = {
-        let queue = Arc::clone(&queue);
-        std::thread::spawn(move || {
-            for h in clients {
-                let _ = h.join();
-            }
-            queue.close();
-        })
-    };
-
-    let stats = serve_loop(sim, &queue, &cfg.serve, &mut cache);
-    let wall_s = t0.elapsed().as_secs_f64();
-    let _ = closer.join();
-
+/// Fold every client's records into the final report (shared by all
+/// three transports).
+fn assemble_report(
+    cfg: &LoadgenCfg,
+    done_rx: mpsc::Receiver<Vec<(Response, f64)>>,
+    wall_s: f64,
+    toks_per_model: &HashMap<String, f64>,
+    stats: ServeStats,
+    workers: usize,
+    per_worker: Vec<ShardStats>,
+) -> LoadgenReport {
     let mut responses: Vec<Response> = Vec::new();
     let mut latencies: Vec<f64> = Vec::new();
     let (mut ok, mut errors, mut toks) = (0usize, 0usize, 0.0f64);
     let mut occ_sum = 0usize;
+    let mut occ_max = stats.max_occupancy;
     for records in done_rx.iter() {
         for (resp, ms) in records {
             if resp.ok {
                 ok += 1;
                 occ_sum += resp.batched;
+                occ_max = occ_max.max(resp.batched);
                 let c = (resp.id / 1_000_000) as usize;
                 let i = (resp.id % 1_000_000) as usize;
                 let model = &cfg.mix[mix_slot(cfg.mix.len(), c, i)].0;
@@ -253,17 +331,185 @@ pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
         }
     };
 
-    Ok(LoadgenReport {
+    LoadgenReport {
         ok,
         errors,
         wall_s,
         toks_per_s: if wall_s > 0.0 { toks / wall_s } else { 0.0 },
         mean_occupancy: if ok > 0 { occ_sum as f64 / ok as f64 } else { 0.0 },
-        max_occupancy: stats.max_occupancy,
+        max_occupancy: occ_max,
         p50_ms: pct(0.5),
         p95_ms: pct(0.95),
         p99_ms: pct(0.99),
         responses,
         stats,
-    })
+        workers,
+        per_worker,
+    }
+}
+
+/// Drive `cfg.clients` concurrent closed-loop clients against an
+/// in-process server; the calling thread becomes the serving worker
+/// (sessions are not `Send`). Returns the aggregated report.
+pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
+    let toks_per_model = validate_mix(sim, cfg)?;
+
+    let mut cache = SessionCache::new();
+    if cfg.prewarm {
+        for (model, quant) in &cfg.mix {
+            let key = super::session_key(sim, model, quant);
+            cache.get_or_open(&key, || {
+                sim.open_eval_session(model, &QuantConfig::abfp(quant))
+            })?;
+        }
+    }
+
+    let queue = AdmissionQueue::new(cfg.serve.queue_cap);
+    let t0 = Instant::now();
+    let (clients, done_rx) = spawn_clients(cfg, &queue);
+
+    // Close the queue once every client has finished — from a helper
+    // thread, because this thread is about to become the server.
+    let closer = {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || {
+            for h in clients {
+                let _ = h.join();
+            }
+            queue.close();
+        })
+    };
+
+    let stats = serve_loop(sim, &queue, &cfg.serve, &mut cache);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let _ = closer.join();
+
+    Ok(assemble_report(cfg, done_rx, wall_s, &toks_per_model, stats, 1, Vec::new()))
+}
+
+/// Like [`run_loadgen`], but the serving side is an in-process
+/// `cfg.shard.workers`-strong shard pool supervised by the calling
+/// thread. Weights are pretrained (and sessions optionally prewarmed on
+/// their home shards) before the clock starts.
+pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
+    // A probe simulator validates the mix and — when prewarming — pays
+    // every checkpoint pretrain ONCE before the pool spawns, so shard
+    // workers only ever load cached weights.
+    let probe = spec.build().context("loadgen: build probe simulator")?;
+    let toks_per_model = validate_mix(&probe, cfg)?;
+    let prewarm: Vec<(String, String)> = if cfg.prewarm { cfg.mix.clone() } else { Vec::new() };
+    if cfg.prewarm {
+        for (model, quant) in &cfg.mix {
+            probe
+                .open_eval_session(model, &QuantConfig::abfp(quant))
+                .with_context(|| format!("prewarm {}:{}", model, quant))?;
+        }
+    }
+    drop(probe);
+
+    let queue = AdmissionQueue::new(cfg.serve.queue_cap);
+    let t0 = Instant::now();
+    let (clients, done_rx) = spawn_clients(cfg, &queue);
+    let closer = {
+        let queue = Arc::clone(&queue);
+        std::thread::spawn(move || {
+            for h in clients {
+                let _ = h.join();
+            }
+            queue.close();
+        })
+    };
+
+    let per_worker = run_sharded(spec, &queue, &cfg.serve, &cfg.shard, &prewarm)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let _ = closer.join();
+
+    let mut stats = ServeStats::default();
+    for w in &per_worker {
+        stats.absorb(&w.serve);
+    }
+    Ok(assemble_report(
+        cfg,
+        done_rx,
+        wall_s,
+        &toks_per_model,
+        stats,
+        cfg.shard.workers,
+        per_worker,
+    ))
+}
+
+/// Drive the closed-loop clients over real sockets against a running
+/// `repro serve --listen` server at `addr` — one TCP connection per
+/// client. `sim` is only a local probe (mix validation and token
+/// accounting); all serving happens in the remote process, so
+/// `report.stats` is zeroed and `report.workers` is 0.
+pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
+    let toks_per_model = validate_mix(sim, cfg)?;
+
+    let (done_tx, done_rx) = mpsc::channel::<Vec<(Response, f64)>>();
+    let mut clients = Vec::with_capacity(cfg.clients);
+    let t0 = Instant::now();
+    for c in 0..cfg.clients {
+        let cfg = cfg.clone();
+        let addr = addr.to_string();
+        let done = done_tx.clone();
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            let stream =
+                TcpStream::connect(&addr).with_context(|| format!("connect {}", addr))?;
+            let mut writer = BufWriter::new(stream.try_clone().context("clone stream")?);
+            let mut reader = BufReader::new(stream);
+            let mut records = Vec::with_capacity(cfg.requests_per_client);
+            for i in 0..cfg.requests_per_client {
+                let req = request_for(&cfg, c, i);
+                let line = req.line();
+                let started = Instant::now();
+                // Closed-loop backpressure over the wire: a queue_full
+                // error means wait and resubmit the same request.
+                let resp = loop {
+                    writeln!(writer, "{}", line).context("send request")?;
+                    writer.flush().context("flush request")?;
+                    let mut reply = String::new();
+                    let n = reader.read_line(&mut reply).context("read response")?;
+                    anyhow::ensure!(n > 0, "server closed the connection");
+                    let resp = protocol::parse_response(reply.trim())?;
+                    if !resp.ok && resp.code.as_deref() == Some(codes::QUEUE_FULL) {
+                        std::thread::sleep(Duration::from_micros(200));
+                        continue;
+                    }
+                    break resp;
+                };
+                records.push((resp, started.elapsed().as_secs_f64() * 1e3));
+            }
+            let _ = done.send(records);
+            Ok(())
+        }));
+    }
+    drop(done_tx);
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in clients {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                first_err.get_or_insert_with(|| anyhow::anyhow!("loadgen client panicked"));
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    Ok(assemble_report(
+        cfg,
+        done_rx,
+        wall_s,
+        &toks_per_model,
+        ServeStats::default(),
+        0,
+        Vec::new(),
+    ))
 }

@@ -4,33 +4,53 @@
 //! batched, concurrently-driven service:
 //!
 //! * [`queue`] — bounded admission queue with reject-on-full
-//!   backpressure and per-request deadlines;
+//!   backpressure, per-request deadlines, and earliest-deadline-first
+//!   scheduling within each (model × quant) key;
 //! * [`batcher`] — dynamic micro-batcher coalescing compatible requests
 //!   (same model × quant config) into one batched forward within a
 //!   configurable window / max batch;
 //! * [`cache`] — prepared-session cache keyed by (model, quant config,
 //!   executor, backend): weights converted/QDQ-prepared once per key;
 //! * [`protocol`] — the line-delimited JSON request/response format of
-//!   `repro serve`;
+//!   `repro serve` (specified operator-facing in `docs/serving.md`);
+//! * [`shard`] — the multi-worker pool: N threads, each owning its own
+//!   simulator and session cache, coordinating through key holds with
+//!   cross-shard stealing and optional hot-key replication;
+//! * [`transport`] — the TCP socket front end (`repro serve --listen`):
+//!   connection multiplexing into the shared admission queue, responses
+//!   routed back per connection;
 //! * [`loadgen`] — closed-loop multi-client load generator
 //!   (`repro loadgen`) measuring tokens/sec, batch occupancy and
-//!   latency percentiles.
+//!   latency percentiles, in-process or over TCP.
 //!
 //! Threading model: runtime sessions are deliberately **not** `Send`
-//! (they hold `Rc` sticky inputs and a hoisted backend handle), so one
-//! worker thread owns the [`Simulator`], the session cache and every
-//! dispatch; producers on other threads only touch the admission queue
-//! and per-request response channels. Parallelism comes from *inside*
-//! each batched forward — the coalesced `[B·T, d]` matmuls and the
-//! per-(b, h) attention wave fan out across the pool tensor backend —
-//! which is where the hardware-shaped win is, rather than from racing
-//! non-thread-safe sessions.
+//! (they hold `Rc` sticky inputs and a hoisted backend handle), so each
+//! worker thread owns its [`Simulator`], its session cache and every
+//! dispatch it performs; producers on other threads only touch the
+//! admission queue and per-request response channels. Sharding scales
+//! that model out instead of breaking it: replication of a hot key
+//! means each shard independently prepares its own session for the key,
+//! never that two threads share one. Within a worker, parallelism comes
+//! from *inside* each batched forward — the coalesced `[B·T, d]`
+//! matmuls and the per-(b, h) attention wave fan out across the pool
+//! tensor backend.
+//!
+//! Determinism contract: per-request outputs are bit-identical across
+//! batching configuration, worker count, shard assignment, stealing and
+//! replication — `run_batch` already guarantees outputs independent of
+//! batch composition, shards only move *where/when* a batch runs, and
+//! replicated sessions are prepared by the same deterministic transform
+//! from the same checkpoint. The serving tests assert exactly this.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod cache;
 pub mod loadgen;
 pub mod protocol;
 pub mod queue;
+pub mod shard;
+pub mod transport;
 
 use std::io::{BufRead, Write as IoWrite};
 use std::sync::mpsc;
@@ -49,14 +69,18 @@ use crate::tensor::backend;
 
 use batcher::{Batcher, MicroBatch};
 use cache::{SessionCache, SessionKey};
-use protocol::{summarize, Request, Response};
+use protocol::{codes, summarize, Request, Response};
 use queue::{AdmissionQueue, Job};
+use shard::{ShardCfg, SimSpec};
 
 /// Server tuning knobs (`--queue-cap`, `--batch-window`, `--max-batch`).
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
+    /// Admission queue bound (reject-on-full backpressure).
     pub queue_cap: usize,
+    /// How long a batch anchor waits for same-key company.
     pub batch_window: Duration,
+    /// Micro-batch occupancy cap.
     pub max_batch: usize,
 }
 
@@ -70,17 +94,23 @@ impl Default for ServeCfg {
     }
 }
 
-/// Aggregate counters of one `serve_loop` run. `requests` counts
+/// Aggregate counters of one worker's serve loop. `requests` counts
 /// dispatched jobs; `expired` counts jobs answered with a deadline
 /// error *before* dispatch (they never reach a batch), so the total
 /// responses sent is `ok + errors + expired`.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Jobs dispatched into batches.
     pub requests: usize,
+    /// Successful responses.
     pub ok: usize,
+    /// Error responses (excluding pre-dispatch expiry).
     pub errors: usize,
+    /// Jobs shed with a deadline error before dispatch.
     pub expired: usize,
+    /// Micro-batches dispatched.
     pub batches: usize,
+    /// Largest micro-batch occupancy seen.
     pub max_occupancy: usize,
 }
 
@@ -94,12 +124,23 @@ impl ServeStats {
             self.requests as f64 / self.batches as f64
         }
     }
+
+    /// Fold another worker's counters into this one (multi-shard
+    /// aggregation; `max_occupancy` takes the max, the rest sum).
+    pub fn absorb(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.ok += other.ok;
+        self.errors += other.errors;
+        self.expired += other.expired;
+        self.batches += other.batches;
+        self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+    }
 }
 
 /// The shared, deterministic request streams — one corpus per model
 /// family, seeded exactly like evaluation, so request `batch` index `i`
 /// always denotes the same payload.
-struct Corpora {
+pub(crate) struct Corpora {
     text: TextCorpus,
     code: CodeCorpus,
     qa: QaCorpus,
@@ -107,7 +148,7 @@ struct Corpora {
 }
 
 impl Corpora {
-    fn new() -> Corpora {
+    pub(crate) fn new() -> Corpora {
         Corpora {
             text: TextCorpus::new(TEXT_SEED),
             code: CodeCorpus::new(CODE_SEED),
@@ -171,7 +212,7 @@ pub(crate) fn session_key(sim: &Simulator, model: &str, quant: &str) -> SessionK
 /// Run one micro-batch to completion: resolve the cached session, build
 /// every request's input, drive `Session::run_batch`, and answer each
 /// job (post-run deadline expiry becomes an error — never stale output).
-fn dispatch(
+pub(crate) fn dispatch(
     sim: &Simulator,
     cache: &mut SessionCache,
     corpora: &Corpora,
@@ -187,7 +228,11 @@ fn dispatch(
         Ok(cfg) => cfg.clone(),
         Err(e) => {
             for job in &mb.jobs {
-                job.reply(Response::err(job.req.id, &format!("{:#}", e)));
+                job.reply(Response::err(
+                    job.req.id,
+                    codes::UNKNOWN_MODEL,
+                    &format!("{:#}", e),
+                ));
             }
             stats.errors += mb.jobs.len();
             return;
@@ -201,7 +246,11 @@ fn dispatch(
         Ok(sess) => sess,
         Err(e) => {
             for job in &mb.jobs {
-                job.reply(Response::err(job.req.id, &format!("open session: {:#}", e)));
+                job.reply(Response::err(
+                    job.req.id,
+                    codes::OPEN_FAILED,
+                    &format!("open session: {:#}", e),
+                ));
             }
             stats.errors += mb.jobs.len();
             return;
@@ -219,7 +268,7 @@ fn dispatch(
                 frees.push(vec![v]);
             }
             Err(e) => {
-                job.reply(Response::err(job.req.id, &format!("{:#}", e)));
+                job.reply(Response::err(job.req.id, codes::BAD_INPUT, &format!("{:#}", e)));
                 stats.errors += 1;
             }
         }
@@ -239,6 +288,7 @@ fn dispatch(
                 if job.expired(now) {
                     job.reply(Response::err(
                         job.req.id,
+                        codes::DEADLINE_RUN,
                         "deadline expired during batched run",
                     ));
                     stats.errors += 1;
@@ -251,7 +301,11 @@ fn dispatch(
         }
         Err(e) => {
             for job in &jobs {
-                job.reply(Response::err(job.req.id, &format!("run: {:#}", e)));
+                job.reply(Response::err(
+                    job.req.id,
+                    codes::RUN_FAILED,
+                    &format!("run: {:#}", e),
+                ));
             }
             stats.errors += jobs.len();
         }
@@ -260,7 +314,8 @@ fn dispatch(
 
 /// The worker loop: drain the queue batch-by-batch until it is closed
 /// and empty. Owns every session via `cache`; runs on the thread that
-/// owns `sim`.
+/// owns `sim`. The single-worker path — [`shard::run_sharded`] is its
+/// N-worker twin.
 pub fn serve_loop(
     sim: &Simulator,
     queue: &Arc<AdmissionQueue>,
@@ -277,13 +332,16 @@ pub fn serve_loop(
     stats
 }
 
-/// `repro serve`: the in-process server on stdin/stdout. A reader
-/// thread parses request lines into the admission queue (answering
-/// parse failures and queue-full rejections directly); a writer thread
-/// serializes responses; the calling thread is the worker. Returns once
-/// stdin reaches EOF and the queue has drained.
-pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
-    let queue = AdmissionQueue::new(cfg.queue_cap);
+/// Spawn the stdin→queue reader and the queue→stdout writer shared by
+/// both stdio front ends. The reader answers parse failures and
+/// queue-full rejections directly and closes the queue at EOF.
+fn spawn_stdio_pump(
+    queue: &Arc<AdmissionQueue>,
+) -> (
+    mpsc::Sender<Response>,
+    std::thread::JoinHandle<()>,
+    std::thread::JoinHandle<()>,
+) {
     let (tx, rx) = mpsc::channel::<Response>();
 
     let writer = std::thread::spawn(move || {
@@ -296,7 +354,7 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
     });
 
     let reader = {
-        let queue = Arc::clone(&queue);
+        let queue = Arc::clone(queue);
         let tx = tx.clone();
         std::thread::spawn(move || {
             let stdin = std::io::stdin();
@@ -312,6 +370,7 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
                         if queue.try_push(Job::new(req, tx.clone())).is_err() {
                             let _ = tx.send(Response::err(
                                 id,
+                                codes::QUEUE_FULL,
                                 "queue full (backpressure): retry later",
                             ));
                         }
@@ -321,6 +380,7 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
                         // cannot collide with a real request's id
                         let _ = tx.send(Response::err(
                             protocol::ERR_ID,
+                            codes::BAD_REQUEST,
                             &format!("bad request: {:#}", e),
                         ));
                     }
@@ -329,6 +389,18 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
             queue.close();
         })
     };
+
+    (tx, reader, writer)
+}
+
+/// `repro serve`: the in-process server on stdin/stdout. A reader
+/// thread parses request lines into the admission queue (answering
+/// parse failures and queue-full rejections directly); a writer thread
+/// serializes responses; the calling thread is the worker. Returns once
+/// stdin reaches EOF and the queue has drained.
+pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
+    let queue = AdmissionQueue::new(cfg.queue_cap);
+    let (tx, reader, writer) = spawn_stdio_pump(&queue);
 
     crate::info!(
         "serving on stdin/stdout: queue_cap={} batch_window={:?} max_batch={} \
@@ -357,6 +429,46 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
         stats.max_occupancy,
         hits,
         misses
+    );
+    Ok(())
+}
+
+/// `repro serve --workers N` (no `--listen`): the sharded server on
+/// stdin/stdout. Same pump as [`run_stdio`], but the calling thread
+/// supervises an N-worker shard pool instead of serving itself.
+pub fn run_stdio_sharded(spec: &SimSpec, cfg: &ServeCfg, shard_cfg: &ShardCfg) -> Result<()> {
+    let queue = AdmissionQueue::new(cfg.queue_cap);
+    let (tx, reader, writer) = spawn_stdio_pump(&queue);
+
+    crate::info!(
+        "serving on stdin/stdout: workers={} replicate_hot={} queue_cap={} \
+         batch_window={:?} max_batch={} backend={}",
+        shard_cfg.workers,
+        shard_cfg.replicate_hot,
+        cfg.queue_cap,
+        cfg.batch_window,
+        cfg.max_batch,
+        backend::active().describe()
+    );
+    let per_worker = shard::run_sharded(spec, &queue, cfg, shard_cfg, &[])?;
+    drop(tx);
+    let _ = reader.join();
+    let _ = writer.join();
+    let mut total = ServeStats::default();
+    for w in &per_worker {
+        total.absorb(&w.serve);
+    }
+    crate::info!(
+        "served {} requests in {} batches across {} workers (ok {}, errors {}, \
+         expired-in-queue {}, stolen {}, hot {})",
+        total.requests,
+        total.batches,
+        per_worker.len(),
+        total.ok,
+        total.errors,
+        total.expired,
+        per_worker.iter().map(|w| w.stolen_batches).sum::<usize>(),
+        per_worker.iter().map(|w| w.hot_batches).sum::<usize>()
     );
     Ok(())
 }

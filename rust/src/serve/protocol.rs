@@ -1,8 +1,12 @@
 //! Line-delimited JSON request/response protocol of `repro serve`.
 //!
-//! One request per line on stdin, one response per line on stdout;
-//! responses carry the request id and may arrive out of submission
-//! order (micro-batching reorders completion across keys).
+//! One request per line (stdin or a TCP connection), one response per
+//! line back; responses carry the request id and may arrive out of
+//! submission order (micro-batching and sharding reorder completion
+//! across keys). The full operator-facing specification lives in
+//! `docs/serving.md`; [`REQUEST_FIELDS`], [`RESPONSE_FIELDS`] and
+//! [`codes::ALL`] are the machine-readable manifests a test compares
+//! against that document so the two cannot drift apart.
 //!
 //! Request:
 //!
@@ -26,6 +30,10 @@
 //!   expires before dispatch (or whose batch finishes past it) gets an
 //!   error response, never a stale output.
 //!
+//! Unknown request fields are rejected (`bad_request`), so a typo like
+//! `"deadline_mss"` fails loudly instead of silently dropping the
+//! deadline.
+//!
 //! Response:
 //!
 //! ```json
@@ -35,7 +43,9 @@
 //!
 //! `outputs` summarizes each output tensor (shape, f64 sum in fixed
 //! iteration order, first values) — compact enough for a wire line yet
-//! exact enough that two responses are equal iff the tensors are.
+//! exact enough that two responses are equal iff the tensors are. Error
+//! responses set `ok: false` and carry a human-readable `error` message
+//! plus a stable machine-readable `code` (see [`codes`]).
 
 use anyhow::{Context, Result};
 
@@ -45,6 +55,56 @@ use crate::util::json::Json;
 /// Response id used for lines that failed to parse (no request id to
 /// echo). Reserved: requests may use any id below it.
 pub const ERR_ID: u64 = u64::MAX;
+
+/// Every field a request line may carry, as documented in
+/// `docs/serving.md`. Unknown fields are rejected at parse time.
+pub const REQUEST_FIELDS: &[&str] = &["id", "model", "quant", "batch", "tokens", "deadline_ms"];
+
+/// Every field a response line may carry, as documented in
+/// `docs/serving.md` (`error` and `code` only appear on failures).
+pub const RESPONSE_FIELDS: &[&str] =
+    &["id", "ok", "batched", "queue_ms", "run_ms", "outputs", "error", "code"];
+
+/// Stable machine-readable error codes carried in the `code` field of
+/// failure responses. Clients branch on these (`queue_full` means
+/// retry-later; `bad_request` means fix the line); the human-readable
+/// `error` message is free to change, the codes are not.
+pub mod codes {
+    /// The line was not a well-formed request (bad JSON, missing or
+    /// malformed field, unknown field). Sent with [`super::ERR_ID`]
+    /// when no request id could be recovered.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// Admission rejected: the bounded queue is at capacity (or the
+    /// server is shutting down). Backpressure — retry after a pause.
+    pub const QUEUE_FULL: &str = "queue_full";
+    /// The deadline lapsed while the request waited in the admission
+    /// queue; it was shed before dispatch and never ran.
+    pub const DEADLINE_QUEUE: &str = "deadline_expired_in_queue";
+    /// The request ran, but its batch finished past the deadline; the
+    /// (stale) output is withheld.
+    pub const DEADLINE_RUN: &str = "deadline_expired_in_run";
+    /// `model` is not a manifest model name.
+    pub const UNKNOWN_MODEL: &str = "unknown_model";
+    /// Opening the (model × quant) session failed — most commonly an
+    /// unknown quant-config name.
+    pub const OPEN_FAILED: &str = "open_session_failed";
+    /// The request's input was invalid for the model (wrong inline
+    /// token count, out-of-vocab ids, tokens for an image model, ...).
+    pub const BAD_INPUT: &str = "bad_input";
+    /// The batched forward itself failed, or a server worker died.
+    pub const RUN_FAILED: &str = "run_failed";
+    /// Every code the server can emit, for the doc-drift test.
+    pub const ALL: &[&str] = &[
+        BAD_REQUEST,
+        QUEUE_FULL,
+        DEADLINE_QUEUE,
+        DEADLINE_RUN,
+        UNKNOWN_MODEL,
+        OPEN_FAILED,
+        BAD_INPUT,
+        RUN_FAILED,
+    ];
+}
 
 /// A JSON number that must be a non-negative integer — fractions and
 /// negatives are protocol errors, never silently truncated (`1.5` as a
@@ -61,15 +121,20 @@ fn as_uint(j: &Json, what: &str) -> Result<u64> {
     Ok(n as u64)
 }
 
+/// One parsed request line (see the module docs for field semantics).
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Client-chosen id echoed on the response; must be below [`ERR_ID`].
     pub id: u64,
+    /// Manifest model name.
     pub model: String,
+    /// Eval quant-config name (wire default `"fp32"`).
     pub quant: String,
     /// Index into the model family's deterministic eval stream.
     pub batch_index: u64,
     /// Inline token payload overriding `batch_index` (token models).
     pub tokens: Option<Vec<i32>>,
+    /// Relative deadline in milliseconds from admission.
     pub deadline_ms: Option<u64>,
 }
 
@@ -85,11 +150,46 @@ impl Request {
             deadline_ms: None,
         }
     }
+
+    /// Wire form of the request — the inverse of [`parse_request`]
+    /// (used by the TCP loadgen clients and the protocol examples).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("quant", Json::Str(self.quant.clone())),
+            ("batch", Json::Num(self.batch_index as f64)),
+        ];
+        if let Some(toks) = &self.tokens {
+            pairs.push((
+                "tokens",
+                Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ));
+        }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::Num(d as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// One compact protocol line.
+    pub fn line(&self) -> String {
+        self.to_json().dump()
+    }
 }
 
 /// Parse one protocol line into a [`Request`].
 pub fn parse_request(line: &str) -> Result<Request> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {}", e))?;
+    let obj = j.as_obj().context("request must be a JSON object")?;
+    for k in obj.keys() {
+        anyhow::ensure!(
+            REQUEST_FIELDS.contains(&k.as_str()),
+            "unknown request field {:?} (known: {})",
+            k,
+            REQUEST_FIELDS.join(", ")
+        );
+    }
     let id = as_uint(j.get("id").context("request needs a numeric \"id\"")?, "\"id\"")?;
     let model = j
         .get("model")
@@ -138,6 +238,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
 /// Exact-but-compact digest of one output tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OutputSummary {
+    /// The tensor's shape.
     pub shape: Vec<usize>,
     /// f64 sum over elements in storage order (deterministic).
     pub sum: f64,
@@ -157,11 +258,18 @@ pub fn summarize(outputs: &[Tensor]) -> Vec<OutputSummary> {
         .collect()
 }
 
+/// One response line (see the module docs for field semantics).
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request's id ([`ERR_ID`] when no id could be parsed).
     pub id: u64,
+    /// Success flag; `false` responses carry `error` + `code`.
     pub ok: bool,
+    /// Human-readable failure message (absent on success).
     pub error: Option<String>,
+    /// Machine-readable failure code from [`codes`] (absent on success).
+    pub code: Option<String>,
+    /// Output tensor digests (empty on failure).
     pub outputs: Vec<OutputSummary>,
     /// Occupancy of the micro-batch this request rode in.
     pub batched: usize,
@@ -172,6 +280,7 @@ pub struct Response {
 }
 
 impl Response {
+    /// A success response.
     pub fn ok(
         id: u64,
         outputs: Vec<OutputSummary>,
@@ -179,14 +288,25 @@ impl Response {
         queue_ms: f64,
         run_ms: f64,
     ) -> Response {
-        Response { id, ok: true, error: None, outputs, batched, queue_ms, run_ms }
+        Response {
+            id,
+            ok: true,
+            error: None,
+            code: None,
+            outputs,
+            batched,
+            queue_ms,
+            run_ms,
+        }
     }
 
-    pub fn err(id: u64, msg: &str) -> Response {
+    /// A failure response carrying a [`codes`] code and a message.
+    pub fn err(id: u64, code: &str, msg: &str) -> Response {
         Response {
             id,
             ok: false,
             error: Some(msg.to_string()),
+            code: Some(code.to_string()),
             outputs: Vec::new(),
             batched: 0,
             queue_ms: 0.0,
@@ -194,6 +314,7 @@ impl Response {
         }
     }
 
+    /// Wire form of the response — the inverse of [`parse_response`].
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("id", Json::Num(self.id as f64)),
@@ -236,6 +357,9 @@ impl Response {
         if let Some(e) = &self.error {
             pairs.push(("error", Json::Str(e.clone())));
         }
+        if let Some(c) = &self.code {
+            pairs.push(("code", Json::Str(c.clone())));
+        }
         Json::obj(pairs)
     }
 
@@ -243,6 +367,56 @@ impl Response {
     pub fn line(&self) -> String {
         self.to_json().dump()
     }
+}
+
+/// Parse one response line back into a [`Response`] — the client half
+/// of the wire (used by the TCP loadgen and the protocol-conformance
+/// tests).
+pub fn parse_response(line: &str) -> Result<Response> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad response json: {}", e))?;
+    // Unlike request ids, the response id may be ERR_ID (u64::MAX,
+    // which rounds to 2^64 as f64) — accept it via a saturating cast.
+    let id_f = j
+        .get("id")
+        .and_then(Json::as_f64)
+        .context("response needs a numeric \"id\"")?;
+    anyhow::ensure!(
+        id_f >= 0.0 && id_f.fract() == 0.0,
+        "response \"id\" must be a non-negative integer, got {}",
+        id_f
+    );
+    let id = id_f as u64;
+    let ok = j
+        .get("ok")
+        .and_then(Json::as_bool)
+        .context("response needs a boolean \"ok\"")?;
+    let batched = j.get("batched").and_then(Json::as_usize).unwrap_or(0);
+    let queue_ms = j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0);
+    let run_ms = j.get("run_ms").and_then(Json::as_f64).unwrap_or(0.0);
+    let error = j.get("error").and_then(Json::as_str).map(str::to_string);
+    let code = j.get("code").and_then(Json::as_str).map(str::to_string);
+    let mut outputs = Vec::new();
+    if let Some(arr) = j.get("outputs").and_then(Json::as_arr) {
+        for o in arr {
+            let shape = o
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("output needs a \"shape\" array")?
+                .iter()
+                .map(|v| v.as_usize().context("non-integer shape entry"))
+                .collect::<Result<Vec<usize>>>()?;
+            let sum = o
+                .get("sum")
+                .and_then(Json::as_f64)
+                .context("output needs a numeric \"sum\"")?;
+            let first = o
+                .get("first")
+                .and_then(Json::as_f32_vec)
+                .context("output needs a \"first\" array")?;
+            outputs.push(OutputSummary { shape, sum, first });
+        }
+    }
+    Ok(Response { id, ok, error, code, outputs, batched, queue_ms, run_ms })
 }
 
 #[cfg(test)]
@@ -302,6 +476,12 @@ mod tests {
             parse_request(r#"{"id": 1, "model": "m", "batch": 2.5}"#).is_err(),
             "fractional batch index"
         );
+        // unknown fields are rejected, not silently ignored — a typo'd
+        // knob must not quietly deactivate itself
+        let e = parse_request(r#"{"id": 1, "model": "m", "deadline_mss": 5}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("deadline_mss"), "{}", e);
     }
 
     #[test]
@@ -318,9 +498,67 @@ mod tests {
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("batched").unwrap().as_f64(), Some(4.0));
 
-        let err = Response::err(3, "queue full");
+        let err = Response::err(3, codes::QUEUE_FULL, "queue full");
         let j = Json::parse(&err.line()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("error").unwrap().as_str(), Some("queue full"));
+        assert_eq!(j.get("code").unwrap().as_str(), Some(codes::QUEUE_FULL));
+    }
+
+    #[test]
+    fn requests_and_responses_round_trip_the_wire() {
+        let mut req = Request::new(41, "sim-opt-125m", "abfp_w4a4_n64", 3);
+        req.deadline_ms = Some(250);
+        req.tokens = Some(vec![1, 2, 3]);
+        let back = parse_request(&req.line()).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.model, req.model);
+        assert_eq!(back.quant, req.quant);
+        assert_eq!(back.batch_index, req.batch_index);
+        assert_eq!(back.tokens, req.tokens);
+        assert_eq!(back.deadline_ms, req.deadline_ms);
+
+        let t = Tensor::new(vec![2], vec![1.5, -2.5]);
+        let resp = Response::ok(41, summarize(&[t]), 2, 0.25, 3.5);
+        let back = parse_response(&resp.line()).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.id, 41);
+        assert_eq!(back.batched, 2);
+        assert_eq!(back.outputs, resp.outputs);
+        assert!(back.code.is_none());
+
+        let err = Response::err(ERR_ID, codes::BAD_REQUEST, "bad request: nope");
+        let back = parse_response(&err.line()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.id, ERR_ID);
+        assert_eq!(back.code.as_deref(), Some(codes::BAD_REQUEST));
+        assert!(back.outputs.is_empty());
+    }
+
+    #[test]
+    fn field_and_code_manifests_cover_the_wire_structs() {
+        // every field to_json can emit is in the manifest, and vice versa
+        let mut req = Request::new(1, "m", "q", 0);
+        req.tokens = Some(vec![1]);
+        req.deadline_ms = Some(5);
+        let j = req.to_json();
+        let keys: Vec<&str> =
+            j.as_obj().unwrap().keys().map(String::as_str).collect();
+        for k in &keys {
+            assert!(REQUEST_FIELDS.contains(k), "undocumented request field {}", k);
+        }
+        assert_eq!(keys.len(), REQUEST_FIELDS.len());
+
+        let mut resp = Response::err(1, codes::RUN_FAILED, "x");
+        resp.outputs = Vec::new();
+        let j = resp.to_json();
+        for k in j.as_obj().unwrap().keys() {
+            assert!(
+                RESPONSE_FIELDS.contains(&k.as_str()),
+                "undocumented response field {}",
+                k
+            );
+        }
+        assert_eq!(codes::ALL.len(), 8);
     }
 }

@@ -1,18 +1,33 @@
 //! Bounded admission queue: the concurrency boundary of the server.
 //!
-//! Clients (the stdin reader, loadgen threads) push [`Job`]s from any
-//! thread; the single worker thread pops them through the micro-batcher.
-//! The queue is **bounded with reject-on-full backpressure**: a full
-//! queue hands the job straight back instead of buffering unboundedly or
-//! blocking the submitter — the client decides whether to retry (the
-//! closed-loop loadgen does) or surface the error (the stdio server
-//! answers `queue full`).
+//! Clients (the stdin reader, TCP connection readers, loadgen threads)
+//! push [`Job`]s from any thread; one or more worker threads pop them
+//! through the micro-batcher. The queue is **bounded with
+//! reject-on-full backpressure**: a full queue hands the job straight
+//! back instead of buffering unboundedly or blocking the submitter —
+//! the client decides whether to retry (the closed-loop loadgen does)
+//! or surface the error (the stdio/TCP front ends answer `queue_full`).
+//!
+//! Internally jobs live in per-[`BatchKey`] buckets ordered
+//! **earliest-deadline-first** (EDF): within a key, the job whose
+//! deadline lands soonest dispatches first; jobs without a deadline
+//! sort after every deadlined job, among themselves in arrival order.
+//! Because batches never mix keys and per-request outputs are
+//! independent of batch composition, EDF reordering can change *when* a
+//! request runs but never *what* it returns — the determinism contract
+//! survives scheduling.
+//!
+//! For sharded serving, [`AdmissionQueue::take_anchor`] adds key-level
+//! coordination: while one worker holds a key (a [`KeyHold`]), other
+//! workers skip it — unless hot-key replication is enabled and the
+//! bucket is long enough to be worth serving from two shards at once.
 //!
 //! Every job carries its own response channel and an optional absolute
 //! deadline; expiry is enforced by the batcher (pre-dispatch) and the
-//! dispatcher (post-run), never here — admission stays O(1).
+//! dispatcher (post-run), never here — admission stays O(1) in the
+//! number of keys plus the bucket insertion scan.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -23,32 +38,56 @@ use super::protocol::{Request, Response};
 /// session (model × quant config) can share one batched forward.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
+    /// Manifest model name.
     pub model: String,
+    /// Eval quant-config name.
     pub quant: String,
+}
+
+/// Stable home shard of a key (FNV-1a over model and quant, mod
+/// `nshards`). Sticky assignment keeps a key's prepared session warm on
+/// one worker; stealing and hot-key replication relax it under skew.
+pub fn home_shard(key: &BatchKey, nshards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.model.bytes().chain([0u8]).chain(key.quant.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    (h % nshards.max(1) as u64) as usize
 }
 
 /// One admitted request: the parsed protocol request plus its response
 /// route and timing/deadline bookkeeping.
 pub struct Job {
+    /// The parsed protocol request.
     pub req: Request,
+    /// Admission time; `queue_ms` on the response measures from here.
     pub enqueued: Instant,
+    /// Absolute deadline derived from `req.deadline_ms` at admission.
     pub deadline: Option<Instant>,
+    /// Where the response goes (per client / per connection).
     pub respond: Sender<Response>,
+    /// Admission sequence number (set by the queue): the EDF tiebreak
+    /// and the FIFO order for jobs without deadlines.
+    pub(crate) seq: u64,
 }
 
 impl Job {
+    /// Wrap an admitted request; the deadline clock starts now.
     pub fn new(req: Request, respond: Sender<Response>) -> Job {
         let enqueued = Instant::now();
         let deadline = req
             .deadline_ms
             .map(|ms| enqueued + Duration::from_millis(ms));
-        Job { req, enqueued, deadline, respond }
+        Job { req, enqueued, deadline, respond, seq: 0 }
     }
 
+    /// The micro-batch compatibility key of this request.
     pub fn key(&self) -> BatchKey {
         BatchKey { model: self.req.model.clone(), quant: self.req.quant.clone() }
     }
 
+    /// Whether the job's deadline has lapsed as of `now`.
     pub fn expired(&self, now: Instant) -> bool {
         self.deadline.is_some_and(|d| now >= d)
     }
@@ -59,76 +98,165 @@ impl Job {
     }
 }
 
+/// EDF ordering: sooner deadline first; a deadline beats no deadline;
+/// ties (and the no-deadline tail) fall back to arrival order.
+fn edf_before(a: &Job, b: &Job) -> bool {
+    match (a.deadline, b.deadline) {
+        (Some(x), Some(y)) => (x, a.seq) < (y, b.seq),
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        (None, None) => a.seq < b.seq,
+    }
+}
+
 struct State {
-    jobs: VecDeque<Job>,
+    /// Per-key EDF-ordered buckets. Invariant: no empty buckets.
+    buckets: HashMap<BatchKey, VecDeque<Job>>,
+    /// Total queued jobs across all buckets (the bound `cap` applies to).
+    len: usize,
+    /// Keys currently anchored by a worker (count of live [`KeyHold`]s).
+    active: HashMap<BatchKey, usize>,
     closed: bool,
     /// Monotone arrival counter — lets the batcher's window wait sleep
     /// on "a NEW job arrived" instead of busy-polling a non-empty queue
     /// of incompatible jobs.
     arrivals: u64,
+    /// Monotone admission counter feeding [`Job::seq`].
+    next_seq: u64,
 }
 
+/// The bounded, deadline-aware admission queue shared by every producer
+/// and worker thread (see the module docs for the scheduling policy).
 pub struct AdmissionQueue {
     state: Mutex<State>,
     arrived: Condvar,
     cap: usize,
 }
 
+/// How a worker came to anchor a batch key (reported per batch so the
+/// loadgen/bench occupancy story can attribute cross-shard traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnchorKind {
+    /// The key's stable [`home_shard`] is this worker.
+    Home,
+    /// A foreign idle worker stole the key (its home was busy or slow).
+    Stolen,
+    /// Hot-key replication: the bucket was long enough that a second
+    /// worker serves the same key concurrently.
+    Hot,
+}
+
+/// RAII hold on a batch key taken by [`AdmissionQueue::take_anchor`]:
+/// while alive, other workers skip the key unless hot-key replication
+/// applies. Dropping it (after dispatch) releases the key and wakes
+/// waiting workers.
+pub struct KeyHold {
+    queue: Arc<AdmissionQueue>,
+    key: BatchKey,
+}
+
+impl Drop for KeyHold {
+    fn drop(&mut self) {
+        let mut st = self.queue.state.lock().unwrap();
+        if let Some(n) = st.active.get_mut(&self.key) {
+            *n -= 1;
+            if *n == 0 {
+                st.active.remove(&self.key);
+            }
+        }
+        drop(st);
+        self.queue.arrived.notify_all();
+    }
+}
+
 impl AdmissionQueue {
+    /// A queue admitting at most `cap` (min 1) jobs at a time.
     pub fn new(cap: usize) -> Arc<AdmissionQueue> {
         Arc::new(AdmissionQueue {
             state: Mutex::new(State {
-                jobs: VecDeque::new(),
+                buckets: HashMap::new(),
+                len: 0,
+                active: HashMap::new(),
                 closed: false,
                 arrivals: 0,
+                next_seq: 0,
             }),
             arrived: Condvar::new(),
             cap: cap.max(1),
         })
     }
 
+    /// The admission bound this queue was built with.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Queued (not yet anchored/dispatched) jobs right now.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        self.state.lock().unwrap().len
     }
 
+    /// Whether no jobs are queued right now.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
     /// Admission with backpressure: a full (or closed) queue rejects and
-    /// hands the job back to the caller instead of blocking.
-    pub fn try_push(&self, job: Job) -> Result<(), Job> {
+    /// hands the job back to the caller instead of blocking. Admitted
+    /// jobs are EDF-inserted into their key's bucket.
+    pub fn try_push(&self, mut job: Job) -> Result<(), Job> {
         let mut st = self.state.lock().unwrap();
-        if st.closed || st.jobs.len() >= self.cap {
+        if st.closed || st.len >= self.cap {
             return Err(job);
         }
-        st.jobs.push_back(job);
+        job.seq = st.next_seq;
+        st.next_seq += 1;
         st.arrivals += 1;
+        st.len += 1;
+        let key = job.key();
+        let bucket = st.buckets.entry(key).or_default();
+        // Backward scan from the tail: no-deadline traffic (the common
+        // case) appends in O(1) and stays FIFO.
+        let mut i = bucket.len();
+        while i > 0 && edf_before(&job, &bucket[i - 1]) {
+            i -= 1;
+        }
+        bucket.insert(i, job);
         drop(st);
         self.arrived.notify_all();
         Ok(())
     }
 
-    /// No more admissions; the worker drains what is queued and stops.
+    /// No more admissions; the workers drain what is queued and stop.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.arrived.notify_all();
     }
 
+    /// Whether [`AdmissionQueue::close`] has been called.
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
     }
 
-    /// Blocking pop of the oldest job; `None` once closed *and* drained.
+    /// Blocking pop of the globally EDF-first job (FIFO when nothing
+    /// carries a deadline); `None` once closed *and* drained. The
+    /// single-worker path — it ignores key holds.
     pub(crate) fn pop_front_blocking(&self) -> Option<Job> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(j) = st.jobs.pop_front() {
-                return Some(j);
+            let mut best: Option<BatchKey> = None;
+            for (key, bucket) in &st.buckets {
+                let head = bucket.front().expect("no empty buckets");
+                let better = match &best {
+                    None => true,
+                    Some(bk) => edf_before(head, st.buckets[bk].front().unwrap()),
+                };
+                if better {
+                    best = Some(key.clone());
+                }
+            }
+            if let Some(key) = best {
+                return Some(Self::pop_head(&mut st, &key));
             }
             if st.closed {
                 return None;
@@ -137,22 +265,92 @@ impl AdmissionQueue {
         }
     }
 
-    /// Remove up to `max` queued jobs matching `key`. FIFO order is kept
-    /// both for the drained jobs and for the ones left behind, so an
-    /// incompatible request is never starved by later-arriving traffic
-    /// of another key jumping the whole queue.
+    fn pop_head(st: &mut State, key: &BatchKey) -> Job {
+        let bucket = st.buckets.get_mut(key).expect("bucket exists");
+        let job = bucket.pop_front().expect("bucket non-empty");
+        if bucket.is_empty() {
+            st.buckets.remove(key);
+        }
+        st.len -= 1;
+        job
+    }
+
+    /// Blocking pop of a batch anchor for shard `shard` of `nshards`,
+    /// plus a [`KeyHold`] granting the key to this worker. Eligible keys
+    /// are those no other worker holds — or, when `replicate_hot`, keys
+    /// whose bucket holds at least `hot_min` jobs (long enough to be
+    /// worth a second prepared session). Home keys are preferred; an
+    /// idle worker steals the EDF-first eligible foreign key rather than
+    /// sit idle. `None` once closed *and* drained.
+    pub(crate) fn take_anchor(
+        self: &Arc<Self>,
+        shard: usize,
+        nshards: usize,
+        replicate_hot: bool,
+        hot_min: usize,
+    ) -> Option<(Job, AnchorKind, KeyHold)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let mut best: Option<(BatchKey, AnchorKind)> = None;
+            for (key, bucket) in &st.buckets {
+                let held = st.active.get(key).copied().unwrap_or(0) > 0;
+                let hot = replicate_hot && bucket.len() >= hot_min.max(1);
+                if held && !hot {
+                    continue;
+                }
+                let kind = if held {
+                    AnchorKind::Hot
+                } else if home_shard(key, nshards) == shard {
+                    AnchorKind::Home
+                } else {
+                    AnchorKind::Stolen
+                };
+                let better = match &best {
+                    None => true,
+                    Some((bk, bkind)) => {
+                        let home = kind == AnchorKind::Home;
+                        let best_home = *bkind == AnchorKind::Home;
+                        // prefer home keys; within a class, EDF order
+                        (home && !best_home)
+                            || (home == best_home
+                                && edf_before(
+                                    bucket.front().unwrap(),
+                                    st.buckets[bk].front().unwrap(),
+                                ))
+                    }
+                };
+                if better {
+                    best = Some((key.clone(), kind));
+                }
+            }
+            if let Some((key, kind)) = best {
+                let job = Self::pop_head(&mut st, &key);
+                *st.active.entry(key.clone()).or_insert(0) += 1;
+                drop(st);
+                return Some((job, kind, KeyHold { queue: Arc::clone(self), key }));
+            }
+            if st.closed && st.len == 0 {
+                return None;
+            }
+            // Either empty, or every key is held by another worker:
+            // sleep until an arrival, a close, or a hold release.
+            st = self.arrived.wait(st).unwrap();
+        }
+    }
+
+    /// Remove up to `max` queued jobs matching `key`, in EDF order
+    /// (arrival order when no deadlines are in play — so an incompatible
+    /// request is never starved by later-arriving traffic of another key
+    /// jumping the whole queue, and same-key FIFO is preserved).
     pub(crate) fn drain_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
         let mut st = self.state.lock().unwrap();
         let mut out = Vec::new();
-        let mut rest = VecDeque::with_capacity(st.jobs.len());
-        while let Some(j) = st.jobs.pop_front() {
-            if out.len() < max && j.key() == *key {
-                out.push(j);
-            } else {
-                rest.push_back(j);
+        while out.len() < max {
+            if !st.buckets.contains_key(key) {
+                break;
             }
+            out.push(Self::pop_head(&mut st, key));
         }
-        st.jobs = rest;
         out
     }
 
@@ -180,6 +378,13 @@ mod tests {
     fn job(id: u64, model: &str, quant: &str) -> (Job, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
         (Job::new(Request::new(id, model, quant, 0), tx), rx)
+    }
+
+    fn deadline_job(id: u64, quant: &str, ms: u64) -> (Job, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(id, "m", quant, 0);
+        req.deadline_ms = Some(ms);
+        (Job::new(req, tx), rx)
     }
 
     #[test]
@@ -216,7 +421,8 @@ mod tests {
         let key = BatchKey { model: "m".into(), quant: "a".into() };
         let got = q.drain_matching(&key, 2);
         assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![1, 3]);
-        // remaining: 2(b), 4(a), 5(b) in order
+        // remaining: 2(b), 4(a), 5(b); no deadlines, so global pops stay
+        // in arrival order
         assert_eq!(q.len(), 3);
         assert_eq!(q.pop_front_blocking().unwrap().req.id, 2);
         assert_eq!(q.pop_front_blocking().unwrap().req.id, 4);
@@ -244,5 +450,87 @@ mod tests {
         let (tx2, _rx2) = mpsc::channel();
         let j2 = Job::new(Request::new(2, "m", "fp32", 0), tx2);
         assert!(!j2.expired(j2.enqueued + Duration::from_secs(3600)), "no deadline");
+    }
+
+    #[test]
+    fn edf_orders_same_key_by_deadline_then_arrival() {
+        let q = AdmissionQueue::new(16);
+        let mut rxs = Vec::new();
+        for (id, ms) in [(1, None), (2, Some(500)), (3, Some(100)), (4, None)] {
+            let (j, r) = match ms {
+                Some(ms) => deadline_job(id, "a", ms),
+                None => job(id, "m", "a"),
+            };
+            rxs.push(r);
+            q.try_push(j).unwrap();
+        }
+        let key = BatchKey { model: "m".into(), quant: "a".into() };
+        let got = q.drain_matching(&key, 8);
+        // soonest deadline first, then the later deadline, then the
+        // no-deadline jobs in arrival order
+        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![3, 2, 1, 4]);
+    }
+
+    #[test]
+    fn take_anchor_excludes_held_keys_until_release() {
+        let q = AdmissionQueue::new(16);
+        let (ja, _ra) = job(1, "m", "a");
+        let (jb, _rb) = job(2, "m", "b");
+        q.try_push(ja).unwrap();
+        q.try_push(jb).unwrap();
+        let (first, _kind, hold) = q.take_anchor(0, 1, false, 16).unwrap();
+        // the other key is still available to a concurrent worker...
+        let (second, _kind2, hold2) = q.take_anchor(0, 1, false, 16).unwrap();
+        assert_ne!(first.req.key(), second.req.key());
+        // ...but pushing more of a held key does not make it eligible:
+        // a third worker blocks until the hold on "a" is released
+        let (ja2, _ra2) = job(3, "m", "a");
+        q.try_push(ja2).unwrap();
+        q.close();
+        let q2 = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || {
+            let (j, _k, h) = q2.take_anchor(0, 1, false, 16).expect("job after release");
+            drop(h);
+            j.req.id
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(hold2);
+        drop(hold);
+        assert_eq!(waiter.join().unwrap(), 3);
+        assert!(q.take_anchor(0, 1, false, 16).is_none(), "closed + drained");
+    }
+
+    #[test]
+    fn take_anchor_replicates_hot_keys() {
+        let q = AdmissionQueue::new(16);
+        let mut rxs = Vec::new();
+        for id in 1..=4 {
+            let (j, r) = job(id, "m", "a");
+            rxs.push(r);
+            q.try_push(j).unwrap();
+        }
+        let (_j1, k1, hold1) = q.take_anchor(0, 2, true, 3).unwrap();
+        // 3 jobs remain >= hot_min: a second worker may serve the key
+        let (_j2, k2, hold2) = q.take_anchor(1, 2, true, 3).unwrap();
+        assert!(k1 == AnchorKind::Home || k1 == AnchorKind::Stolen);
+        assert_eq!(k2, AnchorKind::Hot);
+        // without replication the same situation blocks: nothing grants
+        drop(hold1);
+        drop(hold2);
+        q.close();
+        // drain the rest so the queue ends empty
+        while q.take_anchor(0, 2, false, 3).is_some() {}
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn home_shard_is_stable_and_in_range() {
+        let a = BatchKey { model: "sim-opt-125m".into(), quant: "fp32".into() };
+        for n in 1..8 {
+            let h = home_shard(&a, n);
+            assert!(h < n);
+            assert_eq!(h, home_shard(&a, n), "deterministic");
+        }
+        assert_eq!(home_shard(&a, 1), 0);
     }
 }

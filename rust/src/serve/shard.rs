@@ -1,0 +1,228 @@
+//! Sharded multi-worker serving: N threads, each owning its own
+//! simulator and prepared-session cache, coordinated only through the
+//! shared admission queue.
+//!
+//! Sessions are not `Send`, so the pool never moves one across threads.
+//! Instead each worker *builds* everything it needs from a cloneable
+//! [`SimSpec`] recipe: its own [`Simulator`], its own [`SessionCache`].
+//! The prepared-session cache is thereby partitioned by (model × quant)
+//! key — a key's sessions live on whichever shards have served it:
+//!
+//! * **home assignment** — every key has a stable home shard
+//!   ([`crate::serve::queue::home_shard`], FNV-1a mod N), preferred
+//!   when forming batches, so a key's prepared state stays warm on one
+//!   worker instead of faulting in everywhere;
+//! * **stealing** — an idle worker takes the EDF-first foreign key no
+//!   one is serving rather than sit idle while its own keys are quiet;
+//! * **hot-key replication** (`--replicate-hot`) — a key whose backlog
+//!   reaches `hot_min` may be served by several shards concurrently;
+//!   each prepares its own session replica (an independent, determinis-
+//!   tic QDQ of the same checkpoint — replicas cannot diverge).
+//!
+//! Scheduling never changes results: `run_batch` outputs are
+//! bit-identical per request regardless of batch composition, and a
+//! shard only decides where/when a batch runs. The `serve_shard`
+//! integration tests assert byte-identical responses across worker
+//! counts, batching windows and replication settings.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::quantsim::{EvalOpts, QuantConfig, Simulator};
+
+use super::batcher::{Batcher, ShardSel};
+use super::cache::SessionCache;
+use super::protocol::{codes, Response};
+use super::queue::{home_shard, AdmissionQueue, AnchorKind, BatchKey};
+use super::{Corpora, ServeCfg, ServeStats};
+
+/// Cloneable recipe for building one [`Simulator`] per shard worker —
+/// the shard pool's answer to sessions (and simulators) not being
+/// `Send`: ship the *recipe* across threads, build locally.
+#[derive(Clone)]
+pub struct SimSpec {
+    /// Artifacts directory (as passed to `Simulator::new`).
+    pub artifacts: String,
+    /// Checkpoints directory — shared by all shards, so pretrained
+    /// weights are written once and replicas load the same bytes.
+    pub checkpoints: String,
+    /// Evaluation options every built simulator starts from.
+    pub opts: EvalOpts,
+}
+
+impl SimSpec {
+    /// A spec with default [`EvalOpts`].
+    pub fn new(artifacts: &str, checkpoints: &str) -> SimSpec {
+        SimSpec {
+            artifacts: artifacts.to_string(),
+            checkpoints: checkpoints.to_string(),
+            opts: EvalOpts::default(),
+        }
+    }
+
+    /// Build a fresh [`Simulator`] from this recipe (one per worker).
+    pub fn build(&self) -> Result<Simulator> {
+        let mut sim = Simulator::new(&self.artifacts, &self.checkpoints)?;
+        sim.opts = self.opts.clone();
+        Ok(sim)
+    }
+}
+
+/// Shard-pool tuning knobs (`--workers`, `--replicate-hot`, `--hot-min`).
+#[derive(Debug, Clone)]
+pub struct ShardCfg {
+    /// Worker thread count (1 = the classic single-worker server).
+    pub workers: usize,
+    /// Let several shards serve one key when its backlog is long.
+    pub replicate_hot: bool,
+    /// Minimum queued jobs for a key to count as hot.
+    pub hot_min: usize,
+}
+
+impl Default for ShardCfg {
+    fn default() -> ShardCfg {
+        ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 }
+    }
+}
+
+/// One worker's counters after the pool drains.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// This worker's shard index.
+    pub shard: usize,
+    /// The worker's serve-loop counters.
+    pub serve: ServeStats,
+    /// Batches anchored on a foreign key (work stealing).
+    pub stolen_batches: usize,
+    /// Batches anchored on a key another shard also held (replication).
+    pub hot_batches: usize,
+    /// Session-cache hits on this worker.
+    pub cache_hits: usize,
+    /// Session-cache misses (sessions prepared) on this worker.
+    pub cache_misses: usize,
+}
+
+/// Run the shard pool to completion: spawn `shard.workers` workers,
+/// each serving eligible batches from `queue` until it is closed and
+/// drained, then return per-worker stats (sorted by shard index).
+///
+/// `prewarm` lists (model, quant) keys each worker opens up front *if
+/// it is their home shard* — steady-state measurement without paying
+/// first-request session prepares on the clock.
+///
+/// If any worker fails (e.g. its simulator cannot be built), the queue
+/// is closed, the remaining queued jobs are answered with `run_failed`
+/// errors, and the first error is returned.
+pub fn run_sharded(
+    spec: &SimSpec,
+    queue: &Arc<AdmissionQueue>,
+    serve_cfg: &ServeCfg,
+    shard_cfg: &ShardCfg,
+    prewarm: &[(String, String)],
+) -> Result<Vec<ShardStats>> {
+    anyhow::ensure!(shard_cfg.workers >= 1, "shard pool needs at least one worker");
+    let mut handles = Vec::with_capacity(shard_cfg.workers);
+    for w in 0..shard_cfg.workers {
+        let spec = spec.clone();
+        let queue = Arc::clone(queue);
+        let serve_cfg = serve_cfg.clone();
+        let shard_cfg = shard_cfg.clone();
+        let prewarm: Vec<(String, String)> = prewarm.to_vec();
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-{}", w))
+            .spawn(move || worker_loop(w, &spec, &queue, &serve_cfg, &shard_cfg, &prewarm))
+            .expect("spawn shard worker");
+        handles.push(handle);
+    }
+
+    let mut stats = Vec::with_capacity(shard_cfg.workers);
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => stats.push(s),
+            Ok(Err(e)) => {
+                queue.close();
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                queue.close();
+                first_err.get_or_insert_with(|| anyhow::anyhow!("shard worker panicked"));
+            }
+        }
+    }
+    match first_err {
+        Some(e) => {
+            // Surviving workers have exited; answer whatever is still
+            // queued so no client hangs on a response that never comes.
+            while let Some(job) = queue.pop_front_blocking() {
+                job.reply(Response::err(
+                    job.req.id,
+                    codes::RUN_FAILED,
+                    "server worker failed",
+                ));
+            }
+            Err(e)
+        }
+        None => {
+            stats.sort_by_key(|s| s.shard);
+            Ok(stats)
+        }
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    spec: &SimSpec,
+    queue: &Arc<AdmissionQueue>,
+    serve_cfg: &ServeCfg,
+    shard_cfg: &ShardCfg,
+    prewarm: &[(String, String)],
+) -> Result<ShardStats> {
+    let sim = spec.build().with_context(|| format!("shard {}: build simulator", w))?;
+    let mut cache = SessionCache::new();
+    for (model, quant) in prewarm {
+        let bkey = BatchKey { model: model.clone(), quant: quant.clone() };
+        if home_shard(&bkey, shard_cfg.workers) != w {
+            continue;
+        }
+        let skey = super::session_key(&sim, model, quant);
+        cache
+            .get_or_open(&skey, || sim.open_eval_session(model, &QuantConfig::abfp(quant)))
+            .with_context(|| format!("shard {}: prewarm {}:{}", w, model, quant))?;
+    }
+
+    let batcher = Batcher::new(Arc::clone(queue), serve_cfg.batch_window, serve_cfg.max_batch);
+    let corpora = Corpora::new();
+    let sel = ShardSel {
+        shard: w,
+        nshards: shard_cfg.workers,
+        replicate_hot: shard_cfg.replicate_hot,
+        hot_min: shard_cfg.hot_min,
+    };
+    let mut st = ShardStats { shard: w, ..Default::default() };
+    while let Some(sb) = batcher.next_shard_batch(&sel) {
+        match sb.kind {
+            AnchorKind::Stolen => st.stolen_batches += 1,
+            AnchorKind::Hot => st.hot_batches += 1,
+            AnchorKind::Home => {}
+        }
+        super::dispatch(&sim, &mut cache, &corpora, sb.mb, &mut st.serve);
+        drop(sb.hold);
+    }
+    st.serve.expired = batcher.expired_count();
+    let (hits, misses) = cache.stats();
+    st.cache_hits = hits;
+    st.cache_misses = misses;
+    crate::debug!(
+        "shard {}: {} batches ({} stolen, {} hot), {} ok, {} errors, {} sessions",
+        w,
+        st.serve.batches,
+        st.stolen_batches,
+        st.hot_batches,
+        st.serve.ok,
+        st.serve.errors,
+        misses
+    );
+    Ok(st)
+}

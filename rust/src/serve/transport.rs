@@ -1,0 +1,234 @@
+//! TCP socket transport: the front end the line-delimited JSON protocol
+//! was designed for (`repro serve --listen ADDR`).
+//!
+//! One listener thread accepts connections; each connection gets a
+//! reader thread (parsing request lines into the shared admission
+//! queue) and a writer thread (serializing that connection's responses
+//! back). All connections multiplex into ONE admission queue served by
+//! the shard pool — backpressure is global, so a single chatty client
+//! cannot queue unboundedly ahead of others — and every job carries its
+//! connection's response channel, so responses route back to whoever
+//! asked, in completion order.
+//!
+//! Protocol framing and error codes are exactly those of
+//! [`super::protocol`] (one JSON object per `\n`-terminated line in
+//! each direction); `docs/serving.md` has the operator guide and a
+//! worked `nc`/python client example.
+//!
+//! Shutdown ([`TcpServer::shutdown`]) is abortive for still-connected
+//! clients: the listener stops, open sockets are shut down, admitted
+//! jobs finish draining, and per-worker stats are returned. The CLI
+//! path ([`run_tcp`]) instead serves until the process is killed.
+
+use std::io::{BufRead, BufReader, BufWriter, Write as IoWrite};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::backend;
+
+use super::protocol::{self, codes, Response};
+use super::queue::{AdmissionQueue, Job};
+use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
+use super::ServeCfg;
+
+/// A running TCP server: listener + per-connection pumps + shard pool.
+pub struct TcpServer {
+    local: SocketAddr,
+    queue: Arc<AdmissionQueue>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: JoinHandle<()>,
+    workers: JoinHandle<Result<Vec<ShardStats>>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7411`, port 0 for ephemeral), spawn
+    /// the accept loop and the shard pool, and return immediately.
+    /// `prewarm` keys are opened by their home shards before traffic.
+    pub fn start(
+        spec: SimSpec,
+        addr: &str,
+        serve_cfg: ServeCfg,
+        shard_cfg: ShardCfg,
+        prewarm: Vec<(String, String)>,
+    ) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {}", addr))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let queue = AdmissionQueue::new(serve_cfg.queue_cap);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let conn_handles = Arc::clone(&conn_handles);
+            std::thread::Builder::new()
+                .name("tcp-accept".to_string())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        if let Ok(clone) = stream.try_clone() {
+                            conns.lock().unwrap().push(clone);
+                        }
+                        let h = handle_conn(stream, Arc::clone(&queue));
+                        conn_handles.lock().unwrap().push(h);
+                    }
+                })
+                .expect("spawn tcp accept thread")
+        };
+
+        let workers = {
+            let queue = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name("shard-pool".to_string())
+                .spawn(move || {
+                    run_sharded(&spec, &queue, &serve_cfg, &shard_cfg, &prewarm)
+                })
+                .expect("spawn shard pool supervisor")
+        };
+
+        Ok(TcpServer { local, queue, stop, conns, conn_handles, accept, workers })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, shut open connections down, drain admitted jobs,
+    /// and return per-worker stats.
+    pub fn shutdown(self) -> Result<Vec<ShardStats>> {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop: it re-checks `stop` per connection
+        let _ = TcpStream::connect(self.local);
+        let _ = self.accept.join();
+        // connection readers exit on socket shutdown; their writers
+        // drain whatever responses are already owed to that connection
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conn_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        self.queue.close();
+        match self.workers.join() {
+            Ok(stats) => stats,
+            Err(_) => Err(anyhow::anyhow!("shard pool panicked")),
+        }
+    }
+
+    /// Serve until the accept loop exits (for the CLI: effectively
+    /// until the process is killed), then drain and stop the workers.
+    pub fn wait(self) -> Result<()> {
+        let _ = self.accept.join();
+        self.queue.close();
+        match self.workers.join() {
+            Ok(stats) => {
+                let _ = stats?;
+                Ok(())
+            }
+            Err(_) => Err(anyhow::anyhow!("shard pool panicked")),
+        }
+    }
+}
+
+/// Per-connection pumps: a reader thread (this handle) parsing lines
+/// into the queue, plus a writer thread it owns for the responses.
+fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let (tx, rx) = mpsc::channel::<Response>();
+        let writer = std::thread::spawn(move || {
+            let mut out = BufWriter::new(write_half);
+            for resp in rx {
+                if writeln!(out, "{}", resp.line()).is_err() {
+                    break;
+                }
+                let _ = out.flush();
+            }
+        });
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match protocol::parse_request(line) {
+                Ok(req) => {
+                    let id = req.id;
+                    if queue.try_push(Job::new(req, tx.clone())).is_err() {
+                        let _ = tx.send(Response::err(
+                            id,
+                            codes::QUEUE_FULL,
+                            "queue full (backpressure): retry later",
+                        ));
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Response::err(
+                        protocol::ERR_ID,
+                        codes::BAD_REQUEST,
+                        &format!("bad request: {:#}", e),
+                    ));
+                }
+            }
+        }
+        // EOF/error on the read half: the writer finishes once every
+        // response owed to this connection's admitted jobs has landed
+        // (each queued Job holds a Sender clone; the last drop ends rx).
+        drop(tx);
+        let _ = writer.join();
+    })
+}
+
+/// `repro serve --listen ADDR`: bind, print the bound address, and
+/// serve until killed. The shard pool runs under the calling thread's
+/// supervision; sessions fault in lazily (no prewarm — the first
+/// request for a key pays its session prepare).
+pub fn run_tcp(
+    spec: SimSpec,
+    addr: &str,
+    serve_cfg: &ServeCfg,
+    shard_cfg: &ShardCfg,
+) -> Result<()> {
+    let srv = TcpServer::start(
+        spec,
+        addr,
+        serve_cfg.clone(),
+        shard_cfg.clone(),
+        Vec::new(),
+    )?;
+    // machine-readable first line so scripts can scrape the bound port
+    println!("listening on {}", srv.local_addr());
+    crate::info!(
+        "serving on tcp://{}: workers={} replicate_hot={} queue_cap={} \
+         batch_window={:?} max_batch={} backend={}",
+        srv.local_addr(),
+        shard_cfg.workers,
+        shard_cfg.replicate_hot,
+        serve_cfg.queue_cap,
+        serve_cfg.batch_window,
+        serve_cfg.max_batch,
+        backend::active().describe()
+    );
+    srv.wait()
+}

@@ -217,6 +217,14 @@ pub fn run_training(
     Ok(TrainResult { params: out_store, losses })
 }
 
+/// Serialize checkpoint-producing sections across threads: sharded
+/// serve workers build their simulators concurrently, and two threads
+/// pretraining the same model would race on the checkpoint file (one
+/// could load a half-written store). Two separate locks because
+/// `qat_cached` calls `pretrain_cached` — one lock would self-deadlock.
+static PRETRAIN_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+static QAT_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Pretrain (or fetch cached) FP32 weights for a model.
 pub fn pretrain_cached(
     rt: &Runtime,
@@ -224,6 +232,7 @@ pub fn pretrain_cached(
     ck: &model::CkptDir,
     opts: &TrainOpts,
 ) -> Result<TensorStore> {
+    let _g = PRETRAIN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let cfg = rt.manifest.model(model_name)?.clone();
     if ck.exists(model_name, "fp32") {
         let s = ck.load(model_name, "fp32")?;
@@ -246,6 +255,7 @@ pub fn qat_cached(
     ck: &model::CkptDir,
     opts: &TrainOpts,
 ) -> Result<TensorStore> {
+    let _g = QAT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     if ck.exists(model_name, qat_config) {
         return ck.load(model_name, qat_config);
     }

@@ -98,7 +98,11 @@ fn queue_backpressure_rejects_overflow_and_server_recovers() {
     let rejected = queue
         .try_push(Job::new(Request::new(3, "sim-opt-125m", "fp32", 2), tx3))
         .unwrap_err();
-    rejected.reply(Response::err(rejected.req.id, "queue full (backpressure)"));
+    rejected.reply(Response::err(
+        rejected.req.id,
+        intfpqsim::serve::protocol::codes::QUEUE_FULL,
+        "queue full (backpressure)",
+    ));
     queue.close();
 
     let cfg = ServeCfg::default();
@@ -233,6 +237,7 @@ fn loadgen_single_key_traffic_coalesces_above_occupancy_one() {
             batch_window: Duration::from_millis(30),
             max_batch: 8,
         },
+        ..Default::default()
     };
     let report = run_loadgen(&sim, &cfg).unwrap();
     assert_eq!(report.errors, 0);

@@ -1,0 +1,258 @@
+//! Sharded-serving integration tests: the EDF queue property, the
+//! determinism matrix over worker counts × batching × replication, and
+//! a real-socket round trip through the TCP transport.
+//!
+//! Like the other integration suites these run with no artifacts and no
+//! PJRT — the native executor synthesizes the manifest, and weights are
+//! pretrained briefly into throwaway checkpoint directories.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use intfpqsim::prop_assert;
+use intfpqsim::serve::batcher::Batcher;
+use intfpqsim::serve::loadgen::{
+    run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg,
+};
+use intfpqsim::serve::protocol::{codes, Request};
+use intfpqsim::serve::queue::{AdmissionQueue, Job};
+use intfpqsim::serve::shard::{ShardCfg, SimSpec};
+use intfpqsim::serve::transport::TcpServer;
+use intfpqsim::serve::ServeCfg;
+use intfpqsim::train::TrainOpts;
+use intfpqsim::util::prop;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_spec(tag: &str) -> SimSpec {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_shard_{}", tag));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut spec = SimSpec::new("artifacts", dir.to_str().unwrap());
+    spec.opts.eval_batches = 2;
+    spec.opts.pretrain_opts = TrainOpts { steps: 25, log_every: 1000, ..Default::default() };
+    spec
+}
+
+/// Property: across random keys, deadlines and batch caps, the
+/// deadline-aware queue (a) never dispatches a job whose deadline
+/// lapsed in the queue — it is answered with `deadline_expired_in_queue`
+/// instead — (b) never mixes keys within a batch, and (c) dispatches
+/// each key's jobs in EDF order, which for same-key no-deadline traffic
+/// is exactly arrival order (the determinism the serve tests lean on).
+#[test]
+fn prop_edf_never_dispatches_expired_and_keeps_same_key_order() {
+    let _g = lock();
+    prop::check("edf_queue", 24, |rng| {
+        let q = AdmissionQueue::new(256);
+        let nkeys = 1 + rng.below(3);
+        let njobs = 5 + rng.below(16);
+        // (quant, deadline_ms): Some(1) will expire, Some(60_000) won't
+        let mut meta: Vec<(String, Option<u64>)> = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..njobs {
+            let quant = format!("k{}", rng.below(nkeys));
+            let dl = match rng.below(3) {
+                0 => None,
+                1 => Some(1),
+                _ => Some(60_000),
+            };
+            let mut req = Request::new(id as u64, "m", &quant, 0);
+            req.deadline_ms = dl;
+            let (tx, rx) = mpsc::channel();
+            q.try_push(Job::new(req, tx)).map_err(|_| "queue rejected a push".to_string())?;
+            meta.push((quant, dl));
+            rxs.push(rx);
+        }
+        // let the 1ms deadlines lapse while everything sits queued
+        std::thread::sleep(Duration::from_millis(5));
+        q.close();
+
+        let max_batch = 1 + rng.below(4);
+        let b = Batcher::new(Arc::clone(&q), Duration::from_millis(1), max_batch);
+        let mut dispatched: Vec<u64> = Vec::new();
+        while let Some(mb) = b.next_batch() {
+            prop_assert!(
+                mb.jobs.len() <= max_batch,
+                "batch of {} exceeds max_batch {}",
+                mb.jobs.len(),
+                max_batch
+            );
+            for j in &mb.jobs {
+                prop_assert!(
+                    j.req.quant == mb.key.quant,
+                    "job {} (key {}) rode a {} batch",
+                    j.req.id,
+                    j.req.quant,
+                    mb.key.quant
+                );
+                dispatched.push(j.req.id);
+            }
+        }
+
+        for (id, (_, dl)) in meta.iter().enumerate() {
+            let ran = dispatched.contains(&(id as u64));
+            if *dl == Some(1) {
+                prop_assert!(!ran, "expired job {} was dispatched", id);
+                let resp = rxs[id]
+                    .try_recv()
+                    .map_err(|_| format!("expired job {} got no response", id))?;
+                prop_assert!(
+                    resp.code.as_deref() == Some(codes::DEADLINE_QUEUE),
+                    "expired job {} got code {:?}",
+                    id,
+                    resp.code
+                );
+            } else {
+                prop_assert!(ran, "live job {} was never dispatched", id);
+            }
+        }
+
+        // per key: EDF = live deadlined jobs (arrival order — their
+        // absolute deadlines are arrival-ordered) before no-deadline
+        // jobs (arrival order)
+        for k in 0..nkeys {
+            let quant = format!("k{}", k);
+            let got: Vec<u64> = dispatched
+                .iter()
+                .copied()
+                .filter(|&id| meta[id as usize].0 == quant)
+                .collect();
+            let mut want: Vec<u64> = (0..njobs as u64)
+                .filter(|&id| {
+                    meta[id as usize].0 == quant && meta[id as usize].1 == Some(60_000)
+                })
+                .collect();
+            want.extend((0..njobs as u64).filter(|&id| {
+                meta[id as usize].0 == quant && meta[id as usize].1.is_none()
+            }));
+            prop_assert!(
+                got == want,
+                "key {}: dispatch order {:?} != EDF order {:?}",
+                quant,
+                got,
+                want
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The sharded determinism matrix: per-request outputs are bit-identical
+/// across worker counts, batching windows and hot-key replication — the
+/// single-worker unbatched run is the reference.
+#[test]
+fn sharded_outputs_bit_identical_across_workers_and_batching() {
+    let _g = lock();
+    let spec = tmp_spec("determinism");
+    let sim = spec.build().unwrap();
+    let mix = vec![
+        ("sim-opt-125m".to_string(), "fp32".to_string()),
+        ("sim-opt-125m".to_string(), "abfp_w4a4_n64".to_string()),
+    ];
+    let base = LoadgenCfg {
+        clients: 3,
+        requests_per_client: 3,
+        mix,
+        deadline_ms: None,
+        seed: 7,
+        prewarm: true,
+        ..Default::default()
+    };
+    let reference = run_loadgen(
+        &sim,
+        &LoadgenCfg {
+            serve: ServeCfg {
+                queue_cap: 64,
+                batch_window: Duration::from_millis(1),
+                max_batch: 1,
+            },
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    assert_eq!(reference.errors, 0);
+    assert_eq!(reference.responses.len(), 9);
+
+    let aggressive = ServeCfg {
+        queue_cap: 64,
+        batch_window: Duration::from_millis(30),
+        max_batch: 8,
+    };
+    let unbatched = ServeCfg {
+        queue_cap: 64,
+        batch_window: Duration::from_millis(1),
+        max_batch: 1,
+    };
+    let cells = [
+        (1usize, false, aggressive.clone()),
+        (3, false, unbatched),
+        (3, true, aggressive),
+    ];
+    for (workers, replicate_hot, serve) in cells {
+        let cfg = LoadgenCfg {
+            serve,
+            shard: ShardCfg { workers, replicate_hot, hot_min: 2 },
+            ..base.clone()
+        };
+        let run = run_loadgen_sharded(&spec, &cfg).unwrap();
+        assert_eq!(run.errors, 0, "workers={}", workers);
+        assert_eq!(run.workers, workers);
+        assert_eq!(run.per_worker.len(), workers);
+        assert_eq!(run.responses.len(), reference.responses.len());
+        for (ra, rb) in reference.responses.iter().zip(run.responses.iter()) {
+            assert_eq!(ra.id, rb.id);
+            assert!(rb.ok, "request {} failed under workers={}", rb.id, workers);
+            assert_eq!(
+                ra.outputs, rb.outputs,
+                "request {}: output drift (workers={}, replicate_hot={})",
+                ra.id, workers, replicate_hot
+            );
+        }
+        let batches: usize = run.per_worker.iter().map(|w| w.serve.batches).sum();
+        assert!(batches > 0, "per-worker stats must attribute the batches");
+    }
+}
+
+/// Real-socket round trip: a 2-worker TCP server serves the closed-loop
+/// TCP loadgen clients, then shuts down cleanly with per-worker stats
+/// accounting for every request.
+#[test]
+fn tcp_server_round_trips_the_loadgen_over_real_sockets() {
+    let _g = lock();
+    let spec = tmp_spec("tcp");
+    // the probe validates the mix locally and does the token accounting
+    let probe = spec.build().unwrap();
+    let srv = TcpServer::start(
+        spec,
+        "127.0.0.1:0",
+        ServeCfg::default(),
+        ShardCfg { workers: 2, replicate_hot: false, hot_min: 16 },
+        Vec::new(),
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let cfg = LoadgenCfg {
+        clients: 2,
+        requests_per_client: 2,
+        mix: vec![("sim-opt-125m".to_string(), "fp32".to_string())],
+        prewarm: false,
+        ..Default::default()
+    };
+    let report = run_loadgen_tcp(&probe, &addr, &cfg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.ok, 4);
+    assert_eq!(report.workers, 0, "remote server: shape unknown to the client");
+    assert!(report.toks_per_s > 0.0);
+
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.len(), 2);
+    let served: usize = stats.iter().map(|s| s.serve.ok).sum();
+    assert_eq!(served, 4, "per-worker stats must account for every request");
+}

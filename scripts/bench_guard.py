@@ -1,75 +1,103 @@
 #!/usr/bin/env python3
-"""Bench regression guard: diff two BENCH_runtime.json files.
+"""Bench regression guard: diff a fresh BENCH json against a rolling
+baseline of previous CI artifacts.
 
-Compares `toks_per_s` per (model, quant, backend) cell between a
-previous CI artifact and the fresh one, and emits non-blocking GitHub
-`::warning::` annotations for cells that regressed by more than the
-threshold (default 10%). Always exits 0 — the guard annotates, it does
-not gate (CI runners are shared and noisy; a red X on noise would train
-people to ignore it).
+Compares `toks_per_s` per (section, model, quant, backend) cell between
+the fresh artifact and the **median** of the last N main-branch
+artifacts, and emits non-blocking GitHub `::warning::` annotations for
+cells that regressed by more than the threshold (default 10%). The
+median baseline absorbs single noisy runs on shared CI runners — one
+unlucky previous artifact no longer poisons (or masks) the comparison
+the way a single-file diff did. Always exits 0 — the guard annotates,
+it does not gate (a red X on noise would train people to ignore it).
 
-Usage: bench_guard.py PREV.json CURRENT.json [--threshold 0.10]
+Both `eval_throughput` (BENCH_runtime.json) and `serve_throughput`
+(BENCH_serve.json) sections are understood; cells are keyed per section
+so the same (model, quant, backend) triple never collides across files.
+
+Usage: bench_guard.py CURRENT.json PREV.json [PREV.json ...]
+                      [--threshold 0.10]
 """
 
 import argparse
 import json
+import statistics
 import sys
+
+SECTIONS = ("eval_throughput", "serve_throughput")
 
 
 def load_cells(path):
     with open(path) as f:
         doc = json.load(f)
     cells = {}
-    for row in doc.get("eval_throughput", []):
-        key = (row.get("model"), row.get("quant"), row.get("backend"))
-        tps = row.get("toks_per_s")
-        if all(key) and isinstance(tps, (int, float)) and tps > 0:
-            cells[key] = tps
+    for section in SECTIONS:
+        for row in doc.get(section, []):
+            key = (section, row.get("model"), row.get("quant"), row.get("backend"))
+            tps = row.get("toks_per_s")
+            if all(key) and isinstance(tps, (int, float)) and tps > 0:
+                cells[key] = tps
     return cells
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("previous")
     ap.add_argument("current")
+    ap.add_argument("previous", nargs="+")
     ap.add_argument("--threshold", type=float, default=0.10)
     args = ap.parse_args()
 
     try:
-        prev = load_cells(args.previous)
         cur = load_cells(args.current)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"::notice::bench guard: could not parse inputs ({e}); skipping")
+        print(f"::notice::bench guard: could not parse current artifact ({e}); skipping")
         return 0
 
-    if not prev or not cur:
-        print("::notice::bench guard: no comparable eval_throughput cells; skipping")
+    # Per-cell history across however many previous artifacts parsed;
+    # unreadable baselines are dropped individually, not fatally.
+    history = {}
+    usable_prev = 0
+    for path in args.previous:
+        try:
+            prev = load_cells(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"::notice::bench guard: skipping unreadable baseline {path} ({e})")
+            continue
+        if not prev:
+            continue
+        usable_prev += 1
+        for key, tps in prev.items():
+            history.setdefault(key, []).append(tps)
+
+    if not history or not cur:
+        print("::notice::bench guard: no comparable throughput cells; skipping")
         return 0
 
     regressions = []
     improvements = 0
-    for key, old_tps in sorted(prev.items()):
+    for key, samples in sorted(history.items()):
         new_tps = cur.get(key)
         if new_tps is None:
             continue
-        ratio = new_tps / old_tps
-        model, quant, backend = key
+        baseline = statistics.median(samples)
+        ratio = new_tps / baseline
         if ratio < 1.0 - args.threshold:
-            regressions.append((model, quant, backend, old_tps, new_tps, ratio))
+            regressions.append((key, baseline, new_tps, ratio, len(samples)))
         elif ratio > 1.0 + args.threshold:
             improvements += 1
 
-    for model, quant, backend, old_tps, new_tps, ratio in regressions:
+    for (section, model, quant, backend), baseline, new_tps, ratio, n in regressions:
         print(
-            f"::warning title=bench regression::{model}/{quant} @ {backend}: "
-            f"{old_tps:.0f} -> {new_tps:.0f} tok/s ({(1 - ratio) * 100:.1f}% slower "
-            f"than the previous BENCH_runtime artifact)"
+            f"::warning title=bench regression::{section}: {model}/{quant} @ {backend}: "
+            f"median {baseline:.0f} -> {new_tps:.0f} tok/s "
+            f"({(1 - ratio) * 100:.1f}% slower than the median of {n} "
+            f"previous main-branch artifact{'s' if n != 1 else ''})"
         )
 
-    common = len(set(prev) & set(cur))
+    common = len(set(history) & set(cur))
     print(
-        f"bench guard: {common} comparable cells, "
-        f"{len(regressions)} regressed > {args.threshold:.0%}, "
+        f"bench guard: {common} comparable cells over {usable_prev} baseline "
+        f"artifact(s), {len(regressions)} regressed > {args.threshold:.0%}, "
         f"{improvements} improved > {args.threshold:.0%}"
     )
     return 0
