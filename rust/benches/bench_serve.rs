@@ -1,22 +1,31 @@
 //! Serving benchmarks: sustained tokens/sec, batch occupancy and
 //! p50/p95/p99 latency of the micro-batching server, per tensor backend
 //! × quant config (plus one mixed-config cell per backend), a
-//! shard-scaling sweep over worker counts, and a real-socket TCP cell.
+//! shard-scaling sweep over worker counts, a real-socket TCP cell, and
+//! a `proto_hot_path` microbench of the wire parse/serialize path
+//! (ns/request and — via a counting global allocator — heap
+//! allocations/request, which must be 0 in steady state).
 //!
-//! Each cell drives the server with the closed-loop loadgen (prewarmed
-//! sessions, 2 ms batching window), so the numbers measure steady-state
-//! serving — the trajectory future perf PRs optimize against. CI runs
-//! `-- --fast` and uploads `BENCH_serve.json` next to
+//! Each serving cell drives the server with the closed-loop loadgen
+//! (prewarmed sessions, 2 ms batching window), so the numbers measure
+//! steady-state serving — the trajectory future perf PRs optimize
+//! against. CI runs `-- --fast` and uploads `BENCH_serve.json` next to
 //! `BENCH_tensor.json`/`BENCH_runtime.json`; see the README field guide
-//! for the `shard_scaling`/`tcp` fields.
+//! for the `shard_scaling`/`tcp`/`proto_hot_path` fields.
 //!
 //!   cargo bench --bench bench_serve [-- --fast]
 
-use std::time::Duration;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use intfpqsim::quantsim::Simulator;
 use intfpqsim::serve::loadgen::{
     run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg, LoadgenReport,
+};
+use intfpqsim::serve::protocol::{
+    parse_request, parse_request_streaming, OutputSummary, Request, Response, MAX_DEPTH,
+    MAX_LINE_BYTES,
 };
 use intfpqsim::serve::shard::{ShardCfg, SimSpec};
 use intfpqsim::serve::transport::TcpServer;
@@ -26,6 +35,107 @@ use intfpqsim::train::TrainOpts;
 use intfpqsim::util::json::Json;
 
 const MODEL: &str = "sim-opt-125m";
+
+/// Counts heap acquisitions so `proto_hot_path` can report
+/// allocations/request; delegates everything to the system allocator.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Microbench of the wire hot path: streaming parse + reused-buffer
+/// response serialize, vs the tree parser + allocating serializer as
+/// the reference. Single-threaded, so the allocation counter attributes
+/// cleanly.
+fn proto_hot_path_cell(fast: bool) -> Json {
+    let iters: u64 = if fast { 50_000 } else { 500_000 };
+    let req = Request {
+        id: 12345,
+        model: MODEL.to_string(),
+        quant: "abfp_w4a4_n64".to_string(),
+        batch_index: 3,
+        deadline_ms: Some(250),
+        tokens: Some((0..64).collect()),
+    };
+    let mut line = Vec::new();
+    req.write_line(&mut line);
+    let resp = Response::ok(
+        12345,
+        vec![OutputSummary { shape: vec![2, 3], sum: 21.75, first: vec![1.0, 2.5, 3.0, 4.25] }],
+        4,
+        0.3125,
+        1.0625,
+    );
+
+    let mut scratch = Request::default();
+    let mut rbuf: Vec<u8> = Vec::new();
+    for _ in 0..64 {
+        parse_request_streaming(&line, &mut scratch).expect("warm-up parse");
+        resp.write_line(&mut rbuf);
+    }
+    assert_eq!(scratch, req, "streaming parse must reproduce the request");
+
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        parse_request_streaming(std::hint::black_box(&line[..]), &mut scratch)
+            .expect("hot-path parse");
+        resp.write_line(&mut rbuf);
+        std::hint::black_box((&scratch, &rbuf));
+    }
+    let ns_per_req = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let allocs_per_req = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / iters as f64;
+
+    // tree-parser reference (allocating path), fewer iters — it is the
+    // baseline being replaced, not the thing under optimization
+    let text = std::str::from_utf8(&line).expect("request line is utf-8");
+    let tree_iters = (iters / 10).max(1);
+    let b0 = ALLOCS.load(Ordering::Relaxed);
+    let t1 = Instant::now();
+    for _ in 0..tree_iters {
+        let r = parse_request(std::hint::black_box(text)).expect("tree parse");
+        std::hint::black_box(resp.line());
+        std::hint::black_box(r);
+    }
+    let tree_ns_per_req = t1.elapsed().as_nanos() as f64 / tree_iters as f64;
+    let tree_allocs_per_req = (ALLOCS.load(Ordering::Relaxed) - b0) as f64 / tree_iters as f64;
+
+    println!(
+        "{:<28} {:.0} ns/req, {:.2} allocs/req (tree: {:.0} ns/req, {:.2} allocs/req)",
+        "proto_hot_path", ns_per_req, allocs_per_req, tree_ns_per_req, tree_allocs_per_req
+    );
+
+    Json::obj(vec![
+        ("iters", Json::Num(iters as f64)),
+        ("allocs_per_request", Json::Num(allocs_per_req)),
+        ("parse_serialize_ns_per_request", Json::Num(ns_per_req)),
+        ("tree_iters", Json::Num(tree_iters as f64)),
+        ("tree_allocs_per_request", Json::Num(tree_allocs_per_req)),
+        ("tree_parse_serialize_ns_per_request", Json::Num(tree_ns_per_req)),
+        ("max_line_bytes", Json::Num(MAX_LINE_BYTES as f64)),
+        ("max_depth", Json::Num(MAX_DEPTH as f64)),
+    ])
+}
 
 fn mixed_mix() -> Vec<(String, String)> {
     vec![
@@ -70,6 +180,8 @@ fn percentile_fields(rep: &LoadgenReport) -> Vec<(&'static str, Json)> {
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
+    println!("== protocol hot path ==");
+    let proto_cell = proto_hot_path_cell(fast);
     let threads = backend::env_threads();
     let pretrain = TrainOpts { steps: if fast { 40 } else { 120 }, ..Default::default() };
     let mut sim = Simulator::new("artifacts", "checkpoints").unwrap();
@@ -205,6 +317,7 @@ fn main() {
                 fields
             }),
         ),
+        ("proto_hot_path", proto_cell),
     ]);
     match std::fs::write("BENCH_serve.json", json.pretty()) {
         Ok(()) => println!("\nwrote BENCH_serve.json"),

@@ -24,7 +24,7 @@
 //! `BENCH_serve.json` per backend × quant config × worker count.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Write as IoWrite};
+use std::io::{BufReader, BufWriter, Write as IoWrite};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -39,6 +39,7 @@ use super::cache::SessionCache;
 use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
 use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
+use super::transport;
 use super::{serve_loop, ServeCfg, ServeStats};
 
 /// Load-generator knobs (`repro loadgen --clients N ...`).
@@ -460,19 +461,39 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
             let mut writer = BufWriter::new(stream.try_clone().context("clone stream")?);
             let mut reader = BufReader::new(stream);
             let mut records = Vec::with_capacity(cfg.requests_per_client);
+            // reused wire buffers: requests serialize via write_line,
+            // replies land in a capped reused read buffer — the client
+            // side of the zero-allocation hot path
+            let mut wbuf: Vec<u8> = Vec::with_capacity(256);
+            let mut rbuf: Vec<u8> = Vec::with_capacity(256);
             for i in 0..cfg.requests_per_client {
                 let req = request_for(&cfg, c, i);
-                let line = req.line();
+                req.write_line(&mut wbuf);
+                wbuf.push(b'\n');
                 let started = Instant::now();
                 // Closed-loop backpressure over the wire: a queue_full
                 // error means wait and resubmit the same request.
                 let resp = loop {
-                    writeln!(writer, "{}", line).context("send request")?;
+                    writer.write_all(&wbuf).context("send request")?;
                     writer.flush().context("flush request")?;
-                    let mut reply = String::new();
-                    let n = reader.read_line(&mut reply).context("read response")?;
-                    anyhow::ensure!(n > 0, "server closed the connection");
-                    let resp = protocol::parse_response(reply.trim())?;
+                    match transport::read_line_capped(
+                        &mut reader,
+                        &mut rbuf,
+                        protocol::MAX_LINE_BYTES,
+                    )
+                    .context("read response")?
+                    {
+                        transport::LineRead::Line => {}
+                        transport::LineRead::Eof => {
+                            anyhow::bail!("server closed the connection")
+                        }
+                        transport::LineRead::TooLong => {
+                            anyhow::bail!("response line exceeds max_line_bytes")
+                        }
+                    }
+                    let reply = std::str::from_utf8(transport::trim_ws(&rbuf))
+                        .context("response is not utf-8")?;
+                    let resp = protocol::parse_response(reply)?;
                     if !resp.ok && resp.code.as_deref() == Some(codes::QUEUE_FULL) {
                         std::thread::sleep(Duration::from_micros(200));
                         continue;

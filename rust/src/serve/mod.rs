@@ -52,7 +52,7 @@ pub mod queue;
 pub mod shard;
 pub mod transport;
 
-use std::io::{BufRead, Write as IoWrite};
+use std::io::Write as IoWrite;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -333,8 +333,13 @@ pub fn serve_loop(
 }
 
 /// Spawn the stdin→queue reader and the queue→stdout writer shared by
-/// both stdio front ends. The reader answers parse failures and
-/// queue-full rejections directly and closes the queue at EOF.
+/// both stdio front ends. The reader answers parse failures,
+/// over-length lines and queue-full rejections directly and closes the
+/// queue at EOF. Both pumps run on the same reused-buffer streaming
+/// path as the TCP transport: capped line reads (bounded memory under
+/// an endless line), [`protocol::parse_request_streaming`] into a
+/// scratch request, [`Response::write_line`] into a reused write
+/// buffer.
 fn spawn_stdio_pump(
     queue: &Arc<AdmissionQueue>,
 ) -> (
@@ -346,9 +351,12 @@ fn spawn_stdio_pump(
 
     let writer = std::thread::spawn(move || {
         let stdout = std::io::stdout();
+        let mut buf: Vec<u8> = Vec::with_capacity(256);
         for resp in rx {
+            resp.write_line(&mut buf);
+            buf.push(b'\n');
             let mut out = stdout.lock();
-            let _ = writeln!(out, "{}", resp.line());
+            let _ = out.write_all(&buf);
             let _ = out.flush();
         }
     });
@@ -358,16 +366,30 @@ fn spawn_stdio_pump(
         let tx = tx.clone();
         std::thread::spawn(move || {
             let stdin = std::io::stdin();
-            for line in stdin.lock().lines() {
-                let Ok(line) = line else { break };
-                let line = line.trim();
-                if line.is_empty() {
+            let mut lock = stdin.lock();
+            let mut line: Vec<u8> = Vec::with_capacity(256);
+            let mut scratch = Request::default();
+            loop {
+                match transport::read_line_capped(
+                    &mut lock,
+                    &mut line,
+                    protocol::MAX_LINE_BYTES,
+                ) {
+                    Ok(transport::LineRead::Eof) | Err(_) => break,
+                    Ok(transport::LineRead::TooLong) => {
+                        let _ = tx.send(transport::oversized_response());
+                        continue;
+                    }
+                    Ok(transport::LineRead::Line) => {}
+                }
+                let bytes = transport::trim_ws(&line);
+                if bytes.is_empty() {
                     continue;
                 }
-                match protocol::parse_request(line) {
-                    Ok(req) => {
-                        let id = req.id;
-                        if queue.try_push(Job::new(req, tx.clone())).is_err() {
+                match protocol::parse_request_streaming(bytes, &mut scratch) {
+                    Ok(()) => {
+                        let id = scratch.id;
+                        if queue.try_push(Job::new(scratch.clone(), tx.clone())).is_err() {
                             let _ = tx.send(Response::err(
                                 id,
                                 codes::QUEUE_FULL,

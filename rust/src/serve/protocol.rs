@@ -47,14 +47,27 @@
 //! responses set `ok: false` and carry a human-readable `error` message
 //! plus a stable machine-readable `code` (see [`codes`]).
 
+use std::io::Write as IoWrite;
+
 use anyhow::{Context, Result};
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::json_stream::{self, StreamParser, Token};
+
+pub use crate::util::json_stream::MAX_DEPTH;
 
 /// Response id used for lines that failed to parse (no request id to
 /// echo). Reserved: requests may use any id below it.
 pub const ERR_ID: u64 = u64::MAX;
+
+/// Maximum accepted request-line length in bytes (newline excluded).
+/// The transport reads lines through a capped reader, so a client
+/// streaming an endless line costs bounded memory: the oversized line
+/// is discarded as it arrives, answered with `bad_request`, and the
+/// connection stays usable. Documented in `docs/serving.md` (the
+/// `wire:limits` table is machine-checked against this constant).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Every field a request line may carry, as documented in
 /// `docs/serving.md`. Unknown fields are rejected at parse time.
@@ -122,7 +135,11 @@ fn as_uint(j: &Json, what: &str) -> Result<u64> {
 }
 
 /// One parsed request line (see the module docs for field semantics).
-#[derive(Debug, Clone)]
+/// `Default` is the empty scratch value [`parse_request_streaming`]
+/// fills — reusing one `Request` across lines keeps its string/vec
+/// capacity, which is what makes the transport parse path
+/// allocation-free in steady state.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Request {
     /// Client-chosen id echoed on the response; must be below [`ERR_ID`].
     pub id: u64,
@@ -176,6 +193,37 @@ impl Request {
     pub fn line(&self) -> String {
         self.to_json().dump()
     }
+
+    /// Serialize the request into a reused buffer, byte-identical to
+    /// [`Request::line`] (same sorted key order, same number
+    /// formatting) but with zero allocation once `out` has warmed up.
+    /// No trailing newline — callers frame with `out.push(b'\n')`.
+    pub fn write_line(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(b"{\"batch\":");
+        write_num(out, self.batch_index as f64);
+        if let Some(d) = self.deadline_ms {
+            out.extend_from_slice(b",\"deadline_ms\":");
+            write_num(out, d as f64);
+        }
+        out.extend_from_slice(b",\"id\":");
+        write_num(out, self.id as f64);
+        out.extend_from_slice(b",\"model\":");
+        write_escaped_bytes(out, &self.model);
+        out.extend_from_slice(b",\"quant\":");
+        write_escaped_bytes(out, &self.quant);
+        if let Some(toks) = &self.tokens {
+            out.extend_from_slice(b",\"tokens\":[");
+            for (i, &t) in toks.iter().enumerate() {
+                if i > 0 {
+                    out.push(b',');
+                }
+                write_num(out, t as f64);
+            }
+            out.push(b']');
+        }
+        out.push(b'}');
+    }
 }
 
 /// Parse one protocol line into a [`Request`].
@@ -196,11 +244,15 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .and_then(Json::as_str)
         .context("request needs a \"model\" string")?
         .to_string();
-    let quant = j
-        .get("quant")
-        .and_then(Json::as_str)
-        .unwrap_or("fp32")
-        .to_string();
+    // strict: a present-but-non-string quant is an error, never a
+    // silent fallback to fp32 (matching the streaming parser)
+    let quant = match j.get("quant") {
+        None => "fp32".to_string(),
+        Some(q) => q
+            .as_str()
+            .context("\"quant\" must be a string")?
+            .to_string(),
+    };
     let batch_index = match j.get("batch") {
         None => 0,
         Some(b) => as_uint(b, "\"batch\"")?,
@@ -233,6 +285,166 @@ pub fn parse_request(line: &str) -> Result<Request> {
         Some(d) => Some(as_uint(d, "\"deadline_ms\"")?),
     };
     Ok(Request { id, model, quant, batch_index, tokens, deadline_ms })
+}
+
+fn wire_err(e: json_stream::StreamError) -> anyhow::Error {
+    anyhow::anyhow!("bad request json: {}", e)
+}
+
+/// The streaming twin of [`as_uint`]: the next token must be a
+/// non-negative integer number.
+fn stream_uint(p: &mut StreamParser<'_>, what: &str) -> Result<u64> {
+    match p.next_token().map_err(wire_err)? {
+        Some(Token::Num(n)) => {
+            anyhow::ensure!(
+                n >= 0.0 && n.fract() == 0.0 && n < u64::MAX as f64,
+                "{} must be a non-negative integer, got {}",
+                what,
+                n
+            );
+            Ok(n as u64)
+        }
+        _ => anyhow::bail!("{} must be a number", what),
+    }
+}
+
+/// The next token must be a string; decode it into the reused `out`.
+fn stream_string(p: &mut StreamParser<'_>, out: &mut String, what: &str) -> Result<()> {
+    match p.next_token().map_err(wire_err)? {
+        Some(Token::Str(s)) => {
+            out.clear();
+            s.append_to(out);
+            Ok(())
+        }
+        _ => anyhow::bail!("{} must be a string", what),
+    }
+}
+
+/// Parse one wire line into a reused [`Request`] — the transport hot
+/// path. Built on the non-recursive [`StreamParser`]: no `Json` tree,
+/// no per-field `String`; field values land in `out`'s existing
+/// string/vec capacity, so a warmed scratch request parses with zero
+/// allocations. Accept/reject decisions and every parsed field agree
+/// with [`parse_request`] (held by the differential corpus in
+/// `tests/protocol_stream.rs`).
+pub fn parse_request_streaming(line: &[u8], out: &mut Request) -> Result<()> {
+    let mut p = StreamParser::new(line);
+    match p.next_token().map_err(wire_err)? {
+        Some(Token::ObjStart) => {}
+        _ => anyhow::bail!("request must be a JSON object"),
+    }
+    out.id = 0;
+    out.model.clear();
+    out.quant.clear();
+    out.batch_index = 0;
+    out.deadline_ms = None;
+    // keep the tokens capacity across lines that carry tokens
+    let mut tokens = out.tokens.take().unwrap_or_default();
+    tokens.clear();
+    let (mut saw_id, mut saw_model, mut saw_quant, mut saw_tokens) =
+        (false, false, false, false);
+    loop {
+        let key = match p.next_token().map_err(wire_err)? {
+            Some(Token::Key(k)) => k,
+            Some(Token::ObjEnd) => break,
+            _ => anyhow::bail!("request must be a JSON object"),
+        };
+        if key.eq_str("id") {
+            out.id = stream_uint(&mut p, "\"id\"")?;
+            saw_id = true;
+        } else if key.eq_str("model") {
+            stream_string(&mut p, &mut out.model, "\"model\"")?;
+            saw_model = true;
+        } else if key.eq_str("quant") {
+            stream_string(&mut p, &mut out.quant, "\"quant\"")?;
+            saw_quant = true;
+        } else if key.eq_str("batch") {
+            out.batch_index = stream_uint(&mut p, "\"batch\"")?;
+        } else if key.eq_str("deadline_ms") {
+            out.deadline_ms = Some(stream_uint(&mut p, "\"deadline_ms\"")?);
+        } else if key.eq_str("tokens") {
+            match p.next_token().map_err(wire_err)? {
+                Some(Token::ArrStart) => {}
+                _ => anyhow::bail!("\"tokens\" must be an array"),
+            }
+            tokens.clear();
+            let mut i = 0usize;
+            loop {
+                match p.next_token().map_err(wire_err)? {
+                    Some(Token::ArrEnd) => break,
+                    Some(Token::Num(n)) => {
+                        anyhow::ensure!(
+                            n.fract() == 0.0
+                                && (i32::MIN as f64..=i32::MAX as f64).contains(&n),
+                            "\"tokens\"[{}] must be an integer token id, got {}",
+                            i,
+                            n
+                        );
+                        tokens.push(n as i32);
+                        i += 1;
+                    }
+                    _ => anyhow::bail!("\"tokens\"[{}] is not a number", i),
+                }
+            }
+            saw_tokens = true;
+        } else {
+            // error path: decoding the unknown key may allocate, which
+            // is fine — rejects are off the hot path
+            let mut name = String::new();
+            key.append_to(&mut name);
+            anyhow::bail!(
+                "unknown request field {:?} (known: {})",
+                name,
+                REQUEST_FIELDS.join(", ")
+            );
+        }
+    }
+    match p.next_token().map_err(wire_err)? {
+        None => {}
+        Some(_) => anyhow::bail!("trailing data after request object"),
+    }
+    anyhow::ensure!(saw_id, "request needs a numeric \"id\"");
+    anyhow::ensure!(saw_model, "request needs a \"model\" string");
+    if !saw_quant {
+        out.quant.push_str("fp32");
+    }
+    out.tokens = if saw_tokens { Some(tokens) } else { None };
+    Ok(())
+}
+
+/// `Json::dump`'s exact number formatting, into a byte buffer: `null`
+/// for non-finite, integer form for integral values below 1e15, `{}`
+/// of f64 otherwise. Formatting goes through stack buffers — no heap.
+fn write_num(out: &mut Vec<u8>, n: f64) {
+    if !n.is_finite() {
+        out.extend_from_slice(b"null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{}", n);
+    }
+}
+
+/// `Json::dump`'s exact string escaping, into a byte buffer.
+fn write_escaped_bytes(out: &mut Vec<u8>, s: &str) {
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
 }
 
 /// Exact-but-compact digest of one output tensor.
@@ -367,6 +579,57 @@ impl Response {
     pub fn line(&self) -> String {
         self.to_json().dump()
     }
+
+    /// Serialize the response into a reused buffer, byte-identical to
+    /// [`Response::line`] (same sorted key order — `to_json` goes
+    /// through a `BTreeMap` — same number formatting) with zero
+    /// allocation once `out` has warmed up. No trailing newline —
+    /// callers frame with `out.push(b'\n')`.
+    pub fn write_line(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(b"{\"batched\":");
+        write_num(out, self.batched as f64);
+        if let Some(c) = &self.code {
+            out.extend_from_slice(b",\"code\":");
+            write_escaped_bytes(out, c);
+        }
+        if let Some(e) = &self.error {
+            out.extend_from_slice(b",\"error\":");
+            write_escaped_bytes(out, e);
+        }
+        out.extend_from_slice(b",\"id\":");
+        write_num(out, self.id as f64);
+        out.extend_from_slice(b",\"ok\":");
+        out.extend_from_slice(if self.ok { b"true" } else { b"false" });
+        out.extend_from_slice(b",\"outputs\":[");
+        for (i, o) in self.outputs.iter().enumerate() {
+            if i > 0 {
+                out.push(b',');
+            }
+            out.extend_from_slice(b"{\"first\":[");
+            for (j, &v) in o.first.iter().enumerate() {
+                if j > 0 {
+                    out.push(b',');
+                }
+                write_num(out, v as f64);
+            }
+            out.extend_from_slice(b"],\"shape\":[");
+            for (j, &v) in o.shape.iter().enumerate() {
+                if j > 0 {
+                    out.push(b',');
+                }
+                write_num(out, v as f64);
+            }
+            out.extend_from_slice(b"],\"sum\":");
+            write_num(out, o.sum);
+            out.push(b'}');
+        }
+        out.extend_from_slice(b"],\"queue_ms\":");
+        write_num(out, self.queue_ms);
+        out.extend_from_slice(b",\"run_ms\":");
+        write_num(out, self.run_ms);
+        out.push(b'}');
+    }
 }
 
 /// Parse one response line back into a [`Response`] — the client half
@@ -405,10 +668,14 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .iter()
                 .map(|v| v.as_usize().context("non-integer shape entry"))
                 .collect::<Result<Vec<usize>>>()?;
-            let sum = o
-                .get("sum")
-                .and_then(Json::as_f64)
-                .context("output needs a numeric \"sum\"")?;
+            // a non-finite sum serializes as null (no JSON literal for
+            // NaN/inf); map it back to NaN rather than rejecting the
+            // response
+            let sum = match o.get("sum") {
+                Some(Json::Null) => f64::NAN,
+                Some(v) => v.as_f64().context("output needs a numeric \"sum\"")?,
+                None => anyhow::bail!("output needs a numeric \"sum\""),
+            };
             let first = o
                 .get("first")
                 .and_then(Json::as_f32_vec)
@@ -560,5 +827,127 @@ mod tests {
             );
         }
         assert_eq!(codes::ALL.len(), 8);
+    }
+
+    #[test]
+    fn write_line_is_byte_identical_to_line() {
+        // every shape of request: minimal, full, with tokens
+        let mut reqs = vec![Request::new(0, "m", "fp32", 0)];
+        let mut full = Request::new(41, "sim-opt-125m", "abfp_w4a4_n64", 3);
+        full.deadline_ms = Some(250);
+        full.tokens = Some(vec![-1, 0, 7, i32::MAX]);
+        reqs.push(full);
+        let mut esc = Request::new(ERR_ID - 1, "mo\"del\n", "fp\\32", u64::MAX / 2);
+        esc.tokens = Some(vec![]);
+        reqs.push(esc);
+        let mut buf = Vec::new();
+        for req in &reqs {
+            req.write_line(&mut buf);
+            assert_eq!(buf, req.line().as_bytes(), "request {:?}", req);
+        }
+
+        // every shape of response: success with outputs, error, ERR_ID,
+        // non-finite sum
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.5, -3.0, 4.0, 5.0, 6.0]);
+        let mut resps = vec![
+            Response::ok(9, summarize(&[t]), 4, 0.5, 12.25),
+            Response::err(3, codes::QUEUE_FULL, "queue full"),
+            Response::err(ERR_ID, codes::BAD_REQUEST, "bad request: \"x\"\n"),
+        ];
+        let mut nf = Response::ok(1, vec![], 1, 0.0, 1.0);
+        nf.outputs.push(OutputSummary {
+            shape: vec![2],
+            sum: f64::INFINITY,
+            first: vec![f32::NAN],
+        });
+        resps.push(nf);
+        for resp in &resps {
+            resp.write_line(&mut buf);
+            assert_eq!(buf, resp.line().as_bytes(), "response {:?}", resp);
+        }
+    }
+
+    #[test]
+    fn streaming_parser_accepts_what_the_tree_parser_does() {
+        let mut scratch = Request::default();
+        for line in [
+            r#"{"id": 7, "model": "sim-opt-125m", "quant": "abfp_w4a4_n64",
+                "batch": 3, "deadline_ms": 500}"#,
+            r#"{"id": 1, "model": "m"}"#,
+            r#"{"id": 2, "model": "m", "tokens": [1, 2, 3]}"#,
+            r#"{"id": 2, "model": "m", "tokens": []}"#,
+            r#"{"id": 9007199254740991, "model": "é\n\"x\""}"#,
+        ] {
+            let tree = parse_request(line).unwrap();
+            parse_request_streaming(line.as_bytes(), &mut scratch).unwrap();
+            assert_eq!(scratch, tree, "line {:?}", line);
+        }
+    }
+
+    #[test]
+    fn streaming_parser_rejects_what_the_tree_parser_does() {
+        let mut scratch = Request::default();
+        for line in [
+            "not json",
+            r#"{"model": "m"}"#,
+            r#"{"id": 3}"#,
+            r#"{"id": "x", "model": "m"}"#,
+            r#"{"id": 1.5, "model": "m"}"#,
+            r#"{"id": 01, "model": "m"}"#,
+            r#"{"id": 4, "model": "m", "tokens": [1, "x", 3]}"#,
+            r#"{"id": 4, "model": "m", "tokens": [1.5, 2]}"#,
+            r#"{"id": 5, "model": "m", "tokens": 3}"#,
+            r#"{"id": 1, "model": "m", "deadline_ms": -5}"#,
+            r#"{"id": 1, "model": "m", "deadline_mss": 5}"#,
+            r#"{"id": 1, "model": "m"} extra"#,
+            r#"[1, 2]"#,
+        ] {
+            assert!(parse_request(line).is_err(), "tree must reject {:?}", line);
+            assert!(
+                parse_request_streaming(line.as_bytes(), &mut scratch).is_err(),
+                "streaming must reject {:?}",
+                line
+            );
+        }
+    }
+
+    #[test]
+    fn non_string_quant_is_rejected_not_defaulted() {
+        // regression: quant used to fall back to fp32 when present but
+        // not a string — a typo'd config silently served fp32
+        let line = r#"{"id": 1, "model": "m", "quant": 4}"#;
+        let mut scratch = Request::default();
+        assert!(parse_request(line).is_err());
+        assert!(parse_request_streaming(line.as_bytes(), &mut scratch).is_err());
+    }
+
+    #[test]
+    fn streaming_scratch_reuse_is_clean_across_lines() {
+        // a field set by one line must not leak into the next
+        let mut scratch = Request::default();
+        parse_request_streaming(
+            br#"{"id": 1, "model": "m", "quant": "q", "batch": 5, "tokens": [1,2], "deadline_ms": 9}"#,
+            &mut scratch,
+        )
+        .unwrap();
+        parse_request_streaming(br#"{"id": 2, "model": "n"}"#, &mut scratch).unwrap();
+        assert_eq!(scratch, parse_request(r#"{"id": 2, "model": "n"}"#).unwrap());
+        // and a failed parse leaves the scratch safe to reuse
+        assert!(parse_request_streaming(b"{", &mut scratch).is_err());
+        parse_request_streaming(br#"{"id": 3, "model": "o"}"#, &mut scratch).unwrap();
+        assert_eq!(scratch.id, 3);
+        assert_eq!(scratch.model, "o");
+    }
+
+    #[test]
+    fn responses_with_null_sum_parse_back_as_nan() {
+        let mut resp = Response::ok(1, vec![], 1, 0.0, 1.0);
+        resp.outputs.push(OutputSummary {
+            shape: vec![2],
+            sum: f64::NAN,
+            first: vec![1.0],
+        });
+        let back = parse_response(&resp.line()).unwrap();
+        assert!(back.outputs[0].sum.is_nan());
     }
 }

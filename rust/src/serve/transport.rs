@@ -15,12 +15,21 @@
 //! each direction); `docs/serving.md` has the operator guide and a
 //! worked `nc`/python client example.
 //!
+//! The wire path is hardened and allocation-free in steady state: each
+//! connection reads through [`read_line_capped`] into a reused buffer
+//! (a line longer than [`protocol::MAX_LINE_BYTES`] is discarded as it
+//! streams in — bounded memory — answered with `bad_request`, and the
+//! connection keeps working), parses with the non-recursive
+//! [`protocol::parse_request_streaming`] into a reused scratch
+//! `Request`, and serializes responses with
+//! [`protocol::Response::write_line`] into a reused write buffer.
+//!
 //! Shutdown ([`TcpServer::shutdown`]) is abortive for still-connected
 //! clients: the listener stops, open sockets are shut down, admitted
 //! jobs finish draining, and per-worker stats are returned. The CLI
 //! path ([`run_tcp`]) instead serves until the process is killed.
 
-use std::io::{BufRead, BufReader, BufWriter, Write as IoWrite};
+use std::io::{self, BufRead, BufReader, BufWriter, Write as IoWrite};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -30,7 +39,7 @@ use anyhow::{Context, Result};
 
 use crate::tensor::backend;
 
-use super::protocol::{self, codes, Response};
+use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
 use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
 use super::ServeCfg;
@@ -147,8 +156,112 @@ impl TcpServer {
     }
 }
 
+/// Outcome of one [`read_line_capped`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LineRead {
+    /// A complete line (newline stripped) is in the buffer.
+    Line,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+    /// The line exceeded the cap; its bytes were discarded as they
+    /// streamed in, the stream is positioned after its newline (or at
+    /// EOF), and the buffer is empty. The connection stays usable.
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into the reused `buf` (cleared first,
+/// capacity kept), holding at most `max` line bytes in memory. A line
+/// of exactly `max` bytes is accepted; anything longer flips into
+/// discard mode — the remainder streams through the fixed `BufRead`
+/// chunk buffer without accumulating — so an adversarial endless line
+/// costs O(max) memory, not O(line).
+pub(crate) fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> io::Result<LineRead> {
+    buf.clear();
+    let mut discarding = false;
+    loop {
+        let (used, found_nl) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                // EOF
+                return Ok(if discarding {
+                    LineRead::TooLong
+                } else if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    // final unterminated line
+                    LineRead::Line
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(nl) => {
+                    if !discarding {
+                        buf.extend_from_slice(&chunk[..nl]);
+                    }
+                    (nl + 1, true)
+                }
+                None => {
+                    if !discarding {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        r.consume(used);
+        if !discarding && buf.len() > max {
+            buf.clear();
+            discarding = true;
+        }
+        if found_nl {
+            return Ok(if discarding { LineRead::TooLong } else { LineRead::Line });
+        }
+    }
+}
+
+/// ASCII-whitespace trim of a byte slice (the wire-path replacement for
+/// `str::trim` — no UTF-8 requirement, no allocation).
+pub(crate) fn trim_ws(mut b: &[u8]) -> &[u8] {
+    while let [first, rest @ ..] = b {
+        if matches!(first, b' ' | b'\t' | b'\r' | b'\n') {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., last] = b {
+        if matches!(last, b' ' | b'\t' | b'\r' | b'\n') {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+/// The `bad_request` answer for a line that blew the length cap.
+pub(crate) fn oversized_response() -> Response {
+    Response::err(
+        protocol::ERR_ID,
+        codes::BAD_REQUEST,
+        &format!(
+            "bad request: line exceeds max_line_bytes ({} bytes)",
+            protocol::MAX_LINE_BYTES
+        ),
+    )
+}
+
 /// Per-connection pumps: a reader thread (this handle) parsing lines
 /// into the queue, plus a writer thread it owns for the responses.
+/// Both directions run on reused buffers (zero steady-state allocation
+/// on the parse/serialize path — asserted by `tests/proto_alloc.rs`).
 fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> {
     std::thread::spawn(move || {
         let write_half = match stream.try_clone() {
@@ -158,24 +271,38 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
         let (tx, rx) = mpsc::channel::<Response>();
         let writer = std::thread::spawn(move || {
             let mut out = BufWriter::new(write_half);
+            let mut buf: Vec<u8> = Vec::with_capacity(256);
             for resp in rx {
-                if writeln!(out, "{}", resp.line()).is_err() {
+                resp.write_line(&mut buf);
+                buf.push(b'\n');
+                if out.write_all(&buf).is_err() {
                     break;
                 }
                 let _ = out.flush();
             }
         });
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let Ok(line) = line else { break };
-            let line = line.trim();
-            if line.is_empty() {
+        let mut reader = BufReader::new(stream);
+        let mut line: Vec<u8> = Vec::with_capacity(256);
+        let mut scratch = Request::default();
+        loop {
+            match read_line_capped(&mut reader, &mut line, protocol::MAX_LINE_BYTES) {
+                Ok(LineRead::Eof) | Err(_) => break,
+                Ok(LineRead::TooLong) => {
+                    let _ = tx.send(oversized_response());
+                    continue;
+                }
+                Ok(LineRead::Line) => {}
+            }
+            let bytes = trim_ws(&line);
+            if bytes.is_empty() {
                 continue;
             }
-            match protocol::parse_request(line) {
-                Ok(req) => {
-                    let id = req.id;
-                    if queue.try_push(Job::new(req, tx.clone())).is_err() {
+            match protocol::parse_request_streaming(bytes, &mut scratch) {
+                Ok(()) => {
+                    let id = scratch.id;
+                    // the clone hands an owned Request to the queue
+                    // while the scratch keeps its warmed capacity
+                    if queue.try_push(Job::new(scratch.clone(), tx.clone())).is_err() {
                         let _ = tx.send(Response::err(
                             id,
                             codes::QUEUE_FULL,
@@ -231,4 +358,85 @@ pub fn run_tcp(
         backend::active().describe()
     );
     srv.wait()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_all(input: &[u8], max: usize, chunk: usize) -> Vec<(LineRead, Vec<u8>)> {
+        // a tiny BufReader capacity forces the multi-chunk path
+        let mut r = BufReader::with_capacity(chunk, Cursor::new(input.to_vec()));
+        let mut buf = Vec::new();
+        let mut out = Vec::new();
+        loop {
+            let res = read_line_capped(&mut r, &mut buf, max).unwrap();
+            if res == LineRead::Eof {
+                return out;
+            }
+            out.push((res, buf.clone()));
+        }
+    }
+
+    #[test]
+    fn capped_reader_splits_lines_and_discards_oversized() {
+        let lines = read_all(b"ab\ncdef\n\nghi", 100, 3);
+        assert_eq!(
+            lines,
+            vec![
+                (LineRead::Line, b"ab".to_vec()),
+                (LineRead::Line, b"cdef".to_vec()),
+                (LineRead::Line, b"".to_vec()),
+                // final unterminated line still delivers
+                (LineRead::Line, b"ghi".to_vec()),
+            ]
+        );
+
+        // a line of exactly max bytes is accepted; max+1 is discarded
+        // and the NEXT line still comes through intact
+        let input = b"aaaa\nbbbbb\ncc\n";
+        let lines = read_all(input, 4, 3);
+        assert_eq!(lines[0], (LineRead::Line, b"aaaa".to_vec()));
+        assert_eq!(lines[1], (LineRead::TooLong, Vec::new()));
+        assert_eq!(lines[2], (LineRead::Line, b"cc".to_vec()));
+
+        // an endless unterminated line ends as TooLong at EOF
+        let lines = read_all(&vec![b'x'; 64], 8, 4);
+        assert_eq!(lines, vec![(LineRead::TooLong, Vec::new())]);
+    }
+
+    #[test]
+    fn capped_reader_memory_stays_bounded() {
+        // the accumulation buffer never holds more than max + one
+        // BufRead chunk, even while a 1 MiB line streams through
+        let chunk = 16;
+        let max = 32;
+        let big: Vec<u8> = vec![b'y'; 1 << 20];
+        let mut r = BufReader::with_capacity(chunk, Cursor::new(big));
+        let mut buf = Vec::new();
+        let res = read_line_capped(&mut r, &mut buf, max).unwrap();
+        assert_eq!(res, LineRead::TooLong);
+        // amortized growth may double past the high-water mark of
+        // max + one chunk, but it must stay nowhere near the 1 MiB line
+        assert!(buf.capacity() <= 2 * (max + chunk), "capacity {}", buf.capacity());
+    }
+
+    #[test]
+    fn trim_ws_trims_ascii_whitespace_only() {
+        assert_eq!(trim_ws(b"  {\"a\":1}\r\n"), b"{\"a\":1}");
+        assert_eq!(trim_ws(b""), b"");
+        assert_eq!(trim_ws(b" \t\r\n "), b"");
+        assert_eq!(trim_ws(b"x"), b"x");
+    }
+
+    #[test]
+    fn oversized_response_names_the_limit() {
+        let resp = oversized_response();
+        assert_eq!(resp.id, protocol::ERR_ID);
+        assert_eq!(resp.code.as_deref(), Some(codes::BAD_REQUEST));
+        let msg = resp.error.as_deref().unwrap();
+        assert!(msg.contains("exceeds max_line_bytes"), "{}", msg);
+        assert!(msg.contains("1048576"), "{}", msg);
+    }
 }

@@ -1,11 +1,19 @@
-//! Minimal-but-complete JSON parser and emitter (RFC 8259 subset we need:
-//! full syntax, UTF-8 strings with escapes, f64 numbers).
+//! Minimal-but-complete JSON parser and emitter (RFC 8259: full syntax,
+//! UTF-8 strings with escapes, strict number grammar, f64 numbers).
 //!
 //! Used for the artifact manifest, quantizer golden tables, experiment
-//! configs and reports. No serde in the vendored crate set.
+//! configs and reports — convenience-first tree values. The serve wire
+//! path uses the allocation-free streaming reader in
+//! [`super::json_stream`] instead; the two share the number and `\u`
+//! hex scanners and are held to identical accept/reject decisions by a
+//! differential test corpus. Recursion here is bounded by the same
+//! [`super::json_stream::MAX_DEPTH`] so adversarial nesting is a parse
+//! error, not a stack overflow. No serde in the vendored crate set.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+use super::json_stream::{hex4, scan_number, MAX_DEPTH};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -33,7 +41,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -62,8 +70,16 @@ impl Json {
             _ => None,
         }
     }
+    /// The value as a usize — `None` unless it is a finite,
+    /// non-negative integer in range (negative or fractional numbers
+    /// are never silently truncated).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        let n = self.as_f64()?;
+        if n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64 {
+            Some(n as usize)
+        } else {
+            None
+        }
     }
     pub fn as_bool(&self) -> Option<bool> {
         match self {
@@ -113,7 +129,13 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // non-finite f64s have no JSON literal; emit null
+                // (python json.dump's behavior under allow_nan=False is
+                // an error — null keeps the document parseable, which
+                // matters for wire lines)
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -185,6 +207,9 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    // container nesting level; bounded by MAX_DEPTH so the recursion
+    // here can never overflow the thread stack
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -232,12 +257,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn push_depth(&mut self) -> Result<(), JsonError> {
+        if self.depth == MAX_DEPTH {
+            return Err(self.err("nesting depth exceeds limit"));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.push_depth()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -248,6 +283,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected , or ]")),
@@ -257,10 +293,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.push_depth()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -276,6 +314,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected , or }")),
@@ -304,37 +343,33 @@ impl<'a> Parser<'a> {
                         b'r' => s.push('\r'),
                         b't' => s.push('\t'),
                         b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| self.err("eof in \\u"))?;
-                            let cp = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
-                                16,
-                            )
-                            .map_err(|_| self.err("bad \\u"))?;
+                            // strict four-hex-digit scan shared with the
+                            // streaming parser (from_str_radix would
+                            // accept a sign here)
+                            let cp =
+                                hex4(self.b, self.i).ok_or_else(|| self.err("bad \\u"))?;
                             self.i += 4;
-                            // surrogate pair
+                            // surrogate pair: a high half must pair with
+                            // a validated low half — an unchecked
+                            // `lo - 0xDC00` would underflow on input
+                            // like "\ud800A"
                             let ch = if (0xD800..0xDC00).contains(&cp) {
                                 if self.b.get(self.i) == Some(&b'\\')
                                     && self.b.get(self.i + 1) == Some(&b'u')
                                 {
-                                    let hex2 = self
-                                        .b
-                                        .get(self.i + 2..self.i + 6)
-                                        .ok_or_else(|| self.err("eof in surrogate"))?;
-                                    let lo = u32::from_str_radix(
-                                        std::str::from_utf8(hex2)
-                                            .map_err(|_| self.err("bad surrogate"))?,
-                                        16,
-                                    )
-                                    .map_err(|_| self.err("bad surrogate"))?;
+                                    let lo = hex4(self.b, self.i + 2)
+                                        .ok_or_else(|| self.err("bad surrogate"))?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(self.err("unpaired surrogate"));
+                                    }
                                     self.i += 6;
                                     let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
                                     char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?
                                 } else {
-                                    return Err(self.err("lone surrogate"));
+                                    return Err(self.err("unpaired surrogate"));
                                 }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                return Err(self.err("unpaired surrogate"));
                             } else {
                                 char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?
                             };
@@ -342,6 +377,9 @@ impl<'a> Parser<'a> {
                         }
                         _ => return Err(self.err("bad escape")),
                     }
+                }
+                c if c < 0x20 => {
+                    return Err(self.err("unescaped control character in string"))
                 }
                 c if c < 0x80 => s.push(c as char),
                 c => {
@@ -366,32 +404,16 @@ impl<'a> Parser<'a> {
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(b'0'..=b'9')) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.i += 1;
+        // strict RFC 8259 scanner shared with the streaming parser:
+        // `.5`, `1.`, `01` and a bare `-` are grammar errors, not
+        // f64::parse's problem
+        match scan_number(self.b, self.i) {
+            Ok((n, end)) => {
+                self.i = end;
+                Ok(Json::Num(n))
             }
+            Err(msg) => Err(self.err(msg)),
         }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(b'0'..=b'9')) {
-                self.i += 1;
-            }
-        }
-        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        txt.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
     }
 }
 
@@ -449,5 +471,88 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(42.0).dump(), "42");
         assert_eq!(Json::Num(1.5).dump(), "1.5");
+    }
+
+    #[test]
+    fn strict_number_grammar_regressions() {
+        // each malformed form previously leaked through to f64::parse
+        assert!(Json::parse(".5").is_err(), "leading dot");
+        assert!(Json::parse("1.").is_err(), "trailing dot");
+        assert!(Json::parse("01").is_err(), "leading zero");
+        assert!(Json::parse("-").is_err(), "bare minus");
+        assert!(Json::parse("-.5").is_err());
+        assert!(Json::parse("1e").is_err(), "empty exponent");
+        assert!(Json::parse(r#"{"id": 01}"#).is_err(), "leading zero in context");
+        // the valid forms still parse
+        assert_eq!(Json::parse("0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-0.5e1").unwrap(), Json::Num(-5.0));
+        assert_eq!(Json::parse("1E+2").unwrap(), Json::Num(100.0));
+    }
+
+    #[test]
+    fn as_usize_never_truncates() {
+        assert_eq!(Json::Num(3.0).as_usize(), Some(3));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        // negative, fractional and non-finite values are None — a
+        // protocol field like "id": -3 must not silently become 0
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+    }
+
+    #[test]
+    fn non_finite_numbers_dump_as_null_and_roundtrip() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
+        // the document a writer emits must parse back — previously
+        // "inf"/"NaN" leaked out unquoted and the parser rejected them
+        let j = Json::obj(vec![("x", Json::Num(f64::INFINITY)), ("y", Json::Num(1.0))]);
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("x"), Some(&Json::Null));
+        assert_eq!(back.get("y"), Some(&Json::Num(1.0)));
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn surrogate_halves_must_pair() {
+        // "\ud800A": the old decoder computed lo - 0xDC00 with lo = 'A'
+        // — an underflow (panic under overflow checks)
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        assert!(Json::parse(r#""\ud800""#).is_err(), "lone high half");
+        assert!(Json::parse(r#""\udc00""#).is_err(), "lone low half");
+        assert!(Json::parse(r#""\ud800\ud800""#).is_err(), "high paired with high");
+        assert!(Json::parse(r#""\u+123""#).is_err(), "sign in hex digits");
+        // valid escaped pairs still decode
+        assert_eq!(
+            Json::parse(r#""\ud800\udc00""#).unwrap(),
+            Json::Str("\u{10000}".into())
+        );
+        assert_eq!(
+            Json::parse(r#""\udbff\udfff""#).unwrap(),
+            Json::Str("\u{10FFFF}".into())
+        );
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("😀".into())
+        );
+    }
+
+    #[test]
+    fn unescaped_control_chars_are_rejected() {
+        assert!(Json::parse("\"a\tb\"").is_err());
+        assert!(Json::parse("\"a\nb\"").is_err());
+        assert_eq!(Json::parse(r#""a\tb""#).unwrap(), Json::Str("a\tb".into()));
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let bad = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&bad).is_err());
     }
 }

@@ -1,0 +1,654 @@
+//! Single-pass, non-recursive, bounded-depth streaming JSON reader for
+//! the serve wire path.
+//!
+//! [`StreamParser`] walks a byte buffer and yields [`Token`]s without
+//! building a tree and without allocating: strings come back as
+//! [`RawStr`] borrows of the *validated but still-escaped* input bytes,
+//! and the caller decides whether to compare ([`RawStr::eq_str`]),
+//! decode lazily ([`RawStr::chars`]) or append into a reused `String`
+//! ([`RawStr::append_to`]). Nesting uses an explicit fixed state stack
+//! — a `u64` bitmask of object-vs-array frames plus a depth counter —
+//! so depth is a checked constant ([`MAX_DEPTH`]), not a thread stack
+//! limit: `"[[[[…"` a million deep is a clean parse error, never a
+//! stack overflow.
+//!
+//! The grammar is strict RFC 8259: numbers like `.5`, `1.`, `01` and a
+//! bare `-` are rejected; `\u` escapes take exactly four hex digits (no
+//! `+` sign); surrogate halves must pair (`\ud800A` is an error, not an
+//! underflow); unescaped control characters and invalid UTF-8 in
+//! strings are errors. The tree parser in [`super::json`] shares the
+//! number and hex scanners, and a differential test corpus
+//! (`tests/protocol_stream.rs`) holds the two parsers to identical
+//! accept/reject decisions.
+
+use std::fmt;
+
+/// Maximum container nesting depth either JSON parser accepts. One
+/// `u64` bitmask frame per level — the constant is checked at compile
+/// time to fit.
+pub const MAX_DEPTH: usize = 64;
+const _: () = assert!(MAX_DEPTH <= 64);
+
+/// A streaming parse error: a static message plus the byte offset it
+/// was detected at. Formats like [`super::json::JsonError`] so wire
+/// error strings are stable across the two parsers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamError {
+    /// What went wrong (static so the error path never allocates a
+    /// message body).
+    pub msg: &'static str,
+    /// Byte offset into the input where the error was detected.
+    pub pos: usize,
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// One parse event. `Str`/`Key` borrow the input; everything else is a
+/// plain scalar or a structural marker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Token<'a> {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// An RFC 8259 number, parsed to f64 (overflow saturates to ±inf,
+    /// exactly as the tree parser does).
+    Num(f64),
+    /// A string value, still escaped, validated.
+    Str(RawStr<'a>),
+    /// An object key, still escaped, validated. Always followed by the
+    /// key's value token(s).
+    Key(RawStr<'a>),
+    /// `{`.
+    ObjStart,
+    /// `}`.
+    ObjEnd,
+    /// `[`.
+    ArrStart,
+    /// `]`.
+    ArrEnd,
+}
+
+/// A validated-but-still-escaped string slice of the input buffer (the
+/// bytes between the quotes). Decoding is lazy and allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RawStr<'a> {
+    raw: &'a [u8],
+}
+
+impl<'a> RawStr<'a> {
+    /// The raw escaped bytes between the quotes.
+    pub fn raw(&self) -> &'a [u8] {
+        self.raw
+    }
+
+    /// Whether any `\` escape is present (the slow-path predicate).
+    pub fn has_escapes(&self) -> bool {
+        self.raw.contains(&b'\\')
+    }
+
+    /// Decoded characters, resolving escapes and surrogate pairs.
+    pub fn chars(&self) -> RawChars<'a> {
+        RawChars { raw: self.raw, i: 0 }
+    }
+
+    /// Decoded equality against a plain string, without allocating:
+    /// escape-free inputs compare bytewise, escaped ones char-by-char.
+    pub fn eq_str(&self, s: &str) -> bool {
+        if !self.has_escapes() {
+            self.raw == s.as_bytes()
+        } else {
+            self.chars().eq(s.chars())
+        }
+    }
+
+    /// Append the decoded string to `out` (a reused buffer), without
+    /// intermediate allocation.
+    pub fn append_to(&self, out: &mut String) {
+        if !self.has_escapes() {
+            // validated UTF-8 during the scan; the check here is cheap
+            // and keeps this fully safe-code
+            if let Ok(s) = std::str::from_utf8(self.raw) {
+                out.push_str(s);
+                return;
+            }
+        }
+        for c in self.chars() {
+            out.push(c);
+        }
+    }
+}
+
+/// Decoding iterator over a [`RawStr`]. The scanner already validated
+/// the bytes, so the defensive arms here (lone escape at end, bad
+/// codepoint) map to U+FFFD instead of panicking — they are
+/// unreachable for scanner-produced slices.
+pub struct RawChars<'a> {
+    raw: &'a [u8],
+    i: usize,
+}
+
+impl Iterator for RawChars<'_> {
+    type Item = char;
+
+    fn next(&mut self) -> Option<char> {
+        let b = *self.raw.get(self.i)?;
+        if b == b'\\' {
+            let e = match self.raw.get(self.i + 1) {
+                Some(&e) => e,
+                None => {
+                    self.i = self.raw.len();
+                    return Some('\u{FFFD}');
+                }
+            };
+            self.i += 2;
+            return Some(match e {
+                b'"' => '"',
+                b'\\' => '\\',
+                b'/' => '/',
+                b'b' => '\u{8}',
+                b'f' => '\u{c}',
+                b'n' => '\n',
+                b'r' => '\r',
+                b't' => '\t',
+                b'u' => {
+                    let cp = match hex4(self.raw, self.i) {
+                        Some(cp) => cp,
+                        None => {
+                            self.i = self.raw.len();
+                            return Some('\u{FFFD}');
+                        }
+                    };
+                    self.i += 4;
+                    if (0xD800..0xDC00).contains(&cp) {
+                        // validated: a `\uXXXX` low half follows
+                        let lo = hex4(self.raw, self.i + 2).unwrap_or(0xDC00);
+                        self.i += 6;
+                        // clamp keeps the arithmetic in range even for
+                        // impossible (unvalidated) inputs, so this
+                        // cannot underflow under overflow-checks
+                        let lo = lo.clamp(0xDC00, 0xDFFF);
+                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                        char::from_u32(c).unwrap_or('\u{FFFD}')
+                    } else {
+                        char::from_u32(cp).unwrap_or('\u{FFFD}')
+                    }
+                }
+                _ => '\u{FFFD}',
+            });
+        }
+        if b < 0x80 {
+            self.i += 1;
+            return Some(b as char);
+        }
+        let len = match b {
+            0xC2..=0xDF => 2,
+            0xE0..=0xEF => 3,
+            0xF0..=0xF4 => 4,
+            _ => {
+                self.i += 1;
+                return Some('\u{FFFD}');
+            }
+        };
+        match self
+            .raw
+            .get(self.i..self.i + len)
+            .and_then(|s| std::str::from_utf8(s).ok())
+        {
+            Some(s) => {
+                self.i += len;
+                s.chars().next()
+            }
+            None => {
+                self.i += 1;
+                Some('\u{FFFD}')
+            }
+        }
+    }
+}
+
+/// What the state machine will accept next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Expect {
+    /// A value is required (after `:`, or at the very start).
+    Value,
+    /// A value or `]` (immediately after `[`).
+    ValueOrArrEnd,
+    /// A key or `}` (immediately after `{`).
+    KeyOrObjEnd,
+    /// `,` or the matching closer (after a complete value inside a
+    /// container).
+    CommaOrEnd,
+    /// The top-level value is complete; only whitespace may remain.
+    Done,
+}
+
+/// The non-recursive streaming parser. Frames live in `obj_mask` (bit
+/// per level: 1 = object, 0 = array) + `depth`; there is no call-stack
+/// recursion anywhere, so adversarial nesting cannot overflow the
+/// reader thread's stack.
+pub struct StreamParser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+    obj_mask: u64,
+    expect: Expect,
+}
+
+impl<'a> StreamParser<'a> {
+    /// Parser over one complete JSON document (for the wire: one line).
+    pub fn new(b: &'a [u8]) -> StreamParser<'a> {
+        StreamParser { b, i: 0, depth: 0, obj_mask: 0, expect: Expect::Value }
+    }
+
+    /// Current byte offset (for error reporting by callers).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &'static str) -> StreamError {
+        StreamError { msg, pos: self.i }
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn top_is_obj(&self) -> bool {
+        self.depth > 0 && (self.obj_mask >> (self.depth - 1)) & 1 == 1
+    }
+
+    fn after_value(&mut self) {
+        self.expect = if self.depth == 0 { Expect::Done } else { Expect::CommaOrEnd };
+    }
+
+    fn pop(&mut self) -> Token<'a> {
+        let tok = if self.top_is_obj() { Token::ObjEnd } else { Token::ArrEnd };
+        self.i += 1;
+        self.depth -= 1;
+        self.after_value();
+        tok
+    }
+
+    fn lit(&mut self, s: &'static [u8], tok: Token<'a>) -> Result<Token<'a>, StreamError> {
+        if self.b[self.i..].starts_with(s) {
+            self.i += s.len();
+            self.after_value();
+            Ok(tok)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn value_token(&mut self) -> Result<Token<'a>, StreamError> {
+        match *self.b.get(self.i).ok_or_else(|| self.err("unexpected end of input"))? {
+            b'{' => {
+                if self.depth == MAX_DEPTH {
+                    return Err(self.err("nesting depth exceeds limit"));
+                }
+                self.obj_mask |= 1 << self.depth;
+                self.depth += 1;
+                self.i += 1;
+                self.expect = Expect::KeyOrObjEnd;
+                Ok(Token::ObjStart)
+            }
+            b'[' => {
+                if self.depth == MAX_DEPTH {
+                    return Err(self.err("nesting depth exceeds limit"));
+                }
+                self.obj_mask &= !(1 << self.depth);
+                self.depth += 1;
+                self.i += 1;
+                self.expect = Expect::ValueOrArrEnd;
+                Ok(Token::ArrStart)
+            }
+            b'"' => {
+                let s = self.scan_string()?;
+                self.after_value();
+                Ok(Token::Str(s))
+            }
+            b'n' => self.lit(b"null", Token::Null),
+            b't' => self.lit(b"true", Token::Bool(true)),
+            b'f' => self.lit(b"false", Token::Bool(false)),
+            b'-' | b'0'..=b'9' => {
+                let (n, end) = scan_number(self.b, self.i).map_err(|msg| self.err(msg))?;
+                self.i = end;
+                self.after_value();
+                Ok(Token::Num(n))
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn key_token(&mut self) -> Result<Token<'a>, StreamError> {
+        let key = self.scan_string()?;
+        self.ws();
+        if self.b.get(self.i) != Some(&b':') {
+            return Err(self.err("expected ':' after object key"));
+        }
+        self.i += 1;
+        self.expect = Expect::Value;
+        Ok(Token::Key(key))
+    }
+
+    /// Scan and fully validate one string, returning the raw escaped
+    /// slice between the quotes. `self.i` must be at the opening `"`.
+    fn scan_string(&mut self) -> Result<RawStr<'a>, StreamError> {
+        self.i += 1; // opening quote
+        let start = self.i;
+        loop {
+            let c = *self.b.get(self.i).ok_or_else(|| self.err("unterminated string"))?;
+            match c {
+                b'"' => {
+                    let raw = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok(RawStr { raw });
+                }
+                b'\\' => {
+                    let e = *self
+                        .b
+                        .get(self.i + 1)
+                        .ok_or_else(|| self.err("unterminated string"))?;
+                    self.i += 2;
+                    match e {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            let cp =
+                                hex4(self.b, self.i).ok_or_else(|| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // a high half must be immediately
+                                // followed by an escaped low half
+                                if self.b.get(self.i) != Some(&b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err(self.err("unpaired surrogate"));
+                                }
+                                let lo = hex4(self.b, self.i + 2)
+                                    .ok_or_else(|| self.err("bad \\u escape"))?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("unpaired surrogate"));
+                                }
+                                self.i += 6;
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                0x00..=0x1F => {
+                    return Err(self.err("unescaped control character in string"));
+                }
+                0x20..=0x7F => self.i += 1,
+                _ => {
+                    let len = match c {
+                        0xC2..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF4 => 4,
+                        _ => return Err(self.err("bad utf8 in string")),
+                    };
+                    let bytes = self
+                        .b
+                        .get(self.i..self.i + len)
+                        .ok_or_else(|| self.err("unterminated string"))?;
+                    if std::str::from_utf8(bytes).is_err() {
+                        return Err(self.err("bad utf8 in string"));
+                    }
+                    self.i += len;
+                }
+            }
+        }
+    }
+
+    /// The next parse event, or `Ok(None)` exactly once at the clean
+    /// end of a complete document.
+    pub fn next_token(&mut self) -> Result<Option<Token<'a>>, StreamError> {
+        self.ws();
+        match self.expect {
+            Expect::Done => {
+                if self.i == self.b.len() {
+                    Ok(None)
+                } else {
+                    Err(self.err("trailing data"))
+                }
+            }
+            Expect::Value => self.value_token().map(Some),
+            Expect::ValueOrArrEnd => {
+                if self.b.get(self.i) == Some(&b']') {
+                    Ok(Some(self.pop()))
+                } else {
+                    self.value_token().map(Some)
+                }
+            }
+            Expect::KeyOrObjEnd => match self.b.get(self.i) {
+                Some(b'}') => Ok(Some(self.pop())),
+                Some(b'"') => self.key_token().map(Some),
+                _ => Err(self.err("expected object key or '}'")),
+            },
+            Expect::CommaOrEnd => match self.b.get(self.i) {
+                Some(b',') => {
+                    self.i += 1;
+                    self.ws();
+                    if self.top_is_obj() {
+                        if self.b.get(self.i) != Some(&b'"') {
+                            return Err(self.err("expected object key after ','"));
+                        }
+                        self.key_token().map(Some)
+                    } else {
+                        self.value_token().map(Some)
+                    }
+                }
+                Some(b'}') if self.top_is_obj() => Ok(Some(self.pop())),
+                Some(b']') if !self.top_is_obj() => Ok(Some(self.pop())),
+                _ => Err(self.err("expected ',' or end of container")),
+            },
+        }
+    }
+}
+
+/// Walk a whole document for validity (accept/reject only). Shares the
+/// differential corpus with the tree parser for inputs the `&str` tree
+/// API cannot even represent (invalid UTF-8 on the wire).
+pub fn validate(b: &[u8]) -> Result<(), StreamError> {
+    let mut p = StreamParser::new(b);
+    while p.next_token()?.is_some() {}
+    Ok(())
+}
+
+/// Exactly four hex digits at `b[i..i+4]` (strict: no sign, no
+/// whitespace — unlike `u32::from_str_radix`, which accepts `+`).
+pub(crate) fn hex4(b: &[u8], i: usize) -> Option<u32> {
+    let s = b.get(i..i + 4)?;
+    let mut v: u32 = 0;
+    for &c in s {
+        let d = match c {
+            b'0'..=b'9' => (c - b'0') as u32,
+            b'a'..=b'f' => (c - b'a' + 10) as u32,
+            b'A'..=b'F' => (c - b'A' + 10) as u32,
+            _ => return None,
+        };
+        v = v * 16 + d;
+    }
+    Some(v)
+}
+
+/// Strict RFC 8259 number scanner shared by both parsers: optional `-`,
+/// integer part with no leading zero, optional fraction and exponent
+/// each requiring at least one digit. Returns the value and the index
+/// one past the number. Overflow parses to ±inf (matching the tree
+/// parser's historical behavior for `1e999`).
+pub(crate) fn scan_number(b: &[u8], start: usize) -> Result<(f64, usize), &'static str> {
+    let mut i = start;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => {
+            i += 1;
+            if matches!(b.get(i), Some(b'0'..=b'9')) {
+                return Err("leading zero in number");
+            }
+        }
+        Some(b'1'..=b'9') => {
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return Err("bad number"),
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return Err("bad number");
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    if matches!(b.get(i), Some(b'e') | Some(b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+') | Some(b'-')) {
+            i += 1;
+        }
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return Err("bad number");
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    let txt = std::str::from_utf8(&b[start..i]).map_err(|_| "bad number")?;
+    txt.parse::<f64>().map(|n| (n, i)).map_err(|_| "bad number")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Result<Vec<String>, StreamError> {
+        let mut p = StreamParser::new(s.as_bytes());
+        let mut out = Vec::new();
+        while let Some(t) = p.next_token()? {
+            out.push(match t {
+                Token::Null => "null".to_string(),
+                Token::Bool(b) => format!("{}", b),
+                Token::Num(n) => format!("{}", n),
+                Token::Str(s) => {
+                    let mut d = String::new();
+                    s.append_to(&mut d);
+                    format!("str:{}", d)
+                }
+                Token::Key(k) => {
+                    let mut d = String::new();
+                    k.append_to(&mut d);
+                    format!("key:{}", d)
+                }
+                Token::ObjStart => "{".to_string(),
+                Token::ObjEnd => "}".to_string(),
+                Token::ArrStart => "[".to_string(),
+                Token::ArrEnd => "]".to_string(),
+            });
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn event_sequences() {
+        assert_eq!(toks("null").unwrap(), ["null"]);
+        assert_eq!(toks(" 42 ").unwrap(), ["42"]);
+        assert_eq!(
+            toks(r#"{"a": [1, true], "b": "x"}"#).unwrap(),
+            ["{", "key:a", "[", "1", "true", "]", "key:b", "str:x", "}"]
+        );
+        assert_eq!(toks("[]").unwrap(), ["[", "]"]);
+        assert_eq!(toks("{}").unwrap(), ["{", "}"]);
+        assert_eq!(toks("[[],{}]").unwrap(), ["[", "[", "]", "{", "}", "]"]);
+    }
+
+    #[test]
+    fn depth_is_a_checked_constant() {
+        let deep_ok = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(validate(deep_ok.as_bytes()).is_ok());
+        let deep_bad = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = validate(deep_bad.as_bytes()).unwrap_err();
+        assert_eq!(e.msg, "nesting depth exceeds limit");
+        // a million-deep bomb is a clean error, not a stack overflow
+        let bomb = "[".repeat(1_000_000);
+        assert!(validate(bomb.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn strict_number_grammar() {
+        for bad in ["01", "-01", "00", ".5", "1.", "-", "+1", "1e", "1e+", "1.e3", "0x10"] {
+            assert!(validate(bad.as_bytes()).is_err(), "{:?} must be rejected", bad);
+        }
+        for good in ["0", "-0", "0.5", "1E+10", "123.456e-7", "9007199254740993"] {
+            assert!(validate(good.as_bytes()).is_ok(), "{:?} must parse", good);
+        }
+        // overflow saturates like the tree parser
+        assert_eq!(toks("1e999").unwrap(), ["inf"]);
+    }
+
+    #[test]
+    fn string_validation_and_surrogates() {
+        assert_eq!(toks(r#""a\nb""#).unwrap(), ["str:a\nb"]);
+        assert_eq!(toks(r#""😀""#).unwrap(), ["str:😀"]);
+        assert_eq!(toks(r#""𐀀""#).unwrap(), ["str:\u{10000}"]);
+        assert_eq!(toks(r#""􏿿""#).unwrap(), ["str:\u{10FFFF}"]);
+        for bad in [
+            r#""\ud800A""#,   // high half followed by a plain char
+            r#""\ud800""#,    // lone high half
+            r#""\udc00""#,    // lone low half
+            r#""\ud800\ud800""#, // high half paired with another high
+            r#""\u+123""#,    // sign inside the hex digits
+            r#""abc"#,        // unterminated
+            r#""\"#,          // truncated escape
+            r#""\u00""#,      // truncated hex
+            r#""\q""#,        // unknown escape
+            "\"a\tb\"",       // raw control char
+        ] {
+            assert!(validate(bad.as_bytes()).is_err(), "{:?} must be rejected", bad);
+        }
+        // 0x7F is not a control char per RFC 8259
+        assert!(validate("\"\u{7f}\"".as_bytes()).is_ok());
+        // invalid UTF-8 on the wire
+        assert!(validate(b"\"\xff\xfe\"").is_err());
+        assert!(validate(b"\"\xe2\x82\"").is_err(), "truncated utf8 sequence");
+    }
+
+    #[test]
+    fn raw_str_eq_and_append() {
+        let mut p = StreamParser::new(br#""plain""#);
+        let Some(Token::Str(s)) = p.next_token().unwrap() else { panic!() };
+        assert!(s.eq_str("plain"));
+        assert!(!s.eq_str("plain2"));
+        assert!(!s.has_escapes());
+
+        let mut p = StreamParser::new(br#""aA\n""#);
+        let Some(Token::Str(s)) = p.next_token().unwrap() else { panic!() };
+        assert!(s.has_escapes());
+        assert!(s.eq_str("aA\n"));
+        let mut out = String::from("x");
+        s.append_to(&mut out);
+        assert_eq!(out, "xaA\n");
+    }
+
+    #[test]
+    fn structural_rejects() {
+        for bad in [
+            "", "  ", "1 2", "[1,]", "{", "[", r#"{"a"}"#, r#"{"a":}"#, "{1:2}",
+            r#"{"a":1,}"#, "[,1]", "]", "}", "nul", "tru", "falsy",
+        ] {
+            assert!(validate(bad.as_bytes()).is_err(), "{:?} must be rejected", bad);
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod json_stream;
 pub mod logging;
 pub mod prop;
 pub mod rng;

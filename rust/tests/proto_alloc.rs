@@ -1,0 +1,107 @@
+//! Steady-state allocation audit for the wire hot path.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after a
+//! short warm-up (buffers grow to their high-water mark) the test runs
+//! ten thousand parse+serialize round trips and asserts the allocation
+//! counter does not move AT ALL: 0 allocations per request.
+//!
+//! This lives in its own test binary on purpose — the libtest harness
+//! runs tests in parallel threads, and any neighbour test's allocations
+//! would pollute the counter. One binary, one test, one thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use intfpqsim::serve::protocol::{
+    parse_request_streaming, OutputSummary, Request, Response,
+};
+
+/// Counts every heap acquisition (alloc, alloc_zeroed, realloc) and
+/// delegates to the system allocator.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn hot_path_makes_zero_steady_state_allocations() {
+    // a request exercising every field, including a 64-token prompt
+    let req = Request {
+        id: 12345,
+        model: "sim-opt-125m".to_string(),
+        quant: "abfp_w4a4_n64".to_string(),
+        batch_index: 3,
+        deadline_ms: Some(250),
+        tokens: Some((0..64).collect()),
+    };
+    let mut line = Vec::new();
+    req.write_line(&mut line);
+    let text = line.clone();
+
+    // a success response with a summarized 2x3 output tensor and
+    // non-integer timing floats (the float Display path must not heap)
+    let resp = Response::ok(
+        12345,
+        vec![OutputSummary {
+            shape: vec![2, 3],
+            sum: 21.75,
+            first: vec![1.0, 2.5, 3.0, 4.25],
+        }],
+        4,
+        0.3125,
+        1.0625,
+    );
+
+    let mut scratch = Request::default();
+    let mut wbuf: Vec<u8> = Vec::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+
+    // warm-up: scratch strings/token vec and both buffers reach their
+    // high-water capacity (and we prove correctness while we're here)
+    for _ in 0..32 {
+        parse_request_streaming(&text, &mut scratch).unwrap();
+        assert_eq!(scratch, req);
+        req.write_line(&mut wbuf);
+        assert_eq!(wbuf, text);
+        resp.write_line(&mut rbuf);
+    }
+    assert_eq!(rbuf, resp.line().as_bytes(), "reused-buffer serializer must match dump");
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        parse_request_streaming(std::hint::black_box(&text), &mut scratch).unwrap();
+        if scratch.id != req.id {
+            panic!("parse corrupted at iteration {}", i);
+        }
+        req.write_line(&mut wbuf);
+        resp.write_line(&mut rbuf);
+        std::hint::black_box((&scratch, &wbuf, &rbuf));
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "wire hot path allocated {} times across 10000 requests; \
+         the steady state must be allocation-free",
+        delta
+    );
+}

@@ -71,6 +71,47 @@ fn doc_tables_match_the_wire_manifests_exactly() {
     );
 }
 
+/// The documented wire limits must be the compiled-in constants: row
+/// name is the first backticked token, the value is the third `|` cell.
+#[test]
+fn doc_limits_match_the_wire_constants() {
+    let open = "<!-- wire:limits -->";
+    let start = DOC
+        .find(open)
+        .expect("docs/serving.md lost its <!-- wire:limits --> anchor");
+    let rest = &DOC[start..];
+    let end = rest.find("<!-- /wire -->").expect("unclosed wire anchor");
+    let mut documented = std::collections::BTreeMap::new();
+    for l in rest[..end].lines() {
+        let l = l.trim_start();
+        if !l.starts_with('|') {
+            continue;
+        }
+        let Some(name) = l.split('`').nth(1) else { continue };
+        let value = l
+            .split('|')
+            .nth(2)
+            .and_then(|cell| cell.trim().parse::<usize>().ok())
+            .unwrap_or_else(|| panic!("limit row {:?} has no numeric value cell", name));
+        documented.insert(name.to_string(), value);
+    }
+    assert_eq!(
+        documented.remove("max_line_bytes"),
+        Some(protocol::MAX_LINE_BYTES),
+        "docs/serving.md max_line_bytes drifted from protocol::MAX_LINE_BYTES"
+    );
+    assert_eq!(
+        documented.remove("max_depth"),
+        Some(protocol::MAX_DEPTH),
+        "docs/serving.md max_depth drifted from protocol::MAX_DEPTH"
+    );
+    assert!(
+        documented.is_empty(),
+        "undocumented-in-code limit rows: {:?}",
+        documented.keys().collect::<Vec<_>>()
+    );
+}
+
 #[test]
 fn run_failed_is_emitted_by_the_server_even_if_not_client_triggerable() {
     // `run_failed` needs an internal failure to fire, so the live test

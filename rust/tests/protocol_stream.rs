@@ -1,0 +1,332 @@
+//! Differential protocol-parser suite: the streaming wire parser and
+//! the tree parser must agree — on accept/reject for every document in
+//! the adversarial corpus, and on every parsed field for request lines.
+//! Plus the TCP line-length cap: an oversized line is answered with
+//! `bad_request` and the connection stays usable.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use intfpqsim::serve::protocol::{
+    self, codes, parse_request, parse_request_streaming, Request, ERR_ID, MAX_DEPTH,
+    MAX_LINE_BYTES,
+};
+use intfpqsim::serve::shard::{ShardCfg, SimSpec};
+use intfpqsim::serve::transport::TcpServer;
+use intfpqsim::serve::ServeCfg;
+use intfpqsim::train::TrainOpts;
+use intfpqsim::util::json::Json;
+use intfpqsim::util::json_stream::{validate, StreamParser, Token};
+
+/// Build a `Json` tree from the streaming parser's events, with an
+/// explicit stack (the point of the exercise: no recursion anywhere).
+fn tree_via_stream(s: &str) -> Result<Json, String> {
+    enum Frame {
+        Arr(Vec<Json>),
+        Obj(BTreeMap<String, Json>, Option<String>),
+    }
+    fn place(stack: &mut Vec<Frame>, root: &mut Option<Json>, v: Json) {
+        match stack.last_mut() {
+            None => *root = Some(v),
+            Some(Frame::Arr(a)) => a.push(v),
+            Some(Frame::Obj(m, key)) => {
+                let k = key.take().expect("value without a pending key");
+                m.insert(k, v);
+            }
+        }
+    }
+    let mut p = StreamParser::new(s.as_bytes());
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut root: Option<Json> = None;
+    loop {
+        let tok = match p.next_token() {
+            Ok(Some(t)) => t,
+            Ok(None) => break,
+            Err(e) => return Err(e.to_string()),
+        };
+        match tok {
+            Token::Null => place(&mut stack, &mut root, Json::Null),
+            Token::Bool(b) => place(&mut stack, &mut root, Json::Bool(b)),
+            Token::Num(n) => place(&mut stack, &mut root, Json::Num(n)),
+            Token::Str(s) => {
+                let mut d = String::new();
+                s.append_to(&mut d);
+                place(&mut stack, &mut root, Json::Str(d));
+            }
+            Token::Key(k) => {
+                let mut d = String::new();
+                k.append_to(&mut d);
+                match stack.last_mut() {
+                    Some(Frame::Obj(_, key)) => *key = Some(d),
+                    _ => return Err("key outside an object".to_string()),
+                }
+            }
+            Token::ObjStart => stack.push(Frame::Obj(BTreeMap::new(), None)),
+            Token::ArrStart => stack.push(Frame::Arr(Vec::new())),
+            Token::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(m, _)) => place(&mut stack, &mut root, Json::Obj(m)),
+                _ => return Err("mismatched ObjEnd".to_string()),
+            },
+            Token::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(a)) => place(&mut stack, &mut root, Json::Arr(a)),
+                _ => return Err("mismatched ArrEnd".to_string()),
+            },
+        }
+    }
+    root.ok_or_else(|| "no value".to_string())
+}
+
+/// The two parsers must agree on accept/reject; on accept they must
+/// produce the same tree.
+fn assert_doc_parity(s: &str) {
+    let tree = Json::parse(s);
+    let stream = tree_via_stream(s);
+    match (&tree, &stream) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "trees differ for {:?}", s),
+        (Err(_), Err(_)) => {}
+        (a, b) => panic!(
+            "parity break on {:?}: tree={:?} stream={:?}",
+            s,
+            a.as_ref().map(|_| "accept").map_err(|e| e.to_string()),
+            b.as_ref().map(|_| "accept").map_err(|e| e.clone()),
+        ),
+    }
+}
+
+/// Request-level parity: same accept/reject, and on accept every field
+/// of the parsed `Request` equal.
+fn assert_request_parity(line: &str) {
+    let tree = parse_request(line);
+    let mut scratch = Request::default();
+    let stream = parse_request_streaming(line.as_bytes(), &mut scratch);
+    match (&tree, &stream) {
+        (Ok(t), Ok(())) => assert_eq!(&scratch, t, "fields differ for {:?}", line),
+        (Err(_), Err(_)) => {}
+        _ => panic!(
+            "request parity break on {:?}: tree accept={} stream accept={}",
+            line,
+            tree.is_ok(),
+            stream.is_ok()
+        ),
+    }
+}
+
+#[test]
+fn valid_documents_parse_identically() {
+    for s in [
+        "null",
+        "true",
+        "false",
+        "0",
+        "-0",
+        "42",
+        "-3.5e2",
+        "1e999", // saturates to inf in both
+        r#""""#,
+        r#""plain""#,
+        r#""a\nb\t\\\"/""#,
+        r#""Aé""#,
+        r#""𐀀""#,
+        r#""􏿿""#,
+        "\"héllo — ok 😀\"",
+        "[]",
+        "{}",
+        "[1,2,3]",
+        r#"{"a":[1,2,{"b":false}],"c":"x"}"#,
+        r#"{"a": {"b": {"c": [null, true, 1.5]}}}"#,
+        "  [ 1 , [ 2 ] , { } ]  ",
+        r#"{"dup":1,"dup":2}"#, // last wins in both
+    ] {
+        assert_doc_parity(s);
+    }
+}
+
+#[test]
+fn malformed_numbers_are_rejected_by_both() {
+    for s in [
+        "01", "-01", "00", ".5", "1.", "-", "+1", "1e", "1e+", "1.e3", "0x10", "NaN",
+        "Infinity", "- 1", "1..2", "1e1.5",
+    ] {
+        assert_doc_parity(s);
+        assert!(Json::parse(s).is_err(), "{:?} must be rejected", s);
+    }
+    for s in ["0", "-0", "0.5", "1E+10", "123.456e-7", "9007199254740993"] {
+        assert_doc_parity(s);
+        assert!(Json::parse(s).is_ok(), "{:?} must parse", s);
+    }
+    // in request context
+    assert_request_parity(r#"{"id": 01, "model": "m"}"#);
+    assert_request_parity(r#"{"id": 1, "model": "m", "batch": .5}"#);
+}
+
+#[test]
+fn bad_surrogates_and_truncated_escapes_are_rejected_by_both() {
+    for s in [
+        r#""\ud800A""#,
+        r#""\ud800""#,
+        r#""\udc00""#,
+        r#""\ud800\ud800""#,
+        r#""\ud800A""#,
+        r#""\u+123""#,
+        r#""abc"#,
+        r#""\"#,
+        r#""\u00""#,
+        r#""\q""#,
+        "\"a\tb\"",
+        "\"a\nb\"",
+    ] {
+        assert_doc_parity(s);
+        assert!(Json::parse(s).is_err(), "{:?} must be rejected", s);
+    }
+}
+
+#[test]
+fn invalid_utf8_is_rejected_by_the_streaming_parser() {
+    // the tree API takes &str so these can only reach the wire parser
+    for bytes in [
+        b"\"\xff\"".as_slice(),
+        b"\"\xc0\xaf\"".as_slice(),    // overlong encoding
+        b"\"\xe2\x82\"".as_slice(),    // truncated 3-byte sequence
+        b"\"\xed\xa0\x80\"".as_slice(), // UTF-8-encoded surrogate
+        b"\xff{}".as_slice(),
+    ] {
+        assert!(validate(bytes).is_err(), "{:?} must be rejected", bytes);
+        let mut scratch = Request::default();
+        assert!(parse_request_streaming(bytes, &mut scratch).is_err());
+    }
+}
+
+#[test]
+fn deep_nesting_is_a_clean_error_in_both_parsers() {
+    // depth exactly MAX_DEPTH parses in both
+    let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+    assert_doc_parity(&ok);
+    assert!(Json::parse(&ok).is_ok());
+    // one deeper is rejected by both
+    let bad = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+    assert_doc_parity(&bad);
+    assert!(Json::parse(&bad).is_err());
+    // a million-deep bomb previously overflowed the recursive parser's
+    // call stack; now both parsers return a depth error
+    let bomb = "[".repeat(1_000_000);
+    assert!(Json::parse(&bomb).is_err());
+    assert!(validate(bomb.as_bytes()).is_err());
+    let mixed = "[{\"a\":".repeat(500_000);
+    assert!(Json::parse(&mixed).is_err());
+    assert!(validate(mixed.as_bytes()).is_err());
+}
+
+#[test]
+fn request_field_matrix_parses_identically() {
+    for line in [
+        r#"{"id": 0, "model": "m"}"#,
+        r#"{"id": 9007199254740991, "model": "m"}"#,
+        r#"{"id": 7, "model": "sim-opt-125m", "quant": "abfp_w4a4_n64", "batch": 3, "deadline_ms": 500}"#,
+        r#"{"id": 2, "model": "m", "tokens": []}"#,
+        r#"{"id": 2, "model": "m", "tokens": [0, -1, 2147483647, -2147483648]}"#,
+        r#"{"id": 3, "model": "mo\"del\n😀", "quant": "q\\x"}"#,
+        r#"{"deadline_ms": 1, "batch": 2, "quant": "q", "model": "m", "id": 9}"#,
+        "  {\"id\": 1, \"model\": \"m\"}  ",
+        // rejects
+        "not json",
+        "",
+        "   ",
+        r#"{"model": "m"}"#,
+        r#"{"id": 3}"#,
+        r#"{"id": "x", "model": "m"}"#,
+        r#"{"id": -1, "model": "m"}"#,
+        r#"{"id": 1.5, "model": "m"}"#,
+        r#"{"id": 1, "model": 5}"#,
+        r#"{"id": 1, "model": "m", "quant": 4}"#,
+        r#"{"id": 1, "model": "m", "tokens": [1, "x"]}"#,
+        r#"{"id": 1, "model": "m", "tokens": [1.5]}"#,
+        r#"{"id": 1, "model": "m", "tokens": [2147483648]}"#,
+        r#"{"id": 1, "model": "m", "tokens": 3}"#,
+        r#"{"id": 1, "model": "m", "deadline_ms": -5}"#,
+        r#"{"id": 1, "model": "m", "bogus": 1}"#,
+        r#"{"id": 1, "model": "m"} trailing"#,
+        r#"[{"id": 1}]"#,
+        "17",
+    ] {
+        assert_request_parity(line);
+    }
+}
+
+fn tmp_spec(tag: &str) -> SimSpec {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_protostream_{}", tag));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut spec = SimSpec::new("artifacts", dir.to_str().unwrap());
+    spec.opts.eval_batches = 2;
+    spec.opts.pretrain_opts = TrainOpts { steps: 25, log_every: 1000, ..Default::default() };
+    spec
+}
+
+/// One client sends an oversized line, a recovery probe, a second
+/// oversized line, garbage and raw invalid UTF-8 — every one must be
+/// answered, in bounded memory, on the SAME connection.
+#[test]
+fn tcp_line_cap_answers_bad_request_and_connection_recovers() {
+    let srv = TcpServer::start(
+        tmp_spec("cap"),
+        "127.0.0.1:0",
+        ServeCfg::default(),
+        ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 },
+        Vec::new(),
+    )
+    .unwrap();
+
+    let mut stream = TcpStream::connect(srv.local_addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+
+    // 1) a line one chunk past the cap
+    let oversized = vec![b'a'; MAX_LINE_BYTES + 16];
+    stream.write_all(&oversized).unwrap();
+    stream.write_all(b"\n").unwrap();
+    // 2) recovery probe: a well-formed request (unknown model — the
+    //    worker answers without opening a session)
+    stream
+        .write_all(b"{\"id\": 5, \"model\": \"definitely-not-a-model\"}\n")
+        .unwrap();
+    // 3) a second oversized line, 4) garbage, 5) invalid UTF-8
+    stream.write_all(&oversized).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.write_all(b"this is not json\n").unwrap();
+    stream.write_all(b"\xff\xfe{\"id\": 6}\n").unwrap();
+    stream.flush().unwrap();
+
+    let mut responses = Vec::new();
+    while responses.len() < 5 {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).expect("read response");
+        assert!(n > 0, "server hung up after {} of 5 responses", responses.len());
+        responses.push(protocol::parse_response(line.trim()).unwrap());
+    }
+
+    let errs: Vec<_> = responses.iter().filter(|resp| resp.id == ERR_ID).collect();
+    assert_eq!(errs.len(), 4, "both oversized lines + garbage + bad utf8");
+    for resp in &errs {
+        assert_eq!(resp.code.as_deref(), Some(codes::BAD_REQUEST));
+    }
+    let oversize_answers = errs
+        .iter()
+        .filter(|resp| {
+            resp.error
+                .as_deref()
+                .unwrap_or("")
+                .contains("exceeds max_line_bytes")
+        })
+        .count();
+    assert_eq!(oversize_answers, 2, "each oversized line is answered");
+
+    let probe = responses
+        .iter()
+        .find(|resp| resp.id == 5)
+        .expect("the connection must survive the oversized line");
+    assert_eq!(probe.code.as_deref(), Some(codes::UNKNOWN_MODEL));
+
+    srv.shutdown().unwrap();
+}
