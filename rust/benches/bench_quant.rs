@@ -18,7 +18,9 @@ use std::sync::Arc;
 
 use intfpqsim::formats::{self, Format};
 use intfpqsim::methods::gptq;
-use intfpqsim::tensor::backend::{self, Backend, Blocked, Pool, Scalar, Simd, Threaded};
+use intfpqsim::tensor::backend::{
+    self, Backend, Blocked, Pool, QuantPanel, Scalar, Simd, Threaded,
+};
 use intfpqsim::tensor::Tensor;
 use intfpqsim::util::json::Json;
 use intfpqsim::util::rng::Pcg64;
@@ -216,6 +218,60 @@ fn main() {
         ));
     }
 
+    // ---- true int8 GEMM vs fused QDQ vs fp32 (ISSUE 8 tentpole A/B) ----
+    // Three executions of one static-int W8A8 site: plain fp32 matmul_t
+    // (no quantization), the fused QDQ simulation (per-row
+    // quantize-dequantize in f32, then f32 dots), and the true
+    // low-precision path (i8 activation quantize + i8×i8→i32 GEMM over
+    // the prepacked weight panel). Weight prep for the latter two runs
+    // once, outside the timed loop — the per-session prepack the native
+    // executor does; the activation quantize IS timed, because the int
+    // path pays it per forward.
+    println!(
+        "\n== int8 GEMM vs fused QDQ vs fp32 ({}x{} @ {}^T, static W8A8) ==",
+        qrows, qk, qdout
+    );
+    let alpha_clip = 2.5f32;
+    let x_scale = 127.0 / alpha_clip;
+    let w_scales: Vec<f32> = (0..qdout)
+        .map(|j| {
+            let row = &wnat.data[j * qk..(j + 1) * qk];
+            let a = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            127.0 / if a > 0.0 { a } else { 1.0 }
+        })
+        .collect();
+    let panel = QuantPanel::pack(&wnat, &w_scales, 127.0);
+    let mut wq_f32 = wnat.clone();
+    formats::pcmax_weight_qdq_with(&mut wq_f32.data, qk, 8, &Scalar);
+    let int_prep = |row: &mut [f32]| {
+        formats::static_int_qdq_with(row, &[alpha_clip], 8, &Scalar);
+    };
+    let x_scales_v = vec![x_scale; qrows];
+    let mut codes = vec![0i8; qrows * qk];
+    // (backend, fp32_ms, qdq_fused_ms, int_ms)
+    let mut int_rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for be in &backends {
+        let s_fp32 = bench(bwarm, biters, || {
+            std::hint::black_box(be.matmul_t(&xa, &wnat));
+        });
+        let s_fused = bench(bwarm, biters, || {
+            std::hint::black_box(be.qdq_matmul_t(&xa, &int_prep, &wq_f32));
+        });
+        let s_int = bench(bwarm, biters, || {
+            backend::quantize_rows_i8(&xa.data, x_scale, 127.0, &mut codes);
+            std::hint::black_box(be.int_matmul_t(&codes, &x_scales_v, &panel, &w_scales));
+        });
+        println!(
+            "{:<14} fp32 {:>8.3} ms | fused {:>8.3} ms | int {:>8.3} ms | int {:>5.2}x vs fused",
+            be.describe(),
+            s_fp32.mean_ms(),
+            s_fused.mean_ms(),
+            s_int.mean_ms(),
+            s_fused.mean_ms() / s_int.mean_ms().max(1e-9)
+        );
+        int_rows.push((be.describe(), s_fp32.mean_ms(), s_fused.mean_ms(), s_int.mean_ms()));
+    }
+
     // ---- spawn overhead: many small calibration-style sites ----
     // `threaded` pays a scoped-thread spawn + join per call; `pool`
     // reuses persistent workers across calls. 64 sites x tiny per-site
@@ -303,6 +359,39 @@ fn main() {
                                     ),
                                     ("unfused_temp_bytes", Json::Num(*ut as f64)),
                                     ("fused_temp_bytes", Json::Num(*ft as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "int_gemm",
+            Json::obj(vec![
+                ("rows", Json::Num(qrows as f64)),
+                ("k", Json::Num(qk as f64)),
+                ("dout", Json::Num(qdout as f64)),
+                ("quant", Json::Str("w8a8_static_pcmax".to_string())),
+                (
+                    "results",
+                    Json::Arr(
+                        int_rows
+                            .iter()
+                            .map(|(be, fp, fus, int)| {
+                                Json::obj(vec![
+                                    ("backend", Json::Str(be.clone())),
+                                    ("fp32_ms", Json::Num(*fp)),
+                                    ("qdq_fused_ms", Json::Num(*fus)),
+                                    ("int_ms", Json::Num(*int)),
+                                    (
+                                        "int_speedup_vs_fused",
+                                        Json::Num(fus / int.max(1e-9)),
+                                    ),
+                                    (
+                                        "int_speedup_vs_fp32",
+                                        Json::Num(fp / int.max(1e-9)),
+                                    ),
                                 ])
                             })
                             .collect(),

@@ -16,7 +16,9 @@
 //! --backend scalar|blocked|simd|threaded|pool|auto, --threads N (omit
 //! for all cores; 0 and non-numeric values are rejected),
 //! --executor native|pjrt|auto (auto = native host execution, no
-//! artifacts required).
+//! artifacts required), --compute qdq|int (qdq = simulated
+//! quantize-dequantize matmuls, the default; int = true i8×i8→i32
+//! GEMM on prepacked weights for eligible static-int sites).
 //!
 //! Serving options (serve + loadgen): --batch-window MS (default 5),
 //! --max-batch N (default 8), --queue-cap N (default 64), --workers N
@@ -57,7 +59,7 @@ const USAGE: &str =
                 [--replicate-hot] [--hot-min N] [--batch-window MS]
                 [--max-batch N] [--queue-cap N] [--fast]
 global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]
-        [--executor native|pjrt|auto]";
+        [--executor native|pjrt|auto] [--compute qdq|int]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -139,6 +141,15 @@ fn run(argv: &[String]) -> Result<()> {
     // INTFPQSIM_EXECUTOR environment selection stays in effect.
     if a.options.contains_key("executor") {
         intfpqsim::runtime::executor::configure(a.get("executor", "auto"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // Quantized compute mode: simulated QDQ matmuls (default) or the
+    // true i8×i8→i32 integer GEMM for eligible static-int sites. Only
+    // explicit flags override, so the INTFPQSIM_COMPUTE environment
+    // selection stays in effect. Unknown values are a hard error, like
+    // --backend and --executor.
+    if a.options.contains_key("compute") {
+        intfpqsim::model::net::configure_compute(a.get("compute", "qdq"))
             .map_err(|e| anyhow::anyhow!(e))?;
     }
     match a.command.as_str() {

@@ -59,6 +59,75 @@ pub fn qdq_fusion() -> bool {
     QDQ_FUSION.load(Ordering::Relaxed)
 }
 
+/// Which execution engine [`qlinear`] uses for quantized sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Simulated quantization (the default): dequantize back to f32 and
+    /// run the f32 matmul — the fused `qdq_matmul_t` hot path.
+    Qdq,
+    /// True low-precision compute: static-int sites run the i8×i8→i32
+    /// GEMM (`Backend::int_matmul_t`) over a prepacked [`IntSite`].
+    /// Sites with no int prepack (ABFP / float formats / per-channel
+    /// activation scales / smoothing) keep the QDQ path per-site, so
+    /// the mode is a per-site dispatch, not an all-or-nothing switch.
+    IntKernel,
+}
+
+/// Process-wide compute-mode cell, seeded once from `INTFPQSIM_COMPUTE`
+/// (unset/empty → QDQ; unknown values log loudly and fall back, the
+/// same forgiving-env / strict-flag split the backend selector uses).
+fn compute_cell() -> &'static AtomicBool {
+    use std::sync::OnceLock;
+    static CELL: OnceLock<AtomicBool> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let name = std::env::var("INTFPQSIM_COMPUTE").unwrap_or_default();
+        let mode = if name.is_empty() {
+            ComputeMode::Qdq
+        } else {
+            parse_compute_mode(&name).unwrap_or_else(|e| {
+                crate::util::logging::log(1, &format!("{}; falling back to qdq", e));
+                ComputeMode::Qdq
+            })
+        };
+        AtomicBool::new(mode == ComputeMode::IntKernel)
+    })
+}
+
+/// Parse a `--compute`/`INTFPQSIM_COMPUTE` value. Unknown names are a
+/// loud error, mirroring the `--backend`/`--executor` strictness.
+pub fn parse_compute_mode(name: &str) -> Result<ComputeMode, String> {
+    match name {
+        "qdq" => Ok(ComputeMode::Qdq),
+        "int" => Ok(ComputeMode::IntKernel),
+        other => Err(format!("unknown compute mode {:?} (expected qdq|int)", other)),
+    }
+}
+
+/// Set the process-wide compute mode; returns the previous value.
+pub fn set_compute_mode(m: ComputeMode) -> ComputeMode {
+    let was = compute_cell().swap(m == ComputeMode::IntKernel, Ordering::Relaxed);
+    if was {
+        ComputeMode::IntKernel
+    } else {
+        ComputeMode::Qdq
+    }
+}
+
+/// The compute mode [`qlinear`] dispatches on.
+pub fn compute_mode() -> ComputeMode {
+    if compute_cell().load(Ordering::Relaxed) {
+        ComputeMode::IntKernel
+    } else {
+        ComputeMode::Qdq
+    }
+}
+
+/// CLI entry: `--compute qdq|int`. Strict — unknown names error out.
+pub fn configure_compute(name: &str) -> Result<(), String> {
+    set_compute_mode(parse_compute_mode(name)?);
+    Ok(())
+}
+
 /// Activation-temporary accounting for the fused-vs-unfused A/B benches:
 /// cumulative bytes of quantized-activation temporaries requested by
 /// [`qlinear`] since the last reset. The unfused path materializes the
@@ -98,6 +167,31 @@ pub struct SiteCtx {
     pub oq: QuantSpec,
     pub smooth: Option<Vec<f32>>,
     pub alpha: Option<Vec<f32>>,
+    /// True low-precision prepack ([`ComputeMode::IntKernel`]): present
+    /// only for sites whose wiring the int GEMM can execute (per-tensor
+    /// static-int activations × per-channel-max int weights, no
+    /// smoothing). Both representations are always built, so switching
+    /// the compute mode mid-session needs no re-prep.
+    pub int: Option<IntSite>,
+}
+
+/// One site's integer-GEMM state, built once at session prep from the
+/// **raw** (pre-QDQ) weights: the i8 weight codes in natural (dout, din)
+/// layout plus the quantization scales of both operands. The scales use
+/// exactly the arithmetic of the QDQ kernels (`qmax / absmax` per weight
+/// row, `qmax / alpha` per tensor for activations), so `codes / scale`
+/// reproduces the QDQ path's dequantized values bit-for-bit and the
+/// i32 GEMM's rescale `(acc as f32) / (sx * sw)` lands on the QDQ
+/// result exactly wherever that f32 arithmetic is exact.
+pub struct IntSite {
+    /// Prepacked i8 weight codes, (dout, din) row-major.
+    pub panel: crate::tensor::backend::QuantPanel,
+    /// Per-output-channel weight scales (`qmax_w / row absmax`).
+    pub w_scales: Vec<f32>,
+    /// Per-tensor activation scale (`qmax_a / alpha`).
+    pub x_scale: f32,
+    /// Activation clamp bound (`IntFmt::qmax`, e.g. 127 for INT8).
+    pub x_qmax: f32,
 }
 
 /// Layer index of a `l{i}.{kind}` site name.
@@ -133,8 +227,14 @@ pub fn build_sites(
             site.dim,
             din
         );
-        lw.wq.apply_with(&mut wq.data, din, None, be)?;
         let alpha_v = alpha.get(&site.name).cloned();
+        let smooth_v = smooth.get(&site.name).cloned();
+        // The int prepack quantizes the RAW weights — it must run
+        // before the in-place weight QDQ below, with the same per-row
+        // scale arithmetic, so its codes dequantize to exactly the
+        // bytes the QDQ leaves behind.
+        let int = int_site_for(&lw, &wq, din, alpha_v.as_deref(), smooth_v.is_some());
+        lw.wq.apply_with(&mut wq.data, din, None, be)?;
         // Resolve the activation row kernel once per site: validation
         // and static-scale precomputation leave the per-forward path
         // entirely (errors surface here — still the first `run`, with
@@ -151,12 +251,66 @@ pub fn build_sites(
                 aq: lw.aq,
                 row_aq,
                 oq: lw.oq,
-                smooth: smooth.get(&site.name).cloned(),
+                smooth: smooth_v,
                 alpha: alpha_v,
+                int,
             },
         );
     }
     Ok(out)
+}
+
+/// Build the [`IntSite`] prepack for one site, if (and only if) the
+/// int GEMM can execute its wiring: per-tensor static-int activations
+/// (`StaticInt` with an integer format and a scalar clip range),
+/// per-channel-max integer weights (`WPcmaxInt`), and no smoothing
+/// vector (the int activation front is one multiply per element;
+/// folding a per-channel smooth multiply in would change the rounding,
+/// so smoothed sites stay on the QDQ path). Everything else — ABFP,
+/// float formats, per-channel activation scales — returns `None` and
+/// keeps simulating.
+fn int_site_for(
+    lw: &QuantWiring,
+    w_raw: &Tensor,
+    din: usize,
+    alpha: Option<&[f32]>,
+    smoothed: bool,
+) -> Option<IntSite> {
+    use crate::formats::Format;
+    if smoothed || lw.aq.kind != QuantKind::StaticInt || lw.wq.kind != QuantKind::WPcmaxInt {
+        return None;
+    }
+    let (a_fmt, w_fmt) = match (lw.aq.fmt, lw.wq.fmt) {
+        (Some(Format::Int(a)), Some(Format::Int(w))) => (a, w),
+        _ => return None,
+    };
+    let a = alpha?;
+    if a.len() != 1 {
+        return None;
+    }
+    let x_qmax = a_fmt.qmax();
+    let w_qmax = w_fmt.qmax();
+    // i32 accumulator headroom: |acc| <= din * qmax_a * qmax_w. Sites
+    // wide enough to overflow (din ≳ 133k at 8 bits) keep the QDQ path.
+    if (din as f64) * (x_qmax as f64) * (w_qmax as f64) >= i32::MAX as f64 {
+        return None;
+    }
+    // Per-tensor activation scale and per-row weight scales use exactly
+    // the arithmetic of `formats::static_int_qdq_with` /
+    // `pcmax_weight_qdq_with`, so codes / scale == the QDQ'd values.
+    let clip = if a[0] > 0.0 { a[0] } else { 1.0 };
+    let x_scale = x_qmax / clip;
+    let (dout, k) = w_raw.dims2();
+    debug_assert_eq!(k, din);
+    let mut w_scales = Vec::with_capacity(dout);
+    for r in 0..dout {
+        let row = &w_raw.data[r * k..(r + 1) * k];
+        let m = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let m = if m > 0.0 { m } else { 1.0 };
+        w_scales.push(w_qmax / m);
+    }
+    let panel = crate::tensor::backend::QuantPanel::pack(w_raw, &w_scales, w_qmax);
+    Some(IntSite { panel, w_scales, x_scale, x_qmax })
 }
 
 /// The data tensor feeding one forward pass.
@@ -324,6 +478,14 @@ pub struct LinTape {
 /// tape needs the materialized `x_q`, so the taped path keeps the
 /// unfused reference — both produce identical bytes (the fused kernel
 /// contract, conformance-enforced per backend × thread count).
+///
+/// Under [`ComputeMode::IntKernel`], sites carrying an [`IntSite`]
+/// prepack (static-int W8A8-style wirings) skip simulation entirely:
+/// activations are quantized to i8 codes and `Backend::int_matmul_t`
+/// accumulates in i32 — bit-identical to the QDQ reference wherever the
+/// latter's f32 arithmetic is exact (power-of-two scales, sums inside
+/// 2^24), within a few ULP elsewhere. Sites without a prepack keep the
+/// QDQ path regardless of the mode.
 fn qlinear(
     x: &Tensor,
     site: &SiteCtx,
@@ -341,7 +503,22 @@ fn qlinear(
     if let Some(sm) = &site.smooth {
         anyhow::ensure!(sm.len() == din, "smooth len {} vs din {}", sm.len(), din);
     }
-    let (mut y, tape) = if !want_tape && qdq_fusion() {
+    let (mut y, tape) = if !want_tape
+        && compute_mode() == ComputeMode::IntKernel
+        && site.int.is_some()
+    {
+        // True low-precision path: quantize the activation rows to i8
+        // codes once (the only per-forward temporary — n*din bytes, a
+        // quarter of even one f32 row panel per element) and run the
+        // i8×i8→i32 GEMM over the session-prepacked weight codes. The
+        // per-row × per-channel rescale happens in the C-row store.
+        let is = site.int.as_ref().expect("int site checked above");
+        let mut codes = vec![0i8; n * din];
+        crate::tensor::backend::quantize_rows_i8(&x.data, is.x_scale, is.x_qmax, &mut codes);
+        let x_scales = vec![is.x_scale; n];
+        qdq_temp::add((n * din + n * 4) as u64);
+        (be.int_matmul_t(&codes, &x_scales, &is.panel, &is.w_scales), None)
+    } else if !want_tape && qdq_fusion() {
         let y = if site.smooth.is_none() && site.aq.kind == QuantKind::None {
             // nothing to prep: skip the panel copies entirely
             be.matmul_t(x, &site.wq)
@@ -419,7 +596,14 @@ pub struct AttnTape {
 /// probabilities (the tape record). This is the shared serial kernel of
 /// both the sequential and the batched dispatch below, so the two paths
 /// are bit-identical by construction.
-#[allow(clippy::too_many_arguments)]
+///
+/// The per-head Q/K/V rows are **contiguous hd-wide slices** of the
+/// packed (N, 3d) qkv rows, so the kernel folds directly over those
+/// views — the three per-(b, h) `take_block` copies the old hot path
+/// materialized are gone. Scores fold the ascending-k `a == 0.0`-skip
+/// dot of the `matmul_t` contract and the context accumulates in the
+/// ikj order of the `matmul` contract, so every output bit matches the
+/// old take_block + backend-matmul formulation on every backend.
 fn attn_head(
     qkv: &Tensor,
     bi: usize,
@@ -428,25 +612,26 @@ fn attn_head(
     d: usize,
     hd: usize,
     causal: bool,
-    be: &dyn Backend,
 ) -> (Tensor, Tensor) {
+    use crate::tensor::backend::dot_skip;
     let scale = 1.0 / (hd as f32).sqrt();
-    let r0 = bi * s;
-    let c = h * hd;
-    let qh = take_block(qkv, r0, s, c, hd);
-    let kh = take_block(qkv, r0, s, d + c, hd);
-    let vh = take_block(qkv, r0, s, 2 * d + c, hd);
-    // q @ k^T straight off the row-major K block — no transposed copy
-    // of K is ever materialized (bit-identical per the matmul_t contract)
-    let mut scores = be.matmul_t(&qh, &kh);
-    for v in scores.data.iter_mut() {
-        *v *= scale;
-    }
-    if causal {
-        for i in 0..s {
-            for j in (i + 1)..s {
-                scores.data[i * s + j] = MASK_NEG;
-            }
+    let stride = 3 * d;
+    let (qo, ko, vo) = (h * hd, d + h * hd, 2 * d + h * hd);
+    let row = |r: usize, off: usize| {
+        let base = (bi * s + r) * stride + off;
+        &qkv.data[base..base + hd]
+    };
+    // scores = scale * (q @ k^T); masked entries never feed a dot.
+    let mut scores = Tensor::zeros(vec![s, s]);
+    for i in 0..s {
+        let q = row(i, qo);
+        let jmax = if causal { i + 1 } else { s };
+        let srow = scores.row_mut(i);
+        for (j, slot) in srow.iter_mut().take(jmax).enumerate() {
+            *slot = dot_skip(q, row(j, ko)) * scale;
+        }
+        for slot in srow.iter_mut().skip(jmax) {
+            *slot = MASK_NEG;
         }
     }
     // row softmax with max-shift
@@ -462,7 +647,20 @@ fn attn_head(
             *v /= sum;
         }
     }
-    let oh = be.matmul(&scores, &vh);
+    // context = P @ V, accumulated over the strided V row views.
+    let mut oh = Tensor::zeros(vec![s, hd]);
+    for i in 0..s {
+        let pr = &scores.data[i * s..(i + 1) * s];
+        let crow = &mut oh.data[i * hd..(i + 1) * hd];
+        for (p, &av) in pr.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (c, &bv) in crow.iter_mut().zip(row(p, vo).iter()) {
+                *c += av * bv;
+            }
+        }
+    }
     (oh, scores)
 }
 
@@ -490,7 +688,7 @@ fn attention(
     let mut out = Tensor::zeros(vec![b * s, d]);
     if !want_tape && b * heads > 1 {
         let outs = be.par_map_tensor(b * heads, &|i| {
-            attn_head(qkv, i / heads, i % heads, s, d, hd, causal, be).0
+            attn_head(qkv, i / heads, i % heads, s, d, hd, causal).0
         });
         for (i, oh) in outs.iter().enumerate() {
             add_block(&mut out, oh, (i / heads) * s, (i % heads) * hd);
@@ -500,7 +698,7 @@ fn attention(
     let mut probs = Vec::with_capacity(if want_tape { b * heads } else { 0 });
     for bi in 0..b {
         for h in 0..heads {
-            let (oh, scores) = attn_head(qkv, bi, h, s, d, hd, causal, be);
+            let (oh, scores) = attn_head(qkv, bi, h, s, d, hd, causal);
             add_block(&mut out, &oh, bi * s, h * hd);
             if want_tape {
                 probs.push(scores);
@@ -1416,6 +1614,7 @@ mod tests {
             oq: Q_NONE,
             smooth: Some(smooth.clone()),
             alpha: None,
+            int: None,
         };
         let x = Tensor::new(vec![n, din], prop::heavy_vec(&mut rng, n * din, 1.0));
         let (_, tape) = qlinear(&x, &site, be.as_ref(), true, None).unwrap();
@@ -1490,6 +1689,228 @@ mod tests {
                 &unfused.head.data,
                 &format!("fused-vs-unfused head, wiring {}", wi),
             );
+        }
+    }
+
+    #[test]
+    fn compute_mode_parsing_is_strict() {
+        assert_eq!(parse_compute_mode("qdq").unwrap(), ComputeMode::Qdq);
+        assert_eq!(parse_compute_mode("int").unwrap(), ComputeMode::IntKernel);
+        for bad in ["", "INT", "int8", "qdq ", "fused"] {
+            let err = parse_compute_mode(bad).unwrap_err();
+            assert!(err.contains("unknown compute mode"), "{}: {}", bad, err);
+            assert!(err.contains("expected qdq|int"), "{}: {}", bad, err);
+            assert!(configure_compute(bad).is_err(), "{}", bad);
+        }
+    }
+
+    #[test]
+    fn int_prepack_dequantizes_to_qdq_weights_bits() {
+        // The IntSite codes must be the exact integer codes the weight
+        // QDQ rounds to: code / w_scale == the QDQ'd weight, bit for
+        // bit, for every element — the invariant that makes the int
+        // GEMM's rescale land on the QDQ result wherever f32 is exact.
+        use crate::formats::{Format, INT8};
+        let cfg = tiny("opt");
+        let params = init_params(&cfg, 21);
+        let be = crate::tensor::backend::active();
+        let wiring = quant_config("mse_w8a8").unwrap();
+        let mut alpha = BTreeMap::new();
+        for site in &cfg.sites {
+            alpha.insert(site.name.clone(), vec![1.5f32]);
+        }
+        let sites = build_sites(
+            &cfg,
+            &wiring,
+            &params,
+            &BTreeMap::new(),
+            &alpha,
+            be.as_ref(),
+        )
+        .unwrap();
+        assert_eq!(sites.len(), cfg.sites.len());
+        for (name, site) in &sites {
+            let is = site.int.as_ref().unwrap_or_else(|| panic!("{} has no IntSite", name));
+            let (dout, din) = site.wq.dims2();
+            assert_eq!((is.panel.n, is.panel.k), (dout, din), "{}", name);
+            assert_eq!(is.w_scales.len(), dout, "{}", name);
+            assert_eq!(is.x_qmax, 127.0, "{}", name);
+            // x_scale matches the RowQdq the fused QDQ path resolved
+            match &site.row_aq {
+                RowQdq::StaticInt { scales, qmax } => {
+                    assert_eq!(scales.len(), 1, "{}", name);
+                    assert_eq!(is.x_scale.to_bits(), scales[0].to_bits(), "{}", name);
+                    assert_eq!(*qmax, 127.0, "{}", name);
+                }
+                other => panic!("{}: unexpected row kernel {:?}", name, other),
+            }
+            for r in 0..dout {
+                let s = is.w_scales[r];
+                for j in 0..din {
+                    let deq = (is.panel.q[r * din + j] as f32) / s;
+                    let want = site.wq.data[r * din + j];
+                    assert_eq!(
+                        deq.to_bits(),
+                        want.to_bits(),
+                        "{} [{},{}]: {} vs {}",
+                        name,
+                        r,
+                        j,
+                        deq,
+                        want
+                    );
+                }
+            }
+        }
+        // Ineligible wirings build no prepack: ABFP weights, smoothing,
+        // per-channel clip ranges all stay QDQ-only.
+        let abfp = quant_config("abfp_w4a8_n64").unwrap();
+        let mut smooth = BTreeMap::new();
+        for site in &cfg.sites {
+            smooth.insert(site.name.clone(), vec![1.0f32; site.dim]);
+        }
+        let s2 = build_sites(&cfg, &abfp, &params, &smooth, &BTreeMap::new(), be.as_ref())
+            .unwrap();
+        assert!(s2.values().all(|s| s.int.is_none()));
+        let w8 = QuantSpec {
+            kind: QuantKind::WPcmaxInt,
+            fmt: Some(Format::Int(INT8)),
+            n: 4,
+        };
+        let a8 = QuantSpec {
+            kind: QuantKind::StaticInt,
+            fmt: Some(Format::Int(INT8)),
+            n: 4,
+        };
+        let lw = QuantWiring { wq: w8, aq: a8, ..QuantWiring::fp32() };
+        let raw = Tensor::new(vec![2, 4], vec![1.0; 8]);
+        assert!(int_site_for(&lw, &raw, 4, Some(&[1.5]), true).is_none(), "smoothed");
+        assert!(int_site_for(&lw, &raw, 4, Some(&[1.5, 2.0]), false).is_none(), "per-channel");
+        assert!(int_site_for(&lw, &raw, 4, None, false).is_none(), "no alpha");
+        assert!(int_site_for(&lw, &raw, 4, Some(&[1.5]), false).is_some());
+    }
+
+    #[test]
+    fn int_qlinear_bit_exact_on_power_of_two_cell() {
+        // A static-int W8A8 cell constructed so every rounding in the
+        // QDQ reference is exact (scales exactly 1.0, integer operands,
+        // partial sums far inside 2^24): the int GEMM must reproduce
+        // the QDQ path bit for bit. This is the site-level version of
+        // the conformance-suite contract; the global ComputeMode switch
+        // itself is exercised end to end by the runtime_smoke / serve
+        // integration cases (lib tests never flip process-wide state).
+        use crate::formats::{Format, INT8};
+        use crate::runtime::registry::Q_NONE;
+        let be = crate::tensor::backend::active();
+        let (n, din, dout) = (5usize, 8usize, 4usize);
+        let mut rng = Pcg64::new(77);
+        // integer weights, each row's absmax exactly 127
+        let mut wraw = vec![0.0f32; dout * din];
+        for r in 0..dout {
+            for j in 0..din {
+                wraw[r * din + j] = (rng.below(201) as f32) - 100.0;
+            }
+            wraw[r * din + r % din] = if r % 2 == 0 { 127.0 } else { -127.0 };
+        }
+        let raw = Tensor::new(vec![dout, din], wraw);
+        let w8 = QuantSpec {
+            kind: QuantKind::WPcmaxInt,
+            fmt: Some(Format::Int(INT8)),
+            n: 4,
+        };
+        let a8 = QuantSpec {
+            kind: QuantKind::StaticInt,
+            fmt: Some(Format::Int(INT8)),
+            n: 4,
+        };
+        let lw = QuantWiring { wq: w8, aq: a8, ..QuantWiring::fp32() };
+        let alpha = vec![127.0f32]; // s_x = 127/127 = 1.0 exactly
+        let int = int_site_for(&lw, &raw, din, Some(&alpha), false);
+        let mut wq = raw.clone();
+        lw.wq.apply_with(&mut wq.data, din, None, be.as_ref()).unwrap();
+        // with s_w = 1.0 the weight QDQ is the identity on these values
+        assert_bits(&wq.data, &raw.data, "exact-cell weight qdq");
+        let site = SiteCtx {
+            wq,
+            bias: (0..dout).map(|r| 0.25 + r as f32).collect(),
+            aq: lw.aq,
+            row_aq: lw.aq.row_kernel(din, Some(&alpha)).unwrap(),
+            oq: Q_NONE,
+            smooth: None,
+            alpha: Some(alpha),
+            int,
+        };
+        let is = site.int.as_ref().expect("exact cell is int-eligible");
+        assert_eq!(is.x_scale.to_bits(), 1.0f32.to_bits());
+        assert!(is.w_scales.iter().all(|s| s.to_bits() == 1.0f32.to_bits()));
+        // integer activations in clip range
+        let xv: Vec<f32> = (0..n * din).map(|_| (rng.below(41) as f32) - 20.0).collect();
+        let x = Tensor::new(vec![n, din], xv);
+        let (y_qdq, _) = qlinear(&x, &site, be.as_ref(), false, None).unwrap();
+        // the int branch, step for step
+        let mut codes = vec![0i8; n * din];
+        crate::tensor::backend::quantize_rows_i8(&x.data, is.x_scale, is.x_qmax, &mut codes);
+        let x_scales = vec![is.x_scale; n];
+        let mut y_int = be.int_matmul_t(&codes, &x_scales, &is.panel, &is.w_scales);
+        for r in 0..n {
+            add_slice(y_int.row_mut(r), &site.bias);
+        }
+        assert_eq!(y_int.shape, y_qdq.shape);
+        assert_bits(&y_int.data, &y_qdq.data, "int vs qdq exact cell");
+    }
+
+    #[test]
+    fn attn_head_slices_match_take_block_reference_bits() {
+        // Satellite regression: attn_head now folds over contiguous row
+        // slices of the packed (N, 3d) qkv instead of materializing
+        // per-head Q/K/V copies. The old take_block + backend-matmul
+        // formulation must be reproduced bit for bit, causal and not.
+        use crate::util::prop;
+        let be = crate::tensor::backend::active();
+        let (b, s, heads, d) = (2usize, 5usize, 2usize, 8usize);
+        let hd = d / heads;
+        let mut rng = Pcg64::new(31);
+        let qkv = Tensor::new(vec![b * s, 3 * d], prop::heavy_vec(&mut rng, b * s * 3 * d, 1.0));
+        let scale = 1.0 / (hd as f32).sqrt();
+        for causal in [false, true] {
+            for bi in 0..b {
+                for h in 0..heads {
+                    let (oh, probs) = attn_head(&qkv, bi, h, s, d, hd, causal);
+                    // the pre-refactor formulation, copies and all
+                    let r0 = bi * s;
+                    let c = h * hd;
+                    let qh = take_block(&qkv, r0, s, c, hd);
+                    let kh = take_block(&qkv, r0, s, d + c, hd);
+                    let vh = take_block(&qkv, r0, s, 2 * d + c, hd);
+                    let mut sc = be.matmul_t(&qh, &kh);
+                    for v in sc.data.iter_mut() {
+                        *v *= scale;
+                    }
+                    if causal {
+                        for i in 0..s {
+                            for j in (i + 1)..s {
+                                sc.data[i * s + j] = MASK_NEG;
+                            }
+                        }
+                    }
+                    for i in 0..s {
+                        let row = sc.row_mut(i);
+                        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                        let mut sum = 0.0f32;
+                        for v in row.iter_mut() {
+                            *v = (*v - mx).exp();
+                            sum += *v;
+                        }
+                        for v in row.iter_mut() {
+                            *v /= sum;
+                        }
+                    }
+                    let oh_ref = be.matmul(&sc, &vh);
+                    let what = format!("attn bi={} h={} causal={}", bi, h, causal);
+                    assert_bits(&probs.data, &sc.data, &format!("{} probs", what));
+                    assert_bits(&oh.data, &oh_ref.data, &format!("{} context", what));
+                }
+            }
         }
     }
 

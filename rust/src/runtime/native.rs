@@ -196,6 +196,19 @@ impl NativeSession {
             &alpha,
             self.be.as_ref(),
         )?;
+        // Sites whose wiring the int GEMM can execute carry both
+        // representations after prep (QDQ'd f32 weights + i8 codes), so
+        // the compute mode dispatches per forward with no re-prep.
+        let n_int = sites.values().filter(|s| s.int.is_some()).count();
+        if n_int > 0 {
+            crate::debug!(
+                "native prepare {}: {}/{} sites int-prepacked (compute mode {:?})",
+                self.spec.id,
+                n_int,
+                sites.len(),
+                net::compute_mode()
+            );
+        }
         Ok(Prepared { params, sites })
     }
 

@@ -341,6 +341,9 @@ pub fn quant_config(name: &str) -> Option<QuantWiring> {
         // runtime per-tensor activation clip ranges from the calibrator.
         "mse_w4a4" => stat(w_pcmax_int(4), static_int(4)),
         "mse_w4a8" => stat(w_pcmax_int(4), static_int(8)),
+        // W8A8 static cell: the wiring the true int8 compute path
+        // (`net::ComputeMode::IntKernel`) executes without simulation.
+        "mse_w8a8" => stat(w_pcmax_int(8), static_int(8)),
         // RPTQ: cluster-wise activation scales expressed per-channel.
         "rptq_w4a4" => stat(w_pcmax_int(4), static_int_pc(4)),
         "rptq_w4a8" => stat(w_pcmax_int(4), static_int_pc(8)),
@@ -581,7 +584,7 @@ impl ModelDef {
 
 // --- artifact enumeration --------------------------------------------------
 
-pub const OPT_EVAL_CONFIGS: [&str; 13] = [
+pub const OPT_EVAL_CONFIGS: [&str; 14] = [
     "fp32",
     "abfp_w4a4_n64",
     "abfp_w4a4_n128",
@@ -593,6 +596,7 @@ pub const OPT_EVAL_CONFIGS: [&str; 13] = [
     "abfp_w4ae4m3_n64",
     "mse_w4a4",
     "mse_w4a8",
+    "mse_w8a8",
     "rptq_w4a4",
     "rptq_w4a8",
 ];

@@ -69,7 +69,7 @@ use crate::tensor::backend;
 
 use batcher::{Batcher, MicroBatch};
 use cache::{SessionCache, SessionKey};
-use protocol::{codes, summarize, Request, Response};
+use protocol::{codes, outputs_pool, summarize_into, Request, Response};
 use queue::{AdmissionQueue, Job};
 use shard::{ShardCfg, SimSpec};
 
@@ -295,7 +295,11 @@ pub(crate) fn dispatch(
                     continue;
                 }
                 let queue_ms = popped.duration_since(job.enqueued).as_secs_f64() * 1e3;
-                job.reply(Response::ok(job.req.id, summarize(&out), n, queue_ms, run_ms));
+                // recycled summary vector: filled in place here, put
+                // back by the transport writer after serialization
+                let mut outs = outputs_pool::take();
+                summarize_into(&out, &mut outs);
+                job.reply(Response::ok(job.req.id, outs, n, queue_ms, run_ms));
                 stats.ok += 1;
             }
         }
@@ -352,12 +356,13 @@ fn spawn_stdio_pump(
     let writer = std::thread::spawn(move || {
         let stdout = std::io::stdout();
         let mut buf: Vec<u8> = Vec::with_capacity(256);
-        for resp in rx {
+        for mut resp in rx {
             resp.write_line(&mut buf);
             buf.push(b'\n');
             let mut out = stdout.lock();
             let _ = out.write_all(&buf);
             let _ = out.flush();
+            outputs_pool::put(std::mem::take(&mut resp.outputs));
         }
     });
 

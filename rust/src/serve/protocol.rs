@@ -460,14 +460,82 @@ pub struct OutputSummary {
 
 /// Summarize a session's outputs for the wire.
 pub fn summarize(outputs: &[Tensor]) -> Vec<OutputSummary> {
-    outputs
-        .iter()
-        .map(|t| OutputSummary {
-            shape: t.shape.clone(),
-            sum: t.data.iter().map(|&v| v as f64).sum(),
-            first: t.data.iter().take(4).copied().collect(),
-        })
-        .collect()
+    let mut out = Vec::with_capacity(outputs.len());
+    summarize_into(outputs, &mut out);
+    out
+}
+
+/// Summarize into a reused buffer — the worker-side hot path.
+/// Existing [`OutputSummary`] slots (and their inner shape/first
+/// vectors) are overwritten in place and only missing slots are pushed,
+/// so a warmed vector taken from [`outputs_pool`] summarizes with zero
+/// allocations in steady state. Produces exactly [`summarize`]'s value.
+pub fn summarize_into(outputs: &[Tensor], out: &mut Vec<OutputSummary>) {
+    out.truncate(outputs.len());
+    for (i, t) in outputs.iter().enumerate() {
+        let sum = t.data.iter().map(|&v| v as f64).sum();
+        match out.get_mut(i) {
+            Some(slot) => {
+                slot.shape.clear();
+                slot.shape.extend_from_slice(&t.shape);
+                slot.sum = sum;
+                slot.first.clear();
+                slot.first.extend(t.data.iter().take(4).copied());
+            }
+            None => out.push(OutputSummary {
+                shape: t.shape.clone(),
+                sum,
+                first: t.data.iter().take(4).copied().collect(),
+            }),
+        }
+    }
+}
+
+/// Recycling pool for [`Response::outputs`] vectors, closing the last
+/// per-request allocation on the serve path: a worker [`take`]s a
+/// warmed vector, fills it with [`summarize_into`], and moves it into
+/// the [`Response`]; the transport writer [`put`]s it back after the
+/// line is serialized. Pooled vectors keep their elements (and so
+/// every inner vector's capacity) — [`summarize_into`] overwrites
+/// slots in place. Bounded, shared-nothing-on-failure: a lost vector
+/// (client gone, poisoned lock) just means the next `take` allocates
+/// fresh, exactly the pre-pool behavior.
+///
+/// [`take`]: outputs_pool::take
+/// [`put`]: outputs_pool::put
+pub mod outputs_pool {
+    use std::sync::Mutex;
+
+    use super::OutputSummary;
+
+    /// Upper bound on pooled vectors; returns beyond it are dropped.
+    /// Sized for the deepest concurrency the server runs (worker count
+    /// × in-flight batches), not request volume.
+    const POOL_CAP: usize = 64;
+
+    static POOL: Mutex<Vec<Vec<OutputSummary>>> = Mutex::new(Vec::new());
+
+    /// Pop a warmed outputs vector, or a fresh empty one if the pool
+    /// is empty. Any leftover elements are live capacity for
+    /// [`super::summarize_into`], never stale wire data — it truncates
+    /// and overwrites.
+    pub fn take() -> Vec<OutputSummary> {
+        POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    /// Return a response's outputs vector once its wire line is
+    /// written. Capacity-less vectors (the error-response common case)
+    /// carry nothing worth pooling and are dropped.
+    pub fn put(v: Vec<OutputSummary>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        if let Ok(mut p) = POOL.lock() {
+            if p.len() < POOL_CAP {
+                p.push(v);
+            }
+        }
+    }
 }
 
 /// One response line (see the module docs for field semantics).
@@ -925,11 +993,9 @@ mod tests {
     fn streaming_scratch_reuse_is_clean_across_lines() {
         // a field set by one line must not leak into the next
         let mut scratch = Request::default();
-        parse_request_streaming(
-            br#"{"id": 1, "model": "m", "quant": "q", "batch": 5, "tokens": [1,2], "deadline_ms": 9}"#,
-            &mut scratch,
-        )
-        .unwrap();
+        let full =
+            br#"{"id":1, "model":"m", "quant":"q", "batch":5, "tokens":[1,2], "deadline_ms":9}"#;
+        parse_request_streaming(full, &mut scratch).unwrap();
         parse_request_streaming(br#"{"id": 2, "model": "n"}"#, &mut scratch).unwrap();
         assert_eq!(scratch, parse_request(r#"{"id": 2, "model": "n"}"#).unwrap());
         // and a failed parse leaves the scratch safe to reuse

@@ -272,13 +272,16 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
         let writer = std::thread::spawn(move || {
             let mut out = BufWriter::new(write_half);
             let mut buf: Vec<u8> = Vec::with_capacity(256);
-            for resp in rx {
+            for mut resp in rx {
                 resp.write_line(&mut buf);
                 buf.push(b'\n');
                 if out.write_all(&buf).is_err() {
                     break;
                 }
                 let _ = out.flush();
+                // recycle the summary vector dispatch() took from the
+                // pool — the wire line is written, the payload is done
+                protocol::outputs_pool::put(std::mem::take(&mut resp.outputs));
             }
         });
         let mut reader = BufReader::new(stream);

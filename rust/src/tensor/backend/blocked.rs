@@ -124,6 +124,42 @@ impl Backend for Blocked {
         Tensor::new(vec![m, n], out)
     }
 
+    fn int_matmul_t(
+        &self,
+        xq: &[i8],
+        x_scales: &[f32],
+        wq: &super::QuantPanel,
+        w_scales: &[f32],
+    ) -> Tensor {
+        let (n, k) = (wq.n, wq.k);
+        let m = x_scales.len();
+        assert_eq!(xq.len(), m * k, "int_matmul_t xq len {} vs {}x{}", xq.len(), m, k);
+        assert_eq!(w_scales.len(), n, "int_matmul_t w_scales len {} vs {}", w_scales.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        // Same j-tile-outer, i-inner walk as `matmul_t`: a TBT-row i8
+        // panel of Wq (a quarter the bytes of the f32 panel) stays hot
+        // across all M activation rows. Tiling regroups which elements
+        // are visited, and the i32 accumulation is exact, so bits match
+        // the scalar reference unconditionally.
+        let mut j0 = 0;
+        while j0 < n {
+            let jend = (j0 + TBT).min(n);
+            for i in 0..m {
+                let arow = &xq[i * k..(i + 1) * k];
+                simd::int_dots_lanes(
+                    arow,
+                    &wq.q[j0 * k..],
+                    x_scales[i],
+                    &w_scales[j0..],
+                    &mut out[i * n + j0..i * n + jend],
+                    k,
+                );
+            }
+            j0 = jend;
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
     fn gram(&self, x: &Tensor) -> Tensor {
         let (m, k) = x.dims2();
         let mut out = vec![0.0f32; k * k];

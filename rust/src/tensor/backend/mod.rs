@@ -31,6 +31,15 @@
 //! path drop every materialized transpose and activation copy without
 //! moving a single output bit.
 //!
+//! A second **compute mode** rides the same seam:
+//! [`Backend::int_matmul_t`] is a true `i8 × i8 → i32` GEMM over a
+//! prepacked [`QuantPanel`] (weights quantized once per session) with a
+//! per-row × per-channel rescale in the C-row store, fed by the
+//! [`quantize_rows_i8`] activation front. Integer accumulation is
+//! exact, so all backends are unconditionally bit-identical to the
+//! scalar reference here; `model::net::set_compute_mode` /
+//! `--compute int` select it for static-int sites.
+//!
 //! Selection is a process-wide handle, configurable at runtime:
 //!
 //! * env: `INTFPQSIM_BACKEND=scalar|blocked|simd|threaded|pool|auto`,
@@ -60,6 +69,12 @@ pub use scalar::Scalar;
 pub use simd::Simd;
 pub use threaded::Threaded;
 
+/// The scalar dot-fold discipline (ascending index order, `a == 0.0`
+/// skip) — re-exported crate-wide so callers that fold directly over
+/// strided row views (the attention heads in `model::net`) can produce
+/// `matmul_t`-contract bits without materializing block copies.
+pub(crate) use scalar::dot_skip;
+
 /// Below this many elements, the parallel backends keep reductions and
 /// axpy single-threaded (and therefore bit-identical to scalar). Shared
 /// by `threaded` and `pool` so the serial/parallel boundary — part of
@@ -70,6 +85,64 @@ pub(crate) const PAR_MIN_LEN: usize = 1 << 15;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::tensor::Tensor;
+
+/// Prepacked integer weight panel for the true low-precision compute
+/// path ([`Backend::int_matmul_t`]): the site's weight matrix quantized
+/// to i8 codes **once per session**, stored in natural `(dout, din)`
+/// row-major layout (the same layout the QDQ path keeps, so neither
+/// path ever materializes a transpose). The per-row quantization scales
+/// travel separately — they are produced by the same
+/// `RowQdq`/`QuantSpec::row_kernel` machinery the QDQ path uses, which
+/// is what keeps the two representations of one site consistent.
+pub struct QuantPanel {
+    /// `n * k` i8 codes, row-major: row `j` holds output channel `j`.
+    pub q: Vec<i8>,
+    /// Output channels (dout) — the number of rows.
+    pub n: usize,
+    /// Reduction length (din) — the row width.
+    pub k: usize,
+}
+
+impl QuantPanel {
+    /// Quantize a natural-layout `(n, k)` weight tensor into i8 codes
+    /// with the caller's per-row scales: `q = rne(w * s).clamp(±qmax)`,
+    /// element-for-element the quantize half of `formats::int_qdq` —
+    /// so `q / s` reproduces the QDQ path's dequantized weight exactly.
+    pub fn pack(w: &Tensor, row_scales: &[f32], qmax: f32) -> QuantPanel {
+        let (n, k) = w.dims2();
+        assert_eq!(
+            row_scales.len(),
+            n,
+            "QuantPanel::pack scales len {} vs rows {}",
+            row_scales.len(),
+            n
+        );
+        let mut q = vec![0i8; n * k];
+        for j in 0..n {
+            let s = row_scales[j];
+            let row = &w.data[j * k..(j + 1) * k];
+            for (c, &v) in q[j * k..(j + 1) * k].iter_mut().zip(row.iter()) {
+                *c = (v * s).round_ties_even().clamp(-qmax, qmax) as i8;
+            }
+        }
+        QuantPanel { q, n, k }
+    }
+}
+
+/// Activation-quantize front of the integer path: map `rows * k` f32
+/// activations to i8 codes with one per-tensor scale,
+/// `q = rne(v * scale).clamp(±qmax)` — the integer codes the QDQ path's
+/// `static_int_qdq` computes internally before it divides the scale
+/// back out. Like the fused `qdq_matmul_t` A-panel discipline, the f32
+/// activations are read in place and only the i8 panel is written; no
+/// intermediate f32 copy exists (the i8 panel is 4x smaller than even
+/// one fused f32 panel per row).
+pub fn quantize_rows_i8(x: &[f32], scale: f32, qmax: f32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len(), "quantize_rows_i8 length mismatch");
+    for (q, &v) in out.iter_mut().zip(x.iter()) {
+        *q = (v * scale).round_ties_even().clamp(-qmax, qmax) as i8;
+    }
+}
 
 /// A tensor-math execution strategy. All implementations must be
 /// deterministic for a fixed configuration; `matmul`/`gram`/`axpy` must
@@ -132,6 +205,46 @@ pub trait Backend: Send + Sync {
     /// block at a time; the parallel backends hold one panel per worker.
     fn qdq_panel_rows(&self) -> usize {
         1
+    }
+
+    /// True low-precision GEMM: `C = dequant(Xq @ Wq^T)` where `Xq` is
+    /// `m * k` i8 activation codes (`m = x_scales.len()` rows), `wq` is
+    /// the prepacked `(n, k)` i8 weight panel, and each output element
+    /// accumulates in **i32** before a single rescale in the C-row
+    /// store: `C[i, j] = acc / (x_scales[i] * w_scales[j])`.
+    ///
+    /// Contract — enforced by the conformance harness for every
+    /// registered backend × thread count:
+    /// * the i32 accumulation is exact (order-independent), so every
+    ///   backend is **unconditionally bit-identical** to the scalar
+    ///   reference for any input — tiling, lane unrolling and row
+    ///   partitioning cannot change an integer sum;
+    /// * every implementation applies the identical rescale expression
+    ///   `(acc as f32) / (sx * sw)` (one multiply, one divide, fixed
+    ///   order), so the f32 store is bit-identical too;
+    /// * vs the QDQ reference the result is bit-exact **where the math
+    ///   is exact** (power-of-two scales, partial sums within f32's 24
+    ///   significand bits — the static-int cells the conformance tests
+    ///   construct); elsewhere the two paths agree to a documented
+    ///   few-ULP tolerance (`docs/architecture.md`).
+    ///
+    /// Callers keep `k * 127^2 < i32::MAX` (k below ~130 000 — every
+    /// model dimension in the registry is orders of magnitude smaller),
+    /// so the accumulator cannot overflow.
+    fn int_matmul_t(
+        &self,
+        xq: &[i8],
+        x_scales: &[f32],
+        wq: &QuantPanel,
+        w_scales: &[f32],
+    ) -> Tensor {
+        let (n, k) = (wq.n, wq.k);
+        let m = x_scales.len();
+        assert_eq!(xq.len(), m * k, "int_matmul_t xq len {} vs {}x{}", xq.len(), m, k);
+        assert_eq!(w_scales.len(), n, "int_matmul_t w_scales len {} vs {}", w_scales.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        scalar::int_matmul_t_rows(xq, x_scales, &wq.q, w_scales, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
     }
 
     /// A^T @ A — the Gram/Hessian accumulator used by GPTQ.
@@ -383,6 +496,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn int_matmul_t_parity_exact_property() {
+        // The integer GEMM's cross-backend contract is unconditional:
+        // i32 accumulation is exact and the rescale expression is
+        // shared, so every backend must match scalar bit for bit on
+        // ARBITRARY i8 codes and scales — no carefully-constructed
+        // exact cells needed at this layer.
+        prop::check("backend_int_matmul_t_parity", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let xq: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i16 - 127) as i8).collect();
+            let wq: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i16 - 127) as i8).collect();
+            let x_scales: Vec<f32> =
+                (0..m).map(|_| 0.25 + rng.below(1000) as f32 / 250.0).collect();
+            let w_scales: Vec<f32> =
+                (0..n).map(|_| 0.25 + rng.below(1000) as f32 / 250.0).collect();
+            let panel = QuantPanel { q: wq, n, k };
+            let want = Scalar.int_matmul_t(&xq, &x_scales, &panel, &w_scales);
+            for be in alt_backends() {
+                let got = be.int_matmul_t(&xq, &x_scales, &panel, &w_scales);
+                prop_eq_bits(&got, &want, be.describe(), "int_matmul_t")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_panel_pack_and_quantize_rows_match_int_qdq_codes() {
+        // Packing with scale s then dequantizing q/s must reproduce the
+        // QDQ kernel exactly: q = rne(v*s).clamp(±qmax) is the quantize
+        // half of formats::int_qdq by construction.
+        let qmax = 127.0f32;
+        let w = Tensor::new(vec![2, 3], vec![0.4, -1.0, 0.26, 2.0, -2.0, 0.5]);
+        let scales = [127.0f32 / 1.0, 127.0 / 2.0];
+        let p = QuantPanel::pack(&w, &scales, qmax);
+        assert_eq!((p.n, p.k), (2, 3));
+        for j in 0..2 {
+            for c in 0..3 {
+                let v = w.data[j * 3 + c];
+                let want = (v * scales[j]).round_ties_even().clamp(-qmax, qmax);
+                assert_eq!(p.q[j * 3 + c] as f32, want, "pack code ({}, {})", j, c);
+            }
+        }
+        let x = [0.9995f32, -0.1, 0.0, 1.5, -3.0];
+        let mut codes = [0i8; 5];
+        quantize_rows_i8(&x, 127.0, qmax, &mut codes);
+        for (i, &v) in x.iter().enumerate() {
+            let want = (v * 127.0).round_ties_even().clamp(-qmax, qmax);
+            assert_eq!(codes[i] as f32, want, "activation code {}", i);
+        }
     }
 
     #[test]

@@ -347,6 +347,44 @@ impl Backend for Pool {
         Tensor::new(vec![m, n], out)
     }
 
+    fn int_matmul_t(
+        &self,
+        xq: &[i8],
+        x_scales: &[f32],
+        wq: &super::QuantPanel,
+        w_scales: &[f32],
+    ) -> Tensor {
+        let (n, k) = (wq.n, wq.k);
+        let m = x_scales.len();
+        assert_eq!(xq.len(), m * k, "int_matmul_t xq len {} vs {}x{}", xq.len(), m, k);
+        assert_eq!(w_scales.len(), n, "int_matmul_t w_scales len {} vs {}", w_scales.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        // Same row-partition-over-the-deques shape as `matmul_t`: clamp
+        // workers to rows (enqueues are cheap), serial only when there
+        // is nothing to split. Each task owns a disjoint C row block and
+        // the matching activation-scale slice; placement cannot affect
+        // the exact integer accumulation.
+        let t = self.threads.min(m);
+        if t <= 1 || n == 0 || k == 0 {
+            simd::int_matmul_t_rows(xq, x_scales, &wq.q, w_scales, &mut out, k, n);
+        } else {
+            let rows_per = m.div_ceil(t);
+            let wdata = &wq.q[..];
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(t);
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let i0 = ci * rows_per;
+                let rows = chunk.len() / n;
+                let xblock = &xq[i0 * k..(i0 + rows) * k];
+                let sblock = &x_scales[i0..i0 + rows];
+                tasks.push(Box::new(move || {
+                    simd::int_matmul_t_rows(xblock, sblock, wdata, w_scales, chunk, k, n)
+                }));
+            }
+            self.run_batch(tasks);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
     fn gram(&self, x: &Tensor) -> Tensor {
         let (m, k) = x.dims2();
         let mut out = vec![0.0f32; k * k];

@@ -123,6 +123,50 @@ pub(crate) fn qdq_matmul_t_rows(
     }
 }
 
+/// i8 dot product accumulated in i32, ascending index order. Integer
+/// addition is associative, so unlike [`dot_skip`] the fold order is
+/// *not* load-bearing — every regrouping (lane unroll, tiling) produces
+/// the same accumulator, which is why the integer path's cross-backend
+/// contract is unconditional bit-equality rather than a fixed-order
+/// discipline. No zero skip: an i8 multiply-add costs less than the
+/// branch would.
+#[inline]
+pub(crate) fn int_dot(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&av, &bv) in a.iter().zip(b.iter()) {
+        acc += (av as i32) * (bv as i32);
+    }
+    acc
+}
+
+/// C rows = dequant(Xq rows @ Wq^T): the scalar reference of the true
+/// low-precision path. `xq` holds `rows * k` i8 codes with one
+/// activation scale per row (`x_scales`), `wq` is the `(n, k)` i8 code
+/// panel with one scale per weight row (`w_scales`); each output element
+/// is one complete i32 [`int_dot`] followed by THE rescale expression of
+/// the contract — `(acc as f32) / (sx * sw)` — which every backend must
+/// reproduce verbatim so the f32 store is bit-identical everywhere.
+pub(crate) fn int_matmul_t_rows(
+    xq: &[i8],
+    x_scales: &[f32],
+    wq: &[i8],
+    w_scales: &[f32],
+    out: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &xq[i * k..(i + 1) * k];
+        let sx = x_scales[i];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let acc = int_dot(arow, &wq[j * k..(j + 1) * k]);
+            *c = (acc as f32) / (sx * w_scales[j]);
+        }
+    }
+}
+
 /// y += alpha * x over a contiguous range.
 pub(crate) fn axpy_range(alpha: f32, x: &[f32], y: &mut [f32]) {
     for (yv, &xv) in y.iter_mut().zip(x.iter()) {

@@ -135,6 +135,68 @@ pub(crate) fn qdq_matmul_t_rows(
     }
 }
 
+/// out[j] = dequant(int_dot(a, b row j)) with four i32 accumulators in
+/// flight — the integer twin of [`dots_lanes`]. The unroll runs across
+/// four independent output dots; because i32 addition is exact the
+/// accumulators equal `scalar::int_dot` regardless of grouping, and the
+/// rescale is the contract's verbatim `(acc as f32) / (sx * sw)` store,
+/// so the f32 output is bit-identical to the scalar reference.
+/// `w_scales` is indexed locally (scale `j` belongs to `b` row `j`), so
+/// tiled callers pass both slices offset together.
+pub(crate) fn int_dots_lanes(
+    a: &[i8],
+    b: &[i8],
+    sx: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+    k: usize,
+) {
+    let mut jit = out.chunks_exact_mut(LANES);
+    let mut j = 0;
+    for c4 in &mut jit {
+        let b0 = &b[j * k..(j + 1) * k];
+        let b1 = &b[(j + 1) * k..(j + 2) * k];
+        let b2 = &b[(j + 2) * k..(j + 3) * k];
+        let b3 = &b[(j + 3) * k..(j + 4) * k];
+        let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+        for (p, &av) in a.iter().enumerate() {
+            let av = av as i32;
+            s0 += av * b0[p] as i32;
+            s1 += av * b1[p] as i32;
+            s2 += av * b2[p] as i32;
+            s3 += av * b3[p] as i32;
+        }
+        c4[0] = (s0 as f32) / (sx * w_scales[j]);
+        c4[1] = (s1 as f32) / (sx * w_scales[j + 1]);
+        c4[2] = (s2 as f32) / (sx * w_scales[j + 2]);
+        c4[3] = (s3 as f32) / (sx * w_scales[j + 3]);
+        j += LANES;
+    }
+    for (jj, c) in jit.into_remainder().iter_mut().enumerate() {
+        let acc = super::scalar::int_dot(a, &b[(j + jj) * k..(j + jj + 1) * k]);
+        *c = (acc as f32) / (sx * w_scales[j + jj]);
+    }
+}
+
+/// C rows = dequant(Xq rows @ Wq^T) with the output columns 4-lane
+/// unrolled. Same signature/contract as `scalar::int_matmul_t_rows`
+/// (bit-identical — integer accumulation, shared rescale store).
+pub(crate) fn int_matmul_t_rows(
+    xq: &[i8],
+    x_scales: &[f32],
+    wq: &[i8],
+    w_scales: &[f32],
+    out: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for i in 0..rows {
+        let arow = &xq[i * k..(i + 1) * k];
+        int_dots_lanes(arow, wq, x_scales[i], w_scales, &mut out[i * n..(i + 1) * n], k);
+    }
+}
+
 /// y += alpha * x, 4-lane unrolled. The lanes are disjoint elements, so
 /// this is bit-identical to `scalar::axpy_range` for any length.
 pub(crate) fn axpy_lanes(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -205,6 +267,22 @@ impl Backend for Simd {
         assert_eq!(k, k2, "qdq_matmul_t inner dim {} vs {}", k, k2);
         let mut out = vec![0.0f32; m * n];
         qdq_matmul_t_rows(&x.data, prep, &w.data, &mut out, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn int_matmul_t(
+        &self,
+        xq: &[i8],
+        x_scales: &[f32],
+        wq: &super::QuantPanel,
+        w_scales: &[f32],
+    ) -> Tensor {
+        let (n, k) = (wq.n, wq.k);
+        let m = x_scales.len();
+        assert_eq!(xq.len(), m * k, "int_matmul_t xq len {} vs {}x{}", xq.len(), m, k);
+        assert_eq!(w_scales.len(), n, "int_matmul_t w_scales len {} vs {}", w_scales.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        int_matmul_t_rows(xq, x_scales, &wq.q, w_scales, &mut out, k, n);
         Tensor::new(vec![m, n], out)
     }
 

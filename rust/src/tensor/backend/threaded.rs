@@ -119,6 +119,42 @@ impl Backend for Threaded {
         Tensor::new(vec![m, n], out)
     }
 
+    fn int_matmul_t(
+        &self,
+        xq: &[i8],
+        x_scales: &[f32],
+        wq: &super::QuantPanel,
+        w_scales: &[f32],
+    ) -> Tensor {
+        let (n, k) = (wq.n, wq.k);
+        let m = x_scales.len();
+        assert_eq!(xq.len(), m * k, "int_matmul_t xq len {} vs {}x{}", xq.len(), m, k);
+        assert_eq!(w_scales.len(), n, "int_matmul_t w_scales len {} vs {}", w_scales.len(), n);
+        let mut out = vec![0.0f32; m * n];
+        let t = self.threads;
+        if t <= 1 || n == 0 || k == 0 || m < t {
+            simd::int_matmul_t_rows(xq, x_scales, &wq.q, w_scales, &mut out, k, n);
+        } else {
+            // Output rows partitioned exactly like `matmul_t`; each
+            // thread owns a contiguous row block plus the matching slice
+            // of per-row activation scales.
+            let rows_per = m.div_ceil(t);
+            let wdata = &wq.q[..];
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    let rows = chunk.len() / n;
+                    let xblock = &xq[i0 * k..(i0 + rows) * k];
+                    let sblock = &x_scales[i0..i0 + rows];
+                    s.spawn(move || {
+                        simd::int_matmul_t_rows(xblock, sblock, wdata, w_scales, chunk, k, n)
+                    });
+                }
+            });
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
     fn gram(&self, x: &Tensor) -> Tensor {
         let (m, k) = x.dims2();
         let mut out = vec![0.0f32; k * k];

@@ -180,6 +180,30 @@ mod tests {
     }
 
     #[test]
+    fn compute_option_is_strict() {
+        // the exact global-flag shape main.rs feeds to
+        // net::configure_compute
+        let a = Args::parse(&sv(&["eval", "--compute", "int"]), &[]).unwrap();
+        assert_eq!(a.get("compute", "qdq"), "int");
+        for name in ["qdq", "int"] {
+            let a = Args::parse(&sv(&["eval", "--compute", name]), &[]).unwrap();
+            assert_eq!(a.get("compute", "qdq"), name);
+            assert!(crate::model::net::parse_compute_mode(name).is_ok());
+        }
+        let b = Args::parse(&sv(&["eval", "--compute=qdq"]), &[]).unwrap();
+        assert_eq!(b.get("compute", "qdq"), "qdq");
+        assert!(Args::parse(&sv(&["eval", "--compute"]), &[]).is_err());
+        // Regression (ISSUE 8 satellite): unknown values must be a loud
+        // configuration error downstream, never a silent QDQ fallback —
+        // the same discipline --backend and --executor already enforce.
+        for junk in ["", "INT", "int8", "qdq ", "fused", "auto"] {
+            let e = crate::model::net::parse_compute_mode(junk).unwrap_err();
+            assert!(e.contains("unknown compute mode"), "{:?}: {}", junk, e);
+            assert!(e.contains("qdq|int"), "{:?}: {}", junk, e);
+        }
+    }
+
+    #[test]
     fn strict_numeric_flags_reject_zero_and_garbage() {
         // Regression (ISSUE 4 satellite): --threads and the serving
         // knobs (--batch-window/--max-batch/--queue-cap) must reject 0

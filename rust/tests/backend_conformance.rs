@@ -735,6 +735,93 @@ fn par_chunks_f32_bit_identical_for_any_chunking() {
 }
 
 #[test]
+fn int_matmul_t_bit_identical_across_backends_shapes_and_scales() {
+    // Tentpole (ISSUE 8): the true i8×i8→i32 GEMM accumulates exactly
+    // (integer sums are order-independent) and every backend stores the
+    // identical rescale expression `(acc as f32) / (sx * sw)`, so —
+    // unlike the f32 kernels, which need a fixed fold order — the int
+    // kernel is **unconditionally** bit-identical to the scalar
+    // reference for ANY codes and ANY scales, on every backend × thread
+    // count × shape (including empty dims and the 8-way-partition
+    // sizes). Awkward non-power-of-two scales are the point here: they
+    // make the rescale division inexact, so a backend that reassociated
+    // it (e.g. multiplied by a precomputed reciprocal) fails loudly.
+    use intfpqsim::tensor::backend::QuantPanel;
+    let mut rng = Pcg64::new(0x18B1);
+    let under_test = backends_under_test();
+    for &(m, k, n) in &SHAPES {
+        let xq: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let wq = QuantPanel {
+            q: (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect(),
+            n,
+            k,
+        };
+        let x_scales: Vec<f32> = (0..m).map(|_| 0.05 + rng.below(700) as f32 * 0.01).collect();
+        let w_scales: Vec<f32> = (0..n).map(|_| 0.05 + rng.below(900) as f32 * 0.007).collect();
+        let want = Scalar.int_matmul_t(&xq, &x_scales, &wq, &w_scales);
+        assert_eq!(want.shape, vec![m, n]);
+        for (label, be) in &under_test {
+            let got = be.int_matmul_t(&xq, &x_scales, &wq, &w_scales);
+            assert_eq!(got.shape, want.shape);
+            let ctx = format!("int_matmul_t {} {}x{}x{}", label, m, k, n);
+            assert_bits_f32(&got.data, &want.data, &ctx);
+        }
+    }
+}
+
+#[test]
+fn int_matmul_t_bit_exact_vs_qdq_reference_on_exact_cells() {
+    // Tentpole (ISSUE 8): where every f32 rounding in the QDQ
+    // simulation is exact, the int kernel must agree with it bit for
+    // bit — that is what makes the compute-mode switch observable only
+    // through speed on such cells. Exactness holds when (a) all scales
+    // are powers of two (quantize multiply, dequantize divide, and the
+    // rescale product are then lossless) and (b) every partial integer
+    // sum stays within f32's 24 significand bits. Cells where scales
+    // are arbitrary reals agree only to a documented few-ULP tolerance
+    // (`docs/architecture.md`) and are deliberately NOT asserted
+    // bit-equal here.
+    use intfpqsim::tensor::backend::{quantize_rows_i8, QuantPanel};
+    let mut rng = Pcg64::new(0x1E8A);
+    let under_test = backends_under_test();
+    // (m, k, n) small enough that |partial sum| <= k * 20 * 127 < 2^24
+    for &(m, k, n) in &[(5usize, 8usize, 4usize), (7, 64, 13), (33, 48, 29)] {
+        for &(sx, sw_base) in &[(1.0f32, 1.0f32), (2.0, 0.5), (0.25, 4.0)] {
+            // integer-valued activations and weights whose codes fit i8
+            // after the power-of-two scaling
+            let x: Vec<f32> = (0..m * k)
+                .map(|_| (rng.below(41) as f32 - 20.0) / sx)
+                .collect();
+            let w_scales: Vec<f32> =
+                (0..n).map(|j| sw_base * [0.5f32, 1.0, 2.0][j % 3]).collect();
+            let mut w = Tensor::zeros(vec![n, k]);
+            for j in 0..n {
+                for v in w.row_mut(j) {
+                    *v = (rng.below(255) as f32 - 127.0) / w_scales[j];
+                }
+            }
+            // int path: quantize activations, pack weights, integer GEMM
+            let mut xq = vec![0i8; m * k];
+            quantize_rows_i8(&x, sx, 127.0, &mut xq);
+            let panel = QuantPanel::pack(&w, &w_scales, 127.0);
+            let x_scales = vec![sx; m];
+            // QDQ reference: the simulated path's dequantized f32
+            // operands through the ordinary matmul_t
+            let xf = Tensor::new(vec![m, k], x.clone());
+            let want = Scalar.matmul_t(&xf, &w);
+            for (label, be) in &under_test {
+                let got = be.int_matmul_t(&xq, &x_scales, &panel, &w_scales);
+                let ctx = format!(
+                    "int vs qdq {} {}x{}x{} sx={}",
+                    label, m, k, n, sx
+                );
+                assert_bits_f32(&got.data, &want.data, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
 fn bulk_qdq_bit_identical_to_scalar_backend() {
     // Satellite regression: the three bulk QDQ loops route through
     // Backend::par_chunks_f32 above the parallel threshold; every

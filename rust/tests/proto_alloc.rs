@@ -2,8 +2,11 @@
 //!
 //! A counting `#[global_allocator]` wraps the system allocator; after a
 //! short warm-up (buffers grow to their high-water mark) the test runs
-//! ten thousand parse+serialize round trips and asserts the allocation
-//! counter does not move AT ALL: 0 allocations per request.
+//! ten thousand full round trips — request parse, request serialize,
+//! and the worker-side response build (output tensors summarized into a
+//! pool-recycled `Response::outputs` vector) plus its serialize — and
+//! asserts the allocation counter does not move AT ALL: 0 allocations
+//! per request.
 //!
 //! This lives in its own test binary on purpose — the libtest harness
 //! runs tests in parallel threads, and any neighbour test's allocations
@@ -13,8 +16,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use intfpqsim::serve::protocol::{
-    parse_request_streaming, OutputSummary, Request, Response,
+    outputs_pool, parse_request_streaming, summarize, summarize_into, Request, Response,
 };
+use intfpqsim::tensor::Tensor;
 
 /// Counts every heap acquisition (alloc, alloc_zeroed, realloc) and
 /// delegates to the system allocator.
@@ -58,34 +62,37 @@ fn hot_path_makes_zero_steady_state_allocations() {
     req.write_line(&mut line);
     let text = line.clone();
 
-    // a success response with a summarized 2x3 output tensor and
-    // non-integer timing floats (the float Display path must not heap)
-    let resp = Response::ok(
-        12345,
-        vec![OutputSummary {
-            shape: vec![2, 3],
-            sum: 21.75,
-            first: vec![1.0, 2.5, 3.0, 4.25],
-        }],
-        4,
-        0.3125,
-        1.0625,
-    );
+    // the session outputs a worker summarizes per request: a 2x3
+    // tensor with non-integer values (the float Display path must not
+    // heap), summarized into a pool-recycled Response::outputs vector
+    // exactly the way `serve::dispatch` does it
+    let outs = [Tensor::new(vec![2, 3], vec![1.0, 2.5, 3.0, 4.25, 5.0, 6.0])];
+    let reference = Response::ok(12345, summarize(&outs), 4, 0.3125, 1.0625);
 
     let mut scratch = Request::default();
     let mut wbuf: Vec<u8> = Vec::new();
     let mut rbuf: Vec<u8> = Vec::new();
 
-    // warm-up: scratch strings/token vec and both buffers reach their
-    // high-water capacity (and we prove correctness while we're here)
+    // warm-up: scratch strings/token vec, both buffers and the pooled
+    // summary vector reach their high-water capacity (and we prove
+    // correctness while we're here)
     for _ in 0..32 {
         parse_request_streaming(&text, &mut scratch).unwrap();
         assert_eq!(scratch, req);
         req.write_line(&mut wbuf);
         assert_eq!(wbuf, text);
+        let mut sums = outputs_pool::take();
+        summarize_into(&outs, &mut sums);
+        assert_eq!(sums, reference.outputs, "summarize_into must match summarize");
+        let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
+        outputs_pool::put(std::mem::take(&mut resp.outputs));
     }
-    assert_eq!(rbuf, resp.line().as_bytes(), "reused-buffer serializer must match dump");
+    assert_eq!(
+        rbuf,
+        reference.line().as_bytes(),
+        "reused-buffer serializer must match dump"
+    );
 
     let before = ALLOCS.load(Ordering::Relaxed);
     for i in 0..10_000u64 {
@@ -94,7 +101,11 @@ fn hot_path_makes_zero_steady_state_allocations() {
             panic!("parse corrupted at iteration {}", i);
         }
         req.write_line(&mut wbuf);
+        let mut sums = outputs_pool::take();
+        summarize_into(std::hint::black_box(&outs), &mut sums);
+        let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
+        outputs_pool::put(std::mem::take(&mut resp.outputs));
         std::hint::black_box((&scratch, &wbuf, &rbuf));
     }
     let delta = ALLOCS.load(Ordering::Relaxed) - before;

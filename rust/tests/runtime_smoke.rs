@@ -184,6 +184,81 @@ fn run_batch_splits_logits_artifacts_per_request() {
 }
 
 #[test]
+fn int_compute_mode_matches_qdq_bits_on_exact_w8a8_cell() {
+    // Tentpole (ISSUE 8): on a static-int W8A8 cell engineered so every
+    // f32 rounding in the QDQ simulation is exact — per-tensor
+    // activation clip alpha = 127 makes the activation scale exactly
+    // 127/127 = 1.0, and each weight row is normalized to absmax
+    // exactly 127.0 so every per-channel-max scale is exactly 1.0 —
+    // the true i8×i8→i32 compute path must reproduce the QDQ path's
+    // NLL bit for bit through a full native eval forward (with d = 128
+    // the worst-case partial integer sum, 4d·127², stays inside f32's
+    // 24 significand bits, so the f32 dot fold is itself exact).
+    //
+    // The compute mode is a process global; flipping it here is safe
+    // because every other session this binary opens is fp32 or ABFP —
+    // wirings the int path is ineligible for, which take the QDQ branch
+    // under either mode. The guard restores the entry mode on any exit.
+    use intfpqsim::model::net::{self, ComputeMode};
+
+    struct Restore(ComputeMode);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            net::set_compute_mode(self.0);
+        }
+    }
+
+    let rt = Runtime::new(ARTIFACTS).unwrap();
+    let cfg = rt.manifest.model("sim-opt-125m").unwrap().clone();
+    let mut params = model::init_params(&cfg, 8);
+    for site in &cfg.sites {
+        let wname = intfpqsim::methods::site_weight_param(&site.name).unwrap();
+        let mut w = params.get(&wname).unwrap().clone();
+        let (rows, k) = (w.shape[0], w.shape[1]);
+        for r in 0..rows {
+            let row = &mut w.data[r * k..(r + 1) * k];
+            let a = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if a > 0.0 {
+                // v/a has max element exactly ±1.0; ×127.0 is exact on
+                // ±1.0, so the row absmax lands on exactly 127.0
+                for v in row.iter_mut() {
+                    *v = (*v / a) * 127.0;
+                }
+            }
+        }
+        params.insert(&wname, w);
+    }
+    let mut sticky = model::param_vals(&cfg, &params).unwrap();
+    for s in &cfg.sites {
+        sticky.insert(format!("alpha.{}", s.name), Val::F32(vec![127.0], vec![]));
+    }
+    let sess = rt.session("sim-opt-125m/eval_mse_w8a8", &sticky).unwrap();
+    let corpus = TextCorpus::new(99);
+    let batch = corpus.eval_batch(3, cfg.batch, cfg.seq);
+    let toks = Val::I32(batch.tokens, vec![cfg.batch, cfg.seq]);
+
+    let _restore = Restore(net::set_compute_mode(ComputeMode::Qdq));
+    let qdq = sess.run(std::slice::from_ref(&toks)).unwrap()[0].data[0];
+    net::set_compute_mode(ComputeMode::IntKernel);
+    let int = sess.run(std::slice::from_ref(&toks)).unwrap()[0].data[0];
+    net::set_compute_mode(ComputeMode::Qdq);
+    let back = sess.run(std::slice::from_ref(&toks)).unwrap()[0].data[0];
+    assert!(qdq.is_finite(), "qdq NLL must be finite, got {}", qdq);
+    assert_eq!(
+        qdq.to_bits(),
+        int.to_bits(),
+        "int compute path NLL {} must bit-match the qdq path's {} on the exact cell",
+        int,
+        qdq
+    );
+    assert_eq!(
+        qdq.to_bits(),
+        back.to_bits(),
+        "flipping the mode back must restore the qdq path exactly"
+    );
+}
+
+#[test]
 #[ignore] // PJRT-only: needs real `xla` bindings + `make artifacts`.
 fn pjrt_executor_compiles_and_runs_artifacts() {
     // Drive the pjrt executor directly (no process-global configure, so

@@ -222,6 +222,66 @@ fn concurrent_clients_fixed_seeds_identical_outputs_regardless_of_batching() {
 }
 
 #[test]
+fn int_compute_mode_serves_identical_bytes_regardless_of_batching() {
+    // Tentpole (ISSUE 8): with the true i8×i8→i32 compute path active,
+    // serving a static-int W8A8 key must stay fully deterministic — the
+    // same request stream produces byte-identical wire lines whether
+    // requests ride alone or coalesced into shared batched forwards.
+    // (Int-vs-QDQ *equality* is not asserted here: on MSE-calibrated
+    // real weights the scales are arbitrary reals, the documented
+    // few-ULP-tolerance regime. The engineered-exact cell lives in
+    // runtime_smoke.rs.) The SERIAL mutex plus the restore guard keep
+    // the process-global mode flip invisible to the other tests.
+    let _g = lock();
+    use intfpqsim::model::net::{self, ComputeMode};
+    struct Restore(ComputeMode);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            net::set_compute_mode(self.0);
+        }
+    }
+    let _restore = Restore(net::set_compute_mode(ComputeMode::IntKernel));
+
+    let sim = tmp_sim("intmode");
+    let serve_bytes = |max_batch: usize, window_ms: u64| -> Vec<Vec<u8>> {
+        let queue = AdmissionQueue::new(8);
+        let rxs: Vec<_> = (0..3u64)
+            .map(|i| push_req(&queue, Request::new(i, "sim-opt-125m", "mse_w8a8", i)))
+            .collect();
+        queue.close();
+        let cfg = ServeCfg {
+            queue_cap: 8,
+            batch_window: Duration::from_millis(window_ms),
+            max_batch,
+        };
+        let mut cache = SessionCache::new();
+        let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+        assert_eq!(stats.ok, 3, "all int-mode requests must serve");
+        rxs.into_iter()
+            .map(|rx| {
+                let mut resp = rx.try_recv().unwrap();
+                assert!(resp.ok, "{:?}", resp.error);
+                // wall-clock timings and batch occupancy legitimately
+                // vary across batching configs; zero them so the byte
+                // comparison pins exactly the payload (id, ok, outputs)
+                resp.queue_ms = 0.0;
+                resp.run_ms = 0.0;
+                resp.batched = 0;
+                let mut buf = Vec::new();
+                resp.write_line(&mut buf);
+                buf
+            })
+            .collect()
+    };
+    let solo = serve_bytes(1, 1);
+    let coalesced = serve_bytes(8, 30);
+    assert_eq!(
+        solo, coalesced,
+        "int-mode serve bytes must be batching-invariant"
+    );
+}
+
+#[test]
 fn loadgen_single_key_traffic_coalesces_above_occupancy_one() {
     let _g = lock();
     let sim = tmp_sim("occupancy");

@@ -14,6 +14,10 @@ it does not gate (a red X on noise would train people to ignore it).
 Both `eval_throughput` (BENCH_runtime.json) and `serve_throughput`
 (BENCH_serve.json) sections are understood; cells are keyed per section
 so the same (model, quant, backend) triple never collides across files.
+The `int_gemm` section of BENCH_tensor.json is tracked too: its
+per-backend `int_speedup_vs_fused` (the true i8 GEMM's advantage over
+the fused QDQ path) is a higher-is-better ratio, so the same median
+comparison applies with the speedup standing in for toks_per_s.
 
 Usage: bench_guard.py CURRENT.json PREV.json [PREV.json ...]
                       [--threshold 0.10]
@@ -37,6 +41,15 @@ def load_cells(path):
             tps = row.get("toks_per_s")
             if all(key) and isinstance(tps, (int, float)) and tps > 0:
                 cells[key] = tps
+    # int_gemm (BENCH_tensor.json): per-backend int-vs-fused speedup
+    ig = doc.get("int_gemm")
+    if isinstance(ig, dict):
+        quant = ig.get("quant") or "w8a8"
+        for row in ig.get("results", []):
+            key = ("int_gemm", "tensor", quant, row.get("backend"))
+            sp = row.get("int_speedup_vs_fused")
+            if all(key) and isinstance(sp, (int, float)) and sp > 0:
+                cells[key] = sp
     return cells
 
 
@@ -87,10 +100,13 @@ def main():
             improvements += 1
 
     for (section, model, quant, backend), baseline, new_tps, ratio, n in regressions:
+        if section == "int_gemm":
+            shown = f"median {baseline:.2f}x -> {new_tps:.2f}x int-vs-fused speedup"
+        else:
+            shown = f"median {baseline:.0f} -> {new_tps:.0f} tok/s"
         print(
             f"::warning title=bench regression::{section}: {model}/{quant} @ {backend}: "
-            f"median {baseline:.0f} -> {new_tps:.0f} tok/s "
-            f"({(1 - ratio) * 100:.1f}% slower than the median of {n} "
+            f"{shown} ({(1 - ratio) * 100:.1f}% slower than the median of {n} "
             f"previous main-branch artifact{'s' if n != 1 else ''})"
         )
 
