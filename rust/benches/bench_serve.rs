@@ -4,7 +4,9 @@
 //! shard-scaling sweep over worker counts, a real-socket TCP cell, and
 //! a `proto_hot_path` microbench of the wire parse/serialize path
 //! (ns/request and — via a counting global allocator — heap
-//! allocations/request, which must be 0 in steady state).
+//! allocations/request, which must be 0 in steady state), and a
+//! `metrics_overhead` cell pricing the always-on observability layer
+//! (hot-path loop with vs without the per-request recording footprint).
 //!
 //! Each serving cell drives the server with the closed-loop loadgen
 //! (prewarmed sessions, 2 ms batching window), so the numbers measure
@@ -23,6 +25,7 @@ use intfpqsim::quantsim::Simulator;
 use intfpqsim::serve::loadgen::{
     run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg, LoadgenReport,
 };
+use intfpqsim::serve::metrics::{self, SpanSlot};
 use intfpqsim::serve::protocol::{
     parse_request, parse_request_streaming, OutputSummary, Request, Response, MAX_DEPTH,
     MAX_LINE_BYTES,
@@ -137,6 +140,94 @@ fn proto_hot_path_cell(fast: bool) -> Json {
     ])
 }
 
+/// Overhead of always-on metrics recording: the wire hot-path loop with
+/// the full per-request metrics footprint added, vs the same loop bare.
+/// `throughput_ratio` (without/with, higher is better) is the headline
+/// `bench_guard.py` watches; building with `--features no-metrics`
+/// compiles the recording away and drives the ratio to ~1.0, isolating
+/// the cost of the relaxed-atomic counters and histograms themselves.
+fn metrics_overhead_cell(fast: bool) -> Json {
+    let iters: u64 = if fast { 50_000 } else { 500_000 };
+    let req = Request {
+        id: 12345,
+        model: MODEL.to_string(),
+        quant: "abfp_w4a4_n64".to_string(),
+        batch_index: 3,
+        deadline_ms: Some(250),
+        tokens: Some((0..64).collect()),
+    };
+    let mut line = Vec::new();
+    req.write_line(&mut line);
+    let resp = Response::ok(
+        12345,
+        vec![OutputSummary { shape: vec![2, 3], sum: 21.75, first: vec![1.0, 2.5, 3.0, 4.25] }],
+        4,
+        0.3125,
+        1.0625,
+    );
+
+    metrics::reset();
+    let mut scratch = Request::default();
+    let mut rbuf: Vec<u8> = Vec::new();
+    for i in 0..64u64 {
+        parse_request_streaming(&line, &mut scratch).expect("warm-up parse");
+        resp.write_line(&mut rbuf);
+        metrics::admitted();
+        metrics::queue_wait(i);
+        metrics::record_span(SpanSlot::Admit, i);
+    }
+
+    // bare wire ops: the "without recording" baseline
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        parse_request_streaming(std::hint::black_box(&line[..]), &mut scratch)
+            .expect("hot-path parse");
+        resp.write_line(&mut rbuf);
+        std::hint::black_box((&scratch, &rbuf));
+    }
+    let without_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+    // the same loop plus the per-request metrics footprint the server
+    // records (counters, shard cells, queue-wait + span histograms)
+    let t1 = Instant::now();
+    for i in 0..iters {
+        parse_request_streaming(std::hint::black_box(&line[..]), &mut scratch)
+            .expect("hot-path parse");
+        resp.write_line(&mut rbuf);
+        metrics::admitted();
+        metrics::batch_dispatched((i % 4) as usize, 4);
+        metrics::request_ok((i % 4) as usize);
+        metrics::cache_hit((i % 4) as usize);
+        metrics::queue_wait(i);
+        metrics::record_span(SpanSlot::Admit, i);
+        metrics::record_span(SpanSlot::Assemble, i * 2);
+        metrics::record_span(SpanSlot::Serialize, i * 3);
+        std::hint::black_box((&scratch, &rbuf));
+    }
+    let with_ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+
+    let enabled = cfg!(not(feature = "no-metrics"));
+    let ratio = without_ns / with_ns.max(1e-9);
+    println!(
+        "{:<28} {:.0} ns/req with recording, {:.0} ns/req without \
+         (ratio {:.3}, metrics {})",
+        "metrics_overhead",
+        with_ns,
+        without_ns,
+        ratio,
+        if enabled { "on" } else { "compiled out" }
+    );
+
+    Json::obj(vec![
+        ("iters", Json::Num(iters as f64)),
+        ("metrics_enabled", Json::Bool(enabled)),
+        ("with_ns_per_request", Json::Num(with_ns)),
+        ("without_ns_per_request", Json::Num(without_ns)),
+        ("overhead_ns_per_request", Json::Num(with_ns - without_ns)),
+        ("throughput_ratio", Json::Num(ratio)),
+    ])
+}
+
 fn mixed_mix() -> Vec<(String, String)> {
     vec![
         (MODEL.to_string(), "fp32".to_string()),
@@ -182,6 +273,8 @@ fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
     println!("== protocol hot path ==");
     let proto_cell = proto_hot_path_cell(fast);
+    println!("\n== metrics overhead ==");
+    let metrics_cell = metrics_overhead_cell(fast);
     let threads = backend::env_threads();
     let pretrain = TrainOpts { steps: if fast { 40 } else { 120 }, ..Default::default() };
     let mut sim = Simulator::new("artifacts", "checkpoints").unwrap();
@@ -318,6 +411,7 @@ fn main() {
             }),
         ),
         ("proto_hot_path", proto_cell),
+        ("metrics_overhead", metrics_cell),
     ]);
     match std::fs::write("BENCH_serve.json", json.pretty()) {
         Ok(()) => println!("\nwrote BENCH_serve.json"),

@@ -23,7 +23,8 @@
 //! Serving options (serve + loadgen): --batch-window MS (default 5),
 //! --max-batch N (default 8), --queue-cap N (default 64), --workers N
 //! (default 1; >1 = sharded pool), --replicate-hot, --hot-min N; serve
-//! adds --listen ADDR (TCP instead of stdio); loadgen adds --clients N,
+//! adds --listen ADDR (TCP instead of stdio) and --stats-every S
+//! (log a compact metrics snapshot every S seconds); loadgen adds --clients N,
 //! --requests N (per client), --mix model:quant[,...], --deadline-ms D,
 //! --connect ADDR (drive a --listen server over TCP; --listen is
 //! accepted as an alias). All counts must be positive integers — 0 or
@@ -54,6 +55,7 @@ const USAGE: &str =
   repro report
   repro serve [--listen ADDR] [--workers N] [--replicate-hot] [--hot-min N]
               [--batch-window MS] [--max-batch N] [--queue-cap N] [--fast]
+              [--stats-every S]
   repro loadgen [--connect ADDR] [--clients N] [--requests N]
                 [--mix model:quant,...] [--deadline-ms D] [--workers N]
                 [--replicate-hot] [--hot-min N] [--batch-window MS]
@@ -62,6 +64,9 @@ global: [--backend scalar|blocked|simd|threaded|pool|auto] [--threads N]
         [--executor native|pjrt|auto] [--compute qdq|int]";
 
 fn main() {
+    // Pin the log epoch before any work: `[  12.34s]` offsets measure
+    // from launch, not from whenever something first logs.
+    logging::init_epoch();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match run(&argv) {
         Ok(()) => {}
@@ -270,6 +275,10 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => {
             let cfg = serve_cfg_from(&a)?;
             let shard = shard_cfg_from(&a)?;
+            if a.options.contains_key("stats-every") {
+                let every = a.get_u64_min("stats-every", 0, 1).map_err(anyhow::Error::msg)?;
+                spawn_stats_reporter(every);
+            }
             if let Some(addr) = a.options.get("listen") {
                 serve::transport::run_tcp(make_spec(&a)?, addr, &cfg, &shard)
             } else if shard.workers > 1 {
@@ -314,6 +323,20 @@ fn run(argv: &[String]) -> Result<()> {
         "" => bail!("missing command"),
         other => bail!("unknown command {:?}", other),
     }
+}
+
+/// `--stats-every S`: log a compact metrics-registry snapshot at info
+/// level every `every_s` seconds until the process exits. Detached —
+/// serving never waits on it, and reading the registry is lock-free so
+/// the reporter cannot stall the hot path.
+fn spawn_stats_reporter(every_s: u64) {
+    std::thread::Builder::new()
+        .name("stats-reporter".to_string())
+        .spawn(move || loop {
+            std::thread::sleep(Duration::from_secs(every_s));
+            logging::log(1, &serve::metrics::snapshot().render_compact());
+        })
+        .expect("spawn stats reporter");
 }
 
 /// The serving knobs `serve` and `loadgen` share — all strictly parsed.

@@ -151,6 +151,41 @@ pub mod qdq_temp {
     }
 }
 
+/// Per-site compute-dispatch accounting: how many [`qlinear`] site
+/// executions took the true int8 GEMM vs the simulated QDQ path (fused,
+/// unfused or taped) since process start. `--compute int` eligibility
+/// is per-site and otherwise silent; these counters make it observable
+/// — the serve metrics plane (`serve::metrics`) surfaces them via the
+/// `stats` wire verb, and the int share tells an operator how much of
+/// the traffic actually ran low-precision. Relaxed atomics only, so
+/// recording adds two instructions to a path that runs a matmul.
+pub mod site_dispatch {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static INT: AtomicU64 = AtomicU64::new(0);
+    static QDQ: AtomicU64 = AtomicU64::new(0);
+
+    /// Zero both counters (test/bench boundaries).
+    pub fn reset() {
+        INT.store(0, Ordering::Relaxed);
+        QDQ.store(0, Ordering::Relaxed);
+    }
+
+    /// `(int, qdq)` cumulative site dispatches. Monotone between
+    /// resets; compare deltas, not absolutes.
+    pub fn counts() -> (u64, u64) {
+        (INT.load(Ordering::Relaxed), QDQ.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn note_int() {
+        INT.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_qdq() {
+        QDQ.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// One quantized site, prepared for execution: the weight QDQ is
 /// pre-applied and the weight kept in its natural (dout, din) row-major
 /// layout — the hot loop reads its rows directly via
@@ -513,12 +548,14 @@ fn qlinear(
         // i8×i8→i32 GEMM over the session-prepacked weight codes. The
         // per-row × per-channel rescale happens in the C-row store.
         let is = site.int.as_ref().expect("int site checked above");
+        site_dispatch::note_int();
         let mut codes = vec![0i8; n * din];
         crate::tensor::backend::quantize_rows_i8(&x.data, is.x_scale, is.x_qmax, &mut codes);
         let x_scales = vec![is.x_scale; n];
         qdq_temp::add((n * din + n * 4) as u64);
         (be.int_matmul_t(&codes, &x_scales, &is.panel, &is.w_scales), None)
     } else if !want_tape && qdq_fusion() {
+        site_dispatch::note_qdq();
         let y = if site.smooth.is_none() && site.aq.kind == QuantKind::None {
             // nothing to prep: skip the panel copies entirely
             be.matmul_t(x, &site.wq)
@@ -541,6 +578,7 @@ fn qlinear(
         (y, None)
     } else {
         // Unfused reference: materialize x_q (the tape operand).
+        site_dispatch::note_qdq();
         let mut xq = x.clone();
         if let Some(sm) = &site.smooth {
             xq.scale_cols(sm);

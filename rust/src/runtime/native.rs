@@ -27,7 +27,7 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -49,10 +49,22 @@ pub struct Native;
 /// cached session — i.e. "the second request performs no re-QDQ".
 static PREPARED_BUILDS: AtomicUsize = AtomicUsize::new(0);
 
+/// Cumulative wall-clock nanoseconds spent inside successful prepared-
+/// state builds (the companion gauge to [`prepared_builds`]) — the
+/// serve metrics plane reports it so an operator can see what session
+/// faults actually cost, not just how often they happen.
+static PREPARED_NS: AtomicU64 = AtomicU64::new(0);
+
 /// How many times any native session has (re)built its prepared sticky
 /// state since process start. Monotone; compare deltas, not absolutes.
 pub fn prepared_builds() -> usize {
     PREPARED_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Total nanoseconds spent in prepared-state builds since process
+/// start. Monotone; compare deltas, not absolutes.
+pub fn prepared_build_ns() -> u64 {
+    PREPARED_NS.load(Ordering::Relaxed)
 }
 
 impl Executor for Native {
@@ -166,6 +178,7 @@ impl NativeSession {
 
     /// Convert the param / smooth / alpha inputs into execution state.
     fn build_prepared(&self, args: &[&Val]) -> Result<Prepared> {
+        let t0 = std::time::Instant::now();
         let mut params = TensorStore::default();
         let mut smooth: BTreeMap<String, Vec<f32>> = BTreeMap::new();
         let mut alpha: BTreeMap<String, Vec<f32>> = BTreeMap::new();
@@ -209,6 +222,7 @@ impl NativeSession {
                 net::compute_mode()
             );
         }
+        PREPARED_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(Prepared { params, sites })
     }
 

@@ -22,6 +22,7 @@ use std::cell::Cell;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::metrics;
 use super::protocol::{codes, Response};
 use super::queue::{AdmissionQueue, AnchorKind, BatchKey, Job, KeyHold};
 
@@ -94,6 +95,7 @@ impl Batcher {
                 codes::DEADLINE_QUEUE,
                 "deadline expired before dispatch",
             ));
+            metrics::expired();
             self.expired.set(self.expired.get() + 1);
             return true;
         }
@@ -101,7 +103,9 @@ impl Batcher {
     }
 
     /// The shared window-fill loop: drain same-key jobs (shedding
-    /// expired ones) until `max_batch` or the window closes.
+    /// expired ones) until `max_batch` or the window closes. Every job
+    /// in the formed batch (anchor included) gets its assembly span
+    /// stamp here.
     fn fill(&self, key: &BatchKey, jobs: &mut Vec<Job>) {
         let start = Instant::now();
         let mut seen = self.queue.arrivals();
@@ -127,6 +131,10 @@ impl Batcher {
                 break;
             }
             seen = self.queue.wait_new_arrival(seen, left);
+        }
+        let assembled = Instant::now();
+        for job in jobs.iter_mut() {
+            job.assemble_ns = assembled.duration_since(job.enqueued).as_nanos() as u64;
         }
     }
 

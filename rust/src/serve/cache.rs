@@ -21,6 +21,8 @@ use anyhow::Result;
 
 use crate::runtime::Session;
 
+use super::metrics;
+
 /// Full identity of a prepared session.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SessionKey {
@@ -35,6 +37,8 @@ pub struct SessionCache {
     entries: HashMap<SessionKey, Rc<Session>>,
     hits: usize,
     misses: usize,
+    /// Which shard's metrics cell this cache's traffic lands in.
+    shard: usize,
 }
 
 impl SessionCache {
@@ -42,9 +46,16 @@ impl SessionCache {
         SessionCache::default()
     }
 
+    /// A cache whose hit/miss traffic is attributed to `shard` in the
+    /// metrics registry (each shard worker owns one).
+    pub fn for_shard(shard: usize) -> SessionCache {
+        SessionCache { shard, ..SessionCache::default() }
+    }
+
     /// The cached session for `key`, opening (and retaining) it on miss.
     /// An open failure is returned to the caller and cached as nothing —
-    /// a later retry re-attempts the open.
+    /// a later retry re-attempts the open (and counts as another miss
+    /// only once it succeeds).
     pub fn get_or_open(
         &mut self,
         key: &SessionKey,
@@ -52,10 +63,12 @@ impl SessionCache {
     ) -> Result<Rc<Session>> {
         if let Some(sess) = self.entries.get(key) {
             self.hits += 1;
+            metrics::cache_hit(self.shard);
             return Ok(Rc::clone(sess));
         }
         let sess = Rc::new(open()?);
         self.misses += 1;
+        metrics::cache_miss(self.shard);
         self.entries.insert(key.clone(), Rc::clone(&sess));
         Ok(sess)
     }

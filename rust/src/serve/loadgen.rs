@@ -36,6 +36,7 @@ use crate::quantsim::{QuantConfig, Simulator};
 use crate::util::json::Json;
 
 use super::cache::SessionCache;
+use super::metrics;
 use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
 use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
@@ -141,6 +142,169 @@ pub struct LoadgenReport {
     pub workers: usize,
     /// Per-worker counters (sharded in-process transport only).
     pub per_worker: Vec<ShardStats>,
+    /// Server-side truth from the metrics registry — read directly for
+    /// the in-process transports, scraped via the `stats` wire verb
+    /// (before/after delta) over TCP. Always present in reports built
+    /// by the `run_loadgen*` entry points.
+    pub server: Option<ServerSide>,
+}
+
+/// The server's own headline counters for one loadgen run — what the
+/// *registry* saw, printed next to the client-observed percentiles so
+/// operators can spot client/server disagreement (e.g. responses the
+/// client dropped, sheds the client never noticed).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServerSide {
+    /// Jobs admitted into the queue.
+    pub admitted: u64,
+    /// Jobs rejected at admission (queue-full backpressure).
+    pub rejected: u64,
+    /// Jobs shed with a deadline error before dispatch.
+    pub expired: u64,
+    /// Jobs answered ok.
+    pub ok: u64,
+    /// Jobs answered with an error post-admission.
+    pub errors: u64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Batches anchored on stolen keys.
+    pub steals: u64,
+    /// Batches served under hot-key replication.
+    pub hot_hits: u64,
+    /// Session-cache hits.
+    pub cache_hits: u64,
+    /// Session-cache misses (sessions prepared).
+    pub cache_misses: u64,
+    /// Prepared-state builds.
+    pub prepared_builds: u64,
+    /// qlinear sites dispatched to the true int8 GEMM.
+    pub int_dispatch: u64,
+    /// qlinear sites dispatched to the simulated QDQ path.
+    pub qdq_dispatch: u64,
+}
+
+impl ServerSide {
+    fn from_snapshot(s: &metrics::Snapshot) -> ServerSide {
+        ServerSide {
+            admitted: s.admitted,
+            rejected: s.rejected,
+            expired: s.expired,
+            ok: s.ok,
+            errors: s.errors,
+            batches: s.batches,
+            steals: s.steals,
+            hot_hits: s.hot_hits,
+            cache_hits: s.cache_hits,
+            cache_misses: s.cache_misses,
+            prepared_builds: s.prepared_builds,
+            int_dispatch: s.int_dispatch,
+            qdq_dispatch: s.qdq_dispatch,
+        }
+    }
+
+    /// Parse the counters out of one `stats` snapshot line.
+    pub fn from_stats_json(j: &Json) -> Result<ServerSide> {
+        let uint = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .map(|n| n as u64)
+                .with_context(|| format!("stats snapshot missing numeric {:?}", key))
+        };
+        Ok(ServerSide {
+            admitted: uint("admitted")?,
+            rejected: uint("rejected")?,
+            expired: uint("expired")?,
+            ok: uint("ok")?,
+            errors: uint("errors")?,
+            batches: uint("batches")?,
+            steals: uint("steals")?,
+            hot_hits: uint("hot_hits")?,
+            cache_hits: uint("cache_hits")?,
+            cache_misses: uint("cache_misses")?,
+            prepared_builds: uint("prepared_builds")?,
+            int_dispatch: uint("int_dispatch")?,
+            qdq_dispatch: uint("qdq_dispatch")?,
+        })
+    }
+
+    /// Counter-wise difference (`self` after − `before`), for TCP runs
+    /// against a long-lived server whose registry is cumulative.
+    pub fn delta_since(&self, before: &ServerSide) -> ServerSide {
+        ServerSide {
+            admitted: self.admitted.saturating_sub(before.admitted),
+            rejected: self.rejected.saturating_sub(before.rejected),
+            expired: self.expired.saturating_sub(before.expired),
+            ok: self.ok.saturating_sub(before.ok),
+            errors: self.errors.saturating_sub(before.errors),
+            batches: self.batches.saturating_sub(before.batches),
+            steals: self.steals.saturating_sub(before.steals),
+            hot_hits: self.hot_hits.saturating_sub(before.hot_hits),
+            cache_hits: self.cache_hits.saturating_sub(before.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(before.cache_misses),
+            prepared_builds: self.prepared_builds.saturating_sub(before.prepared_builds),
+            int_dispatch: self.int_dispatch.saturating_sub(before.int_dispatch),
+            qdq_dispatch: self.qdq_dispatch.saturating_sub(before.qdq_dispatch),
+        }
+    }
+
+    /// Fraction of qlinear sites served by the true int8 GEMM (0 when
+    /// nothing dispatched).
+    pub fn int_share(&self) -> f64 {
+        let total = self.int_dispatch + self.qdq_dispatch;
+        if total == 0 {
+            0.0
+        } else {
+            self.int_dispatch as f64 / total as f64
+        }
+    }
+
+    /// Cross-counter sanity for a quiesced run; every CI loadgen cell
+    /// fails on a violation (an impossible server is worse than a slow
+    /// one).
+    pub fn check(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.ok + self.errors + self.expired <= self.admitted,
+            "impossible server stats: ok {} + errors {} + expired {} > admitted {}",
+            self.ok,
+            self.errors,
+            self.expired,
+            self.admitted
+        );
+        anyhow::ensure!(
+            self.cache_misses <= self.prepared_builds,
+            "impossible server stats: cache_misses {} > prepared_builds {}",
+            self.cache_misses,
+            self.prepared_builds
+        );
+        anyhow::ensure!(
+            self.steals + self.hot_hits <= self.batches,
+            "impossible server stats: steals {} + hot_hits {} > batches {}",
+            self.steals,
+            self.hot_hits,
+            self.batches
+        );
+        Ok(())
+    }
+
+    /// The counters as a JSON object (nested under `server` in the
+    /// report payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("steals", Json::Num(self.steals as f64)),
+            ("hot_hits", Json::Num(self.hot_hits as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("prepared_builds", Json::Num(self.prepared_builds as f64)),
+            ("int_dispatch", Json::Num(self.int_dispatch as f64)),
+            ("qdq_dispatch", Json::Num(self.qdq_dispatch as f64)),
+        ])
+    }
 }
 
 impl LoadgenReport {
@@ -175,6 +339,23 @@ impl LoadgenReport {
                 self.workers,
                 self.stolen_batches(),
                 self.hot_batches()
+            ));
+        }
+        if let Some(sv) = &self.server {
+            s.push_str(&format!(
+                "\n  server: admitted {} ok {} err {} shed {} rej {} | {} batches \
+                 (stolen {}, hot {}) | cache {}/{} | int dispatch {:.0}%",
+                sv.admitted,
+                sv.ok,
+                sv.errors,
+                sv.expired,
+                sv.rejected,
+                sv.batches,
+                sv.steals,
+                sv.hot_hits,
+                sv.cache_hits,
+                sv.cache_misses,
+                100.0 * sv.int_share()
             ));
         }
         s
@@ -217,6 +398,9 @@ impl LoadgenReport {
                 })
                 .collect();
             fields.push(("per_worker", Json::Arr(per)));
+        }
+        if let Some(sv) = &self.server {
+            fields.push(("server", sv.to_json()));
         }
         Json::obj(fields)
     }
@@ -346,6 +530,7 @@ fn assemble_report(
         stats,
         workers,
         per_worker,
+        server: None,
     }
 }
 
@@ -365,6 +550,8 @@ pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
         }
     }
 
+    // Measure this run only: prewarm opens stay out of the registry.
+    metrics::reset();
     let queue = AdmissionQueue::new(cfg.serve.queue_cap);
     let t0 = Instant::now();
     let (clients, done_rx) = spawn_clients(cfg, &queue);
@@ -385,7 +572,12 @@ pub fn run_loadgen(sim: &Simulator, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
     let wall_s = t0.elapsed().as_secs_f64();
     let _ = closer.join();
 
-    Ok(assemble_report(cfg, done_rx, wall_s, &toks_per_model, stats, 1, Vec::new()))
+    let snap = metrics::snapshot();
+    snap.check().context("server-side metrics failed the sanity check")?;
+    let mut report =
+        assemble_report(cfg, done_rx, wall_s, &toks_per_model, stats, 1, Vec::new());
+    report.server = Some(ServerSide::from_snapshot(&snap));
+    Ok(report)
 }
 
 /// Like [`run_loadgen`], but the serving side is an in-process
@@ -408,6 +600,11 @@ pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenRe
     }
     drop(probe);
 
+    // Measure this run only. Worker prewarm happens *after* the pool
+    // spawns (each worker opens its home keys itself), so unlike the
+    // single-worker transport those opens are counted here — accounted
+    // for in the serve_shard metric assertions.
+    metrics::reset();
     let queue = AdmissionQueue::new(cfg.serve.queue_cap);
     let t0 = Instant::now();
     let (clients, done_rx) = spawn_clients(cfg, &queue);
@@ -429,7 +626,9 @@ pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenRe
     for w in &per_worker {
         stats.absorb(&w.serve);
     }
-    Ok(assemble_report(
+    let snap = metrics::snapshot();
+    snap.check().context("server-side metrics failed the sanity check")?;
+    let mut report = assemble_report(
         cfg,
         done_rx,
         wall_s,
@@ -437,7 +636,9 @@ pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenRe
         stats,
         cfg.shard.workers,
         per_worker,
-    ))
+    );
+    report.server = Some(ServerSide::from_snapshot(&snap));
+    Ok(report)
 }
 
 /// Drive the closed-loop clients over real sockets against a running
@@ -447,6 +648,11 @@ pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenRe
 /// `report.stats` is zeroed and `report.workers` is 0.
 pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
     let toks_per_model = validate_mix(sim, cfg)?;
+
+    // The remote registry is cumulative across the server's lifetime;
+    // scrape it before and after and report the delta as this run's
+    // server-side truth.
+    let before = fetch_server_stats(addr).context("scrape server stats (pre-run)")?;
 
     let (done_tx, done_rx) = mpsc::channel::<Vec<(Response, f64)>>();
     let mut clients = Vec::with_capacity(cfg.clients);
@@ -524,7 +730,10 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    Ok(assemble_report(
+    let after = fetch_server_stats(addr).context("scrape server stats (post-run)")?;
+    let server = after.delta_since(&before);
+    server.check().context("server-side metrics failed the sanity check")?;
+    let mut report = assemble_report(
         cfg,
         done_rx,
         wall_s,
@@ -532,5 +741,71 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
         ServeStats::default(),
         0,
         Vec::new(),
-    ))
+    );
+    report.server = Some(server);
+    Ok(report)
+}
+
+/// Scrape one metrics snapshot from a remote server: a fresh
+/// connection, one `stats` verb line out, one JSON snapshot line back.
+pub fn fetch_server_stats(addr: &str) -> Result<ServerSide> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {}", addr))?;
+    let mut writer = BufWriter::new(stream.try_clone().context("clone stream")?);
+    let mut reader = BufReader::new(stream);
+    writer.write_all(protocol::STATS_LINE.as_bytes()).context("send stats verb")?;
+    writer.write_all(b"\n").context("send stats verb")?;
+    writer.flush().context("flush stats verb")?;
+    let mut rbuf: Vec<u8> = Vec::with_capacity(1024);
+    match transport::read_line_capped(&mut reader, &mut rbuf, protocol::MAX_LINE_BYTES)
+        .context("read stats response")?
+    {
+        transport::LineRead::Line => {}
+        transport::LineRead::Eof => anyhow::bail!("server closed the connection"),
+        transport::LineRead::TooLong => {
+            anyhow::bail!("stats line exceeds max_line_bytes")
+        }
+    }
+    let text =
+        std::str::from_utf8(transport::trim_ws(&rbuf)).context("stats line is not utf-8")?;
+    let json = Json::parse(text).map_err(|e| anyhow::anyhow!("bad stats json: {}", e))?;
+    ServerSide::from_stats_json(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_side_round_trips_deltas_and_sanity_checks() {
+        let sv = ServerSide {
+            admitted: 10,
+            rejected: 2,
+            expired: 1,
+            ok: 8,
+            errors: 1,
+            batches: 4,
+            steals: 1,
+            hot_hits: 1,
+            cache_hits: 7,
+            cache_misses: 2,
+            prepared_builds: 2,
+            int_dispatch: 3,
+            qdq_dispatch: 1,
+        };
+        sv.check().unwrap();
+        assert!((sv.int_share() - 0.75).abs() < 1e-12);
+
+        let parsed =
+            ServerSide::from_stats_json(&Json::parse(&sv.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, sv);
+
+        let later = ServerSide { admitted: 25, ok: 20, ..sv.clone() };
+        let d = later.delta_since(&sv);
+        assert_eq!(d.admitted, 15);
+        assert_eq!(d.ok, 12);
+        assert_eq!(d.batches, 0);
+
+        let bad = ServerSide { ok: 20, ..sv.clone() };
+        assert!(bad.check().is_err(), "ok+errors+expired > admitted must be impossible");
+    }
 }

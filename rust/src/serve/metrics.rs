@@ -1,0 +1,792 @@
+//! The serve-side observability plane: a static registry of lock-free
+//! counters and latency histograms, per-shard and aggregated.
+//!
+//! Everything the serving stack measures lands here: queue admissions
+//! and rejections, deadline sheds, dispatched batches and their
+//! occupancy, work stealing and hot-key replication, session-cache
+//! traffic, prepared-state builds (and what they cost), the int-vs-QDQ
+//! per-site compute dispatch split from `model/net.rs`, and the
+//! per-request trace spans (enqueue → admit → batch-assemble → forward
+//! → serialize) stamped on each [`super::queue::Job`].
+//!
+//! **Recording contract:** every record function is relaxed-atomic only
+//! and performs **zero allocations** — the request hot path keeps its
+//! 0-steady-state-allocation guarantee with metrics always on
+//! (`tests/proto_alloc.rs` audits the wire path with recording calls
+//! included, and the `metrics_overhead` cell of `bench_serve` measures
+//! the cost per request). There is no lock anywhere in the registry;
+//! consistency across counters is best-effort by design, which is why
+//! snapshots are for operators and tests quiesce traffic before
+//! asserting exact values.
+//!
+//! **Reading:** [`snapshot`] materializes the registry into a
+//! [`Snapshot`]; its JSON form (sorted keys, one line) is what the
+//! `stats` wire verb returns and what `repro serve --stats-every N`
+//! logs. The top-level key set is the compiled metric-name manifest
+//! ([`NAMES`]) — `tests/protocol_doc.rs` machine-checks the table in
+//! `docs/serving.md` against it, so the docs cannot drift.
+//!
+//! Aggregates of execution-side counters are *derived* from the
+//! per-shard cells at snapshot time, so per-shard breakdowns sum to the
+//! aggregate by construction. Queue-level counters (admitted, rejected,
+//! expired) have no shard identity and are kept globally.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::model::net::site_dispatch;
+use crate::runtime::native;
+use crate::util::hist::{Hist, HistSnapshot};
+
+/// Size of the static per-shard cell array; shard indices wrap modulo
+/// this, so pools wider than 64 workers fold counters rather than lose
+/// them (the aggregate stays exact either way).
+pub const MAX_SHARDS: usize = 64;
+
+/// Top-level keys of the snapshot JSON, in emission (= sorted) order —
+/// the compiled metric-name manifest the docs table is checked against.
+pub const NAMES: &[&str] = &[
+    "admitted",
+    "batch_size",
+    "batches",
+    "cache_hits",
+    "cache_misses",
+    "errors",
+    "expired",
+    "hot_hits",
+    "int_dispatch",
+    "ok",
+    "prepared_build_us",
+    "prepared_builds",
+    "qdq_dispatch",
+    "queue_wait_us",
+    "rejected",
+    "shards",
+    "span_admit_ns",
+    "span_assemble_ns",
+    "span_forward_ns",
+    "span_serialize_ns",
+    "steals",
+];
+
+/// Keys of each element of the snapshot's `shards` array, in emission
+/// (= sorted) order.
+pub const SHARD_FIELDS: &[&str] = &[
+    "batches",
+    "cache_hits",
+    "cache_misses",
+    "errors",
+    "hot_hits",
+    "ok",
+    "shard",
+    "steals",
+];
+
+/// Keys of every histogram object in the snapshot, in emission order.
+pub const HIST_FIELDS: &[&str] = &["count", "max", "p50", "p95", "p99", "sum"];
+
+// ---- the registry ------------------------------------------------------
+
+/// One shard's execution-side counters.
+struct ShardCells {
+    batches: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    steals: AtomicU64,
+    hot_hits: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+impl ShardCells {
+    const fn new() -> ShardCells {
+        ShardCells {
+            batches: AtomicU64::new(0),
+            ok: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            hot_hits: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+        }
+    }
+
+    fn reset(&self) {
+        self.batches.store(0, Ordering::Relaxed);
+        self.ok.store(0, Ordering::Relaxed);
+        self.errors.store(0, Ordering::Relaxed);
+        self.steals.store(0, Ordering::Relaxed);
+        self.hot_hits.store(0, Ordering::Relaxed);
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SHARD_ZERO: ShardCells = ShardCells::new();
+static SHARDS: [ShardCells; MAX_SHARDS] = [SHARD_ZERO; MAX_SHARDS];
+
+// Queue-level counters (no shard identity at the admission boundary).
+static ADMITTED: AtomicU64 = AtomicU64::new(0);
+static REJECTED: AtomicU64 = AtomicU64::new(0);
+static EXPIRED: AtomicU64 = AtomicU64::new(0);
+
+// Baselines subtracted from process-global counters owned elsewhere, so
+// [`reset`] can zero the registry's view without disturbing them.
+static PREPARED_BASE: AtomicU64 = AtomicU64::new(0);
+static PREPARED_NS_BASE: AtomicU64 = AtomicU64::new(0);
+static INT_BASE: AtomicU64 = AtomicU64::new(0);
+static QDQ_BASE: AtomicU64 = AtomicU64::new(0);
+
+static QUEUE_WAIT_US: Hist = Hist::new();
+static BATCH_SIZE: Hist = Hist::new();
+static SPAN_ADMIT_NS: Hist = Hist::new();
+static SPAN_ASSEMBLE_NS: Hist = Hist::new();
+static SPAN_FORWARD_NS: Hist = Hist::new();
+static SPAN_SERIALIZE_NS: Hist = Hist::new();
+
+#[inline]
+fn on() -> bool {
+    // `--features no-metrics` compiles every record call to a no-op:
+    // the baseline build of the bench_serve `metrics_overhead` cell.
+    cfg!(not(feature = "no-metrics"))
+}
+
+#[inline]
+fn cells(shard: usize) -> &'static ShardCells {
+    &SHARDS[shard % MAX_SHARDS]
+}
+
+// ---- record functions (relaxed atomics, zero allocation) ---------------
+
+/// A job was admitted into the queue.
+#[inline]
+pub fn admitted() {
+    if on() {
+        ADMITTED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A job was rejected at admission (queue full or closed).
+#[inline]
+pub fn rejected() {
+    if on() {
+        REJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A job was shed with a deadline error before dispatch.
+#[inline]
+pub fn expired() {
+    if on() {
+        EXPIRED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A micro-batch of `size` jobs was dispatched by `shard`.
+#[inline]
+pub fn batch_dispatched(shard: usize, size: usize) {
+    if on() {
+        cells(shard).batches.fetch_add(1, Ordering::Relaxed);
+        BATCH_SIZE.record(size as u64);
+    }
+}
+
+/// A job was answered ok by `shard`.
+#[inline]
+pub fn request_ok(shard: usize) {
+    if on() {
+        cells(shard).ok.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A job was answered with an error by `shard` (post-admission).
+#[inline]
+pub fn request_error(shard: usize) {
+    if on() {
+        cells(shard).errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `shard` served a batch anchored on a stolen (foreign-home) key.
+#[inline]
+pub fn stolen(shard: usize) {
+    if on() {
+        cells(shard).steals.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `shard` served a batch under hot-key replication.
+#[inline]
+pub fn hot_hit(shard: usize) {
+    if on() {
+        cells(shard).hot_hits.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `shard`'s session cache answered a lookup from a prepared session.
+#[inline]
+pub fn cache_hit(shard: usize) {
+    if on() {
+        cells(shard).cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `shard`'s session cache had to open (prepare) a session.
+#[inline]
+pub fn cache_miss(shard: usize) {
+    if on() {
+        cells(shard).cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Record a job's enqueue→assembly wait (the `queue_wait_us` histogram).
+#[inline]
+pub fn queue_wait(us: u64) {
+    if on() {
+        QUEUE_WAIT_US.record(us);
+    }
+}
+
+// ---- trace spans -------------------------------------------------------
+
+/// The per-request span intervals (enqueue → admit → batch-assemble →
+/// forward → serialize); each has its own latency histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanSlot {
+    /// enqueue → queue admission (parse + push overhead).
+    Admit,
+    /// admission → micro-batch assembly (time spent queued).
+    Assemble,
+    /// the batched forward itself.
+    Forward,
+    /// response serialization on the writer thread.
+    Serialize,
+}
+
+/// Record `ns` into `slot`'s span histogram.
+#[inline]
+pub fn record_span(slot: SpanSlot, ns: u64) {
+    if on() {
+        match slot {
+            SpanSlot::Admit => SPAN_ADMIT_NS.record(ns),
+            SpanSlot::Assemble => SPAN_ASSEMBLE_NS.record(ns),
+            SpanSlot::Forward => SPAN_FORWARD_NS.record(ns),
+            SpanSlot::Serialize => SPAN_SERIALIZE_NS.record(ns),
+        }
+    }
+}
+
+thread_local! {
+    static TRACE: Cell<Option<SpanSlot>> = const { Cell::new(None) };
+}
+
+/// The span slot an enclosing [`trace`] made active on this thread, if
+/// any — `util::timer::Scope` consults this on drop to emit into the
+/// span plumbing instead of the debug log.
+pub fn active_trace() -> Option<SpanSlot> {
+    TRACE.with(|t| t.get())
+}
+
+/// RAII guard of [`trace`]; restores the previous slot on drop.
+pub struct TraceGuard {
+    prev: Option<SpanSlot>,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        TRACE.with(|t| t.set(self.prev));
+    }
+}
+
+/// Make `slot` the active trace context on this thread until the guard
+/// drops: timer scopes created inside record their elapsed time into
+/// the slot's span histogram.
+pub fn trace(slot: SpanSlot) -> TraceGuard {
+    let prev = TRACE.with(|t| t.replace(Some(slot)));
+    TraceGuard { prev }
+}
+
+// ---- reset / snapshot --------------------------------------------------
+
+/// Zero the registry (tests and loadgen run boundaries). Process-global
+/// counters owned elsewhere (prepared builds, site dispatch) are
+/// re-baselined rather than reset, so other subsystems are undisturbed.
+pub fn reset() {
+    for cell in &SHARDS {
+        cell.reset();
+    }
+    ADMITTED.store(0, Ordering::Relaxed);
+    REJECTED.store(0, Ordering::Relaxed);
+    EXPIRED.store(0, Ordering::Relaxed);
+    QUEUE_WAIT_US.reset();
+    BATCH_SIZE.reset();
+    SPAN_ADMIT_NS.reset();
+    SPAN_ASSEMBLE_NS.reset();
+    SPAN_FORWARD_NS.reset();
+    SPAN_SERIALIZE_NS.reset();
+    PREPARED_BASE.store(native::prepared_builds() as u64, Ordering::Relaxed);
+    PREPARED_NS_BASE.store(native::prepared_build_ns(), Ordering::Relaxed);
+    let (int, qdq) = site_dispatch::counts();
+    INT_BASE.store(int, Ordering::Relaxed);
+    QDQ_BASE.store(qdq, Ordering::Relaxed);
+}
+
+/// One shard's counters at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSnapshot {
+    /// Shard index (cell index — indices wrap at [`MAX_SHARDS`]).
+    pub shard: usize,
+    /// Micro-batches this shard dispatched.
+    pub batches: u64,
+    /// Jobs this shard answered ok.
+    pub ok: u64,
+    /// Jobs this shard answered with an error.
+    pub errors: u64,
+    /// Batches served on stolen keys.
+    pub steals: u64,
+    /// Batches served under hot-key replication.
+    pub hot_hits: u64,
+    /// Session-cache hits.
+    pub cache_hits: u64,
+    /// Session-cache misses (sessions prepared).
+    pub cache_misses: u64,
+}
+
+impl ShardSnapshot {
+    fn any(&self) -> bool {
+        self.batches
+            + self.ok
+            + self.errors
+            + self.steals
+            + self.hot_hits
+            + self.cache_hits
+            + self.cache_misses
+            > 0
+    }
+}
+
+/// A point-in-time copy of the whole registry (see [`snapshot`]).
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Jobs admitted into the queue.
+    pub admitted: u64,
+    /// Jobs rejected at admission (queue full/closed).
+    pub rejected: u64,
+    /// Jobs shed with a deadline error before dispatch.
+    pub expired: u64,
+    /// Jobs answered ok (sum over shards).
+    pub ok: u64,
+    /// Jobs answered with an error post-admission (sum over shards).
+    pub errors: u64,
+    /// Micro-batches dispatched (sum over shards).
+    pub batches: u64,
+    /// Batches served on stolen keys (sum over shards).
+    pub steals: u64,
+    /// Batches served under hot-key replication (sum over shards).
+    pub hot_hits: u64,
+    /// Session-cache hits (sum over shards).
+    pub cache_hits: u64,
+    /// Session-cache misses (sum over shards).
+    pub cache_misses: u64,
+    /// Prepared-state builds since the last [`reset`].
+    pub prepared_builds: u64,
+    /// Microseconds spent in prepared-state builds since last [`reset`].
+    pub prepared_build_us: u64,
+    /// qlinear sites dispatched to the true int8 GEMM.
+    pub int_dispatch: u64,
+    /// qlinear sites dispatched to the simulated QDQ path.
+    pub qdq_dispatch: u64,
+    /// Enqueue→assembly wait per job, microseconds.
+    pub queue_wait_us: HistSnapshot,
+    /// Dispatched micro-batch occupancy.
+    pub batch_size: HistSnapshot,
+    /// Enqueue→admission span per job, nanoseconds.
+    pub span_admit_ns: HistSnapshot,
+    /// Admission→assembly span per job, nanoseconds.
+    pub span_assemble_ns: HistSnapshot,
+    /// Batched-forward span per batch, nanoseconds.
+    pub span_forward_ns: HistSnapshot,
+    /// Serialization span per response, nanoseconds.
+    pub span_serialize_ns: HistSnapshot,
+    /// Per-shard breakdowns (active shards only; they sum to the
+    /// aggregates above by construction).
+    pub shards: Vec<ShardSnapshot>,
+}
+
+/// Materialize the registry. Aggregates of execution-side counters are
+/// computed as the sum of the per-shard cells read here, so the
+/// `shards` breakdown always sums to the aggregate.
+pub fn snapshot() -> Snapshot {
+    let mut shards = Vec::new();
+    let (mut ok, mut errors, mut batches) = (0u64, 0u64, 0u64);
+    let (mut steals, mut hot_hits) = (0u64, 0u64);
+    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
+    for (i, cell) in SHARDS.iter().enumerate() {
+        let s = ShardSnapshot {
+            shard: i,
+            batches: cell.batches.load(Ordering::Relaxed),
+            ok: cell.ok.load(Ordering::Relaxed),
+            errors: cell.errors.load(Ordering::Relaxed),
+            steals: cell.steals.load(Ordering::Relaxed),
+            hot_hits: cell.hot_hits.load(Ordering::Relaxed),
+            cache_hits: cell.cache_hits.load(Ordering::Relaxed),
+            cache_misses: cell.cache_misses.load(Ordering::Relaxed),
+        };
+        ok += s.ok;
+        errors += s.errors;
+        batches += s.batches;
+        steals += s.steals;
+        hot_hits += s.hot_hits;
+        cache_hits += s.cache_hits;
+        cache_misses += s.cache_misses;
+        if s.any() {
+            shards.push(s);
+        }
+    }
+    let (int, qdq) = site_dispatch::counts();
+    Snapshot {
+        admitted: ADMITTED.load(Ordering::Relaxed),
+        rejected: REJECTED.load(Ordering::Relaxed),
+        expired: EXPIRED.load(Ordering::Relaxed),
+        ok,
+        errors,
+        batches,
+        steals,
+        hot_hits,
+        cache_hits,
+        cache_misses,
+        prepared_builds: (native::prepared_builds() as u64)
+            .saturating_sub(PREPARED_BASE.load(Ordering::Relaxed)),
+        prepared_build_us: native::prepared_build_ns()
+            .saturating_sub(PREPARED_NS_BASE.load(Ordering::Relaxed))
+            / 1_000,
+        int_dispatch: int.saturating_sub(INT_BASE.load(Ordering::Relaxed)),
+        qdq_dispatch: qdq.saturating_sub(QDQ_BASE.load(Ordering::Relaxed)),
+        queue_wait_us: QUEUE_WAIT_US.snapshot(),
+        batch_size: BATCH_SIZE.snapshot(),
+        span_admit_ns: SPAN_ADMIT_NS.snapshot(),
+        span_assemble_ns: SPAN_ASSEMBLE_NS.snapshot(),
+        span_forward_ns: SPAN_FORWARD_NS.snapshot(),
+        span_serialize_ns: SPAN_SERIALIZE_NS.snapshot(),
+        shards,
+    }
+}
+
+fn push_hist(out: &mut String, key: &str, h: &HistSnapshot) {
+    out.push('"');
+    out.push_str(key);
+    out.push_str("\":{\"count\":");
+    out.push_str(&h.count.to_string());
+    out.push_str(",\"max\":");
+    out.push_str(&h.max.to_string());
+    out.push_str(",\"p50\":");
+    out.push_str(&h.percentile(0.50).to_string());
+    out.push_str(",\"p95\":");
+    out.push_str(&h.percentile(0.95).to_string());
+    out.push_str(",\"p99\":");
+    out.push_str(&h.percentile(0.99).to_string());
+    out.push_str(",\"sum\":");
+    out.push_str(&h.sum.to_string());
+    out.push('}');
+}
+
+fn push_kv(out: &mut String, key: &str, v: u64) {
+    out.push('"');
+    out.push_str(key);
+    out.push_str("\":");
+    out.push_str(&v.to_string());
+}
+
+impl Snapshot {
+    /// The snapshot as one compact JSON object with keys in [`NAMES`]
+    /// order (sorted — the same convention as the wire serializers).
+    /// This is the exact line the `stats` verb returns.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push('{');
+        push_kv(&mut s, "admitted", self.admitted);
+        s.push(',');
+        push_hist(&mut s, "batch_size", &self.batch_size);
+        s.push(',');
+        push_kv(&mut s, "batches", self.batches);
+        s.push(',');
+        push_kv(&mut s, "cache_hits", self.cache_hits);
+        s.push(',');
+        push_kv(&mut s, "cache_misses", self.cache_misses);
+        s.push(',');
+        push_kv(&mut s, "errors", self.errors);
+        s.push(',');
+        push_kv(&mut s, "expired", self.expired);
+        s.push(',');
+        push_kv(&mut s, "hot_hits", self.hot_hits);
+        s.push(',');
+        push_kv(&mut s, "int_dispatch", self.int_dispatch);
+        s.push(',');
+        push_kv(&mut s, "ok", self.ok);
+        s.push(',');
+        push_kv(&mut s, "prepared_build_us", self.prepared_build_us);
+        s.push(',');
+        push_kv(&mut s, "prepared_builds", self.prepared_builds);
+        s.push(',');
+        push_kv(&mut s, "qdq_dispatch", self.qdq_dispatch);
+        s.push(',');
+        push_hist(&mut s, "queue_wait_us", &self.queue_wait_us);
+        s.push(',');
+        push_kv(&mut s, "rejected", self.rejected);
+        s.push_str(",\"shards\":[");
+        for (i, sh) in self.shards.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('{');
+            push_kv(&mut s, "batches", sh.batches);
+            s.push(',');
+            push_kv(&mut s, "cache_hits", sh.cache_hits);
+            s.push(',');
+            push_kv(&mut s, "cache_misses", sh.cache_misses);
+            s.push(',');
+            push_kv(&mut s, "errors", sh.errors);
+            s.push(',');
+            push_kv(&mut s, "hot_hits", sh.hot_hits);
+            s.push(',');
+            push_kv(&mut s, "ok", sh.ok);
+            s.push(',');
+            push_kv(&mut s, "shard", sh.shard as u64);
+            s.push(',');
+            push_kv(&mut s, "steals", sh.steals);
+            s.push('}');
+        }
+        s.push(']');
+        s.push(',');
+        push_hist(&mut s, "span_admit_ns", &self.span_admit_ns);
+        s.push(',');
+        push_hist(&mut s, "span_assemble_ns", &self.span_assemble_ns);
+        s.push(',');
+        push_hist(&mut s, "span_forward_ns", &self.span_forward_ns);
+        s.push(',');
+        push_hist(&mut s, "span_serialize_ns", &self.span_serialize_ns);
+        s.push(',');
+        push_kv(&mut s, "steals", self.steals);
+        s.push('}');
+        s
+    }
+
+    /// A one-line human rendering for `--stats-every` stderr snapshots.
+    pub fn render_compact(&self) -> String {
+        format!(
+            "stats: admitted {} ok {} err {} shed {} rej {} | {} batches \
+             (p50 size {}, queue p95 {}us, forward p95 {}us) | cache {}/{} \
+             | int/qdq {}/{} | stolen {} hot {}",
+            self.admitted,
+            self.ok,
+            self.errors,
+            self.expired,
+            self.rejected,
+            self.batches,
+            self.batch_size.percentile(0.50),
+            self.queue_wait_us.percentile(0.95),
+            self.span_forward_ns.percentile(0.95) / 1_000,
+            self.cache_hits,
+            self.cache_misses,
+            self.int_dispatch,
+            self.qdq_dispatch,
+            self.steals,
+            self.hot_hits
+        )
+    }
+
+    /// Cross-counter sanity: invariants no healthy server can violate
+    /// (the CI smoke cells fail on these). Quiesce traffic first — the
+    /// registry is relaxed-atomic, so mid-flight reads can transiently
+    /// disagree across counters.
+    pub fn check(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.ok + self.errors + self.expired <= self.admitted,
+            "impossible stats: ok {} + errors {} + expired {} > admitted {}",
+            self.ok,
+            self.errors,
+            self.expired,
+            self.admitted
+        );
+        anyhow::ensure!(
+            self.cache_misses <= self.prepared_builds,
+            "impossible stats: cache_misses {} > prepared_builds {}",
+            self.cache_misses,
+            self.prepared_builds
+        );
+        anyhow::ensure!(
+            self.steals + self.hot_hits <= self.batches,
+            "impossible stats: steals {} + hot_hits {} > batches {}",
+            self.steals,
+            self.hot_hits,
+            self.batches
+        );
+        let sums: [u64; 7] = self.shards.iter().fold([0; 7], |mut acc, s| {
+            for (a, v) in acc.iter_mut().zip([
+                s.batches,
+                s.ok,
+                s.errors,
+                s.steals,
+                s.hot_hits,
+                s.cache_hits,
+                s.cache_misses,
+            ]) {
+                *a += v;
+            }
+            acc
+        });
+        let agg = [
+            self.batches,
+            self.ok,
+            self.errors,
+            self.steals,
+            self.hot_hits,
+            self.cache_hits,
+            self.cache_misses,
+        ];
+        anyhow::ensure!(
+            sums == agg,
+            "impossible stats: per-shard sums {:?} != aggregates {:?}",
+            sums,
+            agg
+        );
+        Ok(())
+    }
+}
+
+/// Serialize a fresh snapshot into `buf` (cleared first, no trailing
+/// newline) — the writer-thread half of the `stats` wire verb.
+pub fn write_snapshot(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.extend_from_slice(snapshot().to_json().as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    // Lib tests run concurrently and several suites drive the queue or
+    // qlinear (bumping global counters), so these tests only assert (a)
+    // structural properties of the snapshot and (b) deltas on a shard
+    // cell (63) no other test touches.
+    const TEST_SHARD: usize = MAX_SHARDS - 1;
+
+    fn shard_cell(snap: &Snapshot, shard: usize) -> ShardSnapshot {
+        snap.shards
+            .iter()
+            .find(|s| s.shard == shard)
+            .cloned()
+            .unwrap_or(ShardSnapshot { shard, ..Default::default() })
+    }
+
+    #[test]
+    fn snapshot_json_keys_match_the_compiled_manifest() {
+        let snap = snapshot();
+        let parsed = Json::parse(&snap.to_json()).expect("snapshot is valid JSON");
+        let obj = parsed.as_obj().expect("snapshot is an object");
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, NAMES, "snapshot keys == NAMES (both sorted)");
+        // histogram objects carry exactly HIST_FIELDS
+        for key in ["batch_size", "queue_wait_us", "span_forward_ns"] {
+            let h = obj[key].as_obj().expect("histogram object");
+            let hkeys: Vec<&str> = h.keys().map(|k| k.as_str()).collect();
+            assert_eq!(hkeys, HIST_FIELDS, "{} fields", key);
+        }
+    }
+
+    #[test]
+    fn shard_entries_carry_exactly_the_shard_fields() {
+        request_ok(TEST_SHARD); // ensure at least one active shard
+        let parsed = Json::parse(&snapshot().to_json()).unwrap();
+        let shards = parsed.get("shards").and_then(|s| s.as_arr()).unwrap();
+        assert!(!shards.is_empty());
+        for sh in shards {
+            let obj = sh.as_obj().expect("shard object");
+            let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+            assert_eq!(keys, SHARD_FIELDS);
+        }
+    }
+
+    #[test]
+    fn per_shard_cells_record_deltas_and_sum_into_aggregates() {
+        let before = snapshot();
+        let b = shard_cell(&before, TEST_SHARD);
+        batch_dispatched(TEST_SHARD, 3);
+        request_ok(TEST_SHARD);
+        request_ok(TEST_SHARD);
+        request_error(TEST_SHARD);
+        stolen(TEST_SHARD);
+        hot_hit(TEST_SHARD);
+        cache_hit(TEST_SHARD);
+        cache_miss(TEST_SHARD);
+        let after = snapshot();
+        let a = shard_cell(&after, TEST_SHARD);
+        assert_eq!(a.batches - b.batches, 1);
+        assert_eq!(a.ok - b.ok, 2);
+        assert_eq!(a.errors - b.errors, 1);
+        assert_eq!(a.steals - b.steals, 1);
+        assert_eq!(a.hot_hits - b.hot_hits, 1);
+        assert_eq!(a.cache_hits - b.cache_hits, 1);
+        assert_eq!(a.cache_misses - b.cache_misses, 1);
+        // aggregates are derived from the same cells, so they moved by
+        // at least as much (concurrent suites may add more)
+        assert!(after.ok >= before.ok + 2);
+        assert!(after.batches >= before.batches + 1);
+        // and the shard breakdown sums to the aggregate by construction
+        let sum_ok: u64 = after.shards.iter().map(|s| s.ok).sum();
+        assert_eq!(sum_ok, after.ok);
+    }
+
+    #[test]
+    fn queue_counters_and_hists_move_forward() {
+        let before = snapshot();
+        admitted();
+        rejected();
+        expired();
+        queue_wait(250);
+        record_span(SpanSlot::Serialize, 1_500);
+        let after = snapshot();
+        assert!(after.admitted >= before.admitted + 1);
+        assert!(after.rejected >= before.rejected + 1);
+        assert!(after.expired >= before.expired + 1);
+        assert!(after.queue_wait_us.count >= before.queue_wait_us.count + 1);
+        assert!(after.span_serialize_ns.count >= before.span_serialize_ns.count + 1);
+    }
+
+    #[test]
+    fn trace_context_nests_and_restores() {
+        assert_eq!(active_trace(), None);
+        {
+            let _outer = trace(SpanSlot::Forward);
+            assert_eq!(active_trace(), Some(SpanSlot::Forward));
+            {
+                let _inner = trace(SpanSlot::Serialize);
+                assert_eq!(active_trace(), Some(SpanSlot::Serialize));
+            }
+            assert_eq!(active_trace(), Some(SpanSlot::Forward));
+        }
+        assert_eq!(active_trace(), None);
+    }
+
+    #[test]
+    fn check_accepts_consistent_and_rejects_impossible_snapshots() {
+        let mut snap = snapshot();
+        // a quiesced snapshot built from the registry passes
+        snap.shards.clear();
+        snap.ok = 0;
+        snap.errors = 0;
+        snap.batches = 0;
+        snap.steals = 0;
+        snap.hot_hits = 0;
+        snap.cache_hits = 0;
+        snap.cache_misses = 0;
+        snap.expired = 0;
+        snap.admitted = 5;
+        snap.prepared_builds = 0;
+        snap.check().expect("consistent snapshot passes");
+        snap.ok = 9; // > admitted, and not matched by shard sums
+        assert!(snap.check().is_err(), "completed > admitted is impossible");
+    }
+}

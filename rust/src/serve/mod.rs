@@ -13,6 +13,9 @@
 //!   executor, backend): weights converted/QDQ-prepared once per key;
 //! * [`protocol`] — the line-delimited JSON request/response format of
 //!   `repro serve` (specified operator-facing in `docs/serving.md`);
+//! * [`metrics`] — the lock-free observability registry: counters,
+//!   latency histograms and per-request trace spans, readable via the
+//!   `stats` wire verb or `--stats-every` periodic snapshots;
 //! * [`shard`] — the multi-worker pool: N threads, each owning its own
 //!   simulator and session cache, coordinating through key holds with
 //!   cross-shard stealing and optional hot-key replication;
@@ -47,6 +50,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod loadgen;
+pub mod metrics;
 pub mod protocol;
 pub mod queue;
 pub mod shard;
@@ -212,17 +216,34 @@ pub(crate) fn session_key(sim: &Simulator, model: &str, quant: &str) -> SessionK
 /// Run one micro-batch to completion: resolve the cached session, build
 /// every request's input, drive `Session::run_batch`, and answer each
 /// job (post-run deadline expiry becomes an error — never stale output).
+/// `shard` attributes the batch in the metrics registry (0 for the
+/// single-worker server).
 pub(crate) fn dispatch(
     sim: &Simulator,
     cache: &mut SessionCache,
     corpora: &Corpora,
     mb: MicroBatch,
     stats: &mut ServeStats,
+    shard: usize,
 ) {
     stats.batches += 1;
     stats.requests += mb.jobs.len();
     stats.max_occupancy = stats.max_occupancy.max(mb.jobs.len());
+    metrics::batch_dispatched(shard, mb.jobs.len());
     let popped = Instant::now();
+    for job in &mb.jobs {
+        // span stamps: enqueue→admit from the queue, admit→assemble
+        // from the batcher (fall back to "now" for jobs that skipped
+        // the batcher, e.g. hand-built test batches)
+        let waited = popped.duration_since(job.enqueued).as_nanos() as u64;
+        let assembled = if job.assemble_ns > 0 { job.assemble_ns } else { waited };
+        metrics::record_span(metrics::SpanSlot::Admit, job.admit_ns);
+        metrics::record_span(
+            metrics::SpanSlot::Assemble,
+            assembled.saturating_sub(job.admit_ns),
+        );
+        metrics::queue_wait(waited / 1_000);
+    }
 
     let cfg = match sim.rt.manifest.model(&mb.key.model) {
         Ok(cfg) => cfg.clone(),
@@ -233,6 +254,7 @@ pub(crate) fn dispatch(
                     codes::UNKNOWN_MODEL,
                     &format!("{:#}", e),
                 ));
+                metrics::request_error(shard);
             }
             stats.errors += mb.jobs.len();
             return;
@@ -251,6 +273,7 @@ pub(crate) fn dispatch(
                     codes::OPEN_FAILED,
                     &format!("open session: {:#}", e),
                 ));
+                metrics::request_error(shard);
             }
             stats.errors += mb.jobs.len();
             return;
@@ -269,6 +292,7 @@ pub(crate) fn dispatch(
             }
             Err(e) => {
                 job.reply(Response::err(job.req.id, codes::BAD_INPUT, &format!("{:#}", e)));
+                metrics::request_error(shard);
                 stats.errors += 1;
             }
         }
@@ -278,7 +302,12 @@ pub(crate) fn dispatch(
     }
 
     let t0 = Instant::now();
-    let result = sess.run_batch(&frees);
+    let result = {
+        // the timer scope lands in span_forward_ns via the active trace
+        let _trace = metrics::trace(metrics::SpanSlot::Forward);
+        let _scope = crate::util::timer::Scope::new("serve.forward");
+        sess.run_batch(&frees)
+    };
     let run_ms = t0.elapsed().as_secs_f64() * 1e3;
     match result {
         Ok(outs) => {
@@ -291,6 +320,7 @@ pub(crate) fn dispatch(
                         codes::DEADLINE_RUN,
                         "deadline expired during batched run",
                     ));
+                    metrics::request_error(shard);
                     stats.errors += 1;
                     continue;
                 }
@@ -300,6 +330,7 @@ pub(crate) fn dispatch(
                 let mut outs = outputs_pool::take();
                 summarize_into(&out, &mut outs);
                 job.reply(Response::ok(job.req.id, outs, n, queue_ms, run_ms));
+                metrics::request_ok(shard);
                 stats.ok += 1;
             }
         }
@@ -310,6 +341,7 @@ pub(crate) fn dispatch(
                     codes::RUN_FAILED,
                     &format!("run: {:#}", e),
                 ));
+                metrics::request_error(shard);
             }
             stats.errors += jobs.len();
         }
@@ -330,7 +362,7 @@ pub fn serve_loop(
     let corpora = Corpora::new();
     let mut stats = ServeStats::default();
     while let Some(mb) = batcher.next_batch() {
-        dispatch(sim, cache, &corpora, mb, &mut stats);
+        dispatch(sim, cache, &corpora, mb, &mut stats, 0);
     }
     stats.expired = batcher.expired_count();
     stats
@@ -357,8 +389,19 @@ fn spawn_stdio_pump(
         let stdout = std::io::stdout();
         let mut buf: Vec<u8> = Vec::with_capacity(256);
         for mut resp in rx {
+            if protocol::is_stats_marker(&resp) {
+                // `stats` verb: answer with a registry snapshot line
+                metrics::write_snapshot(&mut buf);
+                buf.push(b'\n');
+                let mut out = stdout.lock();
+                let _ = out.write_all(&buf);
+                let _ = out.flush();
+                continue;
+            }
+            let t0 = Instant::now();
             resp.write_line(&mut buf);
             buf.push(b'\n');
+            metrics::record_span(metrics::SpanSlot::Serialize, t0.elapsed().as_nanos() as u64);
             let mut out = stdout.lock();
             let _ = out.write_all(&buf);
             let _ = out.flush();
@@ -389,6 +432,10 @@ fn spawn_stdio_pump(
                 }
                 let bytes = transport::trim_ws(&line);
                 if bytes.is_empty() {
+                    continue;
+                }
+                if protocol::is_stats_request(bytes) {
+                    let _ = tx.send(protocol::stats_marker());
                     continue;
                 }
                 match protocol::parse_request_streaming(bytes, &mut scratch) {

@@ -73,6 +73,59 @@ pub const MAX_LINE_BYTES: usize = 1 << 20;
 /// `docs/serving.md`. Unknown fields are rejected at parse time.
 pub const REQUEST_FIELDS: &[&str] = &["id", "model", "quant", "batch", "tokens", "deadline_ms"];
 
+/// Every verb a client line can speak, as documented in
+/// `docs/serving.md`. A line without a `"verb"` field is a `run`
+/// request (the original — and still default — protocol); `stats`
+/// fetches a metrics snapshot.
+pub const VERBS: &[&str] = &["run", "stats"];
+
+/// The canonical `stats` request line (what `repro loadgen` sends).
+pub const STATS_LINE: &str = "{\"verb\":\"stats\"}";
+
+/// Is this trimmed line a `stats` request? The canonical line is a
+/// plain byte compare (hot-path cheap); as a courtesy, any short object
+/// whose only content is `"verb": "stats"` (key order / whitespace
+/// free) is also accepted — the tree parse only runs for lines that
+/// contain `"verb"`, which normal requests reject as an unknown field
+/// anyway.
+pub fn is_stats_request(line: &[u8]) -> bool {
+    if line == STATS_LINE.as_bytes() {
+        return true;
+    }
+    if line.len() > 64 || !line.windows(6).any(|w| w == b"\"verb\"") {
+        return false;
+    }
+    let Ok(s) = std::str::from_utf8(line) else {
+        return false;
+    };
+    match Json::parse(s) {
+        Ok(j) => {
+            j.get("verb").and_then(Json::as_str) == Some("stats")
+                && j.as_obj().map(|o| o.len() == 1).unwrap_or(false)
+        }
+        Err(_) => false,
+    }
+}
+
+/// Internal `code` value marking the in-process sentinel a reader
+/// thread sends its writer when a `stats` line arrives (never
+/// serialized to the wire — the writer swaps it for a snapshot line).
+const STATS_MARKER_CODE: &str = "__stats__";
+
+/// The sentinel [`Response`] routed from reader to writer for a `stats`
+/// request. Rides the existing per-connection response channel, so the
+/// snapshot is serialized by the same thread that owns the socket.
+/// Unambiguous: real [`ERR_ID`] responses always carry
+/// [`codes::BAD_REQUEST`], never this private code.
+pub fn stats_marker() -> Response {
+    Response::err(ERR_ID, STATS_MARKER_CODE, "stats")
+}
+
+/// Is this response the [`stats_marker`] sentinel?
+pub fn is_stats_marker(resp: &Response) -> bool {
+    resp.id == ERR_ID && resp.code.as_deref() == Some(STATS_MARKER_CODE)
+}
+
 /// Every field a response line may carry, as documented in
 /// `docs/serving.md` (`error` and `code` only appear on failures).
 pub const RESPONSE_FIELDS: &[&str] =
@@ -1003,6 +1056,24 @@ mod tests {
         parse_request_streaming(br#"{"id": 3, "model": "o"}"#, &mut scratch).unwrap();
         assert_eq!(scratch.id, 3);
         assert_eq!(scratch.model, "o");
+    }
+
+    #[test]
+    fn stats_lines_and_markers_are_recognized() {
+        assert!(is_stats_request(STATS_LINE.as_bytes()));
+        // whitespace / formatting-lenient
+        assert!(is_stats_request(b"{ \"verb\" : \"stats\" }"));
+        // not stats: other verbs, extra fields, ordinary requests
+        assert!(!is_stats_request(b"{\"verb\":\"run\"}"));
+        assert!(!is_stats_request(b"{\"verb\":\"stats\",\"id\":1}"));
+        assert!(!is_stats_request(br#"{"id":1,"model":"m"}"#));
+        assert!(!is_stats_request(b""));
+        // the sentinel never collides with a real error response
+        let m = stats_marker();
+        assert!(is_stats_marker(&m));
+        let real = Response::err(ERR_ID, codes::BAD_REQUEST, "bad request: x");
+        assert!(!is_stats_marker(&real));
+        assert_eq!(VERBS, &["run", "stats"]);
     }
 
     #[test]

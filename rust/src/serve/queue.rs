@@ -32,6 +32,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::metrics;
 use super::protocol::{Request, Response};
 
 /// Compatibility key of a micro-batch: requests for the same prepared
@@ -70,6 +71,12 @@ pub struct Job {
     /// Admission sequence number (set by the queue): the EDF tiebreak
     /// and the FIFO order for jobs without deadlines.
     pub(crate) seq: u64,
+    /// Trace-span stamp: ns from `enqueued` to queue admission (set by
+    /// [`AdmissionQueue::try_push`]; feeds `span_admit_ns`).
+    pub(crate) admit_ns: u64,
+    /// Trace-span stamp: ns from `enqueued` to micro-batch assembly
+    /// (set by the batcher; feeds `span_assemble_ns`).
+    pub(crate) assemble_ns: u64,
 }
 
 impl Job {
@@ -79,7 +86,7 @@ impl Job {
         let deadline = req
             .deadline_ms
             .map(|ms| enqueued + Duration::from_millis(ms));
-        Job { req, enqueued, deadline, respond, seq: 0 }
+        Job { req, enqueued, deadline, respond, seq: 0, admit_ns: 0, assemble_ns: 0 }
     }
 
     /// The micro-batch compatibility key of this request.
@@ -207,8 +214,11 @@ impl AdmissionQueue {
     pub fn try_push(&self, mut job: Job) -> Result<(), Job> {
         let mut st = self.state.lock().unwrap();
         if st.closed || st.len >= self.cap {
+            metrics::rejected();
             return Err(job);
         }
+        job.admit_ns = job.enqueued.elapsed().as_nanos() as u64;
+        metrics::admitted();
         job.seq = st.next_seq;
         st.next_seq += 1;
         st.arrivals += 1;

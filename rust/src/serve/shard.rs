@@ -180,7 +180,7 @@ fn worker_loop(
     prewarm: &[(String, String)],
 ) -> Result<ShardStats> {
     let sim = spec.build().with_context(|| format!("shard {}: build simulator", w))?;
-    let mut cache = SessionCache::new();
+    let mut cache = SessionCache::for_shard(w);
     for (model, quant) in prewarm {
         let bkey = BatchKey { model: model.clone(), quant: quant.clone() };
         if home_shard(&bkey, shard_cfg.workers) != w {
@@ -203,11 +203,17 @@ fn worker_loop(
     let mut st = ShardStats { shard: w, ..Default::default() };
     while let Some(sb) = batcher.next_shard_batch(&sel) {
         match sb.kind {
-            AnchorKind::Stolen => st.stolen_batches += 1,
-            AnchorKind::Hot => st.hot_batches += 1,
+            AnchorKind::Stolen => {
+                st.stolen_batches += 1;
+                super::metrics::stolen(w);
+            }
+            AnchorKind::Hot => {
+                st.hot_batches += 1;
+                super::metrics::hot_hit(w);
+            }
             AnchorKind::Home => {}
         }
-        super::dispatch(&sim, &mut cache, &corpora, sb.mb, &mut st.serve);
+        super::dispatch(&sim, &mut cache, &corpora, sb.mb, &mut st.serve, w);
         drop(sb.hold);
     }
     st.serve.expired = batcher.expired_count();

@@ -39,6 +39,7 @@ use anyhow::{Context, Result};
 
 use crate::tensor::backend;
 
+use super::metrics;
 use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
 use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
@@ -273,8 +274,23 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
             let mut out = BufWriter::new(write_half);
             let mut buf: Vec<u8> = Vec::with_capacity(256);
             for mut resp in rx {
+                if protocol::is_stats_marker(&resp) {
+                    // `stats` verb: answer with a registry snapshot line
+                    metrics::write_snapshot(&mut buf);
+                    buf.push(b'\n');
+                    if out.write_all(&buf).is_err() {
+                        break;
+                    }
+                    let _ = out.flush();
+                    continue;
+                }
+                let t0 = std::time::Instant::now();
                 resp.write_line(&mut buf);
                 buf.push(b'\n');
+                metrics::record_span(
+                    metrics::SpanSlot::Serialize,
+                    t0.elapsed().as_nanos() as u64,
+                );
                 if out.write_all(&buf).is_err() {
                     break;
                 }
@@ -298,6 +314,10 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
             }
             let bytes = trim_ws(&line);
             if bytes.is_empty() {
+                continue;
+            }
+            if protocol::is_stats_request(bytes) {
+                let _ = tx.send(protocol::stats_marker());
                 continue;
             }
             match protocol::parse_request_streaming(bytes, &mut scratch) {

@@ -1,0 +1,243 @@
+//! Lock-free fixed-bucket log2 histogram for hot-path latency metrics.
+//!
+//! [`Hist`] is a 64-bucket power-of-two histogram over `u64` samples:
+//! bucket `i` counts samples whose value lies in `[2^i, 2^(i+1))`
+//! (bucket 0 additionally holds 0 and 1). Recording is a single relaxed
+//! atomic increment plus a relaxed `fetch_max` — no locks, no
+//! allocation, no ordering constraints — so it is safe to call from the
+//! serve wire hot path, whose zero-steady-state-allocation contract is
+//! pinned by `tests/proto_alloc.rs`.
+//!
+//! Percentiles are reconstructed exactly from the bucket counts by rank
+//! walk: `percentile(p)` returns the upper edge of the bucket containing
+//! the sample of rank `ceil(p·count)`, i.e. an upper bound on the true
+//! p-quantile that is exact to the bucket resolution (a factor of 2).
+//! For serving latencies spanning microseconds to seconds that is the
+//! resolution operators actually read dashboards at, and it is the
+//! price of a histogram whose record path is two relaxed atomics.
+//!
+//! `Hist::new()` is `const`, so histograms can live in `static`
+//! registries (see `crate::serve::metrics`) with zero init cost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets; covers the full `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// A lock-free log2 histogram (see module docs).
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Hist {
+    /// An empty histogram; `const`, so usable in `static` items.
+    pub const fn new() -> Hist {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Hist {
+            buckets: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of `v`: `floor(log2(v))`, with 0 and 1 in bucket 0.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v < 2 {
+            0
+        } else {
+            63 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Record one sample. Relaxed atomics only; never allocates.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded since construction (or the last [`Hist::reset`]).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (wrapping on overflow).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Zero every bucket and counter. Not atomic as a whole — callers
+    /// (tests, loadgen run boundaries) serialize around it.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough copy of the current state for reporting.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        // derive count from the buckets so the rank walk always has a
+        // self-consistent total even under concurrent recording
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Upper bound on the `p`-quantile (`0.0 < p <= 1.0`); see the
+    /// module docs for the reconstruction contract. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.snapshot().percentile(p)
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+/// A point-in-time copy of a [`Hist`]'s buckets and counters.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    /// Per-bucket sample counts (bucket `i` covers `[2^i, 2^(i+1))`).
+    pub buckets: [u64; BUCKETS],
+    /// Total samples across all buckets.
+    pub count: u64,
+    /// Sum of all samples at snapshot time.
+    pub sum: u64,
+    /// Largest sample at snapshot time.
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Inclusive upper edge of bucket `i` (`u64::MAX` for the last).
+    fn upper_edge(i: usize) -> u64 {
+        if i >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
+    }
+
+    /// Upper bound on the `p`-quantile by exact rank walk over the
+    /// bucket counts. 0 when the histogram is empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                // never report past the true maximum
+                return Self::upper_edge(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_powers_of_two() {
+        assert_eq!(Hist::bucket(0), 0);
+        assert_eq!(Hist::bucket(1), 0);
+        assert_eq!(Hist::bucket(2), 1);
+        assert_eq!(Hist::bucket(3), 1);
+        assert_eq!(Hist::bucket(4), 2);
+        assert_eq!(Hist::bucket(1023), 9);
+        assert_eq!(Hist::bucket(1024), 10);
+        assert_eq!(Hist::bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn counts_sum_and_max_accumulate() {
+        let h = Hist::new();
+        for v in [0, 1, 2, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1103);
+        assert_eq!(h.max(), 1000);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(0.99), 0, "empty after reset");
+    }
+
+    #[test]
+    fn percentiles_are_bucket_upper_bounds() {
+        let h = Hist::new();
+        // 100 samples of 10 (bucket 3, edge 15) and 1 sample of 1000
+        for _ in 0..100 {
+            h.record(10);
+        }
+        h.record(1000);
+        assert_eq!(h.percentile(0.50), 15);
+        assert_eq!(h.percentile(0.95), 15);
+        // rank ceil(0.999 * 101) = 101 lands in the 1000 bucket, whose
+        // edge (1023) is clamped to the recorded max
+        assert_eq!(h.percentile(0.999), 1000);
+        assert_eq!(h.percentile(1.0), 1000);
+    }
+
+    #[test]
+    fn percentile_never_exceeds_max() {
+        let h = Hist::new();
+        for v in [3, 5, 9, 17, 900] {
+            h.record(v);
+        }
+        for p in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert!(h.percentile(p) <= h.max(), "p{}: {}", p, h.percentile(p));
+        }
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        use std::sync::Arc;
+        let h = Arc::new(Hist::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.snapshot().count, 4000);
+    }
+}

@@ -1,4 +1,5 @@
-//! Leveled stderr logging with wall-clock offsets.
+//! Leveled stderr logging with wall-clock offsets from the process
+//! epoch (pin it early with [`init_epoch`]).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -9,6 +10,16 @@ static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
+}
+
+/// Pin the log epoch to "now". `main` calls this first thing: without
+/// it the epoch initializes lazily on the *first log line*, so every
+/// `[  12.34s]` offset would measure from whenever something first
+/// logged rather than from launch — silently hiding any quiet startup
+/// phase (artifact prep, checkpoint loads) from the timeline.
+/// Idempotent: later calls never move an already-pinned epoch.
+pub fn init_epoch() {
+    let _ = START.get_or_init(Instant::now);
 }
 
 pub fn elapsed() -> f64 {
@@ -29,4 +40,22 @@ macro_rules! info {
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::util::logging::log(2, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_pinned_once_and_elapsed_advances_from_it() {
+        // regression: elapsed() used to initialize the epoch lazily on
+        // the first log, so pre-log wall time never showed in offsets
+        init_epoch();
+        let e1 = elapsed();
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        init_epoch(); // idempotent: must NOT re-pin the epoch
+        let e2 = elapsed();
+        assert!(e2 - e1 >= 0.010, "elapsed advanced {:.4}s", e2 - e1);
+        assert!(e2 >= 0.010, "epoch stayed pinned across init_epoch calls");
+    }
 }

@@ -5,6 +5,7 @@
 //! are implemented here from scratch and tested in-tree.
 
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod json_stream;
 pub mod logging;

@@ -61,14 +61,22 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
 }
 
 /// Scoped wall-clock timer for coarse phase profiling.
+///
+/// On drop, the elapsed time goes to whichever sink is active: inside a
+/// `serve::metrics::trace` context it is recorded into that span's
+/// latency histogram (how the serve dispatcher times its batched
+/// forwards); otherwise it is logged at debug level, the original
+/// behavior everywhere else.
 pub struct Scope {
-    name: String,
+    // `&'static str` keeps construction allocation-free — the serve
+    // dispatcher opens a Scope per batch on its zero-alloc hot path
+    name: &'static str,
     start: Instant,
 }
 
 impl Scope {
-    pub fn new(name: &str) -> Self {
-        Scope { name: name.to_string(), start: Instant::now() }
+    pub fn new(name: &'static str) -> Self {
+        Scope { name, start: Instant::now() }
     }
 
     pub fn elapsed_ms(&self) -> f64 {
@@ -78,10 +86,15 @@ impl Scope {
 
 impl Drop for Scope {
     fn drop(&mut self) {
-        crate::util::logging::log(
-            2,
-            &format!("{}: {:.1} ms", self.name, self.elapsed_ms()),
-        );
+        if let Some(slot) = crate::serve::metrics::active_trace() {
+            let ns = self.start.elapsed().as_nanos() as u64;
+            crate::serve::metrics::record_span(slot, ns);
+        } else {
+            crate::util::logging::log(
+                2,
+                &format!("{}: {:.1} ms", self.name, self.elapsed_ms()),
+            );
+        }
     }
 }
 
@@ -98,5 +111,22 @@ mod tests {
         assert!(s.p50_ns <= s.p99_ns);
         assert!(s.mean_ns > 0.0);
         assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn scope_emits_into_the_active_trace_span() {
+        // the Admit slot is recorded by no other test in this binary,
+        // so exact count deltas are race-free here
+        use crate::serve::metrics::{self, SpanSlot};
+        let before = metrics::snapshot().span_admit_ns.count;
+        {
+            let _trace = metrics::trace(SpanSlot::Admit);
+            let _scope = Scope::new("test.scope");
+        }
+        let after = metrics::snapshot().span_admit_ns.count;
+        assert_eq!(after, before + 1, "scope drop recorded into the span hist");
+        // without a trace context the drop goes to the debug log only
+        drop(Scope::new("test.scope.untraced"));
+        assert_eq!(metrics::snapshot().span_admit_ns.count, after);
     }
 }

@@ -6,7 +6,10 @@
 //! and the worker-side response build (output tensors summarized into a
 //! pool-recycled `Response::outputs` vector) plus its serialize — and
 //! asserts the allocation counter does not move AT ALL: 0 allocations
-//! per request.
+//! per request. Every serve-metrics recording call rides inside the
+//! audited loop too: the observability layer is always-on, so its
+//! counters and histograms must be just as allocation-free as the wire
+//! path they instrument.
 //!
 //! This lives in its own test binary on purpose — the libtest harness
 //! runs tests in parallel threads, and any neighbour test's allocations
@@ -15,6 +18,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use intfpqsim::serve::metrics::{self, SpanSlot};
 use intfpqsim::serve::protocol::{
     outputs_pool, parse_request_streaming, summarize, summarize_into, Request, Response,
 };
@@ -87,6 +91,11 @@ fn hot_path_makes_zero_steady_state_allocations() {
         let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
         outputs_pool::put(std::mem::take(&mut resp.outputs));
+        // warm the metrics path too (thread-local trace slot included)
+        metrics::admitted();
+        metrics::queue_wait(1);
+        let _trace = metrics::trace(SpanSlot::Forward);
+        drop(intfpqsim::util::timer::Scope::new("proto_alloc.forward"));
     }
     assert_eq!(
         rbuf,
@@ -106,6 +115,20 @@ fn hot_path_makes_zero_steady_state_allocations() {
         let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
         outputs_pool::put(std::mem::take(&mut resp.outputs));
+        // the full per-request metrics footprint, exactly as the serve
+        // path records it — must be allocation-free with metrics on
+        metrics::admitted();
+        metrics::batch_dispatched((i % 4) as usize, 4);
+        metrics::request_ok((i % 4) as usize);
+        metrics::cache_hit((i % 4) as usize);
+        metrics::queue_wait(i);
+        metrics::record_span(SpanSlot::Admit, i);
+        metrics::record_span(SpanSlot::Assemble, i * 2);
+        metrics::record_span(SpanSlot::Serialize, i * 3);
+        {
+            let _trace = metrics::trace(SpanSlot::Forward);
+            let _scope = intfpqsim::util::timer::Scope::new("proto_alloc.forward");
+        }
         std::hint::black_box((&scratch, &wbuf, &rbuf));
     }
     let delta = ALLOCS.load(Ordering::Relaxed) - before;

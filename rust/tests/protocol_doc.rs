@@ -15,6 +15,7 @@ use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use intfpqsim::serve::metrics;
 use intfpqsim::serve::protocol::{
     self, codes, Response, ERR_ID, REQUEST_FIELDS, RESPONSE_FIELDS,
 };
@@ -68,6 +69,20 @@ fn doc_tables_match_the_wire_manifests_exactly() {
         anchored_fields("error-codes"),
         manifest(codes::ALL),
         "docs/serving.md error-code table drifted from protocol::codes::ALL"
+    );
+}
+
+#[test]
+fn doc_verb_and_metric_tables_match_the_compiled_manifests() {
+    assert_eq!(
+        anchored_fields("verbs"),
+        manifest(protocol::VERBS),
+        "docs/serving.md verb table drifted from protocol::VERBS"
+    );
+    assert_eq!(
+        anchored_fields("metrics"),
+        manifest(metrics::NAMES),
+        "docs/serving.md metric-name table drifted from metrics::NAMES"
     );
 }
 
@@ -280,6 +295,20 @@ fn live_server_honors_every_documented_field_and_code() {
             );
         }
     }
+
+    // the `stats` verb answers on the same connection with one snapshot
+    // line whose top-level keys are exactly the documented metric names
+    send(protocol::STATS_LINE);
+    let mut line = String::new();
+    r.read_line(&mut line).expect("read stats snapshot");
+    let snap = Json::parse(line.trim()).expect("stats snapshot parses");
+    let keys: Vec<&str> = snap
+        .as_obj()
+        .expect("stats snapshot is an object")
+        .keys()
+        .map(|k| k.as_str())
+        .collect();
+    assert_eq!(keys, metrics::NAMES, "stats keys drifted from metrics::NAMES");
 
     srv.shutdown().unwrap();
 }

@@ -19,6 +19,7 @@ use intfpqsim::quantsim::Simulator;
 use intfpqsim::runtime::native;
 use intfpqsim::serve::cache::SessionCache;
 use intfpqsim::serve::loadgen::{run_loadgen, LoadgenCfg};
+use intfpqsim::serve::metrics;
 use intfpqsim::serve::protocol::{Request, Response};
 use intfpqsim::serve::queue::{AdmissionQueue, Job};
 use intfpqsim::serve::{serve_loop, ServeCfg};
@@ -53,6 +54,7 @@ fn push_req(
 fn session_cache_reuse_second_request_performs_no_requantize() {
     let _g = lock();
     let sim = tmp_sim("reuse");
+    metrics::reset();
     let queue = AdmissionQueue::new(8);
     // two requests for the SAME (model, quant) key, forced into separate
     // micro-batches (max_batch 1) so the second goes through the cache
@@ -83,12 +85,34 @@ fn session_cache_reuse_second_request_performs_no_requantize() {
     assert_eq!(built, 1, "second request must not re-QDQ the weights");
     // different stream indices -> different NLL outputs
     assert_ne!(r1.outputs, r2.outputs);
+
+    // the metrics registry saw exactly this traffic, nothing else
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 2);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.ok, 2);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.batches, 2);
+    assert_eq!(snap.cache_hits, 1, "hits == requests − distinct keys");
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(snap.prepared_builds, 1);
+    assert_eq!(snap.queue_wait_us.count, 2, "one queue-wait sample per job");
+    assert_eq!(snap.span_admit_ns.count, 2);
+    assert_eq!(snap.span_assemble_ns.count, 2);
+    assert_eq!(snap.span_forward_ns.count, 2, "one timed forward per batch");
+    assert_eq!(snap.batch_size.count, 2);
+    // single-worker serving lands everything in shard 0's cells
+    let shard0 = snap.shards.iter().find(|s| s.shard == 0).unwrap();
+    assert_eq!(shard0.ok, 2);
+    assert_eq!(shard0.batches, 2);
 }
 
 #[test]
 fn queue_backpressure_rejects_overflow_and_server_recovers() {
     let _g = lock();
     let sim = tmp_sim("backpressure");
+    metrics::reset();
     let queue = AdmissionQueue::new(2);
     let rx1 = push_req(&queue, Request::new(1, "sim-opt-125m", "fp32", 0));
     let rx2 = push_req(&queue, Request::new(2, "sim-opt-125m", "fp32", 1));
@@ -114,12 +138,19 @@ fn queue_backpressure_rejects_overflow_and_server_recovers() {
     let r3 = rx3.try_recv().unwrap();
     assert!(!r3.ok);
     assert!(r3.error.unwrap().contains("queue full"));
+
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 2);
+    assert_eq!(snap.rejected, 1, "the overflow rejection must be counted");
+    assert_eq!(snap.ok, 2);
 }
 
 #[test]
 fn deadline_expiry_yields_error_not_stale_output() {
     let _g = lock();
     let sim = tmp_sim("deadline");
+    metrics::reset();
     let queue = AdmissionQueue::new(8);
     let mut expired = Request::new(1, "sim-opt-125m", "fp32", 0);
     expired.deadline_ms = Some(1);
@@ -142,6 +173,12 @@ fn deadline_expiry_yields_error_not_stale_output() {
     assert!(r2.ok, "generous deadline is honored");
     assert_eq!(stats.ok, 1);
     assert_eq!(stats.expired, 1, "pre-dispatch expiry must be counted");
+
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 2);
+    assert_eq!(snap.expired, 1, "the queue-lapsed deadline lands in the registry");
+    assert_eq!(snap.ok, 1);
 }
 
 #[test]
@@ -310,4 +347,20 @@ fn loadgen_single_key_traffic_coalesces_above_occupancy_one() {
     );
     assert!(report.toks_per_s > 0.0);
     assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+
+    // server-side truth rides on the report and matches the client view
+    let server = report.server.as_ref().expect("in-process loadgen attaches server stats");
+    assert_eq!(server.admitted, 16);
+    assert_eq!(server.ok, 16);
+    assert_eq!(server.errors, 0);
+    assert_eq!(server.expired, 0);
+    assert_eq!(
+        server.cache_misses, 0,
+        "the key was prewarmed off the clock: no session prepared mid-run"
+    );
+    assert_eq!(
+        server.cache_hits, server.batches,
+        "every dispatched batch hit the prewarmed session"
+    );
+    assert!(server.batches >= 1 && server.batches <= 16);
 }

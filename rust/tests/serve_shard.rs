@@ -13,8 +13,9 @@ use std::time::Duration;
 use intfpqsim::prop_assert;
 use intfpqsim::serve::batcher::Batcher;
 use intfpqsim::serve::loadgen::{
-    run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg,
+    fetch_server_stats, run_loadgen, run_loadgen_sharded, run_loadgen_tcp, LoadgenCfg,
 };
+use intfpqsim::serve::metrics;
 use intfpqsim::serve::protocol::{codes, Request};
 use intfpqsim::serve::queue::{AdmissionQueue, Job};
 use intfpqsim::serve::shard::{ShardCfg, SimSpec};
@@ -216,6 +217,28 @@ fn sharded_outputs_bit_identical_across_workers_and_batching() {
         }
         let batches: usize = run.per_worker.iter().map(|w| w.serve.batches).sum();
         assert!(batches > 0, "per-worker stats must attribute the batches");
+
+        // the registry saw exactly this run, attributed to real shards,
+        // with per-shard cells summing to the aggregates
+        let server = run.server.as_ref().expect("sharded loadgen attaches server stats");
+        assert_eq!(server.admitted, 9, "workers={}", workers);
+        assert_eq!(server.ok, 9, "workers={}", workers);
+        assert_eq!(server.errors, 0);
+        let snap = metrics::snapshot();
+        snap.check().unwrap();
+        assert_eq!(snap.ok, server.ok, "registry unchanged since the run");
+        assert!(
+            snap.shards.iter().all(|s| s.shard < workers),
+            "activity attributed to a nonexistent shard (workers={}): {:?}",
+            workers,
+            snap.shards
+        );
+        let shard_ok: u64 = snap.shards.iter().map(|s| s.ok).sum();
+        assert_eq!(shard_ok, snap.ok, "per-shard ok must sum to the aggregate");
+        let shard_batches: u64 = snap.shards.iter().map(|s| s.batches).sum();
+        assert_eq!(shard_batches, snap.batches, "per-shard batches must sum");
+        let worker_ok: usize = run.per_worker.iter().map(|w| w.serve.ok).sum();
+        assert_eq!(worker_ok as u64, snap.ok, "registry agrees with per-worker stats");
     }
 }
 
@@ -250,6 +273,23 @@ fn tcp_server_round_trips_the_loadgen_over_real_sockets() {
     assert_eq!(report.ok, 4);
     assert_eq!(report.workers, 0, "remote server: shape unknown to the client");
     assert!(report.toks_per_s > 0.0);
+
+    // the loadgen scraped the stats verb before and after: the delta is
+    // exactly this run's traffic as the server counted it
+    let server = report.server.as_ref().expect("TCP loadgen scrapes the stats verb");
+    assert_eq!(server.admitted, 4);
+    assert_eq!(server.ok, 4);
+    assert_eq!(server.errors, 0);
+    assert_eq!(server.expired, 0);
+    assert!(
+        server.cache_misses >= 1,
+        "no prewarm: at least one session prepared on the clock"
+    );
+    // a raw stats-verb round trip over a fresh socket still answers and
+    // stays internally consistent (cumulative since process start)
+    let raw = fetch_server_stats(&addr).unwrap();
+    raw.check().unwrap();
+    assert!(raw.admitted >= server.admitted);
 
     let stats = srv.shutdown().unwrap();
     assert_eq!(stats.len(), 2);

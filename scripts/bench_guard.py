@@ -17,7 +17,11 @@ so the same (model, quant, backend) triple never collides across files.
 The `int_gemm` section of BENCH_tensor.json is tracked too: its
 per-backend `int_speedup_vs_fused` (the true i8 GEMM's advantage over
 the fused QDQ path) is a higher-is-better ratio, so the same median
-comparison applies with the speedup standing in for toks_per_s.
+comparison applies with the speedup standing in for toks_per_s. The
+`metrics_overhead` cell of BENCH_serve.json follows the same shape:
+its `throughput_ratio` (hot-path speed without recording over with,
+higher is better, ~1.0 when recording is cheap) is watched so a future
+change cannot quietly make the always-on metrics layer expensive.
 
 Usage: bench_guard.py CURRENT.json PREV.json [PREV.json ...]
                       [--threshold 0.10]
@@ -50,6 +54,14 @@ def load_cells(path):
             sp = row.get("int_speedup_vs_fused")
             if all(key) and isinstance(sp, (int, float)) and sp > 0:
                 cells[key] = sp
+    # metrics_overhead (BENCH_serve.json): recording-off over recording-on
+    # hot-path throughput — only tracked for metrics-enabled builds, so a
+    # `no-metrics` artifact cannot skew the baseline toward ratio 1.0
+    mo = doc.get("metrics_overhead")
+    if isinstance(mo, dict) and mo.get("metrics_enabled") is True:
+        ratio = mo.get("throughput_ratio")
+        if isinstance(ratio, (int, float)) and ratio > 0:
+            cells[("metrics_overhead", "serve", "hot_path", "wire")] = ratio
     return cells
 
 
@@ -102,6 +114,11 @@ def main():
     for (section, model, quant, backend), baseline, new_tps, ratio, n in regressions:
         if section == "int_gemm":
             shown = f"median {baseline:.2f}x -> {new_tps:.2f}x int-vs-fused speedup"
+        elif section == "metrics_overhead":
+            shown = (
+                f"median {baseline:.3f} -> {new_tps:.3f} without/with hot-path "
+                f"ratio (metrics recording got more expensive)"
+            )
         else:
             shown = f"median {baseline:.0f} -> {new_tps:.0f} tok/s"
         print(

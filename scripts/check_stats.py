@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Scrape a running server's `stats` wire verb and fail on impossible
+values.
+
+Opens one TCP connection to the server, sends the line-delimited
+`{"verb":"stats"}` request, reads back the single JSON snapshot line,
+and cross-checks the counters the way `serve::metrics::Snapshot::check`
+does server-side — plus a few reader-side checks (histogram percentile
+ordering, per-shard sums against the aggregates). CI runs it after the
+TCP loadgen cell, so a snapshot that claims more completions than
+admissions (or shards that do not sum to their aggregate) turns the
+build red instead of shipping a lying dashboard.
+
+Unlike bench_guard.py this script *gates*: metric arithmetic is exact,
+so a violation is a bug, never noise.
+
+Usage: check_stats.py HOST:PORT [--expect-min-ok N] [--timeout SEC]
+"""
+
+import argparse
+import json
+import socket
+import sys
+
+# Execution-side counters that exist both per shard and as aggregates;
+# mirrors serve::metrics::SHARD_FIELDS minus the `shard` index itself.
+SHARD_SUMMED = (
+    "batches",
+    "cache_hits",
+    "cache_misses",
+    "errors",
+    "hot_hits",
+    "ok",
+    "steals",
+)
+
+HISTS = (
+    "batch_size",
+    "queue_wait_us",
+    "span_admit_ns",
+    "span_assemble_ns",
+    "span_forward_ns",
+    "span_serialize_ns",
+)
+
+
+def fetch(addr, timeout):
+    host, _, port = addr.rpartition(":")
+    with socket.create_connection((host, int(port)), timeout=timeout) as s:
+        s.sendall(b'{"verb":"stats"}\n')
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = s.recv(65536)
+            if not chunk:
+                raise RuntimeError("server closed before sending a snapshot line")
+            buf += chunk
+    return json.loads(buf)
+
+
+def check(snap, expect_min_ok):
+    errors = []
+
+    def ensure(cond, msg):
+        if not cond:
+            errors.append(msg)
+
+    def num(key):
+        v = snap.get(key)
+        ensure(isinstance(v, (int, float)), f"missing numeric counter {key!r}")
+        return v if isinstance(v, (int, float)) else 0
+
+    admitted = num("admitted")
+    ok = num("ok")
+    errs = num("errors")
+    expired = num("expired")
+    ensure(
+        ok + errs + expired <= admitted,
+        f"ok {ok} + errors {errs} + expired {expired} > admitted {admitted}",
+    )
+    ensure(
+        num("cache_misses") <= num("prepared_builds"),
+        "more cache misses than prepared-state builds",
+    )
+    ensure(
+        num("steals") + num("hot_hits") <= num("batches"),
+        "more stolen/hot batches than batches",
+    )
+    ensure(ok >= expect_min_ok, f"ok {ok} < expected minimum {expect_min_ok}")
+
+    shards = snap.get("shards", [])
+    ensure(isinstance(shards, list), "shards is not an array")
+    for field in SHARD_SUMMED:
+        total = sum(s.get(field, 0) for s in shards if isinstance(s, dict))
+        ensure(
+            total == num(field),
+            f"per-shard {field} sums to {total}, aggregate says {num(field)}",
+        )
+
+    for name in HISTS:
+        h = snap.get(name)
+        if not isinstance(h, dict):
+            errors.append(f"missing histogram {name!r}")
+            continue
+        count, mx = h.get("count", 0), h.get("max", 0)
+        p50, p95, p99 = h.get("p50", 0), h.get("p95", 0), h.get("p99", 0)
+        ensure(0 <= p50 <= p95 <= p99, f"{name}: percentiles out of order")
+        ensure(p99 <= mx, f"{name}: p99 {p99} above max {mx}")
+        if count == 0:
+            ensure(mx == 0, f"{name}: empty histogram with max {mx}")
+    # every request dispatched got a queue-wait sample
+    qw = snap.get("queue_wait_us", {})
+    if isinstance(qw, dict):
+        ensure(
+            qw.get("count", 0) >= ok,
+            f"queue_wait_us count {qw.get('count')} below ok {ok}",
+        )
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("addr", help="HOST:PORT of a running `repro serve --listen`")
+    ap.add_argument("--expect-min-ok", type=int, default=1)
+    ap.add_argument("--timeout", type=float, default=30.0)
+    args = ap.parse_args()
+
+    snap = fetch(args.addr, args.timeout)
+    errors = check(snap, args.expect_min_ok)
+    for e in errors:
+        print(f"::error title=impossible server stats::{e}")
+    if errors:
+        return 1
+    print(
+        "stats ok: admitted {admitted} ok {ok} errors {errors} expired {expired} "
+        "batches {batches} across {n} shard(s)".format(
+            n=len(snap.get("shards", [])), **{k: snap.get(k) for k in
+            ("admitted", "ok", "errors", "expired", "batches")}
+        )
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
