@@ -247,6 +247,7 @@ fn base_cfg(mix: Vec<(String, String)>, clients: usize, requests: usize) -> Load
             queue_cap: 64,
             batch_window: Duration::from_millis(2),
             max_batch: 8,
+            ..ServeCfg::default()
         },
         ..Default::default()
     }

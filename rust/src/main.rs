@@ -22,9 +22,15 @@
 //!
 //! Serving options (serve + loadgen): --batch-window MS (default 5),
 //! --max-batch N (default 8), --queue-cap N (default 64), --workers N
-//! (default 1; >1 = sharded pool), --replicate-hot, --hot-min N; serve
-//! adds --listen ADDR (TCP instead of stdio) and --stats-every S
-//! (log a compact metrics snapshot every S seconds); loadgen adds --clients N,
+//! (default 1; >1 = sharded pool), --replicate-hot, --hot-min N,
+//! --drain-timeout MS (default 5000; graceful-drain budget for the
+//! `shutdown` verb); serve adds --listen ADDR (TCP instead of stdio),
+//! --stats-every S (log a compact metrics snapshot every S seconds),
+//! --idle-timeout MS (reap TCP connections that stay silent),
+//! --max-conns N (cap concurrent TCP connections; excess get one
+//! `queue_full` retry-later line) and --faults SPEC (deterministic
+//! fault injection, e.g. `seed=2,panic=7,delay=3:25,drop=5`; the
+//! INTFPQSIM_FAULTS env var is the fallback); loadgen adds --clients N,
 //! --requests N (per client), --mix model:quant[,...], --deadline-ms D,
 //! --connect ADDR (drive a --listen server over TCP; --listen is
 //! accepted as an alias). All counts must be positive integers — 0 or
@@ -55,7 +61,8 @@ const USAGE: &str =
   repro report
   repro serve [--listen ADDR] [--workers N] [--replicate-hot] [--hot-min N]
               [--batch-window MS] [--max-batch N] [--queue-cap N] [--fast]
-              [--stats-every S]
+              [--stats-every S] [--idle-timeout MS] [--drain-timeout MS]
+              [--max-conns N] [--faults SPEC]
   repro loadgen [--connect ADDR] [--clients N] [--requests N]
                 [--mix model:quant,...] [--deadline-ms D] [--workers N]
                 [--replicate-hot] [--hot-min N] [--batch-window MS]
@@ -275,6 +282,16 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => {
             let cfg = serve_cfg_from(&a)?;
             let shard = shard_cfg_from(&a)?;
+            // Deterministic fault injection (chaos testing): the
+            // --faults flag wins over the INTFPQSIM_FAULTS env var;
+            // either being malformed is a hard startup error.
+            if let Some(spec) = a.options.get("faults") {
+                let plan = serve::faults::FaultPlan::parse(spec)
+                    .with_context(|| format!("--faults {:?}", spec))?;
+                serve::faults::install(plan);
+            } else {
+                serve::faults::init_from_env()?;
+            }
             if a.options.contains_key("stats-every") {
                 let every = a.get_u64_min("stats-every", 0, 1).map_err(anyhow::Error::msg)?;
                 spawn_stats_reporter(every);
@@ -345,6 +362,22 @@ fn serve_cfg_from(a: &Args) -> Result<ServeCfg> {
     let window_ms = a
         .get_u64_min("batch-window", defaults.batch_window.as_millis() as u64, 1)
         .map_err(anyhow::Error::msg)?;
+    let drain_ms = a
+        .get_u64_min("drain-timeout", defaults.drain_timeout.as_millis() as u64, 1)
+        .map_err(anyhow::Error::msg)?;
+    // --idle-timeout and --max-conns default to off; present means a
+    // strictly-parsed positive value (0/junk rejected, never ignored).
+    let idle_timeout = if a.options.contains_key("idle-timeout") {
+        let ms = a.get_u64_min("idle-timeout", 1, 1).map_err(anyhow::Error::msg)?;
+        Some(Duration::from_millis(ms))
+    } else {
+        defaults.idle_timeout
+    };
+    let max_conns = if a.options.contains_key("max-conns") {
+        Some(a.get_usize_min("max-conns", 1, 1).map_err(anyhow::Error::msg)?)
+    } else {
+        defaults.max_conns
+    };
     Ok(ServeCfg {
         queue_cap: a
             .get_usize_min("queue-cap", defaults.queue_cap, 1)
@@ -353,6 +386,9 @@ fn serve_cfg_from(a: &Args) -> Result<ServeCfg> {
         max_batch: a
             .get_usize_min("max-batch", defaults.max_batch, 1)
             .map_err(anyhow::Error::msg)?,
+        drain_timeout: Duration::from_millis(drain_ms),
+        idle_timeout,
+        max_conns,
     })
 }
 

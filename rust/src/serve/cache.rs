@@ -73,6 +73,15 @@ impl SessionCache {
         Ok(sess)
     }
 
+    /// Drop every cached session, keeping the hit/miss counters. The
+    /// panic-recovery path: after a caught unwind the prepared state of
+    /// any session the worker touched is suspect, so the supervisor
+    /// evicts them all and lets the next batch fault in fresh ones
+    /// (each re-open counts as a miss, visible in the stats).
+    pub fn evict_all(&mut self) {
+        self.entries.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

@@ -1,0 +1,302 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! A [`FaultPlan`] arms up to three named fault sites compiled into the
+//! serve stack:
+//!
+//! * **`worker_panic`** — a *poison request*: while a batch containing
+//!   a matching request id is being executed, the worker panics just
+//!   before the forward. Matching is a pure function of the request id
+//!   (`id % N == seed % N`), so the same request panics every time it
+//!   is tried — exactly the failure shape the supervision layer's
+//!   blame isolation is built for (re-run singly, quarantine the one
+//!   request that still panics).
+//! * **`forward_delay`** — every Nth batched forward (phase-shifted by
+//!   the seed) sleeps a configured number of milliseconds first,
+//!   exercising deadline expiry and drain-timeout paths.
+//! * **`conn_drop`** — every Nth request line read from a TCP
+//!   connection (phase-shifted by the seed) kills that connection
+//!   before the response can be written, exercising dead-connection
+//!   response routing.
+//!
+//! The plan is **seeded and counter-based** — no wall clock, no RNG —
+//! so a given (plan, traffic) pair fires the same faults on every run,
+//! which is what lets `tests/serve_faults.rs` assert exact outcomes.
+//! When no plan is installed every site is a single relaxed atomic
+//! load: the zero-allocation hot path and the exact-count metric
+//! assertions in `tests/serve.rs` are unaffected.
+//!
+//! Operators arm a plan with `--faults <spec>` or the
+//! [`ENV_VAR`] environment variable; the spec grammar is
+//! comma-separated `key=value` pairs:
+//!
+//! ```text
+//! seed=2,panic=7,delay=3:25,drop=5
+//! ```
+//!
+//! * `seed=N` (default 1) — the phase shift shared by every site;
+//! * `panic=N` — poison requests are those with `id % N == seed % N`;
+//! * `delay=N:MS` — every Nth forward sleeps `MS` milliseconds;
+//! * `drop=N` — every Nth TCP request line drops its connection.
+//!
+//! All numbers must be integers ≥ 1; unknown keys and malformed values
+//! are loud errors (mirroring the strict CLI flags).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable consulted by [`init_from_env`]; same spec
+/// grammar as the `--faults` flag (the flag wins when both are set).
+pub const ENV_VAR: &str = "INTFPQSIM_FAULTS";
+
+/// A parsed, seeded fault plan (see the module docs for the grammar
+/// and the firing semantics of each site).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Phase shift applied to every site's firing rule.
+    pub seed: u64,
+    /// `worker_panic`: poison modulus — requests with
+    /// `id % n == seed % n` panic the worker serving them.
+    pub panic_every: Option<u64>,
+    /// `forward_delay`: delay every Nth batched forward.
+    pub delay_every: Option<u64>,
+    /// `forward_delay`: how long each injected delay sleeps.
+    pub delay_ms: u64,
+    /// `conn_drop`: drop the connection on every Nth request line.
+    pub drop_every: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (`seed=2,panic=7,delay=3:25,drop=5`).
+    /// Every value must be an integer ≥ 1; unknown keys, empty pairs
+    /// and malformed numbers are errors naming the offending part.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { seed: 1, ..FaultPlan::default() };
+        let mut any = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("fault spec has an empty segment in {:?}", spec);
+            }
+            let (key, val) = part
+                .split_once('=')
+                .with_context(|| format!("fault spec segment {:?} is not key=value", part))?;
+            match key {
+                "seed" => plan.seed = fault_num(val, "seed")?,
+                "panic" => plan.panic_every = Some(fault_num(val, "panic")?),
+                "delay" => {
+                    let (every, ms) = val.split_once(':').with_context(|| {
+                        format!("delay value {:?} is not EVERY:MS (e.g. delay=3:25)", val)
+                    })?;
+                    plan.delay_every = Some(fault_num(every, "delay period")?);
+                    plan.delay_ms = fault_num(ms, "delay ms")?;
+                }
+                "drop" => plan.drop_every = Some(fault_num(val, "drop")?),
+                other => bail!("unknown fault site {:?} in spec {:?}", other, spec),
+            }
+            any = true;
+        }
+        if !any {
+            bail!("empty fault spec");
+        }
+        Ok(plan)
+    }
+
+    /// Whether this plan arms at least one fault site.
+    pub fn arms_anything(&self) -> bool {
+        self.panic_every.is_some() || self.delay_every.is_some() || self.drop_every.is_some()
+    }
+}
+
+fn fault_num(s: &str, what: &str) -> Result<u64> {
+    let n: u64 = s
+        .trim()
+        .parse()
+        .with_context(|| format!("fault {} must be an integer, got {:?}", what, s))?;
+    anyhow::ensure!(n >= 1, "fault {} must be >= 1, got {}", what, n);
+    Ok(n)
+}
+
+// Disarmed fast path: one relaxed load, nothing else.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+// Per-site traversal counters, reset on install so a test's firing
+// schedule does not depend on what ran before it.
+static DELAY_HITS: AtomicU64 = AtomicU64::new(0);
+static DROP_HITS: AtomicU64 = AtomicU64::new(0);
+
+/// Install `plan` process-wide and reset the site counters. Arms the
+/// sites only if the plan actually configures one.
+pub fn install(plan: FaultPlan) {
+    DELAY_HITS.store(0, Ordering::Relaxed);
+    DROP_HITS.store(0, Ordering::Relaxed);
+    let armed = plan.arms_anything();
+    *PLAN.lock().unwrap() = Some(plan);
+    ARMED.store(armed, Ordering::Relaxed);
+}
+
+/// Disarm every site (tests call this between schedules).
+pub fn clear() {
+    ARMED.store(false, Ordering::Relaxed);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// The currently installed plan, if any.
+pub fn active() -> Option<FaultPlan> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    *PLAN.lock().unwrap()
+}
+
+/// Install a plan from [`ENV_VAR`] if it is set; returns the installed
+/// plan (an unset or empty variable installs nothing). A set-but-bad
+/// spec is an error, never silently ignored.
+pub fn init_from_env() -> Result<Option<FaultPlan>> {
+    match std::env::var(ENV_VAR) {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let plan = FaultPlan::parse(&spec)
+                .with_context(|| format!("parse {} = {:?}", ENV_VAR, spec))?;
+            install(plan);
+            Ok(Some(plan))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Seeded firing rule shared by the counter-based sites.
+#[inline]
+fn fires(k: u64, seed: u64, every: u64) -> bool {
+    (k.wrapping_add(seed)) % every.max(1) == 0
+}
+
+/// `worker_panic` site predicate: is `id` a poison request under the
+/// installed plan? Pure in the id, so a poison request panics every
+/// time it is tried — including the supervised single re-run.
+#[inline]
+pub fn is_poison(id: u64) -> bool {
+    let Some(plan) = active() else { return false };
+    let Some(n) = plan.panic_every else { return false };
+    id % n == plan.seed % n
+}
+
+/// `worker_panic` site: panic (caught by worker supervision) if any of
+/// `ids` is a poison request. Called by the dispatcher just before the
+/// batched forward.
+#[inline]
+pub fn panic_on_poison<I: IntoIterator<Item = u64>>(ids: I) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    for id in ids {
+        if is_poison(id) {
+            panic!("fault injection: worker_panic on poison request {}", id);
+        }
+    }
+}
+
+/// `forward_delay` site: sleep before every Nth batched forward.
+#[inline]
+pub fn forward_delay() {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let Some(plan) = active() else { return };
+    let Some(every) = plan.delay_every else { return };
+    let k = DELAY_HITS.fetch_add(1, Ordering::Relaxed);
+    if fires(k, plan.seed, every) {
+        std::thread::sleep(Duration::from_millis(plan.delay_ms));
+    }
+}
+
+/// `conn_drop` site: should the transport kill this connection instead
+/// of answering the request line it just read?
+#[inline]
+pub fn should_drop_conn() -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let Some(plan) = active() else { return false };
+    let Some(every) = plan.drop_every else { return false };
+    let k = DROP_HITS.fetch_add(1, Ordering::Relaxed);
+    fires(k, plan.seed, every)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Lib tests share the process-global plan; serialize the ones that
+    // install one.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parses_full_and_partial_specs() {
+        let p = FaultPlan::parse("seed=2,panic=7,delay=3:25,drop=5").unwrap();
+        assert_eq!(p.seed, 2);
+        assert_eq!(p.panic_every, Some(7));
+        assert_eq!(p.delay_every, Some(3));
+        assert_eq!(p.delay_ms, 25);
+        assert_eq!(p.drop_every, Some(5));
+        let p = FaultPlan::parse("panic=4").unwrap();
+        assert_eq!(p.seed, 1, "seed defaults to 1");
+        assert!(p.arms_anything());
+        assert!(!FaultPlan::parse("seed=9").unwrap().arms_anything());
+    }
+
+    #[test]
+    fn rejects_zero_garbage_and_unknown_sites() {
+        for bad in [
+            "", "panic", "panic=0", "panic=x", "panic=-1", "panic=2.5", "seed=0", "delay=3",
+            "delay=3:", "delay=0:5", "delay=3:0", "drop=", "explode=3", "panic=3,,drop=2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {:?} must be rejected", bad);
+        }
+    }
+
+    #[test]
+    fn poison_matching_is_pure_and_seed_shifted() {
+        let _g = lock();
+        install(FaultPlan::parse("seed=1,panic=4").unwrap());
+        // poison iff id % 4 == 1
+        assert!(is_poison(1));
+        assert!(is_poison(5));
+        assert!(!is_poison(2));
+        assert!(is_poison(1), "pure: same id, same answer");
+        install(FaultPlan::parse("seed=2,panic=4").unwrap());
+        assert!(!is_poison(1), "a different seed shifts the poison set");
+        assert!(is_poison(6));
+        clear();
+        assert!(!is_poison(6), "disarmed: nothing is poison");
+    }
+
+    #[test]
+    fn drop_schedule_is_deterministic_per_install() {
+        let _g = lock();
+        install(FaultPlan::parse("seed=1,drop=3").unwrap());
+        let a: Vec<bool> = (0..6).map(|_| should_drop_conn()).collect();
+        install(FaultPlan::parse("seed=1,drop=3").unwrap());
+        let b: Vec<bool> = (0..6).map(|_| should_drop_conn()).collect();
+        assert_eq!(a, b, "install resets the counters: same schedule");
+        assert_eq!(a.iter().filter(|&&d| d).count(), 2, "fires every 3rd line");
+        clear();
+        assert!(!should_drop_conn());
+    }
+
+    #[test]
+    fn panic_site_panics_only_on_poison_batches() {
+        let _g = lock();
+        install(FaultPlan::parse("seed=1,panic=10").unwrap());
+        panic_on_poison([2u64, 3, 4]); // no poison: returns normally
+        let caught = std::panic::catch_unwind(|| panic_on_poison([2u64, 11, 4]));
+        assert!(caught.is_err(), "id 11 (11 % 10 == 1) is poison");
+        clear();
+        panic_on_poison([11u64]); // disarmed: no-op
+    }
+}

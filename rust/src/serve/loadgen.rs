@@ -38,7 +38,7 @@ use crate::util::json::Json;
 use super::cache::SessionCache;
 use super::metrics;
 use super::protocol::{self, codes, Request, Response};
-use super::queue::{AdmissionQueue, Job};
+use super::queue::{AdmissionQueue, Job, RejectReason};
 use super::shard::{run_sharded, ShardCfg, ShardStats, SimSpec};
 use super::transport;
 use super::{serve_loop, ServeCfg, ServeStats};
@@ -140,6 +140,9 @@ pub struct LoadgenReport {
     /// Worker count the server ran with (1 = classic single worker,
     /// 0 = remote server over TCP, shape unknown to the client).
     pub workers: usize,
+    /// TCP connections re-established after a drop (capped exponential
+    /// backoff; always 0 for the in-process transports).
+    pub reconnects: usize,
     /// Per-worker counters (sharded in-process transport only).
     pub per_worker: Vec<ShardStats>,
     /// Server-side truth from the metrics registry — read directly for
@@ -341,6 +344,9 @@ impl LoadgenReport {
                 self.hot_batches()
             ));
         }
+        if self.reconnects > 0 {
+            s.push_str(&format!("  reconnects {}", self.reconnects));
+        }
         if let Some(sv) = &self.server {
             s.push_str(&format!(
                 "\n  server: admitted {} ok {} err {} shed {} rej {} | {} batches \
@@ -374,6 +380,7 @@ impl LoadgenReport {
             ("p95_ms", Json::Num(self.p95_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
             ("workers", Json::Num(self.workers as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
         ];
         if !self.per_worker.is_empty() {
             fields.push(("stolen_batches", Json::Num(self.stolen_batches() as f64)));
@@ -452,10 +459,12 @@ fn spawn_clients(
                     match queue.try_push(job) {
                         Ok(()) => break,
                         Err(rejected) => {
-                            if queue.is_closed() {
+                            // Draining covers a closed queue too: the
+                            // server will never take this job, stop.
+                            if rejected.reason == RejectReason::Draining {
                                 break 'requests;
                             }
-                            job = rejected;
+                            job = rejected.job;
                             std::thread::sleep(Duration::from_micros(200));
                         }
                     }
@@ -529,6 +538,7 @@ fn assemble_report(
         responses,
         stats,
         workers,
+        reconnects: 0,
         per_worker,
         server: None,
     }
@@ -641,11 +651,55 @@ pub fn run_loadgen_sharded(spec: &SimSpec, cfg: &LoadgenCfg) -> Result<LoadgenRe
     Ok(report)
 }
 
+/// One loadgen client's connection halves (reader + writer over the
+/// same socket).
+struct ClientConn {
+    writer: BufWriter<TcpStream>,
+    reader: BufReader<TcpStream>,
+}
+
+/// Connect to `addr` with capped exponential backoff: up to `tries`
+/// attempts, sleeping 1ms, 2ms, 4ms, … (capped at 100ms) between them.
+/// Covers both slow server starts and the reconnect path after a
+/// dropped connection.
+fn connect_backoff(addr: &str, tries: usize) -> Result<ClientConn> {
+    let mut delay = Duration::from_millis(1);
+    let cap = Duration::from_millis(100);
+    let mut attempt = 0usize;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let writer = BufWriter::new(stream.try_clone().context("clone stream")?);
+                let reader = BufReader::new(stream);
+                return Ok(ClientConn { writer, reader });
+            }
+            Err(e) => {
+                attempt += 1;
+                if attempt >= tries {
+                    return Err(e).with_context(|| {
+                        format!("connect {} ({} attempts with backoff)", addr, attempt)
+                    });
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(cap);
+            }
+        }
+    }
+}
+
 /// Drive the closed-loop clients over real sockets against a running
 /// `repro serve --listen` server at `addr` — one TCP connection per
 /// client. `sim` is only a local probe (mix validation and token
 /// accounting); all serving happens in the remote process, so
 /// `report.stats` is zeroed and `report.workers` is 0.
+///
+/// Connections are established (and, after a drop, re-established)
+/// with capped exponential backoff; a client whose connection dies
+/// mid-request reconnects and resubmits the in-flight request
+/// (at-least-once over the wire — the deterministic request ids make
+/// the duplicate harmless to the accounting, which is keyed per
+/// submission). The total across clients lands in
+/// [`LoadgenReport::reconnects`].
 pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<LoadgenReport> {
     let toks_per_model = validate_mix(sim, cfg)?;
 
@@ -655,17 +709,16 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
     let before = fetch_server_stats(addr).context("scrape server stats (pre-run)")?;
 
     let (done_tx, done_rx) = mpsc::channel::<Vec<(Response, f64)>>();
+    let reconnects = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let mut clients = Vec::with_capacity(cfg.clients);
     let t0 = Instant::now();
     for c in 0..cfg.clients {
         let cfg = cfg.clone();
         let addr = addr.to_string();
         let done = done_tx.clone();
+        let reconnects = Arc::clone(&reconnects);
         clients.push(std::thread::spawn(move || -> Result<()> {
-            let stream =
-                TcpStream::connect(&addr).with_context(|| format!("connect {}", addr))?;
-            let mut writer = BufWriter::new(stream.try_clone().context("clone stream")?);
-            let mut reader = BufReader::new(stream);
+            let mut conn = connect_backoff(&addr, 8)?;
             let mut records = Vec::with_capacity(cfg.requests_per_client);
             // reused wire buffers: requests serialize via write_line,
             // replies land in a capped reused read buffer — the client
@@ -678,22 +731,33 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
                 wbuf.push(b'\n');
                 let started = Instant::now();
                 // Closed-loop backpressure over the wire: a queue_full
-                // error means wait and resubmit the same request.
+                // error means wait and resubmit the same request. A
+                // dead connection (write failure or EOF/read error
+                // while awaiting the response) means reconnect with
+                // backoff and resubmit.
                 let resp = loop {
-                    writer.write_all(&wbuf).context("send request")?;
-                    writer.flush().context("flush request")?;
+                    let sent = conn
+                        .writer
+                        .write_all(&wbuf)
+                        .and_then(|()| conn.writer.flush());
+                    if sent.is_err() {
+                        conn = connect_backoff(&addr, 8).context("reconnect after drop")?;
+                        reconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        continue;
+                    }
                     match transport::read_line_capped(
-                        &mut reader,
+                        &mut conn.reader,
                         &mut rbuf,
                         protocol::MAX_LINE_BYTES,
-                    )
-                    .context("read response")?
-                    {
-                        transport::LineRead::Line => {}
-                        transport::LineRead::Eof => {
-                            anyhow::bail!("server closed the connection")
+                    ) {
+                        Ok(transport::LineRead::Line) => {}
+                        Ok(transport::LineRead::Eof) | Err(_) => {
+                            conn =
+                                connect_backoff(&addr, 8).context("reconnect after drop")?;
+                            reconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            continue;
                         }
-                        transport::LineRead::TooLong => {
+                        Ok(transport::LineRead::TooLong) => {
                             anyhow::bail!("response line exceeds max_line_bytes")
                         }
                     }
@@ -742,6 +806,7 @@ pub fn run_loadgen_tcp(sim: &Simulator, addr: &str, cfg: &LoadgenCfg) -> Result<
         0,
         Vec::new(),
     );
+    report.reconnects = reconnects.load(std::sync::atomic::Ordering::Relaxed);
     report.server = Some(server);
     Ok(report)
 }

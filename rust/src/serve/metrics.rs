@@ -51,16 +51,21 @@ pub const NAMES: &[&str] = &[
     "batches",
     "cache_hits",
     "cache_misses",
+    "conns_reaped",
+    "drain_begun",
+    "drain_flushed",
     "errors",
     "expired",
     "hot_hits",
     "int_dispatch",
     "ok",
+    "panics_recovered",
     "prepared_build_us",
     "prepared_builds",
     "qdq_dispatch",
     "queue_wait_us",
     "rejected",
+    "requests_quarantined",
     "shards",
     "span_admit_ns",
     "span_assemble_ns",
@@ -130,6 +135,16 @@ static SHARDS: [ShardCells; MAX_SHARDS] = [SHARD_ZERO; MAX_SHARDS];
 static ADMITTED: AtomicU64 = AtomicU64::new(0);
 static REJECTED: AtomicU64 = AtomicU64::new(0);
 static EXPIRED: AtomicU64 = AtomicU64::new(0);
+
+// Failure-domain counters: supervision, quarantine, connection reaping
+// and drain accounting. Global like the queue counters — a panic is
+// attributed to the request, not pinned to a shard cell, because the
+// recovering worker may not be the one that crashed.
+static PANICS_RECOVERED: AtomicU64 = AtomicU64::new(0);
+static QUARANTINED: AtomicU64 = AtomicU64::new(0);
+static CONNS_REAPED: AtomicU64 = AtomicU64::new(0);
+static DRAIN_BEGUN: AtomicU64 = AtomicU64::new(0);
+static DRAIN_FLUSHED: AtomicU64 = AtomicU64::new(0);
 
 // Baselines subtracted from process-global counters owned elsewhere, so
 // [`reset`] can zero the registry's view without disturbing them.
@@ -248,6 +263,49 @@ pub fn queue_wait(us: u64) {
     }
 }
 
+/// A worker panic was caught by supervision and the worker recovered
+/// (rebuilt its simulator and kept serving).
+#[inline]
+pub fn panic_recovered() {
+    if on() {
+        PANICS_RECOVERED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A request was identified as the panic trigger and quarantined
+/// (answered `internal_error`, never retried server-side).
+#[inline]
+pub fn quarantined() {
+    if on() {
+        QUARANTINED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// An idle TCP connection hit `--idle-timeout` and was reaped.
+#[inline]
+pub fn conn_reaped() {
+    if on() {
+        CONNS_REAPED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The admission queue entered its draining state (once per drain).
+#[inline]
+pub fn drain_begun() {
+    if on() {
+        DRAIN_BEGUN.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `n` queued jobs were flushed unserved at drain-timeout expiry (each
+/// answered `shutting_down`, so none goes unanswered).
+#[inline]
+pub fn drain_flushed(n: u64) {
+    if on() {
+        DRAIN_FLUSHED.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
 // ---- trace spans -------------------------------------------------------
 
 /// The per-request span intervals (enqueue → admit → batch-assemble →
@@ -319,6 +377,11 @@ pub fn reset() {
     ADMITTED.store(0, Ordering::Relaxed);
     REJECTED.store(0, Ordering::Relaxed);
     EXPIRED.store(0, Ordering::Relaxed);
+    PANICS_RECOVERED.store(0, Ordering::Relaxed);
+    QUARANTINED.store(0, Ordering::Relaxed);
+    CONNS_REAPED.store(0, Ordering::Relaxed);
+    DRAIN_BEGUN.store(0, Ordering::Relaxed);
+    DRAIN_FLUSHED.store(0, Ordering::Relaxed);
     QUEUE_WAIT_US.reset();
     BATCH_SIZE.reset();
     SPAN_ADMIT_NS.reset();
@@ -375,6 +438,17 @@ pub struct Snapshot {
     pub rejected: u64,
     /// Jobs shed with a deadline error before dispatch.
     pub expired: u64,
+    /// Worker panics caught and recovered by supervision.
+    pub panics_recovered: u64,
+    /// Requests quarantined as panic triggers (answered
+    /// `internal_error`).
+    pub requests_quarantined: u64,
+    /// Idle TCP connections reaped by `--idle-timeout`.
+    pub conns_reaped: u64,
+    /// Times the queue entered its draining state.
+    pub drain_begun: u64,
+    /// Queued jobs flushed unserved at drain-timeout expiry.
+    pub drain_flushed: u64,
     /// Jobs answered ok (sum over shards).
     pub ok: u64,
     /// Jobs answered with an error post-admission (sum over shards).
@@ -449,6 +523,11 @@ pub fn snapshot() -> Snapshot {
         admitted: ADMITTED.load(Ordering::Relaxed),
         rejected: REJECTED.load(Ordering::Relaxed),
         expired: EXPIRED.load(Ordering::Relaxed),
+        panics_recovered: PANICS_RECOVERED.load(Ordering::Relaxed),
+        requests_quarantined: QUARANTINED.load(Ordering::Relaxed),
+        conns_reaped: CONNS_REAPED.load(Ordering::Relaxed),
+        drain_begun: DRAIN_BEGUN.load(Ordering::Relaxed),
+        drain_flushed: DRAIN_FLUSHED.load(Ordering::Relaxed),
         ok,
         errors,
         batches,
@@ -515,6 +594,12 @@ impl Snapshot {
         s.push(',');
         push_kv(&mut s, "cache_misses", self.cache_misses);
         s.push(',');
+        push_kv(&mut s, "conns_reaped", self.conns_reaped);
+        s.push(',');
+        push_kv(&mut s, "drain_begun", self.drain_begun);
+        s.push(',');
+        push_kv(&mut s, "drain_flushed", self.drain_flushed);
+        s.push(',');
         push_kv(&mut s, "errors", self.errors);
         s.push(',');
         push_kv(&mut s, "expired", self.expired);
@@ -525,6 +610,8 @@ impl Snapshot {
         s.push(',');
         push_kv(&mut s, "ok", self.ok);
         s.push(',');
+        push_kv(&mut s, "panics_recovered", self.panics_recovered);
+        s.push(',');
         push_kv(&mut s, "prepared_build_us", self.prepared_build_us);
         s.push(',');
         push_kv(&mut s, "prepared_builds", self.prepared_builds);
@@ -534,6 +621,8 @@ impl Snapshot {
         push_hist(&mut s, "queue_wait_us", &self.queue_wait_us);
         s.push(',');
         push_kv(&mut s, "rejected", self.rejected);
+        s.push(',');
+        push_kv(&mut s, "requests_quarantined", self.requests_quarantined);
         s.push_str(",\"shards\":[");
         for (i, sh) in self.shards.iter().enumerate() {
             if i > 0 {
@@ -621,6 +710,30 @@ impl Snapshot {
             self.steals,
             self.hot_hits,
             self.batches
+        );
+        anyhow::ensure!(
+            self.requests_quarantined <= self.admitted,
+            "impossible stats: requests_quarantined {} > admitted {}",
+            self.requests_quarantined,
+            self.admitted
+        );
+        anyhow::ensure!(
+            self.requests_quarantined <= self.panics_recovered,
+            "impossible stats: requests_quarantined {} > panics_recovered {} \
+             (every quarantine is a recovered panic)",
+            self.requests_quarantined,
+            self.panics_recovered
+        );
+        anyhow::ensure!(
+            self.drain_flushed <= self.admitted,
+            "impossible stats: drain_flushed {} > admitted {}",
+            self.drain_flushed,
+            self.admitted
+        );
+        anyhow::ensure!(
+            self.drain_flushed == 0 || self.drain_begun > 0,
+            "impossible stats: drain_flushed {} with drain_begun 0",
+            self.drain_flushed
         );
         let sums: [u64; 7] = self.shards.iter().fold([0; 7], |mut acc, s| {
             for (a, v) in acc.iter_mut().zip([
@@ -756,6 +869,22 @@ mod tests {
     }
 
     #[test]
+    fn failure_domain_counters_move_forward() {
+        let before = snapshot();
+        panic_recovered();
+        quarantined();
+        conn_reaped();
+        drain_begun();
+        drain_flushed(3);
+        let after = snapshot();
+        assert!(after.panics_recovered >= before.panics_recovered + 1);
+        assert!(after.requests_quarantined >= before.requests_quarantined + 1);
+        assert!(after.conns_reaped >= before.conns_reaped + 1);
+        assert!(after.drain_begun >= before.drain_begun + 1);
+        assert!(after.drain_flushed >= before.drain_flushed + 3);
+    }
+
+    #[test]
     fn trace_context_nests_and_restores() {
         assert_eq!(active_trace(), None);
         {
@@ -785,7 +914,24 @@ mod tests {
         snap.expired = 0;
         snap.admitted = 5;
         snap.prepared_builds = 0;
+        snap.panics_recovered = 0;
+        snap.requests_quarantined = 0;
+        snap.conns_reaped = 0;
+        snap.drain_begun = 0;
+        snap.drain_flushed = 0;
         snap.check().expect("consistent snapshot passes");
+        snap.requests_quarantined = 1;
+        assert!(snap.check().is_err(), "quarantine without a recovered panic");
+        snap.panics_recovered = 1;
+        snap.check().expect("one quarantine per recovered panic is fine");
+        snap.drain_flushed = 2;
+        assert!(snap.check().is_err(), "flushed jobs without a drain");
+        snap.drain_begun = 1;
+        snap.check().expect("flush during a drain is fine");
+        snap.drain_flushed = 0;
+        snap.drain_begun = 0;
+        snap.panics_recovered = 0;
+        snap.requests_quarantined = 0;
         snap.ok = 9; // > admitted, and not matched by shard sums
         assert!(snap.check().is_err(), "completed > admitted is impossible");
     }

@@ -24,7 +24,20 @@
 //!   routed back per connection;
 //! * [`loadgen`] — closed-loop multi-client load generator
 //!   (`repro loadgen`) measuring tokens/sec, batch occupancy and
-//!   latency percentiles, in-process or over TCP.
+//!   latency percentiles, in-process or over TCP;
+//! * [`faults`] — deterministic fault injection (seeded plans arming
+//!   worker panics, forward delays and connection drops at named
+//!   sites) driving the chaos suite in `tests/serve_faults.rs`.
+//!
+//! Failure domains: a panicking request is caught by worker
+//! supervision ([`dispatch`] wraps the forward in `catch_unwind`),
+//! blamed by re-running the batch singly, and quarantined with an
+//! `internal_error` response; the worker rebuilds its simulator from
+//! the cloneable [`shard::SimSpec`] and keeps serving. Graceful drain
+//! (the `shutdown` wire verb, or stdin EOF) flips the admission queue
+//! to a draining state that rejects new work with `shutting_down`,
+//! serves what was admitted under `--drain-timeout`, and joins every
+//! worker cleanly.
 //!
 //! Threading model: runtime sessions are deliberately **not** `Send`
 //! (they hold `Rc` sticky inputs and a hoisted backend handle), so each
@@ -49,6 +62,7 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod faults;
 pub mod loadgen;
 pub mod metrics;
 pub mod protocol;
@@ -77,7 +91,8 @@ use protocol::{codes, outputs_pool, summarize_into, Request, Response};
 use queue::{AdmissionQueue, Job};
 use shard::{ShardCfg, SimSpec};
 
-/// Server tuning knobs (`--queue-cap`, `--batch-window`, `--max-batch`).
+/// Server tuning knobs (`--queue-cap`, `--batch-window`, `--max-batch`,
+/// `--drain-timeout`, `--idle-timeout`, `--max-conns`).
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
     /// Admission queue bound (reject-on-full backpressure).
@@ -86,6 +101,16 @@ pub struct ServeCfg {
     pub batch_window: Duration,
     /// Micro-batch occupancy cap.
     pub max_batch: usize,
+    /// How long a graceful drain waits for admitted jobs before
+    /// flushing the leftovers with `shutting_down` (`--drain-timeout`).
+    pub drain_timeout: Duration,
+    /// TCP read timeout: a connection idle past it is reaped
+    /// (`--idle-timeout`; `None` keeps idle connections forever).
+    pub idle_timeout: Option<Duration>,
+    /// Concurrent TCP connection cap; excess connections are answered
+    /// with a retry-later `queue_full` line and closed (`--max-conns`;
+    /// `None` is unlimited).
+    pub max_conns: Option<usize>,
 }
 
 impl Default for ServeCfg {
@@ -94,6 +119,9 @@ impl Default for ServeCfg {
             queue_cap: 64,
             batch_window: Duration::from_millis(5),
             max_batch: 8,
+            drain_timeout: Duration::from_secs(5),
+            idle_timeout: None,
+            max_conns: None,
         }
     }
 }
@@ -213,11 +241,35 @@ pub(crate) fn session_key(sim: &Simulator, model: &str, quant: &str) -> SessionK
     }
 }
 
+/// Answer `job` with `internal_error` and record it as quarantined: it
+/// was identified as the trigger of a worker panic and must not be
+/// retried (resubmitting the same line is expected to fail the same
+/// way).
+fn quarantine(job: &Job, stats: &mut ServeStats, shard: usize) {
+    job.reply(Response::err(
+        job.req.id,
+        codes::INTERNAL_ERROR,
+        "worker panicked executing this request; request quarantined",
+    ));
+    metrics::quarantined();
+    metrics::request_error(shard);
+    stats.errors += 1;
+}
+
 /// Run one micro-batch to completion: resolve the cached session, build
 /// every request's input, drive `Session::run_batch`, and answer each
 /// job (post-run deadline expiry becomes an error — never stale output).
 /// `shard` attributes the batch in the metrics registry (0 for the
 /// single-worker server).
+///
+/// **Supervision:** the batched forward runs under `catch_unwind`. If
+/// it panics, the batch's requests are re-run singly on the same
+/// session to isolate blame — only the request that still panics alone
+/// is quarantined (`internal_error`); innocent batch-mates get their
+/// normal responses. Returns `true` when a panic was recovered, which
+/// tells the caller to rebuild its execution state (sessions — and in
+/// the sharded server the whole simulator — may be tainted by the
+/// unwind).
 pub(crate) fn dispatch(
     sim: &Simulator,
     cache: &mut SessionCache,
@@ -225,7 +277,7 @@ pub(crate) fn dispatch(
     mb: MicroBatch,
     stats: &mut ServeStats,
     shard: usize,
-) {
+) -> bool {
     stats.batches += 1;
     stats.requests += mb.jobs.len();
     stats.max_occupancy = stats.max_occupancy.max(mb.jobs.len());
@@ -257,7 +309,7 @@ pub(crate) fn dispatch(
                 metrics::request_error(shard);
             }
             stats.errors += mb.jobs.len();
-            return;
+            return false;
         }
     };
 
@@ -276,7 +328,7 @@ pub(crate) fn dispatch(
                 metrics::request_error(shard);
             }
             stats.errors += mb.jobs.len();
-            return;
+            return false;
         }
     };
 
@@ -298,19 +350,22 @@ pub(crate) fn dispatch(
         }
     }
     if jobs.is_empty() {
-        return;
+        return false;
     }
 
     let t0 = Instant::now();
-    let result = {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // fault sites are single relaxed loads when no plan is armed
+        faults::panic_on_poison(jobs.iter().map(|j| j.req.id));
+        faults::forward_delay();
         // the timer scope lands in span_forward_ns via the active trace
         let _trace = metrics::trace(metrics::SpanSlot::Forward);
         let _scope = crate::util::timer::Scope::new("serve.forward");
         sess.run_batch(&frees)
-    };
+    }));
     let run_ms = t0.elapsed().as_secs_f64() * 1e3;
     match result {
-        Ok(outs) => {
+        Ok(Ok(outs)) => {
             let now = Instant::now();
             let n = jobs.len();
             for (job, out) in jobs.iter().zip(outs) {
@@ -333,8 +388,9 @@ pub(crate) fn dispatch(
                 metrics::request_ok(shard);
                 stats.ok += 1;
             }
+            false
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             for job in &jobs {
                 job.reply(Response::err(
                     job.req.id,
@@ -344,6 +400,70 @@ pub(crate) fn dispatch(
                 metrics::request_error(shard);
             }
             stats.errors += jobs.len();
+            false
+        }
+        Err(_) => {
+            // The forward panicked. Supervision: recover the worker,
+            // then isolate blame by re-running each request alone —
+            // outputs are batch-composition-independent, so innocent
+            // batch-mates answer bit-identically to a clean run.
+            metrics::panic_recovered();
+            crate::debug!(
+                "serve: shard {} recovered a panic in a {}-request batch; re-running singly",
+                shard,
+                jobs.len()
+            );
+            if jobs.len() == 1 {
+                quarantine(&jobs[0], stats, shard);
+                return true;
+            }
+            for (job, free) in jobs.iter().zip(&frees) {
+                let single_t0 = Instant::now();
+                let single = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // same fault site as the batch path: an injected
+                    // poison request panics alone too, and is blamed
+                    faults::panic_on_poison([job.req.id]);
+                    sess.run_batch(std::slice::from_ref(free))
+                }));
+                let single_ms = single_t0.elapsed().as_secs_f64() * 1e3;
+                match single {
+                    Ok(Ok(outs)) => {
+                        if job.expired(Instant::now()) {
+                            job.reply(Response::err(
+                                job.req.id,
+                                codes::DEADLINE_RUN,
+                                "deadline expired during batched run",
+                            ));
+                            metrics::request_error(shard);
+                            stats.errors += 1;
+                            continue;
+                        }
+                        let queue_ms =
+                            popped.duration_since(job.enqueued).as_secs_f64() * 1e3;
+                        let mut summary = outputs_pool::take();
+                        if let Some(out) = outs.first() {
+                            summarize_into(out, &mut summary);
+                        }
+                        job.reply(Response::ok(job.req.id, summary, 1, queue_ms, single_ms));
+                        metrics::request_ok(shard);
+                        stats.ok += 1;
+                    }
+                    Ok(Err(e)) => {
+                        job.reply(Response::err(
+                            job.req.id,
+                            codes::RUN_FAILED,
+                            &format!("run: {:#}", e),
+                        ));
+                        metrics::request_error(shard);
+                        stats.errors += 1;
+                    }
+                    Err(_) => {
+                        metrics::panic_recovered();
+                        quarantine(job, stats, shard);
+                    }
+                }
+            }
+            true
         }
     }
 }
@@ -362,22 +482,60 @@ pub fn serve_loop(
     let corpora = Corpora::new();
     let mut stats = ServeStats::default();
     while let Some(mb) = batcher.next_batch() {
-        dispatch(sim, cache, &corpora, mb, &mut stats, 0);
+        if dispatch(sim, cache, &corpora, mb, &mut stats, 0) {
+            // A recovered panic may have tainted cached sessions: drop
+            // them all (the hit/miss counters survive) so the next
+            // batch reopens cleanly from the simulator. The sharded
+            // server goes further and rebuilds the simulator itself —
+            // here it is borrowed, so eviction is the recovery unit.
+            cache.evict_all();
+        }
     }
     stats.expired = batcher.expired_count();
     stats
 }
 
+/// Spawn the drain supervisor: once the queue is draining, wait up to
+/// `timeout` for admitted work to finish, flush whatever is left with
+/// a `shutting_down` answer (no admitted request goes unanswered), and
+/// close the queue so every worker exits its loop. Shared by the
+/// `shutdown` wire verb (stdio and TCP fronts) and
+/// [`transport::TcpServer::shutdown`].
+pub(crate) fn spawn_drain(
+    queue: Arc<AdmissionQueue>,
+    timeout: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        if !queue.wait_drained(timeout) {
+            for job in queue.flush_all() {
+                job.reply(Response::err(
+                    job.req.id,
+                    codes::SHUTTING_DOWN,
+                    "server drained before this request could run",
+                ));
+                metrics::request_error(0);
+            }
+        }
+        queue.close();
+    })
+}
+
 /// Spawn the stdin→queue reader and the queue→stdout writer shared by
 /// both stdio front ends. The reader answers parse failures,
-/// over-length lines and queue-full rejections directly and closes the
-/// queue at EOF. Both pumps run on the same reused-buffer streaming
-/// path as the TCP transport: capped line reads (bounded memory under
-/// an endless line), [`protocol::parse_request_streaming`] into a
-/// scratch request, [`Response::write_line`] into a reused write
-/// buffer.
+/// over-length lines and admission rejections (`queue_full` /
+/// `shutting_down`, from the rejection's own reason) directly, flips
+/// the queue into its draining state on a `shutdown` verb line, and
+/// closes the queue at EOF. The writer exits on the internal drain
+/// marker — sent by the front end *after* the worker loop finishes, so
+/// every in-flight response is serialized before shutdown (the drain
+/// path both fronts share). Both pumps run on the same reused-buffer
+/// streaming path as the TCP transport: capped line reads (bounded
+/// memory under an endless line),
+/// [`protocol::parse_request_streaming`] into a scratch request,
+/// [`Response::write_line`] into a reused write buffer.
 fn spawn_stdio_pump(
     queue: &Arc<AdmissionQueue>,
+    drain_timeout: Duration,
 ) -> (
     mpsc::Sender<Response>,
     std::thread::JoinHandle<()>,
@@ -389,6 +547,10 @@ fn spawn_stdio_pump(
         let stdout = std::io::stdout();
         let mut buf: Vec<u8> = Vec::with_capacity(256);
         for mut resp in rx {
+            if protocol::is_drain_marker(&resp) {
+                // everything sent before the marker is already written
+                break;
+            }
             if protocol::is_stats_marker(&resp) {
                 // `stats` verb: answer with a registry snapshot line
                 metrics::write_snapshot(&mut buf);
@@ -417,6 +579,7 @@ fn spawn_stdio_pump(
             let mut lock = stdin.lock();
             let mut line: Vec<u8> = Vec::with_capacity(256);
             let mut scratch = Request::default();
+            let mut drain_started = false;
             loop {
                 match transport::read_line_capped(
                     &mut lock,
@@ -438,14 +601,30 @@ fn spawn_stdio_pump(
                     let _ = tx.send(protocol::stats_marker());
                     continue;
                 }
+                if protocol::is_shutdown_request(bytes) {
+                    // graceful drain: stop admitting, serve what was
+                    // admitted (bounded by the drain timeout), close
+                    queue.begin_drain();
+                    let _ = tx.send(Response::err(
+                        protocol::ERR_ID,
+                        codes::SHUTTING_DOWN,
+                        "draining: serving admitted work, then closing",
+                    ));
+                    if !drain_started {
+                        drain_started = true;
+                        let _ = spawn_drain(Arc::clone(&queue), drain_timeout);
+                    }
+                    continue;
+                }
                 match protocol::parse_request_streaming(bytes, &mut scratch) {
                     Ok(()) => {
                         let id = scratch.id;
-                        if queue.try_push(Job::new(scratch.clone(), tx.clone())).is_err() {
+                        if let Err(rej) = queue.try_push(Job::new(scratch.clone(), tx.clone()))
+                        {
                             let _ = tx.send(Response::err(
                                 id,
-                                codes::QUEUE_FULL,
-                                "queue full (backpressure): retry later",
+                                rej.reason.code(),
+                                rej.reason.message(),
                             ));
                         }
                     }
@@ -474,7 +653,7 @@ fn spawn_stdio_pump(
 /// stdin reaches EOF and the queue has drained.
 pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
     let queue = AdmissionQueue::new(cfg.queue_cap);
-    let (tx, reader, writer) = spawn_stdio_pump(&queue);
+    let (tx, reader, writer) = spawn_stdio_pump(&queue, cfg.drain_timeout);
 
     crate::info!(
         "serving on stdin/stdout: queue_cap={} batch_window={:?} max_batch={} \
@@ -487,9 +666,17 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
     );
     let mut cache = SessionCache::new();
     let stats = serve_loop(sim, &queue, cfg, &mut cache);
+    // Drain handshake: every response was sent before the worker loop
+    // returned, so the marker is ordered after all of them — the
+    // writer serializes everything, then exits, even while a
+    // `shutdown`-verb drain leaves the reader blocked on an open
+    // stdin. Never exit before the writer has flushed.
+    let _ = tx.send(protocol::drain_marker());
     drop(tx);
-    let _ = reader.join();
     let _ = writer.join();
+    if reader.is_finished() {
+        let _ = reader.join();
+    }
     let (hits, misses) = cache.stats();
     crate::info!(
         "served {} requests in {} batches (ok {}, errors {}, expired-in-queue {}, \
@@ -512,7 +699,7 @@ pub fn run_stdio(sim: &Simulator, cfg: &ServeCfg) -> Result<()> {
 /// supervises an N-worker shard pool instead of serving itself.
 pub fn run_stdio_sharded(spec: &SimSpec, cfg: &ServeCfg, shard_cfg: &ShardCfg) -> Result<()> {
     let queue = AdmissionQueue::new(cfg.queue_cap);
-    let (tx, reader, writer) = spawn_stdio_pump(&queue);
+    let (tx, reader, writer) = spawn_stdio_pump(&queue, cfg.drain_timeout);
 
     crate::info!(
         "serving on stdin/stdout: workers={} replicate_hot={} queue_cap={} \
@@ -524,10 +711,18 @@ pub fn run_stdio_sharded(spec: &SimSpec, cfg: &ServeCfg, shard_cfg: &ShardCfg) -
         cfg.max_batch,
         backend::active().describe()
     );
-    let per_worker = shard::run_sharded(spec, &queue, cfg, shard_cfg, &[])?;
+    // Do NOT `?` before the writer has flushed: a worker-pool error
+    // must still let the final responses (including the pool's own
+    // `run_failed` leftovers) reach stdout — bailing out first was
+    // exactly the abortive-shutdown bug this path used to have.
+    let pool_result = shard::run_sharded(spec, &queue, cfg, shard_cfg, &[]);
+    let _ = tx.send(protocol::drain_marker());
     drop(tx);
-    let _ = reader.join();
     let _ = writer.join();
+    if reader.is_finished() {
+        let _ = reader.join();
+    }
+    let per_worker = pool_result?;
     let mut total = ServeStats::default();
     for w in &per_worker {
         total.absorb(&w.serve);

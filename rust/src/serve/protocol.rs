@@ -76,20 +76,25 @@ pub const REQUEST_FIELDS: &[&str] = &["id", "model", "quant", "batch", "tokens",
 /// Every verb a client line can speak, as documented in
 /// `docs/serving.md`. A line without a `"verb"` field is a `run`
 /// request (the original — and still default — protocol); `stats`
-/// fetches a metrics snapshot.
-pub const VERBS: &[&str] = &["run", "stats"];
+/// fetches a metrics snapshot; `shutdown` begins a graceful drain.
+pub const VERBS: &[&str] = &["run", "shutdown", "stats"];
 
 /// The canonical `stats` request line (what `repro loadgen` sends).
 pub const STATS_LINE: &str = "{\"verb\":\"stats\"}";
 
-/// Is this trimmed line a `stats` request? The canonical line is a
+/// The canonical `shutdown` request line: begins a graceful drain. The
+/// server acks with a `shutting_down` line ([`ERR_ID`]), finishes what
+/// was already admitted (bounded by `--drain-timeout`), then closes.
+pub const SHUTDOWN_LINE: &str = "{\"verb\":\"shutdown\"}";
+
+/// Is this trimmed line a request for `verb`? The canonical line is a
 /// plain byte compare (hot-path cheap); as a courtesy, any short object
-/// whose only content is `"verb": "stats"` (key order / whitespace
+/// whose only content is `"verb": "<verb>"` (key order / whitespace
 /// free) is also accepted — the tree parse only runs for lines that
 /// contain `"verb"`, which normal requests reject as an unknown field
 /// anyway.
-pub fn is_stats_request(line: &[u8]) -> bool {
-    if line == STATS_LINE.as_bytes() {
+fn is_verb_request(line: &[u8], canonical: &str, verb: &str) -> bool {
+    if line == canonical.as_bytes() {
         return true;
     }
     if line.len() > 64 || !line.windows(6).any(|w| w == b"\"verb\"") {
@@ -100,11 +105,21 @@ pub fn is_stats_request(line: &[u8]) -> bool {
     };
     match Json::parse(s) {
         Ok(j) => {
-            j.get("verb").and_then(Json::as_str) == Some("stats")
+            j.get("verb").and_then(Json::as_str) == Some(verb)
                 && j.as_obj().map(|o| o.len() == 1).unwrap_or(false)
         }
         Err(_) => false,
     }
+}
+
+/// Is this trimmed line a `stats` request (see [`STATS_LINE`])?
+pub fn is_stats_request(line: &[u8]) -> bool {
+    is_verb_request(line, STATS_LINE, "stats")
+}
+
+/// Is this trimmed line a `shutdown` request (see [`SHUTDOWN_LINE`])?
+pub fn is_shutdown_request(line: &[u8]) -> bool {
+    is_verb_request(line, SHUTDOWN_LINE, "shutdown")
 }
 
 /// Internal `code` value marking the in-process sentinel a reader
@@ -115,8 +130,9 @@ const STATS_MARKER_CODE: &str = "__stats__";
 /// The sentinel [`Response`] routed from reader to writer for a `stats`
 /// request. Rides the existing per-connection response channel, so the
 /// snapshot is serialized by the same thread that owns the socket.
-/// Unambiguous: real [`ERR_ID`] responses always carry
-/// [`codes::BAD_REQUEST`], never this private code.
+/// Unambiguous: real [`ERR_ID`] responses only ever carry
+/// [`codes::BAD_REQUEST`] or [`codes::SHUTTING_DOWN`], never a private
+/// `__`-prefixed marker code.
 pub fn stats_marker() -> Response {
     Response::err(ERR_ID, STATS_MARKER_CODE, "stats")
 }
@@ -124,6 +140,24 @@ pub fn stats_marker() -> Response {
 /// Is this response the [`stats_marker`] sentinel?
 pub fn is_stats_marker(resp: &Response) -> bool {
     resp.id == ERR_ID && resp.code.as_deref() == Some(STATS_MARKER_CODE)
+}
+
+/// Internal `code` value of the drain sentinel a front end sends its
+/// writer thread once the worker loop has finished (never serialized
+/// to the wire — the writer exits on it).
+const DRAIN_MARKER_CODE: &str = "__drain__";
+
+/// The sentinel [`Response`] that tells a writer thread to exit. Sent
+/// *after* the worker loop returns, so mpsc FIFO ordering guarantees
+/// every real response is serialized first — the graceful-drain
+/// handshake both the stdio and TCP fronts rely on.
+pub fn drain_marker() -> Response {
+    Response::err(ERR_ID, DRAIN_MARKER_CODE, "drain")
+}
+
+/// Is this response the [`drain_marker`] sentinel?
+pub fn is_drain_marker(resp: &Response) -> bool {
+    resp.id == ERR_ID && resp.code.as_deref() == Some(DRAIN_MARKER_CODE)
 }
 
 /// Every field a response line may carry, as documented in
@@ -140,8 +174,10 @@ pub mod codes {
     /// malformed field, unknown field). Sent with [`super::ERR_ID`]
     /// when no request id could be recovered.
     pub const BAD_REQUEST: &str = "bad_request";
-    /// Admission rejected: the bounded queue is at capacity (or the
-    /// server is shutting down). Backpressure — retry after a pause.
+    /// Admission rejected: the bounded queue is at capacity, or the
+    /// server hit its `--max-conns` connection cap. Backpressure —
+    /// retry after a pause (a draining server answers
+    /// [`SHUTTING_DOWN`] instead, which means switch servers).
     pub const QUEUE_FULL: &str = "queue_full";
     /// The deadline lapsed while the request waited in the admission
     /// queue; it was shed before dispatch and never ran.
@@ -159,6 +195,15 @@ pub mod codes {
     pub const BAD_INPUT: &str = "bad_input";
     /// The batched forward itself failed, or a server worker died.
     pub const RUN_FAILED: &str = "run_failed";
+    /// A worker panicked while executing this request and the panic
+    /// was recovered by supervision. The request is quarantined: it
+    /// will not be retried server-side, and resubmitting the same line
+    /// is expected to fail the same way — do not retry blindly.
+    pub const INTERNAL_ERROR: &str = "internal_error";
+    /// The server is draining for shutdown and admits no new work.
+    /// Already-admitted requests still complete (within
+    /// `--drain-timeout`); send new work elsewhere.
+    pub const SHUTTING_DOWN: &str = "shutting_down";
     /// Every code the server can emit, for the doc-drift test.
     pub const ALL: &[&str] = &[
         BAD_REQUEST,
@@ -169,6 +214,8 @@ pub mod codes {
         OPEN_FAILED,
         BAD_INPUT,
         RUN_FAILED,
+        INTERNAL_ERROR,
+        SHUTTING_DOWN,
     ];
 }
 
@@ -647,6 +694,35 @@ impl Response {
         }
     }
 
+    /// Refill `self` as a failure response in place — the
+    /// reuse-friendly twin of [`Response::err`]. A warmed scratch
+    /// `Response` keeps its string and vector capacity across calls,
+    /// so rebuilding an `internal_error` / `shutting_down` / any other
+    /// rejection line is allocation-free in steady state
+    /// (`tests/proto_alloc.rs` audits exactly this path).
+    pub fn err_into(&mut self, id: u64, code: &str, msg: &str) {
+        self.id = id;
+        self.ok = false;
+        match &mut self.code {
+            Some(c) => {
+                c.clear();
+                c.push_str(code);
+            }
+            None => self.code = Some(code.to_string()),
+        }
+        match &mut self.error {
+            Some(e) => {
+                e.clear();
+                e.push_str(msg);
+            }
+            None => self.error = Some(msg.to_string()),
+        }
+        self.outputs.clear();
+        self.batched = 0;
+        self.queue_ms = 0.0;
+        self.run_ms = 0.0;
+    }
+
     /// Wire form of the response — the inverse of [`parse_response`].
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
@@ -947,7 +1023,7 @@ mod tests {
                 k
             );
         }
-        assert_eq!(codes::ALL.len(), 8);
+        assert_eq!(codes::ALL.len(), 10);
     }
 
     #[test]
@@ -1068,12 +1144,46 @@ mod tests {
         assert!(!is_stats_request(b"{\"verb\":\"stats\",\"id\":1}"));
         assert!(!is_stats_request(br#"{"id":1,"model":"m"}"#));
         assert!(!is_stats_request(b""));
-        // the sentinel never collides with a real error response
+        // shutdown lines: same canonical/lenient recognition
+        assert!(is_shutdown_request(SHUTDOWN_LINE.as_bytes()));
+        assert!(is_shutdown_request(b"{ \"verb\" : \"shutdown\" }"));
+        assert!(!is_shutdown_request(STATS_LINE.as_bytes()));
+        assert!(!is_shutdown_request(b"{\"verb\":\"shutdown\",\"id\":1}"));
+        assert!(!is_stats_request(SHUTDOWN_LINE.as_bytes()));
+        // the sentinels never collide with a real error response
         let m = stats_marker();
         assert!(is_stats_marker(&m));
+        let d = drain_marker();
+        assert!(is_drain_marker(&d));
+        assert!(!is_stats_marker(&d));
+        assert!(!is_drain_marker(&m));
         let real = Response::err(ERR_ID, codes::BAD_REQUEST, "bad request: x");
         assert!(!is_stats_marker(&real));
-        assert_eq!(VERBS, &["run", "stats"]);
+        assert!(!is_drain_marker(&real));
+        let ack = Response::err(ERR_ID, codes::SHUTTING_DOWN, "draining");
+        assert!(!is_stats_marker(&ack));
+        assert!(!is_drain_marker(&ack));
+        assert_eq!(VERBS, &["run", "shutdown", "stats"]);
+    }
+
+    #[test]
+    fn err_into_is_equivalent_to_err_for_any_scratch_state() {
+        // from a success response carrying outputs...
+        let mut scratch = Response::ok(
+            9,
+            vec![OutputSummary { shape: vec![2], sum: 1.0, first: vec![1.0f32] }],
+            4,
+            1.25,
+            2.5,
+        );
+        scratch.err_into(7, codes::INTERNAL_ERROR, "worker panicked");
+        assert_eq!(
+            scratch.line(),
+            Response::err(7, codes::INTERNAL_ERROR, "worker panicked").line()
+        );
+        // ...and from a previous (longer) error, shrinking in place
+        scratch.err_into(8, codes::SHUTTING_DOWN, "bye");
+        assert_eq!(scratch.line(), Response::err(8, codes::SHUTTING_DOWN, "bye").line());
     }
 
     #[test]

@@ -79,6 +79,18 @@ pub struct Job {
     pub(crate) assemble_ns: u64,
 }
 
+impl std::fmt::Debug for Job {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Job")
+            .field("id", &self.req.id)
+            .field("model", &self.req.model)
+            .field("quant", &self.req.quant)
+            .field("deadline", &self.deadline)
+            .field("seq", &self.seq)
+            .finish()
+    }
+}
+
 impl Job {
     /// Wrap an admitted request; the deadline clock starts now.
     pub fn new(req: Request, respond: Sender<Response>) -> Job {
@@ -105,6 +117,45 @@ impl Job {
     }
 }
 
+/// Why admission handed a job back. Each reason maps to exactly one
+/// documented wire code, so the stdio/TCP front ends can answer the
+/// client without guessing at queue state that may have changed since.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at capacity. Backpressure: retry later.
+    Full,
+    /// The queue is draining (or closed) for shutdown; no new work is
+    /// admitted and a retry will not help — switch servers.
+    Draining,
+}
+
+impl RejectReason {
+    /// The stable wire code a front end answers for this rejection.
+    pub fn code(self) -> &'static str {
+        match self {
+            RejectReason::Full => super::protocol::codes::QUEUE_FULL,
+            RejectReason::Draining => super::protocol::codes::SHUTTING_DOWN,
+        }
+    }
+
+    /// The human-readable message paired with [`RejectReason::code`].
+    pub fn message(self) -> &'static str {
+        match self {
+            RejectReason::Full => "queue full (backpressure): retry later",
+            RejectReason::Draining => "server draining: no new work accepted",
+        }
+    }
+}
+
+/// A rejected admission: the job handed back, plus why.
+#[derive(Debug)]
+pub struct Rejected {
+    /// The job, returned to the caller untouched.
+    pub job: Job,
+    /// Why admission refused it.
+    pub reason: RejectReason,
+}
+
 /// EDF ordering: sooner deadline first; a deadline beats no deadline;
 /// ties (and the no-deadline tail) fall back to arrival order.
 fn edf_before(a: &Job, b: &Job) -> bool {
@@ -124,6 +175,9 @@ struct State {
     /// Keys currently anchored by a worker (count of live [`KeyHold`]s).
     active: HashMap<BatchKey, usize>,
     closed: bool,
+    /// Draining for shutdown: admission rejects with `shutting_down`
+    /// while workers keep serving what is already queued.
+    draining: bool,
     /// Monotone arrival counter — lets the batcher's window wait sleep
     /// on "a NEW job arrived" instead of busy-polling a non-empty queue
     /// of incompatible jobs.
@@ -185,6 +239,7 @@ impl AdmissionQueue {
                 len: 0,
                 active: HashMap::new(),
                 closed: false,
+                draining: false,
                 arrivals: 0,
                 next_seq: 0,
             }),
@@ -208,14 +263,20 @@ impl AdmissionQueue {
         self.len() == 0
     }
 
-    /// Admission with backpressure: a full (or closed) queue rejects and
-    /// hands the job back to the caller instead of blocking. Admitted
-    /// jobs are EDF-inserted into their key's bucket.
-    pub fn try_push(&self, mut job: Job) -> Result<(), Job> {
+    /// Admission with backpressure: a full queue rejects with
+    /// [`RejectReason::Full`], a draining or closed queue with
+    /// [`RejectReason::Draining`] — either way the job is handed back
+    /// to the caller instead of blocking. Admitted jobs are
+    /// EDF-inserted into their key's bucket.
+    pub fn try_push(&self, mut job: Job) -> Result<(), Rejected> {
         let mut st = self.state.lock().unwrap();
-        if st.closed || st.len >= self.cap {
+        if st.closed || st.draining {
             metrics::rejected();
-            return Err(job);
+            return Err(Rejected { job, reason: RejectReason::Draining });
+        }
+        if st.len >= self.cap {
+            metrics::rejected();
+            return Err(Rejected { job, reason: RejectReason::Full });
         }
         job.admit_ns = job.enqueued.elapsed().as_nanos() as u64;
         metrics::admitted();
@@ -246,6 +307,70 @@ impl AdmissionQueue {
     /// Whether [`AdmissionQueue::close`] has been called.
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
+    }
+
+    /// Flip the queue into its draining state: new admissions reject
+    /// with [`RejectReason::Draining`] while already-admitted jobs keep
+    /// dispatching. Idempotent; the first call records `drain_begun`.
+    pub fn begin_drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !st.draining {
+            st.draining = true;
+            metrics::drain_begun();
+        }
+        drop(st);
+        self.arrived.notify_all();
+    }
+
+    /// Whether [`AdmissionQueue::begin_drain`] (or close) has been
+    /// called — i.e. the server no longer admits new work.
+    pub fn is_draining(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.draining || st.closed
+    }
+
+    /// Block until every queued job has been taken by a worker and
+    /// every [`KeyHold`] released (in-flight batches dispatched), or
+    /// until `timeout`. Returns `true` when fully drained. Intended to
+    /// follow [`AdmissionQueue::begin_drain`]; the caller decides what
+    /// to do with leftovers on timeout (see
+    /// [`AdmissionQueue::flush_all`]).
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.len == 0 && st.active.is_empty() {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            // Short slices: pops do not signal the condvar (only
+            // arrivals and hold releases do), so re-check periodically
+            // rather than trusting a wakeup to arrive.
+            let slice = (deadline - now).min(Duration::from_millis(5));
+            let (guard, _) = self.arrived.wait_timeout(st, slice).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Remove and return every queued job (drain-timeout expiry: the
+    /// caller answers them with `shutting_down` so no admitted request
+    /// goes unanswered). Records each as `drain_flushed`.
+    pub fn flush_all(&self) -> Vec<Job> {
+        let mut st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        let keys: Vec<BatchKey> = st.buckets.keys().cloned().collect();
+        for key in keys {
+            while st.buckets.contains_key(&key) {
+                out.push(Self::pop_head(&mut st, &key));
+            }
+        }
+        metrics::drain_flushed(out.len() as u64);
+        drop(st);
+        self.arrived.notify_all();
+        out
     }
 
     /// Blocking pop of the globally EDF-first job (FIFO when nothing
@@ -407,16 +532,55 @@ mod tests {
         assert!(q.try_push(j1).is_ok());
         assert!(q.try_push(j2).is_ok());
         let rejected = q.try_push(j3).unwrap_err();
-        assert_eq!(rejected.req.id, 3, "full queue hands the job back");
+        assert_eq!(rejected.job.req.id, 3, "full queue hands the job back");
+        assert_eq!(rejected.reason, RejectReason::Full);
         assert_eq!(q.len(), 2);
         // draining one slot re-admits
         let popped = q.pop_front_blocking().unwrap();
         assert_eq!(popped.req.id, 1);
-        assert!(q.try_push(rejected).is_ok());
-        // a closed queue rejects regardless of occupancy
+        assert!(q.try_push(rejected.job).is_ok());
+        // a closed queue rejects regardless of occupancy — and the
+        // reason is shutdown, not backpressure
         q.close();
         let (j4, _r4) = job(4, "m", "fp32");
-        assert!(q.try_push(j4).is_err());
+        assert_eq!(q.try_push(j4).unwrap_err().reason, RejectReason::Draining);
+    }
+
+    #[test]
+    fn drain_rejects_new_work_but_serves_queued_jobs() {
+        let q = AdmissionQueue::new(8);
+        let (j1, _r1) = job(1, "m", "fp32");
+        q.try_push(j1).unwrap();
+        assert!(!q.is_draining());
+        q.begin_drain();
+        q.begin_drain(); // idempotent
+        assert!(q.is_draining());
+        assert!(!q.is_closed(), "draining is not yet closed");
+        let (j2, _r2) = job(2, "m", "fp32");
+        let rej = q.try_push(j2).unwrap_err();
+        assert_eq!(rej.reason, RejectReason::Draining);
+        assert_eq!(rej.reason.code(), super::super::protocol::codes::SHUTTING_DOWN);
+        // the already-admitted job is still served
+        assert_eq!(q.pop_front_blocking().unwrap().req.id, 1);
+        assert!(q.wait_drained(Duration::from_millis(50)), "empty queue drains");
+    }
+
+    #[test]
+    fn wait_drained_times_out_and_flush_all_empties_the_queue() {
+        let q = AdmissionQueue::new(8);
+        let mut rxs = Vec::new();
+        for (id, quant) in [(1, "a"), (2, "b"), (3, "a")] {
+            let (j, r) = job(id, "m", quant);
+            rxs.push(r);
+            q.try_push(j).unwrap();
+        }
+        q.begin_drain();
+        assert!(!q.wait_drained(Duration::from_millis(20)), "jobs still queued");
+        let mut flushed: Vec<u64> = q.flush_all().iter().map(|j| j.req.id).collect();
+        flushed.sort_unstable();
+        assert_eq!(flushed, vec![1, 2, 3]);
+        assert!(q.is_empty());
+        assert!(q.wait_drained(Duration::from_millis(20)));
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //!   each prepares its own session replica (an independent, determinis-
 //!   tic QDQ of the same checkpoint — replicas cannot diverge).
 //!
+//! Each worker is additionally its own **failure domain**: a panic in
+//! batch execution is caught by the supervised dispatcher (see
+//! `serve::dispatch`), the offending request is quarantined, and the
+//! worker rebuilds its simulator and session cache from the same
+//! [`SimSpec`] recipe before taking the next batch — one poison request
+//! cannot take a shard (let alone the pool) down.
+//!
 //! Scheduling never changes results: `run_batch` outputs are
 //! bit-identical per request regardless of batch composition, and a
 //! shard only decides where/when a batch runs. The `serve_shard`
@@ -179,7 +186,7 @@ fn worker_loop(
     shard_cfg: &ShardCfg,
     prewarm: &[(String, String)],
 ) -> Result<ShardStats> {
-    let sim = spec.build().with_context(|| format!("shard {}: build simulator", w))?;
+    let mut sim = spec.build().with_context(|| format!("shard {}: build simulator", w))?;
     let mut cache = SessionCache::for_shard(w);
     for (model, quant) in prewarm {
         let bkey = BatchKey { model: model.clone(), quant: quant.clone() };
@@ -213,7 +220,18 @@ fn worker_loop(
             }
             AnchorKind::Home => {}
         }
-        super::dispatch(&sim, &mut cache, &corpora, sb.mb, &mut st.serve, w);
+        if super::dispatch(&sim, &mut cache, &corpora, sb.mb, &mut st.serve, w) {
+            // A panic unwound through this worker's simulator and its
+            // prepared sessions; both are suspect. Rebuild the shard's
+            // whole failure domain from the cloneable recipe — fresh
+            // simulator, evicted session cache (hit/miss totals kept) —
+            // and keep serving. Only if even the rebuild fails does the
+            // worker exit (surfaced by `run_sharded` as a worker error).
+            sim = spec
+                .build()
+                .with_context(|| format!("shard {}: rebuild simulator after panic", w))?;
+            cache.evict_all();
+        }
         drop(sb.hold);
     }
     st.serve.expired = batcher.expired_count();

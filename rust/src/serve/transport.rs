@@ -24,21 +24,43 @@
 //! `Request`, and serializes responses with
 //! [`protocol::Response::write_line`] into a reused write buffer.
 //!
+//! The connection lifecycle is supervised (failure-domain isolation
+//! for the serving plane):
+//!
+//! * **`--idle-timeout`** — a connection that sends no complete line
+//!   within the window is reaped: counted by the `conns_reaped`
+//!   metric, socket closed, every other connection unaffected.
+//! * **`--max-conns`** — excess connections beyond the cap are
+//!   answered with a single `queue_full` retry-later line and closed
+//!   before they can occupy a pump thread.
+//! * **graceful drain** — a `{"verb":"shutdown"}` line flips the
+//!   admission queue to draining: new work (from every connection) is
+//!   rejected with `shutting_down`, already-admitted jobs finish under
+//!   `--drain-timeout` (leftovers are answered with `shutting_down`),
+//!   then the listener stops and [`TcpServer::wait`] returns cleanly.
+//! * **dead connections** — responses owed to a connection whose
+//!   socket died are dropped without stalling the dispatcher (the
+//!   writer exits, the response channel closes, and workers' sends
+//!   into it are ignored).
+//!
 //! Shutdown ([`TcpServer::shutdown`]) is abortive for still-connected
 //! clients: the listener stops, open sockets are shut down, admitted
 //! jobs finish draining, and per-worker stats are returned. The CLI
-//! path ([`run_tcp`]) instead serves until the process is killed.
+//! path ([`run_tcp`]) instead serves until the process is killed or a
+//! client initiates the drain handshake above.
 
 use std::io::{self, BufRead, BufReader, BufWriter, Write as IoWrite};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::tensor::backend;
 
+use super::faults;
 use super::metrics;
 use super::protocol::{self, codes, Request, Response};
 use super::queue::{AdmissionQueue, Job};
@@ -73,12 +95,24 @@ impl TcpServer {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
         let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live = Arc::new(AtomicUsize::new(0));
+        let ctl = Arc::new(DrainCtl {
+            queue: Arc::clone(&queue),
+            timeout: serve_cfg.drain_timeout,
+            stop: Arc::clone(&stop),
+            local,
+            started: AtomicBool::new(false),
+        });
+        let idle_timeout = serve_cfg.idle_timeout;
+        let max_conns = serve_cfg.max_conns;
 
         let accept = {
             let queue = Arc::clone(&queue);
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             let conn_handles = Arc::clone(&conn_handles);
+            let live = Arc::clone(&live);
+            let ctl = Arc::clone(&ctl);
             std::thread::Builder::new()
                 .name("tcp-accept".to_string())
                 .spawn(move || {
@@ -90,10 +124,23 @@ impl TcpServer {
                             Ok(s) => s,
                             Err(_) => continue,
                         };
+                        if let Some(cap) = max_conns {
+                            if live.load(Ordering::SeqCst) >= cap {
+                                refuse_conn(stream, cap);
+                                continue;
+                            }
+                        }
                         if let Ok(clone) = stream.try_clone() {
                             conns.lock().unwrap().push(clone);
                         }
-                        let h = handle_conn(stream, Arc::clone(&queue));
+                        live.fetch_add(1, Ordering::SeqCst);
+                        let h = handle_conn(
+                            stream,
+                            Arc::clone(&queue),
+                            idle_timeout,
+                            Arc::clone(&ctl),
+                            Arc::clone(&live),
+                        );
                         conn_handles.lock().unwrap().push(h);
                     }
                 })
@@ -142,10 +189,22 @@ impl TcpServer {
         }
     }
 
-    /// Serve until the accept loop exits (for the CLI: effectively
-    /// until the process is killed), then drain and stop the workers.
+    /// Serve until the accept loop exits — for the CLI: until the
+    /// process is killed, or until a client's `shutdown` verb completes
+    /// the graceful drain (which stops the accept loop) — then close
+    /// remaining connections and stop the workers.
     pub fn wait(self) -> Result<()> {
         let _ = self.accept.join();
+        // mirror `shutdown`: close whatever connections remain so
+        // their pump threads exit instead of leaking
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conn_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
         self.queue.close();
         match self.workers.join() {
             Ok(stats) => {
@@ -155,6 +214,58 @@ impl TcpServer {
             Err(_) => Err(anyhow::anyhow!("shard pool panicked")),
         }
     }
+}
+
+/// Coordinates a verb-initiated graceful drain for the TCP front: the
+/// first `shutdown` verb (from any connection) flips the shared queue
+/// to draining and spawns one watcher that — once the drain supervisor
+/// finishes (drained, or timed out and flushed) — stops the accept
+/// loop so [`TcpServer::wait`] can return cleanly. Later triggers are
+/// no-ops beyond the (idempotent) `begin_drain`.
+struct DrainCtl {
+    queue: Arc<AdmissionQueue>,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+    local: SocketAddr,
+    started: AtomicBool,
+}
+
+impl DrainCtl {
+    fn trigger(&self) {
+        self.queue.begin_drain();
+        if self.started.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let drain = super::spawn_drain(Arc::clone(&self.queue), self.timeout);
+        let stop = Arc::clone(&self.stop);
+        let local = self.local;
+        std::thread::Builder::new()
+            .name("tcp-drain".to_string())
+            .spawn(move || {
+                let _ = drain.join();
+                stop.store(true, Ordering::SeqCst);
+                // poke the accept loop so it observes `stop`
+                let _ = TcpStream::connect(local);
+            })
+            .expect("spawn tcp drain watcher");
+    }
+}
+
+/// Answer a connection refused by the `--max-conns` cap: one
+/// `queue_full` retry-later line, then close. The refused client never
+/// occupies a pump thread, so the cap bounds thread count as well as
+/// socket count.
+fn refuse_conn(stream: TcpStream, cap: usize) {
+    let mut resp = Response::err(
+        protocol::ERR_ID,
+        codes::QUEUE_FULL,
+        &format!("connection limit reached (--max-conns {}): retry later", cap),
+    );
+    let mut buf = Vec::with_capacity(160);
+    resp.write_line(&mut buf);
+    buf.push(b'\n');
+    let _ = (&stream).write_all(&buf);
+    let _ = stream.shutdown(Shutdown::Both);
 }
 
 /// Outcome of one [`read_line_capped`] call.
@@ -263,11 +374,29 @@ pub(crate) fn oversized_response() -> Response {
 /// into the queue, plus a writer thread it owns for the responses.
 /// Both directions run on reused buffers (zero steady-state allocation
 /// on the parse/serialize path — asserted by `tests/proto_alloc.rs`).
-fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> {
+///
+/// `idle_timeout` arms a read timeout: a connection that produces no
+/// complete line within it is reaped (`conns_reaped` metric, socket
+/// closed). `ctl` handles the `shutdown` verb, and `live` is the
+/// server's live-connection count (decremented when the pumps exit, so
+/// the `--max-conns` cap tracks reality).
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<AdmissionQueue>,
+    idle_timeout: Option<Duration>,
+    ctl: Arc<DrainCtl>,
+    live: Arc<AtomicUsize>,
+) -> JoinHandle<()> {
     std::thread::spawn(move || {
+        if let Some(t) = idle_timeout {
+            let _ = stream.set_read_timeout(Some(t));
+        }
         let write_half = match stream.try_clone() {
             Ok(s) => s,
-            Err(_) => return,
+            Err(_) => {
+                live.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
         };
         let (tx, rx) = mpsc::channel::<Response>();
         let writer = std::thread::spawn(move || {
@@ -305,12 +434,34 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
         let mut scratch = Request::default();
         loop {
             match read_line_capped(&mut reader, &mut line, protocol::MAX_LINE_BYTES) {
-                Ok(LineRead::Eof) | Err(_) => break,
+                Ok(LineRead::Eof) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // --idle-timeout: no complete line within the
+                    // window. Reap this connection; everyone else is
+                    // untouched.
+                    metrics::conn_reaped();
+                    let _ = reader.get_ref().shutdown(Shutdown::Both);
+                    break;
+                }
+                Err(_) => break,
                 Ok(LineRead::TooLong) => {
                     let _ = tx.send(oversized_response());
                     continue;
                 }
                 Ok(LineRead::Line) => {}
+            }
+            if faults::should_drop_conn() {
+                // injected `conn_drop` fault: kill the socket before
+                // any response for this line (or responses still owed
+                // to it) can be written — the dead-connection routing
+                // path under test
+                let _ = reader.get_ref().shutdown(Shutdown::Both);
+                break;
             }
             let bytes = trim_ws(&line);
             if bytes.is_empty() {
@@ -320,16 +471,27 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
                 let _ = tx.send(protocol::stats_marker());
                 continue;
             }
+            if protocol::is_shutdown_request(bytes) {
+                // graceful drain handshake: ack, then serve admitted
+                // work to completion while rejecting everything new
+                ctl.trigger();
+                let _ = tx.send(Response::err(
+                    protocol::ERR_ID,
+                    codes::SHUTTING_DOWN,
+                    "draining: serving admitted work, then closing",
+                ));
+                continue;
+            }
             match protocol::parse_request_streaming(bytes, &mut scratch) {
                 Ok(()) => {
                     let id = scratch.id;
                     // the clone hands an owned Request to the queue
                     // while the scratch keeps its warmed capacity
-                    if queue.try_push(Job::new(scratch.clone(), tx.clone())).is_err() {
+                    if let Err(rej) = queue.try_push(Job::new(scratch.clone(), tx.clone())) {
                         let _ = tx.send(Response::err(
                             id,
-                            codes::QUEUE_FULL,
-                            "queue full (backpressure): retry later",
+                            rej.reason.code(),
+                            rej.reason.message(),
                         ));
                     }
                 }
@@ -345,8 +507,11 @@ fn handle_conn(stream: TcpStream, queue: Arc<AdmissionQueue>) -> JoinHandle<()> 
         // EOF/error on the read half: the writer finishes once every
         // response owed to this connection's admitted jobs has landed
         // (each queued Job holds a Sender clone; the last drop ends rx).
+        // If the socket died instead, the writer's first failed write
+        // breaks it out — those responses are dropped, not queued.
         drop(tx);
         let _ = writer.join();
+        live.fetch_sub(1, Ordering::SeqCst);
     })
 }
 

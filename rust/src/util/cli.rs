@@ -238,6 +238,46 @@ mod tests {
     }
 
     #[test]
+    fn failure_domain_flags_are_strict() {
+        // Regression (ISSUE 10 satellite): the failure-domain knobs
+        // ride the same strict getters as the other serving flags — a
+        // typo must be a loud configuration error, never a silent
+        // default (a server with the wrong idle timeout looks healthy
+        // until it reaps a live client).
+        for flag in ["idle-timeout", "drain-timeout", "max-conns"] {
+            // absent -> the caller's default, untouched
+            let a = Args::parse(&sv(&["serve"]), &[]).unwrap();
+            assert_eq!(a.get_u64_min(flag, 11, 1).unwrap(), 11, "--{} absent", flag);
+            assert_eq!(a.get_usize_min(flag, 4, 1).unwrap(), 4, "--{} absent", flag);
+            // a valid value round-trips
+            let a =
+                Args::parse(&sv(&["serve", &format!("--{}", flag), "250"]), &[]).unwrap();
+            assert_eq!(a.get_u64_min(flag, 11, 1).unwrap(), 250);
+            // 0 and garbage are rejected with a message naming the flag
+            for junk in ["0", "junk", "-1", "1.5", ""] {
+                let a = Args::parse(&sv(&["serve", &format!("--{}={}", flag, junk)]), &[])
+                    .unwrap();
+                let e = a.get_u64_min(flag, 11, 1).unwrap_err();
+                assert!(e.contains(flag), "--{}={}: {}", flag, junk, e);
+                assert!(a.get_usize_min(flag, 4, 1).is_err(), "--{}={}", flag, junk);
+            }
+        }
+        // --faults routes through the fault-plan grammar: a valid spec
+        // parses; zeros, unknown sites and malformed values are loud.
+        let a = Args::parse(&sv(&["serve", "--faults", "seed=2,panic=7"]), &[]).unwrap();
+        let plan = crate::serve::faults::FaultPlan::parse(a.get("faults", "")).unwrap();
+        assert_eq!(plan.seed, 2);
+        assert_eq!(plan.panic_every, Some(7));
+        for junk in ["panic=0", "explode=1", "delay=3", "panic=x", ""] {
+            assert!(
+                crate::serve::faults::FaultPlan::parse(junk).is_err(),
+                "fault spec {:?} must be rejected",
+                junk
+            );
+        }
+    }
+
+    #[test]
     fn defaults_apply() {
         let a = Args::parse(&sv(&["run"]), &[]).unwrap();
         assert_eq!(a.get("missing", "dflt"), "dflt");

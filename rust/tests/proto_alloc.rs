@@ -9,7 +9,12 @@
 //! per request. Every serve-metrics recording call rides inside the
 //! audited loop too: the observability layer is always-on, so its
 //! counters and histograms must be just as allocation-free as the wire
-//! path they instrument.
+//! path they instrument. The failure-domain paths ride along as well:
+//! the `internal_error` (quarantine) and `shutting_down` (drain)
+//! responses are rebuilt in place via `Response::err_into` — String
+//! and Vec capacity reuse — and serialized each iteration, so a server
+//! under fault injection stays just as allocation-free as a healthy
+//! one.
 //!
 //! This lives in its own test binary on purpose — the libtest harness
 //! runs tests in parallel threads, and any neighbour test's allocations
@@ -20,7 +25,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use intfpqsim::serve::metrics::{self, SpanSlot};
 use intfpqsim::serve::protocol::{
-    outputs_pool, parse_request_streaming, summarize, summarize_into, Request, Response,
+    codes, outputs_pool, parse_request_streaming, summarize, summarize_into, Request,
+    Response,
 };
 use intfpqsim::tensor::Tensor;
 
@@ -77,6 +83,13 @@ fn hot_path_makes_zero_steady_state_allocations() {
     let mut wbuf: Vec<u8> = Vec::new();
     let mut rbuf: Vec<u8> = Vec::new();
 
+    // the failure-domain error responses, rebuilt in place each round
+    // the way a fault-injected server would emit them
+    let quarantine_msg = "worker panicked executing this request; request quarantined";
+    let drain_msg = "server draining: no new work accepted";
+    let mut err_resp = Response::err(0, codes::INTERNAL_ERROR, quarantine_msg);
+    let mut ebuf: Vec<u8> = Vec::new();
+
     // warm-up: scratch strings/token vec, both buffers and the pooled
     // summary vector reach their high-water capacity (and we prove
     // correctness while we're here)
@@ -91,6 +104,21 @@ fn hot_path_makes_zero_steady_state_allocations() {
         let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
         outputs_pool::put(std::mem::take(&mut resp.outputs));
+        // warm (and verify) the in-place error-response refill for both
+        // failure-domain codes
+        err_resp.err_into(scratch.id, codes::INTERNAL_ERROR, quarantine_msg);
+        assert_eq!(
+            err_resp.line(),
+            Response::err(scratch.id, codes::INTERNAL_ERROR, quarantine_msg).line(),
+            "err_into must be byte-equivalent to a fresh Response::err"
+        );
+        err_resp.write_line(&mut ebuf);
+        err_resp.err_into(scratch.id, codes::SHUTTING_DOWN, drain_msg);
+        assert_eq!(
+            err_resp.line(),
+            Response::err(scratch.id, codes::SHUTTING_DOWN, drain_msg).line(),
+        );
+        err_resp.write_line(&mut ebuf);
         // warm the metrics path too (thread-local trace slot included)
         metrics::admitted();
         metrics::queue_wait(1);
@@ -115,6 +143,12 @@ fn hot_path_makes_zero_steady_state_allocations() {
         let mut resp = Response::ok(scratch.id, sums, 4, 0.3125, 1.0625);
         resp.write_line(&mut rbuf);
         outputs_pool::put(std::mem::take(&mut resp.outputs));
+        // the failure-domain responses: quarantine + drain rejection
+        // rebuilt in place, serialized into the reused buffer
+        err_resp.err_into(scratch.id, codes::INTERNAL_ERROR, quarantine_msg);
+        err_resp.write_line(&mut ebuf);
+        err_resp.err_into(scratch.id, codes::SHUTTING_DOWN, drain_msg);
+        err_resp.write_line(&mut ebuf);
         // the full per-request metrics footprint, exactly as the serve
         // path records it — must be allocation-free with metrics on
         metrics::admitted();
@@ -125,11 +159,16 @@ fn hot_path_makes_zero_steady_state_allocations() {
         metrics::record_span(SpanSlot::Admit, i);
         metrics::record_span(SpanSlot::Assemble, i * 2);
         metrics::record_span(SpanSlot::Serialize, i * 3);
+        // the supervision/lifecycle counters are plain atomics and must
+        // stay allocation-free too
+        metrics::panic_recovered();
+        metrics::quarantined();
+        metrics::conn_reaped();
         {
             let _trace = metrics::trace(SpanSlot::Forward);
             let _scope = intfpqsim::util::timer::Scope::new("proto_alloc.forward");
         }
-        std::hint::black_box((&scratch, &wbuf, &rbuf));
+        std::hint::black_box((&scratch, &wbuf, &rbuf, &ebuf));
     }
     let delta = ALLOCS.load(Ordering::Relaxed) - before;
     assert_eq!(

@@ -3,11 +3,17 @@
 //!
 //! * the anchored tables in the doc (request fields, response fields,
 //!   error codes) must match the server's own manifests exactly;
+//! * the "Failure modes" table must carry one row per error code, each
+//!   with a non-empty trigger and client-action cell — an operator
+//!   reading the doc learns what to DO about every code the wire can
+//!   emit;
 //! * a live TCP server is then exercised through every documented
 //!   request field and every client-triggerable error code, over a real
-//!   socket, asserting the documented `code` comes back;
-//! * the one code a well-formed client cannot trigger (`run_failed`)
-//!   is pinned to the server source instead.
+//!   socket, asserting the documented `code` comes back — including the
+//!   graceful-drain handshake (`shutdown` verb ack, then
+//!   `shutting_down` rejections for new work);
+//! * the codes a well-formed client cannot trigger (`run_failed`,
+//!   `internal_error`) are pinned to the server source instead.
 
 use std::collections::BTreeSet;
 use std::io::{BufRead, BufReader, BufWriter, Write as IoWrite};
@@ -127,14 +133,49 @@ fn doc_limits_match_the_wire_constants() {
     );
 }
 
+/// Every documented error code gets a row in the "Failure modes" table
+/// — code, what triggers it, and what the client should do — and no
+/// row documents a code the wire cannot emit.
+#[test]
+fn failure_modes_table_covers_every_error_code_with_a_client_action() {
+    assert_eq!(
+        anchored_fields("failure-modes"),
+        manifest(codes::ALL),
+        "docs/serving.md failure-modes table drifted from protocol::codes::ALL"
+    );
+    let open = "<!-- wire:failure-modes -->";
+    let start = DOC.find(open).expect("anchor vanished mid-test");
+    let rest = &DOC[start..];
+    let end = rest.find("<!-- /wire -->").expect("unclosed wire anchor");
+    for l in rest[..end].lines() {
+        let l = l.trim();
+        if !l.starts_with('|') || l.starts_with("|-") || l.starts_with("| -") {
+            continue;
+        }
+        let Some(code) = l.split('`').nth(1) else { continue };
+        let cells: Vec<&str> = l.trim_matches('|').split('|').map(str::trim).collect();
+        assert!(
+            cells.len() >= 3 && cells.iter().all(|c| !c.is_empty()),
+            "failure-mode row for {:?} must carry code | trigger | client action, got {:?}",
+            code,
+            cells
+        );
+    }
+}
+
 #[test]
 fn run_failed_is_emitted_by_the_server_even_if_not_client_triggerable() {
-    // `run_failed` needs an internal failure to fire, so the live test
-    // below cannot exercise it; pin it to the emission sites instead.
+    // `run_failed` needs an internal failure and `internal_error` a
+    // worker panic to fire, so the live test below cannot exercise
+    // them; pin them to the emission sites instead.
     let dispatch_src = include_str!("../src/serve/mod.rs");
     let shard_src = include_str!("../src/serve/shard.rs");
     assert!(dispatch_src.contains("codes::RUN_FAILED"), "dispatch lost run_failed");
     assert!(shard_src.contains("codes::RUN_FAILED"), "worker-failure drain lost run_failed");
+    assert!(
+        dispatch_src.contains("codes::INTERNAL_ERROR"),
+        "the quarantine path lost internal_error"
+    );
 }
 
 fn tmp_spec(tag: &str) -> SimSpec {
@@ -173,6 +214,7 @@ fn live_server_honors_every_documented_field_and_code() {
             queue_cap: 4,
             batch_window: Duration::from_millis(700),
             max_batch: 8,
+            ..ServeCfg::default()
         },
         ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 },
         Vec::new(),
@@ -309,6 +351,28 @@ fn live_server_honors_every_documented_field_and_code() {
         .map(|k| k.as_str())
         .collect();
     assert_eq!(keys, metrics::NAMES, "stats keys drifted from metrics::NAMES");
+
+    // the graceful-drain handshake, as documented: the `shutdown` verb
+    // is acked with a shutting_down line (reserved id), and every
+    // subsequent request on any connection is rejected with
+    // `shutting_down` — admission flips synchronously, so the very next
+    // request deterministically sees it
+    send(protocol::SHUTDOWN_LINE);
+    let mut line = String::new();
+    r.read_line(&mut line).expect("read drain ack");
+    let ack = protocol::parse_response(line.trim()).unwrap();
+    assert_eq!(ack.id, ERR_ID, "drain ack rides the reserved id");
+    assert_eq!(ack.code.as_deref(), Some(codes::SHUTTING_DOWN));
+    send(r#"{"id": 12, "model": "sim-opt-125m", "quant": "fp32"}"#);
+    let mut line = String::new();
+    r.read_line(&mut line).expect("read post-drain rejection");
+    let rej = protocol::parse_response(line.trim()).unwrap();
+    assert_eq!(rej.id, 12);
+    assert_eq!(
+        rej.code.as_deref(),
+        Some(codes::SHUTTING_DOWN),
+        "new work after the shutdown verb must be rejected, not queued"
+    );
 
     srv.shutdown().unwrap();
 }

@@ -46,7 +46,7 @@ fn push_req(
     req: Request,
 ) -> mpsc::Receiver<Response> {
     let (tx, rx) = mpsc::channel();
-    queue.try_push(Job::new(req, tx)).map_err(|j| j.req.id).unwrap();
+    queue.try_push(Job::new(req, tx)).map_err(|r| r.job.req.id).unwrap();
     rx
 }
 
@@ -66,6 +66,7 @@ fn session_cache_reuse_second_request_performs_no_requantize() {
         queue_cap: 8,
         batch_window: Duration::from_millis(1),
         max_batch: 1,
+        ..ServeCfg::default()
     };
     let mut cache = SessionCache::new();
     let before = native::prepared_builds();
@@ -122,10 +123,15 @@ fn queue_backpressure_rejects_overflow_and_server_recovers() {
     let rejected = queue
         .try_push(Job::new(Request::new(3, "sim-opt-125m", "fp32", 2), tx3))
         .unwrap_err();
-    rejected.reply(Response::err(
-        rejected.req.id,
+    assert_eq!(
+        rejected.reason.code(),
         intfpqsim::serve::protocol::codes::QUEUE_FULL,
-        "queue full (backpressure)",
+        "a full (not draining) queue rejects with the backpressure code"
+    );
+    rejected.job.reply(Response::err(
+        rejected.job.req.id,
+        rejected.reason.code(),
+        rejected.reason.message(),
     ));
     queue.close();
 
@@ -225,6 +231,7 @@ fn concurrent_clients_fixed_seeds_identical_outputs_regardless_of_batching() {
                 queue_cap: 64,
                 batch_window: Duration::from_millis(1),
                 max_batch: 1,
+                ..ServeCfg::default()
             },
             ..base.clone()
         },
@@ -237,6 +244,7 @@ fn concurrent_clients_fixed_seeds_identical_outputs_regardless_of_batching() {
                 queue_cap: 64,
                 batch_window: Duration::from_millis(30),
                 max_batch: 8,
+                ..ServeCfg::default()
             },
             ..base.clone()
         },
@@ -290,6 +298,7 @@ fn int_compute_mode_serves_identical_bytes_regardless_of_batching() {
             queue_cap: 8,
             batch_window: Duration::from_millis(window_ms),
             max_batch,
+            ..ServeCfg::default()
         };
         let mut cache = SessionCache::new();
         let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
@@ -333,6 +342,7 @@ fn loadgen_single_key_traffic_coalesces_above_occupancy_one() {
             queue_cap: 64,
             batch_window: Duration::from_millis(30),
             max_batch: 8,
+            ..ServeCfg::default()
         },
         ..Default::default()
     };

@@ -1,0 +1,517 @@
+//! Chaos suite: the serving plane under deterministic fault injection.
+//!
+//! Every test arms a seeded [`FaultPlan`] and drives real traffic
+//! through the real serve stack, asserting the failure-domain
+//! invariant the tentpole promises: **every admitted request yields
+//! exactly one response — a success or a documented error code — under
+//! every fault schedule**, no worker thread dies permanently, and the
+//! metrics registry stays internally consistent
+//! (`Snapshot::check`). Each fault site runs on at least two seeds so
+//! the phase shift itself is under test, and the non-faulted requests
+//! of a poisoned batch are compared byte-for-byte against a fault-free
+//! run (timings zeroed) — supervision must not perturb innocent
+//! batch-mates.
+//!
+//! The fault plan is process-global, so every test takes the
+//! file-local mutex and clears the plan through a drop guard (a
+//! panicking assertion must not leak an armed plan into the next
+//! test).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+use intfpqsim::quantsim::Simulator;
+use intfpqsim::serve::cache::SessionCache;
+use intfpqsim::serve::faults::{self, FaultPlan};
+use intfpqsim::serve::metrics;
+use intfpqsim::serve::protocol::{self, codes, Request, Response, ERR_ID, SHUTDOWN_LINE};
+use intfpqsim::serve::queue::{AdmissionQueue, Job};
+use intfpqsim::serve::shard::{run_sharded, ShardCfg, SimSpec};
+use intfpqsim::serve::transport::TcpServer;
+use intfpqsim::serve::{serve_loop, ServeCfg};
+use intfpqsim::train::TrainOpts;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Clears the process-global fault plan when dropped, so a failing
+/// assertion cannot leave a later test running under this test's
+/// faults.
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn arm(spec: &str) -> FaultGuard {
+    faults::install(FaultPlan::parse(spec).unwrap());
+    FaultGuard
+}
+
+fn tmp_sim(tag: &str) -> Simulator {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_faults_{}", tag));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut sim = Simulator::new("artifacts", dir.to_str().unwrap()).unwrap();
+    sim.opts.eval_batches = 2;
+    sim.opts.pretrain_opts = TrainOpts { steps: 25, log_every: 1000, ..Default::default() };
+    sim
+}
+
+fn tmp_spec(tag: &str) -> SimSpec {
+    let dir = std::env::temp_dir().join(format!("intfpqsim_faults_{}", tag));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut spec = SimSpec::new("artifacts", dir.to_str().unwrap());
+    spec.opts.eval_batches = 2;
+    spec.opts.pretrain_opts = TrainOpts { steps: 25, log_every: 1000, ..Default::default() };
+    spec
+}
+
+fn push_req(queue: &AdmissionQueue, req: Request) -> mpsc::Receiver<Response> {
+    let (tx, rx) = mpsc::channel();
+    queue.try_push(Job::new(req, tx)).map_err(|r| r.job.req.id).unwrap();
+    rx
+}
+
+/// The payload bytes of a response with the run-dependent timing and
+/// occupancy fields zeroed — what "byte-identical across fault
+/// schedules" means for requests whose *content* must not change.
+fn payload_bytes(mut resp: Response) -> Vec<u8> {
+    resp.queue_ms = 0.0;
+    resp.run_ms = 0.0;
+    resp.batched = 0;
+    let mut buf = Vec::new();
+    resp.write_line(&mut buf);
+    buf
+}
+
+/// `worker_panic` on the single-worker in-process server, two seeds:
+/// the poison request is quarantined with `internal_error`, its
+/// batch-mates answer byte-identically to a fault-free run, and the
+/// worker keeps serving follow-up batches through its evicted cache.
+#[test]
+fn poison_request_is_quarantined_and_batchmates_answer_clean() {
+    let _g = lock();
+    let sim = tmp_sim("poison");
+
+    for seed in [1u64, 3] {
+        // ids seed, seed+1, seed+2 under `panic=10`: only id == seed
+        // satisfies id % 10 == seed % 10 — one poison, two innocents
+        let ids = [seed, seed + 1, seed + 2];
+
+        // fault-free baseline: what every request's payload must be
+        faults::clear();
+        let queue = AdmissionQueue::new(8);
+        let rxs: Vec<_> = ids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| {
+                push_req(&queue, Request::new(id, "sim-opt-125m", "fp32", i as u64))
+            })
+            .collect();
+        queue.close();
+        let cfg = ServeCfg {
+            queue_cap: 8,
+            batch_window: Duration::from_millis(1),
+            max_batch: 2,
+            ..ServeCfg::default()
+        };
+        let mut cache = SessionCache::new();
+        let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+        assert_eq!(stats.ok, 3, "baseline must be fault-free");
+        let baseline: Vec<Vec<u8>> =
+            rxs.into_iter().map(|rx| payload_bytes(rx.try_recv().unwrap())).collect();
+
+        // same traffic under the fault plan: batch {seed, seed+1}
+        // panics, blame isolation re-runs it singly, batch {seed+2}
+        // rides the post-recovery (evicted, reopened) cache
+        metrics::reset();
+        let _guard = arm(&format!("seed={},panic=10", seed));
+        let queue = AdmissionQueue::new(8);
+        let rxs: Vec<_> = ids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| {
+                push_req(&queue, Request::new(id, "sim-opt-125m", "fp32", i as u64))
+            })
+            .collect();
+        queue.close();
+        let mut cache = SessionCache::new();
+        let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+        assert_eq!(stats.ok, 2, "seed {}: innocents must serve", seed);
+        assert_eq!(stats.errors, 1, "seed {}: exactly the poison errors", seed);
+
+        let responses: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.try_recv().unwrap()).collect();
+        let poison = &responses[0];
+        assert!(!poison.ok, "seed {}: poison request must not succeed", seed);
+        assert_eq!(poison.code.as_deref(), Some(codes::INTERNAL_ERROR));
+        assert!(poison.error.as_deref().unwrap().contains("quarantined"));
+        assert!(poison.outputs.is_empty(), "no output from a panicked run");
+        for i in [1, 2] {
+            assert!(responses[i].ok, "seed {}: innocent id {} errored", seed, ids[i]);
+            assert_eq!(
+                payload_bytes(responses[i].clone()),
+                baseline[i],
+                "seed {}: innocent id {} diverged from the fault-free run",
+                seed,
+                ids[i]
+            );
+        }
+
+        // the registry saw the whole story and stayed consistent: one
+        // batch panic plus one single-rerun panic, one quarantine
+        let snap = metrics::snapshot();
+        snap.check().unwrap();
+        assert_eq!(snap.admitted, 3);
+        assert_eq!(snap.panics_recovered, 2, "batch panic + single-rerun panic");
+        assert_eq!(snap.requests_quarantined, 1);
+        assert_eq!(snap.ok, 2);
+        assert_eq!(snap.errors, 1);
+    }
+}
+
+/// `worker_panic` through the shard pool: the panicked worker rebuilds
+/// its simulator from the [`SimSpec`] and the pool drains to a clean
+/// `Ok` — no worker thread dies permanently.
+#[test]
+fn sharded_worker_rebuilds_simulator_and_keeps_serving() {
+    let _g = lock();
+    let spec = tmp_spec("rebuild");
+    metrics::reset();
+    // seed=2, panic=10: id 2 is the only poison among 2..=5
+    let _guard = arm("seed=2,panic=10");
+
+    let queue = AdmissionQueue::new(8);
+    let rxs: Vec<_> = (2u64..=5)
+        .map(|id| push_req(&queue, Request::new(id, "sim-opt-125m", "fp32", id - 2)))
+        .collect();
+    queue.close();
+    let cfg = ServeCfg {
+        queue_cap: 8,
+        batch_window: Duration::from_millis(1),
+        max_batch: 2,
+        ..ServeCfg::default()
+    };
+    let shard_cfg = ShardCfg { workers: 2, replicate_hot: false, hot_min: 16 };
+    let stats = run_sharded(&spec, &queue, &cfg, &shard_cfg, &[]).unwrap();
+    assert_eq!(stats.len(), 2, "every worker must exit cleanly, panic or not");
+    let ok: usize = stats.iter().map(|s| s.serve.ok).sum();
+    let errors: usize = stats.iter().map(|s| s.serve.errors).sum();
+    assert_eq!(ok, 3, "the three innocents all serve — after the rebuild too");
+    assert_eq!(errors, 1, "exactly the poison request errors");
+
+    let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.try_recv().unwrap()).collect();
+    assert_eq!(responses[0].code.as_deref(), Some(codes::INTERNAL_ERROR));
+    for resp in &responses[1..] {
+        assert!(resp.ok, "id {}: {:?}", resp.id, resp.error);
+    }
+
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 4);
+    assert_eq!(snap.requests_quarantined, 1);
+    assert!(snap.panics_recovered >= 2);
+}
+
+/// `forward_delay` with a seed-shifted schedule: the same traffic run
+/// under seeds 1 and 2 of `delay=2:1200` delays a *different* forward
+/// each time — under seed 2 the injected stall lands on the deadlined
+/// request and expires it in-run; under seed 1 it lands on the
+/// no-deadline request and both succeed. The outcome flip is exactly
+/// the determinism the seeded plan promises.
+#[test]
+fn forward_delay_schedule_is_seed_shifted_and_expires_deadlines() {
+    let _g = lock();
+    let sim = tmp_sim("delay");
+    let cfg = ServeCfg {
+        queue_cap: 8,
+        batch_window: Duration::from_millis(1),
+        max_batch: 1,
+        ..ServeCfg::default()
+    };
+    // warm the session cache off the clock so the deadlined request
+    // pays neither pretraining nor session prepare against its budget
+    let mut cache = SessionCache::new();
+    let queue = AdmissionQueue::new(8);
+    let rx = push_req(&queue, Request::new(100, "sim-opt-125m", "fp32", 0));
+    queue.close();
+    serve_loop(&sim, &queue, &cfg, &mut cache);
+    assert!(rx.try_recv().unwrap().ok, "warm-up request must serve");
+
+    for (seed, expect_expiry) in [(1u64, false), (2, true)] {
+        metrics::reset();
+        let _guard = arm(&format!("seed={},delay=2:1200", seed));
+        let queue = AdmissionQueue::new(8);
+        // EDF dispatches the deadlined job first: its forward is k=0,
+        // the no-deadline job's is k=1; (k + seed) % 2 == 0 fires
+        let mut deadlined = Request::new(0, "sim-opt-125m", "fp32", 0);
+        deadlined.deadline_ms = Some(500);
+        let rx_deadlined = push_req(&queue, deadlined);
+        let rx_patient = push_req(&queue, Request::new(1, "sim-opt-125m", "fp32", 1));
+        queue.close();
+        let stats = serve_loop(&sim, &queue, &cfg, &mut cache);
+
+        let r0 = rx_deadlined.try_recv().unwrap();
+        let r1 = rx_patient.try_recv().unwrap();
+        assert!(r1.ok, "seed {}: the no-deadline request always serves", seed);
+        if expect_expiry {
+            assert_eq!(
+                r0.code.as_deref(),
+                Some(codes::DEADLINE_RUN),
+                "seed {}: the stall lands on the deadlined forward",
+                seed
+            );
+            assert!(r0.outputs.is_empty(), "expired: no stale output");
+            assert_eq!(stats.errors, 1);
+            assert_eq!(stats.ok, 1);
+        } else {
+            assert!(r0.ok, "seed {}: the stall misses the deadlined forward", seed);
+            assert_eq!(stats.errors, 0);
+            assert_eq!(stats.ok, 2);
+        }
+        let snap = metrics::snapshot();
+        snap.check().unwrap();
+        assert_eq!(snap.admitted, 2);
+        assert_eq!(snap.errors, if expect_expiry { 1 } else { 0 });
+    }
+}
+
+fn connect(addr: &str) -> (BufWriter<TcpStream>, BufReader<TcpStream>) {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    (BufWriter::new(s.try_clone().unwrap()), BufReader::new(s))
+}
+
+/// `conn_drop` over real sockets, two seeds against one server: every
+/// request line the schedule spares gets exactly one `ok` response;
+/// every dropped line closes the connection instead of hanging it, the
+/// client reconnects, and the server's books balance afterwards.
+#[test]
+fn conn_drop_schedule_kills_connections_but_books_balance() {
+    let _g = lock();
+    metrics::reset();
+    let spec = tmp_spec("drop");
+    let srv = TcpServer::start(
+        spec,
+        "127.0.0.1:0",
+        ServeCfg {
+            queue_cap: 16,
+            batch_window: Duration::from_millis(1),
+            max_batch: 8,
+            ..ServeCfg::default()
+        },
+        ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 },
+        Vec::new(),
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut served = 0u64;
+    for seed in [1u64, 2] {
+        // installing the plan resets the line counter: line k of this
+        // phase is dropped iff (k + seed) % 3 == 0, independent of the
+        // other phase — seed 1 kills k ∈ {2, 5}, seed 2 kills k ∈ {1, 4}
+        let _guard = arm(&format!("seed={},drop=3", seed));
+        let mut conn: Option<(BufWriter<TcpStream>, BufReader<TcpStream>)> = None;
+        for k in 0u64..6 {
+            if conn.is_none() {
+                conn = Some(connect(&addr));
+            }
+            let id = seed * 100 + k;
+            {
+                let w = &mut conn.as_mut().unwrap().0;
+                writeln!(
+                    w,
+                    r#"{{"id": {}, "model": "sim-opt-125m", "quant": "fp32", "batch": {}}}"#,
+                    id, k
+                )
+                .unwrap();
+                w.flush().unwrap();
+            }
+            let dropped = (k + seed) % 3 == 0;
+            let mut line = String::new();
+            match conn.as_mut().unwrap().1.read_line(&mut line) {
+                Ok(0) | Err(_) => {
+                    // the server killed the connection before answering
+                    assert!(
+                        dropped,
+                        "seed {}: line {} closed the connection off-schedule",
+                        seed, k
+                    );
+                    conn = None;
+                }
+                Ok(_) => {
+                    assert!(!dropped, "seed {}: line {} answered despite the drop", seed, k);
+                    let resp = protocol::parse_response(line.trim()).unwrap();
+                    assert_eq!(resp.id, id);
+                    assert!(resp.ok, "id {}: {:?}", id, resp.error);
+                    served += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(served, 8, "4 of 6 lines survive each seed's schedule");
+
+    // a dropped line dies before admission, so the books balance:
+    // everything admitted was answered, nothing leaked
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 8);
+    assert_eq!(snap.ok, 8);
+    assert_eq!(snap.errors, 0);
+
+    let stats = srv.shutdown().unwrap();
+    let ok: usize = stats.iter().map(|s| s.serve.ok).sum();
+    assert_eq!(ok, 8, "per-worker stats must account for every served request");
+}
+
+/// An idle TCP connection past `--idle-timeout` is reaped (counted in
+/// `conns_reaped`) without disturbing the server: a fresh connection
+/// still serves afterwards.
+#[test]
+fn idle_connections_are_reaped_and_server_keeps_serving() {
+    let _g = lock();
+    metrics::reset();
+    let spec = tmp_spec("idle");
+    let srv = TcpServer::start(
+        spec,
+        "127.0.0.1:0",
+        ServeCfg {
+            queue_cap: 16,
+            batch_window: Duration::from_millis(1),
+            max_batch: 8,
+            idle_timeout: Some(Duration::from_millis(50)),
+            ..ServeCfg::default()
+        },
+        ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 },
+        Vec::new(),
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    // connect, say nothing: the read timeout reaps us
+    let (_w_idle, mut r_idle) = connect(&addr);
+    let mut line = String::new();
+    let reaped = matches!(r_idle.read_line(&mut line), Ok(0) | Err(_));
+    assert!(reaped, "an idle connection past the timeout must be closed");
+
+    // the server is unharmed: a new connection round-trips a request
+    let (mut w, mut r) = connect(&addr);
+    writeln!(w, r#"{{"id": 1, "model": "sim-opt-125m", "quant": "fp32", "batch": 0}}"#)
+        .unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "server must keep serving");
+    let resp = protocol::parse_response(line.trim()).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert!(snap.conns_reaped >= 1, "the reap must be counted");
+
+    srv.shutdown().unwrap();
+}
+
+/// The drain timeout flushes what cannot finish: with every forward
+/// stalled by fault injection and a 100ms `--drain-timeout`, a
+/// `shutdown` verb acks immediately, the jobs the worker cannot reach
+/// in time are answered `shutting_down` (never silently dropped), and
+/// the verb-initiated drain runs the whole server to a clean
+/// [`TcpServer::wait`] exit.
+#[test]
+fn drain_timeout_flushes_unfinished_jobs_with_shutting_down() {
+    let _g = lock();
+    metrics::reset();
+    // every batched forward sleeps 800ms — admitted work cannot finish
+    // inside the 100ms drain budget
+    let _guard = arm("seed=1,delay=1:800");
+    let spec = tmp_spec("flush");
+    let srv = TcpServer::start(
+        spec,
+        "127.0.0.1:0",
+        ServeCfg {
+            queue_cap: 16,
+            batch_window: Duration::from_millis(1),
+            max_batch: 1,
+            drain_timeout: Duration::from_millis(100),
+            ..ServeCfg::default()
+        },
+        ShardCfg { workers: 1, replicate_hot: false, hot_min: 16 },
+        Vec::new(),
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let (mut w, mut r) = connect(&addr);
+    for id in 1u64..=3 {
+        writeln!(
+            w,
+            r#"{{"id": {}, "model": "sim-opt-125m", "quant": "fp32", "batch": {}}}"#,
+            id,
+            id - 1
+        )
+        .unwrap();
+    }
+    w.flush().unwrap();
+    writeln!(w, "{}", SHUTDOWN_LINE).unwrap();
+    w.flush().unwrap();
+
+    // ack first (admission flips synchronously), then one response per
+    // admitted request — flushed ones early, any in-flight one after
+    // its stalled forward finishes
+    let mut acked = false;
+    let mut responses: Vec<Response> = Vec::new();
+    while responses.len() < 3 {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).expect("server hung up before answering");
+        assert!(n > 0, "connection closed with {} of 3 responses", responses.len());
+        let resp = protocol::parse_response(line.trim()).unwrap();
+        if resp.id == ERR_ID {
+            assert_eq!(resp.code.as_deref(), Some(codes::SHUTTING_DOWN), "drain ack");
+            acked = true;
+            continue;
+        }
+        responses.push(resp);
+    }
+    assert!(acked, "the shutdown verb must be acked");
+
+    // the single worker holds at most one job and each forward stalls
+    // for 800ms, so at least the other two jobs must have been flushed;
+    // whatever was in flight finishes normally — exactly one response
+    // per admitted request either way
+    let mut ids: Vec<u64> = responses.iter().map(|resp| resp.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3], "exactly one response per admitted request");
+    let flushed = responses
+        .iter()
+        .filter(|resp| resp.code.as_deref() == Some(codes::SHUTTING_DOWN))
+        .count();
+    for resp in &responses {
+        assert!(
+            resp.ok || resp.code.as_deref() == Some(codes::SHUTTING_DOWN),
+            "id {}: undocumented drain outcome {:?}",
+            resp.id,
+            resp.code
+        );
+    }
+    assert!(flushed >= 2, "the stalled worker cannot beat the drain timeout");
+
+    let snap = metrics::snapshot();
+    snap.check().unwrap();
+    assert_eq!(snap.admitted, 3);
+    assert_eq!(snap.drain_begun, 1);
+    assert_eq!(snap.drain_flushed as usize, flushed);
+
+    // the verb-driven drain stops the accept loop on its own: wait()
+    // returns without an abortive shutdown
+    srv.wait().unwrap();
+}

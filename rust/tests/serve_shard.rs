@@ -172,6 +172,7 @@ fn sharded_outputs_bit_identical_across_workers_and_batching() {
                 queue_cap: 64,
                 batch_window: Duration::from_millis(1),
                 max_batch: 1,
+                ..ServeCfg::default()
             },
             ..base.clone()
         },
@@ -184,11 +185,13 @@ fn sharded_outputs_bit_identical_across_workers_and_batching() {
         queue_cap: 64,
         batch_window: Duration::from_millis(30),
         max_batch: 8,
+        ..ServeCfg::default()
     };
     let unbatched = ServeCfg {
         queue_cap: 64,
         batch_window: Duration::from_millis(1),
         max_batch: 1,
+        ..ServeCfg::default()
     };
     let cells = [
         (1usize, false, aggressive.clone()),

@@ -85,6 +85,22 @@ def check(snap, expect_min_ok):
         num("steals") + num("hot_hits") <= num("batches"),
         "more stolen/hot batches than batches",
     )
+    # failure-domain counters, mirroring Snapshot::check server-side:
+    # a quarantine is one admitted request and one recovered panic, and
+    # drain flushes only happen to admitted work after a drain began
+    quarantined = num("requests_quarantined")
+    ensure(quarantined <= admitted, "more quarantined requests than admitted")
+    ensure(
+        quarantined <= num("panics_recovered"),
+        "more quarantined requests than recovered panics",
+    )
+    flushed = num("drain_flushed")
+    ensure(flushed <= admitted, "more drain-flushed requests than admitted")
+    ensure(
+        flushed == 0 or num("drain_begun") > 0,
+        "drain_flushed nonzero but no drain ever began",
+    )
+    num("conns_reaped")  # presence check: the reaper counter is on the wire
     ensure(ok >= expect_min_ok, f"ok {ok} < expected minimum {expect_min_ok}")
 
     shards = snap.get("shards", [])
